@@ -1,0 +1,96 @@
+"""Paper §5.3 (Fig. 11b/c + Fig. 12): distributed-optimization scaling.
+
+Measures, for 1/2/4/8 workers sharing one storage:
+* trials/second (throughput scaling — Fig. 11b's x-axis is wall time),
+* best-value-vs-#trials curves (Fig. 11c's invariance claim:
+  parallelization does not change per-trial efficiency),
+* with and without ASHA pruning (Fig. 12).
+
+Workers are real processes against sqlite (the paper's Fig. 7 deployment).
+The objective simulates a training run (sleep-per-epoch) so that trial
+latency — not Python overhead — dominates, matching the paper's setting.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import repro.core as hpo
+
+__all__ = ["run", "objective_sim"]
+
+
+def objective_sim(trial):
+    """Simulated learning-curve objective (epoch sleep + deterministic curve)."""
+    lr = trial.suggest_float("lr", 1e-4, 1.0, log=True)
+    width = trial.suggest_int("width", 8, 256, log=True)
+    quality = abs(np.log10(lr) + 2.0) * 0.35 + abs(np.log2(width) - 6) * 0.08
+    for epoch in range(1, 9):
+        err = 0.9 * np.exp(-epoch / 3.0) + 0.08 + quality * (1 - np.exp(-epoch / 4.0))
+        time.sleep(0.01)  # simulated epoch cost
+        trial.report(err, epoch)
+        if trial.should_prune():
+            raise hpo.TrialPruned()
+    return err
+
+
+def _best_curve(trials) -> list:
+    best, out = float("inf"), []
+    for t in sorted(trials, key=lambda t: t.number):
+        if t.values is not None and np.isfinite(t.values[0]):
+            best = min(best, t.values[0])
+        out.append(best)
+    return out
+
+
+def run(worker_counts=(1, 2, 4, 8), n_total_trials: int = 48, pruner: str = "asha",
+        tmpdir: str = "/tmp/repro_dist_bench", verbose: bool = True):
+    import os
+    import shutil
+
+    shutil.rmtree(tmpdir, ignore_errors=True)
+    os.makedirs(tmpdir, exist_ok=True)
+
+    rows = {}
+    for n_workers in worker_counts:
+        url = f"sqlite:///{tmpdir}/bench_{n_workers}.db"
+        study_name = f"scale_{n_workers}"
+        hpo.create_study(study_name=study_name, storage=url)
+        per_worker = n_total_trials // n_workers
+        dur = hpo.run_workers(
+            n_workers, url, study_name, objective_sim,
+            n_trials_per_worker=per_worker,
+            sampler_factory=lambda: hpo.TPESampler(),
+            pruner_factory=(
+                (lambda: hpo.SuccessiveHalvingPruner(1, 2, 0)) if pruner == "asha" else None
+            ),
+        )
+        study = hpo.load_study(study_name, url)
+        trials = study.trials
+        states = [t.state.name for t in trials]
+        curve = _best_curve(trials)
+        rows[n_workers] = {
+            "seconds": dur,
+            "trials": len(trials),
+            "trials_per_sec": len(trials) / dur,
+            "pruned": states.count("PRUNED"),
+            "best": study.best_value,
+            "best_at_half": curve[len(curve) // 2] if curve else float("nan"),
+        }
+        if verbose:
+            r = rows[n_workers]
+            print(
+                f"[distributed] workers={n_workers} wall={r['seconds']:6.2f}s "
+                f"trials={r['trials']} ({r['trials_per_sec']:.1f}/s) "
+                f"pruned={r['pruned']} best={r['best']:.4f}",
+                flush=True,
+            )
+
+    # Fig. 11c invariance: best-after-N-trials should not degrade with workers
+    base = rows[worker_counts[0]]["best"]
+    for w in worker_counts[1:]:
+        ratio = rows[w]["best"] / max(base, 1e-9)
+        rows[w]["efficiency_vs_serial"] = ratio
+    return rows

@@ -1,0 +1,63 @@
+"""Kernel microbenchmarks: interpret-mode correctness timing vs jnp reference.
+
+On CPU these are *correctness/overhead* numbers (Pallas interpret mode), not
+TPU wall times — the TPU roofline for the kernels is derived analytically in
+EXPERIMENTS.md §Perf (VMEM-resident traffic accounting).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.ops import crossentropy_op, flash_attention_op, ssd_op
+
+__all__ = ["run"]
+
+
+def _time(fn, *args, n=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6  # us
+
+
+def run(verbose: bool = True):
+    rng = np.random.RandomState(0)
+    rows = {}
+
+    q = jnp.asarray(rng.randn(1, 4, 256, 64).astype(np.float32))
+    k = jnp.asarray(rng.randn(1, 2, 256, 64).astype(np.float32))
+    v = jnp.asarray(rng.randn(1, 2, 256, 64).astype(np.float32))
+    t_kernel = _time(lambda *a: flash_attention_op(*a, block_q=64, block_k=64), q, k, v)
+    t_ref = _time(lambda *a: ref.attention_ref(*a), q, k, v)
+    rows["flash_attention_256"] = {"kernel_us": t_kernel, "ref_us": t_ref}
+
+    x = jnp.asarray(rng.randn(8, 256, 32).astype(np.float32))
+    dt = jnp.abs(jnp.asarray(rng.randn(8, 256).astype(np.float32))) * 0.5
+    A = -jnp.abs(jnp.asarray(rng.randn(8).astype(np.float32)))
+    Bm = jnp.asarray(rng.randn(8, 256, 16).astype(np.float32))
+    Cm = jnp.asarray(rng.randn(8, 256, 16).astype(np.float32))
+    rows["ssd_256"] = {
+        "kernel_us": _time(lambda *a: ssd_op(*a, chunk=64), x, dt, A, Bm, Cm),
+    }
+
+    xe = jnp.asarray(rng.randn(512, 64).astype(np.float32))
+    w = jnp.asarray(rng.randn(64, 4096).astype(np.float32) * 0.05)
+    labels = jnp.asarray(rng.randint(0, 4096, (512,)).astype(np.int32))
+    rows["fused_ce_512x4096"] = {
+        "kernel_us": _time(lambda *a: crossentropy_op(*a, block_t=128, block_v=512), xe, w, labels),
+        "ref_us": _time(lambda *a: ref.crossentropy_ref(*a), xe, w, labels),
+    }
+
+    if verbose:
+        for name, r in rows.items():
+            parts = " ".join(f"{k}={v:9.1f}" for k, v in r.items())
+            print(f"[kernels] {name:22s} {parts}", flush=True)
+    return rows

@@ -1,0 +1,132 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only SECTION]
+
+Sections: samplers (Fig 9/10), pruning (Fig 11a), distributed (Fig 11b/c, 12),
+storage (Table 2 'lightweight'), kernels, roofline (assignment §Roofline).
+Prints ``name,us_per_call,derived`` CSV lines at the end for machine parsing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale budgets (slow)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    sections = ["samplers", "pruning", "distributed", "storage", "kernels", "roofline"]
+    if args.only:
+        sections = [s for s in sections if s == args.only]
+
+    csv_rows = [("name", "us_per_call", "derived")]
+    t_all = time.time()
+
+    if "samplers" in sections:
+        from . import samplers
+
+        print("\n=== §5.1 sampler comparison (paper Fig. 9 / Fig. 10) ===", flush=True)
+        budget = dict(n_cases=56, n_trials=80, repeats=30) if args.full else dict(
+            n_cases=8, n_trials=30, repeats=3
+        )
+        t0 = time.time()
+        out = samplers.run(**budget)
+        dt = time.time() - t0
+        for rival, wtl in out["summary"].items():
+            csv_rows.append(
+                (f"samplers_vs_{rival}", f"{dt*1e6/max(budget['n_cases'],1):.0f}",
+                 f"{wtl['wins']}W/{wtl['ties']}T/{wtl['losses']}L")
+            )
+        mean_tpe_time = sum(
+            v for (c, s), v in out["times"].items() if s == "tpe+cmaes"
+        ) / max(1, sum(1 for (c, s) in out["times"] if s == "tpe+cmaes"))
+        mean_gp_time = sum(v for (c, s), v in out["times"].items() if s == "gp") / max(
+            1, sum(1 for (c, s) in out["times"] if s == "gp")
+        )
+        csv_rows.append(
+            ("sampler_time_ratio_gp_vs_tpecmaes", f"{mean_tpe_time*1e6:.0f}",
+             f"{mean_gp_time/max(mean_tpe_time,1e-9):.1f}x")
+        )
+
+    if "pruning" in sections:
+        from . import pruning
+
+        print("\n=== §5.2 pruning speedup (paper Fig. 11a) ===", flush=True)
+        budget = dict(budget_seconds=240.0, epochs=32) if args.full else dict(
+            budget_seconds=20.0, epochs=12
+        )
+        rows = pruning.run(**budget)
+        for name, r in rows.items():
+            csv_rows.append(
+                (f"pruning_{name}", f"{budget['budget_seconds']*1e6/max(r['trials'],1):.0f}",
+                 f"trials={r['trials']};pruned={r['pruned']};best={r['best_err']:.4f}")
+            )
+
+    if "distributed" in sections:
+        from . import distributed
+
+        print("\n=== §5.3 distributed scaling (paper Fig. 11b/c, Fig. 12) ===", flush=True)
+        budget = dict(n_total_trials=96) if args.full else dict(n_total_trials=32)
+        rows = distributed.run(**budget)
+        base = rows[list(rows)[0]]["trials_per_sec"]
+        for w, r in rows.items():
+            csv_rows.append(
+                (f"distributed_{w}workers", f"{1e6/max(r['trials_per_sec'],1e-9):.0f}",
+                 f"speedup={r['trials_per_sec']/base:.2f}x;best={r['best']:.4f}")
+            )
+
+    if "storage" in sections:
+        from . import storage_bench
+
+        print("\n=== storage backends (Table 2 'lightweight' made quantitative) ===", flush=True)
+        rows = storage_bench.run()
+        for name, r in rows.items():
+            csv_rows.append(
+                (f"storage_{name}", f"{1e6/max(r['write_per_sec'],1e-9):.1f}",
+                 f"create={r['create_per_sec']:.0f}/s;read={r['full_read_per_sec']:.1f}/s")
+            )
+
+    if "kernels" in sections:
+        from . import kernels_bench
+
+        print("\n=== Pallas kernels (interpret-mode vs jnp ref) ===", flush=True)
+        rows = kernels_bench.run()
+        for name, r in rows.items():
+            csv_rows.append((f"kernel_{name}", f"{r['kernel_us']:.0f}", f"ref={r.get('ref_us', 0):.0f}us"))
+
+    if "roofline" in sections:
+        results = os.path.abspath(
+            os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+        )
+        if os.path.isdir(results) and os.listdir(results):
+            sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src")))
+            from repro.launch.roofline import format_table, load_all
+
+            print("\n=== roofline terms from the multi-pod dry-run (§Roofline) ===", flush=True)
+            rows = load_all(results)
+            print(format_table(rows, mesh="pod16x16"))
+            for r in rows:
+                if r["mesh"] != "pod16x16":
+                    continue
+                csv_rows.append(
+                    (f"roofline_{r['arch']}_{r['shape']}",
+                     f"{max(r['t_compute_s'], r['t_memory_s'], r['t_collective_s'])*1e6:.0f}",
+                     f"bound={r['bottleneck']};fraction={r['roofline_fraction']:.3f}")
+                )
+        else:
+            print("(no dry-run artifacts found; run python -m repro.launch.dryrun --all first)")
+
+    print(f"\ntotal benchmark wall time: {time.time()-t_all:.1f}s\n")
+    print("name,us_per_call,derived")
+    for name, us, derived in csv_rows[1:]:
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

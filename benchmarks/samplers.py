@@ -1,0 +1,110 @@
+"""Paper §5.1 (Fig. 9 + Fig. 10): sampler comparison on the 56-case black-box
+suite with paired Mann-Whitney U tests, plus per-trial wall time.
+
+Default budget is scaled for CPU CI (full paper scale: repeats=30, trials=80,
+all 56 cases — pass --full).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+import repro.core as hpo
+from .testbed import CASES
+
+__all__ = ["run", "mann_whitney_u"]
+
+
+def mann_whitney_u(a, b) -> float:
+    """One-sided p-value that distribution a < b (normal approximation),
+    matching the paper's paired Mann-Whitney testing protocol."""
+    a, b = np.asarray(a, float), np.asarray(b, float)
+    n1, n2 = len(a), len(b)
+    all_v = np.concatenate([a, b])
+    order = np.argsort(all_v, kind="stable")
+    ranks = np.empty(len(all_v))
+    # average ranks for ties
+    sv = all_v[order]
+    i = 0
+    while i < len(sv):
+        j = i
+        while j + 1 < len(sv) and sv[j + 1] == sv[i]:
+            j += 1
+        ranks[order[i : j + 1]] = (i + j) / 2.0 + 1.0
+        i = j + 1
+    r1 = ranks[:n1].sum()
+    u1 = r1 - n1 * (n1 + 1) / 2.0
+    mu = n1 * n2 / 2.0
+    sigma = math.sqrt(n1 * n2 * (n1 + n2 + 1) / 12.0) or 1.0
+    z = (u1 - mu) / sigma
+    return 0.5 * (1 + math.erf(z / math.sqrt(2)))  # P(a tends larger)
+
+
+def _objective_for(case):
+    def obj(trial):
+        x = np.array(
+            [trial.suggest_float(f"x{i}", lo, hi) for i, (lo, hi) in enumerate(case.bounds)]
+        )
+        return case.fn(x)
+
+    return obj
+
+
+def run(
+    samplers=("random", "tpe", "tpe+cmaes", "gp"),
+    n_cases: int = 12,
+    n_trials: int = 40,
+    repeats: int = 5,
+    alpha: float = 0.0005,
+    verbose: bool = True,
+):
+    """Returns rows: per (case, sampler): median best value + mean seconds per
+    study, and the Fig. 9-style win/tie/loss table of tpe+cmaes vs rivals."""
+    cases = CASES[:: max(1, len(CASES) // n_cases)][:n_cases]
+    results: dict = {}
+    times: dict = {}
+    for case in cases:
+        obj = _objective_for(case)
+        for name in samplers:
+            bests, elapsed = [], []
+            for rep in range(repeats):
+                sampler = hpo.make_sampler(name, seed=1000 + rep)
+                study = hpo.create_study(sampler=sampler)
+                t0 = time.time()
+                study.optimize(obj, n_trials=n_trials)
+                elapsed.append(time.time() - t0)
+                bests.append(study.best_value)
+            results[(case.name, name)] = bests
+            times[(case.name, name)] = float(np.mean(elapsed))
+            if verbose:
+                print(
+                    f"[samplers] {case.name:16s} {name:10s} "
+                    f"median_best={np.median(bests):12.5g} regret={np.median(bests)-case.best:10.4g} "
+                    f"sec/study={np.mean(elapsed):6.3f}",
+                    flush=True,
+                )
+
+    # Fig. 9: TPE+CMA-ES vs each rival, paired Mann-Whitney per case
+    summary = {}
+    ours = "tpe+cmaes"
+    for rival in samplers:
+        if rival == ours:
+            continue
+        wins = losses = ties = 0
+        for case in cases:
+            a = results[(case.name, ours)]
+            b = results[(case.name, rival)]
+            p_better = mann_whitney_u(a, b)  # P(ours larger=worse)
+            if p_better < alpha:
+                wins += 1
+            elif p_better > 1 - alpha:
+                losses += 1
+            else:
+                ties += 1
+        summary[rival] = {"wins": wins, "ties": ties, "losses": losses}
+        if verbose:
+            print(f"[samplers] tpe+cmaes vs {rival:8s}: {wins}W/{ties}T/{losses}L (alpha={alpha})")
+    return {"results": results, "times": times, "summary": summary}

@@ -1,0 +1,61 @@
+"""Storage backend throughput (beyond-paper; Table-2 'lightweight' claim made
+quantitative): ops/sec per backend for the three dominant operations."""
+
+from __future__ import annotations
+
+import time
+
+import repro.core as hpo
+from repro.core.distributions import FloatDistribution
+from repro.core.frozen import StudyDirection, TrialState
+
+__all__ = ["run"]
+
+
+def _bench(storage, n_trials: int = 200):
+    sid = storage.create_new_study([StudyDirection.MINIMIZE], "bench")
+    t0 = time.time()
+    tids = [storage.create_new_trial(sid) for _ in range(n_trials)]
+    t_create = time.time() - t0
+
+    t0 = time.time()
+    for tid in tids:
+        storage.set_trial_param(tid, "x", 0.5, FloatDistribution(0, 1))
+        storage.set_trial_intermediate_value(tid, 1, 1.0)
+        storage.set_trial_state_values(tid, TrialState.COMPLETE, [1.0])
+    t_write = time.time() - t0
+
+    t0 = time.time()
+    for _ in range(20):
+        trials = storage.get_all_trials(sid, deepcopy=False)
+    t_read = time.time() - t0
+    assert len(trials) == n_trials
+    return {
+        "create_per_sec": n_trials / max(t_create, 1e-9),
+        "write_per_sec": 3 * n_trials / max(t_write, 1e-9),
+        "full_read_per_sec": 20 / max(t_read, 1e-9),
+    }
+
+
+def run(tmpdir: str = "/tmp/repro_storage_bench", n_trials: int = 200, verbose: bool = True):
+    import os
+    import shutil
+
+    shutil.rmtree(tmpdir, ignore_errors=True)
+    os.makedirs(tmpdir, exist_ok=True)
+    rows = {}
+    backends = {
+        "inmemory": hpo.InMemoryStorage(),
+        "sqlite": hpo.SQLiteStorage(f"{tmpdir}/b.db"),
+        "journal": hpo.JournalStorage(f"{tmpdir}/b.journal"),
+    }
+    for name, st in backends.items():
+        rows[name] = _bench(st, n_trials)
+        if verbose:
+            r = rows[name]
+            print(
+                f"[storage] {name:9s} create={r['create_per_sec']:9.0f}/s "
+                f"write={r['write_per_sec']:9.0f}/s read={r['full_read_per_sec']:7.1f}/s",
+                flush=True,
+            )
+    return rows

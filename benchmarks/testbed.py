@@ -1,0 +1,230 @@
+"""Black-box optimization test suite (paper §5.1 / Fig. 9-10).
+
+A reimplementation of the sigopt/evalset-style benchmark family the paper
+used [23, 24]: classic continuous test functions over explicit box domains,
+several in multiple dimensionalities, for 56 total cases.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+
+__all__ = ["CASES", "TestCase"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TestCase:
+    name: str
+    fn: Callable
+    bounds: tuple  # ((lo, hi), ...) per dim
+    best: float  # known optimum (for regret reporting)
+
+    @property
+    def dim(self) -> int:
+        return len(self.bounds)
+
+
+def _mk(name, fn, bounds, best=0.0):
+    return TestCase(name, fn, tuple(bounds), best)
+
+
+def sphere(x):
+    return float(np.sum(x * x))
+
+
+def rosenbrock(x):
+    return float(np.sum(100.0 * (x[1:] - x[:-1] ** 2) ** 2 + (1 - x[:-1]) ** 2))
+
+
+def rastrigin(x):
+    return float(10 * len(x) + np.sum(x * x - 10 * np.cos(2 * np.pi * x)))
+
+
+def ackley(x):
+    n = len(x)
+    return float(
+        -20 * np.exp(-0.2 * np.sqrt(np.sum(x * x) / n))
+        - np.exp(np.sum(np.cos(2 * np.pi * x)) / n)
+        + 20 + np.e
+    )
+
+
+def griewank(x):
+    i = np.arange(1, len(x) + 1)
+    return float(np.sum(x * x) / 4000 - np.prod(np.cos(x / np.sqrt(i))) + 1)
+
+
+def levy(x):
+    w = 1 + (x - 1) / 4
+    return float(
+        np.sin(np.pi * w[0]) ** 2
+        + np.sum((w[:-1] - 1) ** 2 * (1 + 10 * np.sin(np.pi * w[:-1] + 1) ** 2))
+        + (w[-1] - 1) ** 2 * (1 + np.sin(2 * np.pi * w[-1]) ** 2)
+    )
+
+
+def schwefel(x):
+    return float(418.9829 * len(x) - np.sum(x * np.sin(np.sqrt(np.abs(x)))))
+
+
+def zakharov(x):
+    i = np.arange(1, len(x) + 1)
+    s = np.sum(0.5 * i * x)
+    return float(np.sum(x * x) + s**2 + s**4)
+
+
+def styblinski_tang(x):
+    return float(0.5 * np.sum(x**4 - 16 * x * x + 5 * x) + 39.16617 * len(x))
+
+
+def dixon_price(x):
+    i = np.arange(2, len(x) + 1)
+    return float((x[0] - 1) ** 2 + np.sum(i * (2 * x[1:] ** 2 - x[:-1]) ** 2))
+
+
+def michalewicz(x):
+    i = np.arange(1, len(x) + 1)
+    return float(-np.sum(np.sin(x) * np.sin(i * x * x / np.pi) ** 20))
+
+
+def branin(x):
+    a, b, c = 1.0, 5.1 / (4 * np.pi**2), 5 / np.pi
+    r, s, t = 6.0, 10.0, 1 / (8 * np.pi)
+    return float(a * (x[1] - b * x[0] ** 2 + c * x[0] - r) ** 2 + s * (1 - t) * np.cos(x[0]) + s)
+
+
+def six_hump_camel(x):
+    return float(
+        (4 - 2.1 * x[0] ** 2 + x[0] ** 4 / 3) * x[0] ** 2
+        + x[0] * x[1]
+        + (-4 + 4 * x[1] ** 2) * x[1] ** 2
+    )
+
+
+def beale(x):
+    return float(
+        (1.5 - x[0] + x[0] * x[1]) ** 2
+        + (2.25 - x[0] + x[0] * x[1] ** 2) ** 2
+        + (2.625 - x[0] + x[0] * x[1] ** 3) ** 2
+    )
+
+
+def goldstein_price(x):
+    a = 1 + (x[0] + x[1] + 1) ** 2 * (
+        19 - 14 * x[0] + 3 * x[0] ** 2 - 14 * x[1] + 6 * x[0] * x[1] + 3 * x[1] ** 2
+    )
+    b = 30 + (2 * x[0] - 3 * x[1]) ** 2 * (
+        18 - 32 * x[0] + 12 * x[0] ** 2 + 48 * x[1] - 36 * x[0] * x[1] + 27 * x[1] ** 2
+    )
+    return float(a * b)
+
+
+def hartmann3(x):
+    A = np.array([[3, 10, 30], [0.1, 10, 35], [3, 10, 30], [0.1, 10, 35]])
+    P = 1e-4 * np.array(
+        [[3689, 1170, 2673], [4699, 4387, 7470], [1091, 8732, 5547], [381, 5743, 8828]]
+    )
+    alpha = np.array([1.0, 1.2, 3.0, 3.2])
+    return float(-np.sum(alpha * np.exp(-np.sum(A * (x - P) ** 2, axis=1))))
+
+
+def hartmann6(x):
+    A = np.array(
+        [
+            [10, 3, 17, 3.5, 1.7, 8],
+            [0.05, 10, 17, 0.1, 8, 14],
+            [3, 3.5, 1.7, 10, 17, 8],
+            [17, 8, 0.05, 10, 0.1, 14],
+        ]
+    )
+    P = 1e-4 * np.array(
+        [
+            [1312, 1696, 5569, 124, 8283, 5886],
+            [2329, 4135, 8307, 3736, 1004, 9991],
+            [2348, 1451, 3522, 2883, 3047, 6650],
+            [4047, 8828, 8732, 5743, 1091, 381],
+        ]
+    )
+    alpha = np.array([1.0, 1.2, 3.0, 3.2])
+    return float(-np.sum(alpha * np.exp(-np.sum(A * (x - P) ** 2, axis=1))))
+
+
+def booth(x):
+    return float((x[0] + 2 * x[1] - 7) ** 2 + (2 * x[0] + x[1] - 5) ** 2)
+
+
+def matyas(x):
+    return float(0.26 * (x[0] ** 2 + x[1] ** 2) - 0.48 * x[0] * x[1])
+
+
+def mccormick(x):
+    return float(np.sin(x[0] + x[1]) + (x[0] - x[1]) ** 2 - 1.5 * x[0] + 2.5 * x[1] + 1)
+
+
+def three_hump_camel(x):
+    return float(2 * x[0] ** 2 - 1.05 * x[0] ** 4 + x[0] ** 6 / 6 + x[0] * x[1] + x[1] ** 2)
+
+
+def easom(x):
+    return float(-np.cos(x[0]) * np.cos(x[1]) * np.exp(-((x[0] - np.pi) ** 2) - (x[1] - np.pi) ** 2))
+
+
+def drop_wave(x):
+    r2 = x[0] ** 2 + x[1] ** 2
+    return float(-(1 + np.cos(12 * np.sqrt(r2))) / (0.5 * r2 + 2))
+
+
+def sum_squares(x):
+    i = np.arange(1, len(x) + 1)
+    return float(np.sum(i * x * x))
+
+
+def rotated_ellipse(x):
+    return float(7 * x[0] ** 2 - 6 * np.sqrt(3) * x[0] * x[1] + 13 * x[1] ** 2)
+
+
+def exponential(x):
+    return float(-np.exp(-0.5 * np.sum(x * x)) + 1.0)
+
+
+def _cases():
+    out = []
+    for d in (2, 3, 5, 8, 12):
+        out.append(_mk(f"sphere_{d}d", sphere, [(-5.12, 5.12)] * d))
+        out.append(_mk(f"rosenbrock_{d}d", rosenbrock, [(-2.048, 2.048)] * d))
+    for d in (2, 3, 5, 8):
+        out.append(_mk(f"rastrigin_{d}d", rastrigin, [(-5.12, 5.12)] * d))
+        out.append(_mk(f"ackley_{d}d", ackley, [(-32.77, 32.77)] * d))
+        out.append(_mk(f"griewank_{d}d", griewank, [(-600, 600)] * d))
+        out.append(_mk(f"levy_{d}d", levy, [(-10, 10)] * d))
+        out.append(_mk(f"zakharov_{d}d", zakharov, [(-5, 10)] * d))
+    for d in (2, 4, 6):
+        out.append(_mk(f"styblinski_{d}d", styblinski_tang, [(-5, 5)] * d, best=0.0))
+        out.append(_mk(f"dixonprice_{d}d", dixon_price, [(-10, 10)] * d))
+        out.append(_mk(f"sumsquares_{d}d", sum_squares, [(-10, 10)] * d))
+    out.append(_mk("schwefel_4d", schwefel, [(-500, 500)] * 4))
+    out.append(_mk("michalewicz_2d", michalewicz, [(0, np.pi)] * 2, best=-1.8013))
+    out.append(_mk("michalewicz_5d", michalewicz, [(0, np.pi)] * 5, best=-4.6877))
+    out.append(_mk("branin", branin, [(-5, 10), (0, 15)], best=0.397887))
+    out.append(_mk("sixhump", six_hump_camel, [(-3, 3), (-2, 2)], best=-1.0316))
+    out.append(_mk("beale", beale, [(-4.5, 4.5)] * 2))
+    out.append(_mk("goldstein", goldstein_price, [(-2, 2)] * 2, best=3.0))
+    out.append(_mk("hartmann3", hartmann3, [(0, 1)] * 3, best=-3.86278))
+    out.append(_mk("hartmann6", hartmann6, [(0, 1)] * 6, best=-3.32237))
+    out.append(_mk("booth", booth, [(-10, 10)] * 2))
+    out.append(_mk("matyas", matyas, [(-10, 10)] * 2))
+    out.append(_mk("mccormick", mccormick, [(-1.5, 4), (-3, 4)], best=-1.9133))
+    out.append(_mk("threehump", three_hump_camel, [(-5, 5)] * 2))
+    out.append(_mk("easom", easom, [(-100, 100)] * 2, best=-1.0))
+    out.append(_mk("dropwave", drop_wave, [(-5.12, 5.12)] * 2, best=-1.0))
+    out.append(_mk("rotatedellipse", rotated_ellipse, [(-500, 500)] * 2))
+    out.append(_mk("exponential_4d", exponential, [(-1, 1)] * 4))
+    return out
+
+
+CASES = _cases()
+assert len(CASES) == 56, len(CASES)

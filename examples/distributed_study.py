@@ -1,0 +1,65 @@
+"""Distributed optimization exactly as in paper Fig. 7: run this script N
+times (or with --workers N to spawn locally) against a shared storage URL.
+
+    # terminal 1..N (or different nodes over a shared filesystem):
+    PYTHONPATH=src python examples/distributed_study.py --storage sqlite:///example.db
+    # or journal storage for NFS-scale fleets:
+    PYTHONPATH=src python examples/distributed_study.py --storage journal:///shared/example.journal
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+import repro.core as hpo
+
+
+def objective(trial: hpo.Trial) -> float:
+    x = trial.suggest_float("x", -5, 5)
+    y = trial.suggest_float("y", -5, 5)
+    for step in range(1, 9):  # intermediate values feed ASHA across workers
+        partial = (x - 1) ** 2 + (y + 2) ** 2 + 2.0 / step
+        trial.report(partial, step)
+        if trial.should_prune():
+            raise hpo.TrialPruned()
+    return (x - 1) ** 2 + (y + 2) ** 2
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--storage", default="sqlite:////tmp/example_study.db")
+    ap.add_argument("--study", default="distributed-example")
+    ap.add_argument("--trials", type=int, default=20)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="spawn N local worker processes (0 = run inline)")
+    args = ap.parse_args()
+
+    study = hpo.create_study(
+        study_name=args.study,
+        storage=args.storage,
+        sampler=hpo.TPESampler(),
+        pruner=hpo.SuccessiveHalvingPruner(),
+        load_if_exists=True,  # elastic: join an existing study at any time
+    )
+
+    if args.workers > 0:
+        dur = hpo.run_workers(
+            args.workers, args.storage, args.study, objective,
+            n_trials_per_worker=args.trials // args.workers,
+            pruner_factory=lambda: hpo.SuccessiveHalvingPruner(),
+        )
+        print(f"{args.workers} workers finished in {dur:.2f}s")
+    else:
+        study.heartbeat_interval = 2.0  # fault tolerance: dead workers detected
+        study.optimize(objective, n_trials=args.trials, catch=(Exception,))
+
+    study.fail_stale_trials()
+    print(f"total trials in study: {len(study.trials)}; best: {study.best_value:.5f} "
+          f"at {study.best_params}")
+
+
+if __name__ == "__main__":
+    main()

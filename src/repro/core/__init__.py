@@ -1,0 +1,84 @@
+"""``repro.core`` — a define-by-run hyperparameter optimization engine.
+
+The paper's contribution (Optuna, KDD'19), reimplemented: live trial objects
+with a suggest API, TPE/CMA-ES/GP samplers over dynamically constructed
+search spaces, ASHA pruning (paper Algorithm 1), and storage-mediated
+distributed execution.
+
+    import repro.core as hpo
+
+    def objective(trial):
+        x = trial.suggest_float("x", -10, 10)
+        return (x - 2) ** 2
+
+    study = hpo.create_study()
+    study.optimize(objective, n_trials=100)
+    print(study.best_params)
+"""
+
+from __future__ import annotations
+
+from .dashboard import render_dashboard, save_dashboard
+from .distributed import RetryFailedTrialCallback, run_workers, worker_main
+from .distributions import (
+    BaseDistribution,
+    CategoricalDistribution,
+    FloatDistribution,
+    IntDistribution,
+)
+from .exceptions import DuplicatedStudyError, StorageInternalError, TrialPruned
+from .frozen import FrozenTrial, StudyDirection, TrialState
+from .importance import param_importances, spearman_importances
+from .pruners import (
+    BasePruner,
+    HyperbandPruner,
+    MedianPruner,
+    NopPruner,
+    PatientPruner,
+    PercentilePruner,
+    SuccessiveHalvingPruner,
+    ThresholdPruner,
+    make_pruner,
+)
+from .samplers import (
+    CMA,
+    BaseSampler,
+    CmaEsSampler,
+    GPSampler,
+    GridSampler,
+    RandomSampler,
+    TPESampler,
+    make_sampler,
+)
+from .search_space import IntersectionSearchSpace, intersection_search_space
+from .storage import (
+    BaseStorage,
+    InMemoryStorage,
+    JournalStorage,
+    SQLiteStorage,
+    get_storage,
+)
+from .study import Study, create_study, delete_study, load_study
+from .trial import FixedTrial, Trial
+
+__all__ = [
+    # study / trial
+    "Study", "create_study", "load_study", "delete_study",
+    "Trial", "FixedTrial", "FrozenTrial", "TrialState", "StudyDirection",
+    # distributions
+    "BaseDistribution", "FloatDistribution", "IntDistribution", "CategoricalDistribution",
+    # samplers
+    "BaseSampler", "RandomSampler", "GridSampler", "TPESampler", "CmaEsSampler",
+    "CMA", "GPSampler", "make_sampler",
+    # pruners
+    "BasePruner", "NopPruner", "SuccessiveHalvingPruner", "MedianPruner",
+    "PercentilePruner", "HyperbandPruner", "ThresholdPruner", "PatientPruner", "make_pruner",
+    # storage
+    "BaseStorage", "InMemoryStorage", "SQLiteStorage", "JournalStorage", "get_storage",
+    # distributed / misc
+    "run_workers", "worker_main", "RetryFailedTrialCallback",
+    "TrialPruned", "DuplicatedStudyError", "StorageInternalError",
+    "intersection_search_space", "IntersectionSearchSpace",
+    "param_importances", "spearman_importances",
+    "render_dashboard", "save_dashboard",
+]

@@ -1,0 +1,226 @@
+"""Static-HTML dashboard (paper §4, Fig. 8) — zero-dependency.
+
+Generates a self-contained HTML file with hand-rolled SVG:
+
+* optimization-history plot (objective value vs trial number + best-so-far),
+* intermediate-value learning curves (pruned trials drawn dimmed),
+* parallel-coordinates plot of sampled parameters,
+* parameter importances,
+* the trials table.
+
+Real-time use: re-render on a timer (``watch -n10``) or from a study callback;
+the render reads only storage, so it works against a live distributed study.
+"""
+
+from __future__ import annotations
+
+import html
+import math
+from typing import TYPE_CHECKING
+
+from .frozen import StudyDirection, TrialState
+from .importance import param_importances
+
+if TYPE_CHECKING:
+    from .study import Study
+
+__all__ = ["render_dashboard", "save_dashboard"]
+
+W, H, PAD = 640, 300, 40
+
+
+def _scale(vs, lo, hi, out_lo, out_hi):
+    if hi <= lo:
+        return [0.5 * (out_lo + out_hi) for _ in vs]
+    return [out_lo + (v - lo) / (hi - lo) * (out_hi - out_lo) for v in vs]
+
+
+def _poly(points: list[tuple[float, float]], color: str, width: float = 1.5, opacity: float = 1.0) -> str:
+    pts = " ".join(f"{x:.1f},{y:.1f}" for x, y in points)
+    return (
+        f'<polyline fill="none" stroke="{color}" stroke-width="{width}" '
+        f'opacity="{opacity}" points="{pts}"/>'
+    )
+
+
+def _svg(body: str, w: int = W, h: int = H) -> str:
+    return (
+        f'<svg viewBox="0 0 {w} {h}" width="{w}" height="{h}" '
+        f'style="background:#fff;border:1px solid #ddd">{body}</svg>'
+    )
+
+
+def _axis_frame(w: int = W, h: int = H) -> str:
+    return (
+        f'<line x1="{PAD}" y1="{h-PAD}" x2="{w-10}" y2="{h-PAD}" stroke="#888"/>'
+        f'<line x1="{PAD}" y1="10" x2="{PAD}" y2="{h-PAD}" stroke="#888"/>'
+    )
+
+
+def _history_svg(study: "Study") -> str:
+    trials = [
+        t for t in study.get_trials(deepcopy=False, states=(TrialState.COMPLETE,))
+        if t.values and math.isfinite(t.values[0])
+    ]
+    if not trials:
+        return _svg('<text x="20" y="40">no completed trials</text>')
+    xs = [t.number for t in trials]
+    ys = [t.values[0] for t in trials]
+    lo, hi = min(ys), max(ys)
+    sx = _scale(xs, min(xs), max(xs), PAD, W - 10)
+    sy = _scale(ys, lo, hi, H - PAD, 10)
+    pts = "".join(
+        f'<circle cx="{x:.1f}" cy="{y:.1f}" r="2.5" fill="#3b6fb6"/>' for x, y in zip(sx, sy)
+    )
+    # best-so-far line
+    best, bests = None, []
+    minimize = study.direction == StudyDirection.MINIMIZE
+    for y in ys:
+        best = y if best is None else (min(best, y) if minimize else max(best, y))
+        bests.append(best)
+    sb = _scale(bests, lo, hi, H - PAD, 10)
+    line = _poly(list(zip(sx, sb)), "#c0392b", 2.0)
+    labels = (
+        f'<text x="{PAD}" y="{H-10}" font-size="11">trial #</text>'
+        f'<text x="5" y="20" font-size="11">value [{lo:.4g}, {hi:.4g}]</text>'
+    )
+    return _svg(_axis_frame() + pts + line + labels)
+
+
+def _curves_svg(study: "Study", max_curves: int = 200) -> str:
+    trials = [t for t in study.get_trials(deepcopy=False) if t.intermediate_values]
+    if not trials:
+        return _svg('<text x="20" y="40">no intermediate values reported</text>')
+    trials = trials[-max_curves:]
+    all_v = [v for t in trials for v in t.intermediate_values.values() if math.isfinite(v)]
+    all_s = [s for t in trials for s in t.intermediate_values]
+    if not all_v:
+        return _svg('<text x="20" y="40">no finite intermediate values</text>')
+    lo, hi = min(all_v), max(all_v)
+    slo, shi = min(all_s), max(all_s)
+    body = [_axis_frame()]
+    for t in trials:
+        steps = sorted(t.intermediate_values)
+        vs = [t.intermediate_values[s] for s in steps]
+        sx = _scale(steps, slo, shi, PAD, W - 10)
+        sy = _scale(vs, lo, hi, H - PAD, 10)
+        if t.state == TrialState.PRUNED:
+            body.append(_poly(list(zip(sx, sy)), "#bbb", 1.0, 0.6))
+        elif t.state == TrialState.COMPLETE:
+            body.append(_poly(list(zip(sx, sy)), "#2b8a3e", 1.3, 0.9))
+        else:
+            body.append(_poly(list(zip(sx, sy)), "#e67e22", 1.3, 0.9))
+    body.append(f'<text x="{PAD}" y="{H-10}" font-size="11">step</text>')
+    return _svg("".join(body))
+
+
+def _parallel_svg(study: "Study") -> str:
+    trials = [
+        t for t in study.get_trials(deepcopy=False, states=(TrialState.COMPLETE,))
+        if t.values and math.isfinite(t.values[0])
+    ]
+    if len(trials) < 2:
+        return _svg('<text x="20" y="40">need >= 2 completed trials</text>')
+    names = sorted({n for t in trials for n in t.params})
+    axes = names + ["value"]
+    n_ax = len(axes)
+    xs = _scale(list(range(n_ax)), 0, n_ax - 1, PAD, W - 20)
+
+    cols: dict[str, list[float]] = {}
+    for name in names:
+        vals = []
+        for t in trials:
+            if name in t.params:
+                vals.append(t.distributions[name].to_internal_repr(t.params[name]))
+        cols[name] = vals
+    values = [t.values[0] for t in trials]
+    vlo, vhi = min(values), max(values)
+
+    body = []
+    for i, ax in enumerate(axes):
+        body.append(f'<line x1="{xs[i]:.0f}" y1="15" x2="{xs[i]:.0f}" y2="{H-25}" stroke="#999"/>')
+        body.append(
+            f'<text x="{xs[i]:.0f}" y="{H-8}" font-size="9" text-anchor="middle">{html.escape(ax[:14])}</text>'
+        )
+    for t, v in zip(trials, values):
+        pts = []
+        for i, name in enumerate(names):
+            if name not in t.params:
+                continue
+            col = cols[name]
+            lo, hi = min(col), max(col)
+            y = _scale([t.distributions[name].to_internal_repr(t.params[name])], lo, hi, H - 25, 15)[0]
+            pts.append((xs[i], y))
+        y = _scale([v], vlo, vhi, H - 25, 15)[0]
+        pts.append((xs[-1], y))
+        # color by objective: blue (good) to red (bad)
+        q = 0.0 if vhi <= vlo else (v - vlo) / (vhi - vlo)
+        if study.direction == StudyDirection.MAXIMIZE:
+            q = 1 - q
+        color = f"rgb({int(60+180*q)},{int(110-60*q)},{int(200-160*q)})"
+        body.append(_poly(pts, color, 1.0, 0.55))
+    return _svg("".join(body))
+
+
+def _importance_svg(study: "Study") -> str:
+    try:
+        imps = param_importances(study)
+    except Exception:
+        imps = {}
+    if not imps:
+        return _svg('<text x="20" y="40">importances unavailable</text>')
+    body = []
+    y = 20
+    for name, v in list(imps.items())[:12]:
+        w = v * (W - 180)
+        body.append(f'<rect x="150" y="{y-10}" width="{max(w,1):.0f}" height="12" fill="#3b6fb6"/>')
+        body.append(f'<text x="145" y="{y}" font-size="10" text-anchor="end">{html.escape(name[:20])}</text>')
+        body.append(f'<text x="{155+w:.0f}" y="{y}" font-size="10">{v:.2f}</text>')
+        y += 20
+    return _svg("".join(body), W, max(y + 10, 80))
+
+
+def _table(study: "Study", limit: int = 100) -> str:
+    rows = study.trials_dataframe()[-limit:]
+    if not rows:
+        return "<p>no trials</p>"
+    cols = sorted({k for r in rows for k in r})
+    head = "".join(f"<th>{html.escape(c)}</th>" for c in cols)
+    body = []
+    for r in rows:
+        tds = "".join(f"<td>{html.escape(str(r.get(c, '')))[:24]}</td>" for c in cols)
+        body.append(f"<tr>{tds}</tr>")
+    return (
+        '<table border="1" cellspacing="0" cellpadding="3" style="font-size:11px">'
+        f"<tr>{head}</tr>{''.join(body)}</table>"
+    )
+
+
+def render_dashboard(study: "Study") -> str:
+    n_by_state = {}
+    for t in study.get_trials(deepcopy=False):
+        n_by_state[t.state.name] = n_by_state.get(t.state.name, 0) + 1
+    try:
+        best = f"{study.best_value:.6g} (trial {study.best_trial.number})"
+    except ValueError:
+        best = "n/a"
+    summary = ", ".join(f"{k}: {v}" for k, v in sorted(n_by_state.items()))
+    return f"""<!doctype html>
+<html><head><meta charset="utf-8"><title>{html.escape(study.study_name)}</title>
+<style>body{{font-family:sans-serif;margin:20px}} h2{{margin-top:28px}}</style></head>
+<body>
+<h1>Study: {html.escape(study.study_name)}</h1>
+<p>direction: {study.direction.name.lower()} &middot; trials: {summary} &middot; best: {best}</p>
+<h2>Optimization history</h2>{_history_svg(study)}
+<h2>Learning curves (intermediate values)</h2>{_curves_svg(study)}
+<h2>Parallel coordinates</h2>{_parallel_svg(study)}
+<h2>Parameter importances</h2>{_importance_svg(study)}
+<h2>Trials</h2>{_table(study)}
+</body></html>"""
+
+
+def save_dashboard(study: "Study", path: str) -> str:
+    htm = render_dashboard(study)
+    with open(path, "w") as f:
+        f.write(htm)
+    return path

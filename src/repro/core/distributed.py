@@ -1,0 +1,100 @@
+"""Multi-process distributed optimization (paper §4, Fig. 7).
+
+The paper's model: run the *same* worker script N times with the same storage
+URL and study name.  ``run_workers`` is the programmatic equivalent (spawning
+local processes); on a cluster you simply launch ``examples/distributed_study.py``
+(or your own script) once per node — workers are stateless and elastic, so
+joining late or dying early never corrupts the study.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import time
+from typing import Any, Callable
+
+from .frozen import TrialState
+from .pruners import BasePruner
+from .samplers import BaseSampler
+from .study import Study, load_study
+
+__all__ = ["run_workers", "worker_main", "RetryFailedTrialCallback"]
+
+
+def worker_main(
+    storage_url: str,
+    study_name: str,
+    objective: Callable,
+    n_trials: int,
+    sampler_factory: Callable[[], BaseSampler] | None = None,
+    pruner_factory: Callable[[], BasePruner] | None = None,
+    seed_offset: int = 0,
+    heartbeat_interval: float | None = 2.0,
+    timeout: float | None = None,
+) -> None:
+    """Entry point executed inside each worker process."""
+    study = load_study(
+        study_name,
+        storage_url,
+        sampler=sampler_factory() if sampler_factory else None,
+        pruner=pruner_factory() if pruner_factory else None,
+    )
+    # different workers must explore differently
+    study.sampler.reseed_rng()
+    study.heartbeat_interval = heartbeat_interval
+    study.optimize(objective, n_trials=n_trials, timeout=timeout, catch=(Exception,))
+
+
+def run_workers(
+    n_workers: int,
+    storage_url: str,
+    study_name: str,
+    objective: Callable,
+    n_trials_per_worker: int,
+    sampler_factory: Callable[[], BaseSampler] | None = None,
+    pruner_factory: Callable[[], BasePruner] | None = None,
+    timeout: float | None = None,
+    start_method: str = "fork",
+) -> float:
+    """Launch ``n_workers`` processes optimizing the same study; returns the
+    wall-clock duration.  Storage must be shareable across processes
+    (``sqlite:///`` or ``journal://``)."""
+    ctx = mp.get_context(start_method)
+    procs = []
+    t0 = time.time()
+    for i in range(n_workers):
+        p = ctx.Process(
+            target=worker_main,
+            args=(storage_url, study_name, objective, n_trials_per_worker),
+            kwargs=dict(
+                sampler_factory=sampler_factory,
+                pruner_factory=pruner_factory,
+                seed_offset=i,
+                timeout=timeout,
+            ),
+        )
+        p.start()
+        procs.append(p)
+    for p in procs:
+        p.join()
+    return time.time() - t0
+
+
+class RetryFailedTrialCallback:
+    """Study callback: when a trial FAILs (e.g. node preempted), re-enqueue its
+    parameters up to ``max_retry`` times.  Combined with heartbeat failover
+    this gives at-least-once trial execution under node failures."""
+
+    def __init__(self, max_retry: int = 1):
+        self._max_retry = max_retry
+
+    def __call__(self, study: Study, trial) -> None:
+        if trial.state != TrialState.FAIL:
+            return
+        n_prev = int(trial.system_attrs.get("retry:count", 0))
+        if n_prev >= self._max_retry:
+            return
+        study.enqueue_trial(dict(trial.params), user_attrs={"retry_of": trial.number})
+        # mark the new enqueued trial's retry depth via study attr on the failed one
+        study._storage.set_trial_system_attr(trial.trial_id, "retry:count", n_prev + 1)

@@ -1,0 +1,212 @@
+"""Parameter distributions for the define-by-run search space.
+
+A distribution describes the domain a single ``trial.suggest_*`` call samples
+from.  Because the search space is constructed *dynamically* (define-by-run),
+distributions are recorded per-(trial, parameter) in storage, and the
+intersection over completed trials recovers the concurrence relations the
+relational samplers (CMA-ES, GP) need (paper §3.1).
+
+Internal representation
+-----------------------
+Every parameter value is stored as a float ("internal repr"):
+
+* Float  -> the value itself
+* Int    -> float(value)
+* Categorical -> float(index into ``choices``)
+
+``to_external_repr``/``to_internal_repr`` convert between the two.  This is
+the same trick Optuna uses so that storage backends only ever persist floats.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from typing import Any, Sequence
+
+__all__ = [
+    "BaseDistribution",
+    "FloatDistribution",
+    "IntDistribution",
+    "CategoricalDistribution",
+    "distribution_to_json",
+    "json_to_distribution",
+    "check_distribution_compatibility",
+]
+
+
+class BaseDistribution:
+    """Base class of parameter distributions."""
+
+    def to_external_repr(self, internal: float) -> Any:
+        return internal
+
+    def to_internal_repr(self, external: Any) -> float:
+        return float(external)
+
+    def single(self) -> bool:
+        """True if the domain contains exactly one value."""
+        raise NotImplementedError
+
+    def _contains(self, internal: float) -> bool:
+        raise NotImplementedError
+
+    def _asdict(self) -> dict:
+        raise NotImplementedError
+
+    def __eq__(self, other: object) -> bool:
+        return type(self) is type(other) and self._asdict() == other._asdict()  # type: ignore[attr-defined]
+
+    def __hash__(self) -> int:
+        return hash((type(self).__name__, json.dumps(self._asdict(), sort_keys=True, default=str)))
+
+    def __repr__(self) -> str:
+        kwargs = ", ".join(f"{k}={v!r}" for k, v in self._asdict().items())
+        return f"{type(self).__name__}({kwargs})"
+
+
+class FloatDistribution(BaseDistribution):
+    """A continuous domain ``[low, high]``.
+
+    Args:
+        low/high: inclusive bounds.
+        log: sample in log space (requires ``low > 0``).
+        step: discretization step (mutually exclusive with ``log``).
+    """
+
+    def __init__(self, low: float, high: float, log: bool = False, step: float | None = None):
+        if math.isnan(low) or math.isnan(high):
+            raise ValueError("low/high must not be NaN")
+        if low > high:
+            raise ValueError(f"low={low} must be <= high={high}")
+        if log and step is not None:
+            raise ValueError("log and step are mutually exclusive")
+        if log and low <= 0.0:
+            raise ValueError(f"low={low} must be > 0 with log=True")
+        if step is not None and step <= 0:
+            raise ValueError(f"step={step} must be > 0")
+        self.low = float(low)
+        self.high = float(high)
+        self.log = bool(log)
+        self.step = float(step) if step is not None else None
+
+    def single(self) -> bool:
+        if self.step is not None:
+            return self.high - self.low < self.step
+        return self.low == self.high
+
+    def _contains(self, internal: float) -> bool:
+        return self.low <= internal <= self.high
+
+    def to_external_repr(self, internal: float) -> float:
+        return float(internal)
+
+    def _asdict(self) -> dict:
+        return {"low": self.low, "high": self.high, "log": self.log, "step": self.step}
+
+
+class IntDistribution(BaseDistribution):
+    """An integer domain ``{low, low+step, ..., high}`` (or log-uniform ints)."""
+
+    def __init__(self, low: int, high: int, log: bool = False, step: int = 1):
+        if low > high:
+            raise ValueError(f"low={low} must be <= high={high}")
+        if log and low <= 0:
+            raise ValueError(f"low={low} must be > 0 with log=True")
+        if step <= 0:
+            raise ValueError(f"step={step} must be > 0")
+        if log and step != 1:
+            raise ValueError("log and step!=1 are mutually exclusive")
+        self.low = int(low)
+        self.high = int(high)
+        self.log = bool(log)
+        self.step = int(step)
+
+    def single(self) -> bool:
+        return self.high - self.low < self.step
+
+    def _contains(self, internal: float) -> bool:
+        v = int(round(internal))
+        return self.low <= v <= self.high
+
+    def to_external_repr(self, internal: float) -> int:
+        return int(round(internal))
+
+    def _asdict(self) -> dict:
+        return {"low": self.low, "high": self.high, "log": self.log, "step": self.step}
+
+
+class CategoricalDistribution(BaseDistribution):
+    """A finite unordered set of choices.
+
+    Choices must be json-serializable (None, bool, int, float, str); this is
+    what lets every storage backend persist them.
+    """
+
+    def __init__(self, choices: Sequence[Any]):
+        if len(choices) == 0:
+            raise ValueError("choices must not be empty")
+        for c in choices:
+            if c is not None and not isinstance(c, (bool, int, float, str)):
+                raise ValueError(
+                    f"categorical choice {c!r} of type {type(c).__name__} is not "
+                    "json-serializable; use None/bool/int/float/str"
+                )
+        self.choices = tuple(choices)
+
+    def single(self) -> bool:
+        return len(self.choices) == 1
+
+    def _contains(self, internal: float) -> bool:
+        idx = int(round(internal))
+        return 0 <= idx < len(self.choices)
+
+    def to_external_repr(self, internal: float) -> Any:
+        return self.choices[int(round(internal))]
+
+    def to_internal_repr(self, external: Any) -> float:
+        # type-aware match: in Python 0 == False, so .index() would conflate
+        # int and bool choices (hypothesis-found edge case)
+        for i, c in enumerate(self.choices):
+            if type(c) is type(external) and c == external:
+                return float(i)
+        for i, c in enumerate(self.choices):  # fall back to plain equality
+            if c == external:
+                return float(i)
+        raise ValueError(f"{external!r} is not one of the choices {self.choices!r}")
+
+    def _asdict(self) -> dict:
+        return {"choices": list(self.choices)}
+
+
+_CLASSES = {
+    "FloatDistribution": FloatDistribution,
+    "IntDistribution": IntDistribution,
+    "CategoricalDistribution": CategoricalDistribution,
+}
+
+
+def distribution_to_json(dist: BaseDistribution) -> str:
+    return json.dumps({"name": type(dist).__name__, "attributes": dist._asdict()})
+
+
+def json_to_distribution(s: str) -> BaseDistribution:
+    obj = json.loads(s)
+    cls = _CLASSES[obj["name"]]
+    return cls(**obj["attributes"])
+
+
+def check_distribution_compatibility(old: BaseDistribution, new: BaseDistribution) -> None:
+    """Raise if a parameter is re-suggested with an incompatible domain.
+
+    Define-by-run allows the *structure* of the space to change across trials,
+    but a given parameter name must keep the same distribution *type* (and the
+    same choices for categoricals) so sampler history stays meaningful.
+    Bounds of numeric domains may move (Optuna semantics).
+    """
+    if type(old) is not type(new):
+        raise ValueError(
+            f"inconsistent distribution types for one parameter: {old!r} vs {new!r}"
+        )
+    if isinstance(old, CategoricalDistribution) and old != new:
+        raise ValueError(f"inconsistent categorical choices: {old!r} vs {new!r}")

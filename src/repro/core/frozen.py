@@ -1,0 +1,106 @@
+"""Immutable snapshots of trials: ``TrialState`` and ``FrozenTrial``."""
+
+from __future__ import annotations
+
+import copy
+import datetime
+import enum
+from typing import Any
+
+from .distributions import BaseDistribution
+
+__all__ = ["TrialState", "FrozenTrial", "StudyDirection"]
+
+
+class TrialState(enum.IntEnum):
+    RUNNING = 0
+    COMPLETE = 1
+    PRUNED = 2
+    FAIL = 3
+    WAITING = 4  # enqueued, not yet claimed by a worker
+
+    def is_finished(self) -> bool:
+        return self in (TrialState.COMPLETE, TrialState.PRUNED, TrialState.FAIL)
+
+
+class StudyDirection(enum.IntEnum):
+    MINIMIZE = 0
+    MAXIMIZE = 1
+
+
+class FrozenTrial:
+    """An immutable record of a trial as persisted in storage.
+
+    ``params`` holds external reprs; ``distributions`` the per-param domains.
+    ``intermediate_values`` maps step -> reported value (paper Fig. 5's
+    'report API' history that pruners consume).
+    """
+
+    def __init__(
+        self,
+        number: int,
+        state: TrialState,
+        value: float | None = None,
+        values: list[float] | None = None,
+        params: dict[str, Any] | None = None,
+        distributions: dict[str, BaseDistribution] | None = None,
+        intermediate_values: dict[int, float] | None = None,
+        user_attrs: dict[str, Any] | None = None,
+        system_attrs: dict[str, Any] | None = None,
+        trial_id: int = -1,
+        datetime_start: datetime.datetime | None = None,
+        datetime_complete: datetime.datetime | None = None,
+    ):
+        if value is not None and values is not None:
+            raise ValueError("specify only one of value / values")
+        self.number = number
+        self.state = state
+        self.values = [value] if value is not None else (list(values) if values else None)
+        self.params = dict(params or {})
+        self.distributions = dict(distributions or {})
+        self.intermediate_values = dict(intermediate_values or {})
+        self.user_attrs = dict(user_attrs or {})
+        self.system_attrs = dict(system_attrs or {})
+        self._trial_id = trial_id
+        self.datetime_start = datetime_start
+        self.datetime_complete = datetime_complete
+
+    # -- convenience ---------------------------------------------------------
+
+    @property
+    def value(self) -> float | None:
+        if self.values is None:
+            return None
+        if len(self.values) != 1:
+            raise RuntimeError("this trial is multi-objective; use .values")
+        return self.values[0]
+
+    @property
+    def trial_id(self) -> int:
+        return self._trial_id
+
+    @property
+    def last_step(self) -> int | None:
+        if not self.intermediate_values:
+            return None
+        return max(self.intermediate_values)
+
+    @property
+    def duration(self) -> datetime.timedelta | None:
+        if self.datetime_start is None or self.datetime_complete is None:
+            return None
+        return self.datetime_complete - self.datetime_start
+
+    def copy(self) -> "FrozenTrial":
+        return copy.deepcopy(self)
+
+    def __repr__(self) -> str:
+        return (
+            f"FrozenTrial(number={self.number}, state={self.state.name}, "
+            f"values={self.values}, params={self.params})"
+        )
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, FrozenTrial):
+            return NotImplemented
+        return self.__dict__ == other.__dict__

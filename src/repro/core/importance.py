@@ -1,0 +1,111 @@
+"""Hyperparameter importance — feeds the dashboard (paper Fig. 8 style analysis).
+
+A pandas/sklearn-free importance evaluator: fANOVA-style variance attribution
+using a random-forest-of-stumps surrogate is overkill without sklearn, so we
+use the standard pragmatic pair:
+
+* per-parameter *variance explained* by a binned conditional-mean model
+  (one-way fANOVA main effect on the empirical distribution), and
+* Spearman |rank correlation| as a cross-check.
+
+Both operate on completed trials only and normalize to sum 1.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from .distributions import CategoricalDistribution
+from .frozen import StudyDirection, TrialState
+
+if TYPE_CHECKING:
+    from .study import Study
+
+__all__ = ["param_importances", "spearman_importances"]
+
+
+def _collect(study: "Study"):
+    trials = [
+        t
+        for t in study.get_trials(deepcopy=False, states=(TrialState.COMPLETE,))
+        if t.values is not None and np.isfinite(t.values[0])
+    ]
+    names = sorted({n for t in trials for n in t.params})
+    return trials, names
+
+
+def param_importances(study: "Study", n_bins: int = 8) -> dict[str, float]:
+    """Main-effect variance ratio per parameter (one-way fANOVA on bins)."""
+    trials, names = _collect(study)
+    if len(trials) < 4:
+        return {n: 0.0 for n in names}
+    y = np.array([t.values[0] for t in trials], dtype=float)
+    total_var = float(y.var())
+    if total_var <= 0:
+        return {n: 0.0 for n in names}
+
+    scores: dict[str, float] = {}
+    for name in names:
+        xs, ys = [], []
+        for t, v in zip(trials, y):
+            if name in t.params:
+                dist = t.distributions[name]
+                xs.append(dist.to_internal_repr(t.params[name]))
+                ys.append(v)
+        if len(xs) < 4:
+            scores[name] = 0.0
+            continue
+        xs = np.asarray(xs)
+        ys = np.asarray(ys)
+        dist = next(t.distributions[name] for t in trials if name in t.distributions)
+        if isinstance(dist, CategoricalDistribution):
+            bins = xs.astype(int)
+        else:
+            lo, hi = xs.min(), xs.max()
+            if hi <= lo:
+                scores[name] = 0.0
+                continue
+            if getattr(dist, "log", False):
+                xs_t = np.log(np.maximum(xs, 1e-300))
+                lo, hi = xs_t.min(), xs_t.max()
+                bins = np.minimum(((xs_t - lo) / (hi - lo) * n_bins).astype(int), n_bins - 1)
+            else:
+                bins = np.minimum(((xs - lo) / (hi - lo) * n_bins).astype(int), n_bins - 1)
+        # variance explained by bin-conditional means
+        explained = 0.0
+        for b in np.unique(bins):
+            m = bins == b
+            explained += m.sum() * (ys[m].mean() - ys.mean()) ** 2
+        scores[name] = float(explained / len(ys) / ys.var()) if ys.var() > 0 else 0.0
+
+    total = sum(scores.values())
+    if total > 0:
+        scores = {k: v / total for k, v in scores.items()}
+    return dict(sorted(scores.items(), key=lambda kv: -kv[1]))
+
+
+def spearman_importances(study: "Study") -> dict[str, float]:
+    trials, names = _collect(study)
+    if len(trials) < 4:
+        return {n: 0.0 for n in names}
+    y = np.array([t.values[0] for t in trials], dtype=float)
+    out = {}
+    for name in names:
+        xs, ys = [], []
+        for t, v in zip(trials, y):
+            if name in t.params:
+                xs.append(t.distributions[name].to_internal_repr(t.params[name]))
+                ys.append(v)
+        if len(xs) < 4 or np.std(xs) == 0:
+            out[name] = 0.0
+            continue
+        rx = np.argsort(np.argsort(xs)).astype(float)
+        ry = np.argsort(np.argsort(ys)).astype(float)
+        denom = rx.std() * ry.std()
+        out[name] = float(abs(np.mean((rx - rx.mean()) * (ry - ry.mean())) / denom)) if denom > 0 else 0.0
+    total = sum(out.values())
+    if total > 0:
+        out = {k: v / total for k, v in out.items()}
+    return dict(sorted(out.items(), key=lambda kv: -kv[1]))

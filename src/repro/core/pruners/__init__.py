@@ -1,0 +1,36 @@
+from __future__ import annotations
+
+from .base import BasePruner, NopPruner
+from .hyperband import HyperbandPruner
+from .median import MedianPruner, PercentilePruner
+from .misc import PatientPruner, ThresholdPruner
+from .successive_halving import SuccessiveHalvingPruner
+
+__all__ = [
+    "BasePruner",
+    "NopPruner",
+    "SuccessiveHalvingPruner",
+    "MedianPruner",
+    "PercentilePruner",
+    "HyperbandPruner",
+    "ThresholdPruner",
+    "PatientPruner",
+    "make_pruner",
+]
+
+
+def make_pruner(name: str, **kwargs) -> BasePruner:
+    name = name.lower()
+    if name in ("none", "nop"):
+        return NopPruner()
+    if name in ("asha", "sha", "successive_halving"):
+        return SuccessiveHalvingPruner(**kwargs)
+    if name == "median":
+        return MedianPruner(**kwargs)
+    if name == "hyperband":
+        return HyperbandPruner(**kwargs)
+    if name == "percentile":
+        return PercentilePruner(**kwargs)
+    if name == "threshold":
+        return ThresholdPruner(**kwargs)
+    raise ValueError(f"unknown pruner {name!r}")

@@ -1,0 +1,24 @@
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+from ..frozen import FrozenTrial
+
+if TYPE_CHECKING:
+    from ..study import Study
+
+__all__ = ["BasePruner", "NopPruner"]
+
+
+class BasePruner:
+    def prune(self, study: "Study", trial: FrozenTrial) -> bool:
+        """Return True iff ``trial`` should be stopped now, judging from its
+        reported intermediate values and the study history (paper Fig. 5)."""
+        raise NotImplementedError
+
+
+class NopPruner(BasePruner):
+    """Never prunes (the paper's 'no pruning' baseline in Fig. 11a)."""
+
+    def prune(self, study: "Study", trial: FrozenTrial) -> bool:
+        return False

@@ -1,0 +1,89 @@
+"""Hyperband over ASHA brackets (beyond-paper; Li et al. 2018).
+
+Hyperband hedges SHA's fixed aggressiveness by running several SHA brackets
+with different minimum early-stopping rates ``s``.  Each trial is hashed into
+a bracket (deterministic in trial number, so distributed workers agree without
+coordination), and within a bracket the paper's Algorithm 1 applies.
+Bracket sizes follow the standard Hyperband budget allocation.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import TYPE_CHECKING
+
+from ..frozen import FrozenTrial, TrialState
+from .base import BasePruner
+from .successive_halving import SuccessiveHalvingPruner
+
+if TYPE_CHECKING:
+    from ..study import Study
+
+__all__ = ["HyperbandPruner"]
+
+
+class HyperbandPruner(BasePruner):
+    def __init__(
+        self,
+        min_resource: int = 1,
+        max_resource: int = 64,
+        reduction_factor: int = 4,
+    ):
+        self._r = min_resource
+        self._R = max_resource
+        self._eta = reduction_factor
+        n_brackets = int(math.log(max(self._R // self._r, 1), self._eta)) + 1
+        self._pruners = [
+            SuccessiveHalvingPruner(
+                min_resource=min_resource,
+                reduction_factor=reduction_factor,
+                min_early_stopping_rate=s,
+            )
+            for s in range(n_brackets)
+        ]
+        # standard hyperband allocation: bracket s gets weight ~ (eta^s)/(s+1)
+        weights = [self._eta**s / (s + 1) for s in range(n_brackets)]
+        total = sum(weights)
+        self._cum = []
+        acc = 0.0
+        for w in weights:
+            acc += w / total
+            self._cum.append(acc)
+
+    @property
+    def n_brackets(self) -> int:
+        return len(self._pruners)
+
+    def bracket_of(self, trial: FrozenTrial) -> int:
+        # deterministic, coordination-free bracket assignment
+        h = (trial.number * 2654435761) % (2**32) / 2**32
+        for i, c in enumerate(self._cum):
+            if h <= c:
+                return i
+        return len(self._cum) - 1
+
+    def prune(self, study: "Study", trial: FrozenTrial) -> bool:
+        bracket = self.bracket_of(trial)
+        view = _BracketView(study, self, bracket)
+        return self._pruners[bracket].prune(view, trial)
+
+
+class _BracketView:
+    """A study view that filters trials to one bracket so SHA ranks only
+    within-bracket peers."""
+
+    def __init__(self, study: "Study", hb: HyperbandPruner, bracket: int):
+        self._study = study
+        self._hb = hb
+        self._bracket = bracket
+
+    @property
+    def direction(self):
+        return self._study.direction
+
+    def get_trials(self, deepcopy: bool = False, states=None):
+        return [
+            t
+            for t in self._study.get_trials(deepcopy=deepcopy, states=states)
+            if self._hb.bracket_of(t) == self._bracket
+        ]

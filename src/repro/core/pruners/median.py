@@ -1,0 +1,80 @@
+"""Median / percentile pruning — the Vizier-style baseline of Fig. 11a."""
+
+from __future__ import annotations
+
+import math
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from ..frozen import FrozenTrial, StudyDirection, TrialState
+from .base import BasePruner
+
+if TYPE_CHECKING:
+    from ..study import Study
+
+__all__ = ["MedianPruner", "PercentilePruner"]
+
+
+class PercentilePruner(BasePruner):
+    """Prune if the trial's best-so-far intermediate value is worse than the
+    given percentile of peer best-so-far values at the same step."""
+
+    def __init__(
+        self,
+        percentile: float,
+        n_startup_trials: int = 5,
+        n_warmup_steps: int = 0,
+        interval_steps: int = 1,
+    ):
+        if not 0.0 <= percentile <= 100.0:
+            raise ValueError("percentile must be in [0, 100]")
+        if n_startup_trials < 0 or n_warmup_steps < 0 or interval_steps < 1:
+            raise ValueError("invalid pruner configuration")
+        self._q = percentile
+        self._n_startup = n_startup_trials
+        self._warmup = n_warmup_steps
+        self._interval = interval_steps
+
+    def prune(self, study: "Study", trial: FrozenTrial) -> bool:
+        step = trial.last_step
+        if step is None or step < self._warmup:
+            return False
+        if (step - self._warmup) % self._interval != 0:
+            return False
+
+        minimize = study.direction == StudyDirection.MINIMIZE
+
+        def best_until(t: FrozenTrial, upto: int) -> float | None:
+            vals = [v for s, v in t.intermediate_values.items() if s <= upto and v == v]
+            if not vals:
+                return None
+            return min(vals) if minimize else max(vals)
+
+        peers = []
+        for t in study.get_trials(deepcopy=False, states=(TrialState.COMPLETE, TrialState.PRUNED)):
+            if t.trial_id == trial.trial_id:
+                continue
+            b = best_until(t, step)
+            if b is not None:
+                peers.append(b)
+        if len(peers) < self._n_startup:
+            return False
+
+        mine = best_until(trial, step)
+        if mine is None:
+            return False
+        if mine != mine:  # NaN
+            return True
+        cutoff = float(np.percentile(peers, self._q if minimize else 100.0 - self._q))
+        return mine > cutoff if minimize else mine < cutoff
+
+
+class MedianPruner(PercentilePruner):
+    """PercentilePruner at the median (the pruner Vizier features; paper
+    Fig. 11a shows ASHA dominating it)."""
+
+    def __init__(
+        self, n_startup_trials: int = 5, n_warmup_steps: int = 0, interval_steps: int = 1
+    ):
+        super().__init__(50.0, n_startup_trials, n_warmup_steps, interval_steps)

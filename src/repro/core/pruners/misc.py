@@ -1,0 +1,74 @@
+"""Small auxiliary pruners: threshold and patience wrappers."""
+
+from __future__ import annotations
+
+import math
+from typing import TYPE_CHECKING
+
+from ..frozen import FrozenTrial, StudyDirection
+from .base import BasePruner
+
+if TYPE_CHECKING:
+    from ..study import Study
+
+__all__ = ["ThresholdPruner", "PatientPruner"]
+
+
+class ThresholdPruner(BasePruner):
+    """Prune when an intermediate value leaves [lower, upper] (divergence
+    guard: NaN/inf or loss explosion kills the trial immediately)."""
+
+    def __init__(
+        self,
+        lower: float | None = None,
+        upper: float | None = None,
+        n_warmup_steps: int = 0,
+    ):
+        if lower is None and upper is None:
+            raise ValueError("give at least one of lower/upper")
+        self._lower = lower
+        self._upper = upper
+        self._warmup = n_warmup_steps
+
+    def prune(self, study: "Study", trial: FrozenTrial) -> bool:
+        step = trial.last_step
+        if step is None or step < self._warmup:
+            return False
+        v = trial.intermediate_values[step]
+        if v != v or math.isinf(v):
+            return True
+        if self._lower is not None and v < self._lower:
+            return True
+        if self._upper is not None and v > self._upper:
+            return True
+        return False
+
+
+class PatientPruner(BasePruner):
+    """Wraps another pruner; only lets it fire after the trial has made no
+    improvement for ``patience`` consecutive reports."""
+
+    def __init__(self, wrapped: BasePruner | None, patience: int, min_delta: float = 0.0):
+        if patience < 0 or min_delta < 0:
+            raise ValueError("invalid patience/min_delta")
+        self._wrapped = wrapped
+        self._patience = patience
+        self._min_delta = min_delta
+
+    def prune(self, study: "Study", trial: FrozenTrial) -> bool:
+        ivs = trial.intermediate_values
+        if len(ivs) <= self._patience:
+            return False
+        steps = sorted(ivs)
+        vals = [ivs[s] for s in steps]
+        minimize = study.direction == StudyDirection.MINIMIZE
+        window = vals[-(self._patience + 1):]
+        if minimize:
+            improved = min(window[1:]) < window[0] - self._min_delta
+        else:
+            improved = max(window[1:]) > window[0] + self._min_delta
+        if improved:
+            return False
+        if self._wrapped is None:
+            return True
+        return self._wrapped.prune(study, trial)

@@ -1,0 +1,96 @@
+"""Asynchronous Successive Halving — the paper's Algorithm 1, verbatim.
+
+    Input: target trial `trial`, current step `step`, minimum resource r,
+           reduction factor eta, minimum early-stopping rate s.
+    Output: true if the trial should be pruned.
+
+    1  rung <- max(0, log_eta(floor(step / r)) - s)
+    2  if step != r * eta^(s+rung) then return false
+    5  value <- get_trial_intermediate_value(trial, step)
+    6  values <- get_all_trials_intermediate_values(step)
+    7  top_k_values <- top_k(values, floor(|values| / eta))
+    8  if top_k_values = empty then top_k_values <- top_k(values, 1)
+    11 return value not in top_k_values
+
+Properties the tests pin down:
+
+* **asynchronous** — a worker decides from whatever peer values exist *now*;
+  it never waits for a rung cohort to fill (linear scaling, paper §5.3).
+* **no repechage** — a pruned trial is never resumed, so no snapshots of
+  model state need to be stored (paper §3.2).
+* when fewer than eta trials reached a rung, the best one is still promoted
+  (line 8-10).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import TYPE_CHECKING
+
+from ..frozen import FrozenTrial, StudyDirection, TrialState
+from .base import BasePruner
+
+if TYPE_CHECKING:
+    from ..study import Study
+
+__all__ = ["SuccessiveHalvingPruner"]
+
+
+class SuccessiveHalvingPruner(BasePruner):
+    def __init__(
+        self,
+        min_resource: int = 1,
+        reduction_factor: int = 4,
+        min_early_stopping_rate: int = 0,
+    ):
+        if min_resource < 1:
+            raise ValueError("min_resource must be >= 1")
+        if reduction_factor < 2:
+            raise ValueError("reduction_factor must be >= 2")
+        if min_early_stopping_rate < 0:
+            raise ValueError("min_early_stopping_rate must be >= 0")
+        self._r = min_resource
+        self._eta = reduction_factor
+        self._s = min_early_stopping_rate
+
+    def prune(self, study: "Study", trial: FrozenTrial) -> bool:
+        step = trial.last_step
+        if step is None:
+            return False
+
+        r, eta, s = self._r, self._eta, self._s
+
+        # line 1: rung <- max(0, log_eta(floor(step/r)) - s)
+        if step < r:
+            return False
+        rung = max(0, int(math.log(step // r, eta)) - s)
+
+        # line 2: only act exactly at rung boundaries step == r * eta^(s+rung)
+        if step != r * eta ** (s + rung):
+            return False
+
+        value = trial.intermediate_values[step]
+        if value != value:  # NaN never survives a rung
+            return True
+
+        # line 6: all peer intermediate values at this step
+        all_values = []
+        for t in study.get_trials(deepcopy=False):
+            if t.trial_id == trial.trial_id:
+                continue
+            if t.state in (TrialState.COMPLETE, TrialState.PRUNED, TrialState.RUNNING):
+                v = t.intermediate_values.get(step)
+                if v is not None and v == v:
+                    all_values.append(v)
+        all_values.append(value)
+
+        # lines 7-10: keep top floor(n/eta); if that's empty, keep the single best
+        k = len(all_values) // eta
+        if k == 0:
+            k = 1
+        if study.direction == StudyDirection.MINIMIZE:
+            top_k = sorted(all_values)[:k]
+            return not value <= top_k[-1]
+        else:
+            top_k = sorted(all_values, reverse=True)[:k]
+            return not value >= top_k[-1]

@@ -1,0 +1,38 @@
+from __future__ import annotations
+
+from .base import BaseSampler
+from .cmaes import CMA, CmaEsSampler
+from .gp import GPSampler
+from .grid import GridSampler
+from .random import RandomSampler
+from .tpe import TPESampler
+
+__all__ = [
+    "BaseSampler",
+    "RandomSampler",
+    "GridSampler",
+    "TPESampler",
+    "CmaEsSampler",
+    "CMA",
+    "GPSampler",
+    "make_sampler",
+]
+
+
+def make_sampler(name: str, seed: int | None = None) -> BaseSampler:
+    """Factory used by CLIs and benchmarks (``--sampler tpe+cmaes`` etc.)."""
+    name = name.lower()
+    if name == "random":
+        return RandomSampler(seed=seed)
+    if name == "tpe":
+        return TPESampler(seed=seed)
+    if name == "cmaes":
+        return CmaEsSampler(seed=seed, warmup_trials=10)
+    if name in ("tpe+cmaes", "tpe_cmaes"):
+        # the paper's §5.1 mixture: TPE for the first 40 trials, CMA-ES after
+        return CmaEsSampler(
+            warmup_trials=40, independent_sampler=TPESampler(seed=seed), seed=seed
+        )
+    if name == "gp":
+        return GPSampler(seed=seed)
+    raise ValueError(f"unknown sampler {name!r}")

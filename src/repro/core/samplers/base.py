@@ -1,0 +1,77 @@
+"""Sampler interface.
+
+The split mirrors the paper's two sampling families (§3.1):
+
+* ``sample_independent`` — per-parameter sampling (random, TPE), invoked for
+  every parameter not covered by the relational stage.
+* ``infer_relative_search_space`` + ``sample_relative`` — relational sampling
+  over the inferred concurrence relations (CMA-ES, GP), invoked once per
+  trial before any suggest call resolves.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any
+
+import numpy as np
+
+from ..distributions import (
+    BaseDistribution,
+    CategoricalDistribution,
+    FloatDistribution,
+    IntDistribution,
+)
+from ..frozen import FrozenTrial
+
+if TYPE_CHECKING:
+    from ..study import Study
+
+__all__ = ["BaseSampler", "sample_uniform_internal"]
+
+
+class BaseSampler:
+    def infer_relative_search_space(
+        self, study: "Study", trial: FrozenTrial
+    ) -> dict[str, BaseDistribution]:
+        return {}
+
+    def sample_relative(
+        self, study: "Study", trial: FrozenTrial, search_space: dict[str, BaseDistribution]
+    ) -> dict[str, Any]:
+        return {}
+
+    def sample_independent(
+        self,
+        study: "Study",
+        trial: FrozenTrial,
+        param_name: str,
+        param_distribution: BaseDistribution,
+    ) -> Any:
+        raise NotImplementedError
+
+    def reseed_rng(self) -> None:
+        pass
+
+    def after_trial(self, study: "Study", trial: FrozenTrial, state, values) -> None:
+        pass
+
+
+def sample_uniform_internal(rng: np.random.RandomState, dist: BaseDistribution) -> float:
+    """Uniform sample in *internal* representation, honoring log/step."""
+    if isinstance(dist, FloatDistribution):
+        if dist.log:
+            return float(np.exp(rng.uniform(np.log(dist.low), np.log(dist.high))))
+        if dist.step is not None:
+            n = int(np.floor((dist.high - dist.low) / dist.step + 1e-12)) + 1
+            return float(dist.low + rng.randint(n) * dist.step)
+        return float(rng.uniform(dist.low, dist.high))
+    if isinstance(dist, IntDistribution):
+        if dist.log:
+            lo, hi = np.log(dist.low - 0.5), np.log(dist.high + 0.5)
+            v = int(np.clip(np.round(np.exp(rng.uniform(lo, hi))), dist.low, dist.high))
+            return float(v)
+        n = (dist.high - dist.low) // dist.step + 1
+        return float(dist.low + rng.randint(n) * dist.step)
+    if isinstance(dist, CategoricalDistribution):
+        return float(rng.randint(len(dist.choices)))
+    raise TypeError(f"unknown distribution {dist!r}")

@@ -1,0 +1,244 @@
+"""CMA-ES relational sampler over the inferred concurrence relations.
+
+Implements the full (mu/mu_w, lambda)-CMA-ES of Hansen & Ostermeier (2001)
+with rank-one + rank-mu covariance updates and step-size control (CSA), on
+the intersection search space (paper §3.1): after enough independently
+sampled trials reveal which parameters co-occur in every trial, CMA-ES takes
+over those parameters; anything conditional falls back to the independent
+sampler.
+
+Distributed-safety: instead of persisting mutable optimizer state (which
+races under async workers), the CMA state is *deterministically replayed*
+from the completed-trial history in generation batches of ``popsize`` — every
+worker reconstructs the same state from the same storage contents, so no
+coordination beyond the storage is needed.  Replay is O(n_trials · d²),
+negligible next to a training trial.
+
+``TPESampler`` + ``CmaEsSampler(warmup_trials=40)`` reproduces the paper's
+§5.1 "TPE+CMA-ES" mixture: TPE explores for the first 40 trials, CMA-ES
+exploits after.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import TYPE_CHECKING, Any
+
+import numpy as np
+
+from ..distributions import (
+    BaseDistribution,
+    CategoricalDistribution,
+    FloatDistribution,
+    IntDistribution,
+)
+from ..frozen import FrozenTrial, StudyDirection, TrialState
+from ..search_space import IntersectionSearchSpace
+from .base import BaseSampler
+from .random import RandomSampler
+from .tpe import round_to_step
+
+if TYPE_CHECKING:
+    from ..study import Study
+
+__all__ = ["CmaEsSampler", "CMA"]
+
+
+class CMA:
+    """Minimal-state CMA-ES engine on [0,1]^d (normalized coordinates)."""
+
+    def __init__(self, mean: np.ndarray, sigma: float, seed: int | None = None):
+        d = len(mean)
+        self.dim = d
+        self.mean = mean.astype(float).copy()
+        self.sigma = float(sigma)
+        self.C = np.eye(d)
+        self.pc = np.zeros(d)
+        self.ps = np.zeros(d)
+        self.generation = 0
+
+        self.popsize = 4 + int(3 * math.log(d)) if d > 0 else 4
+        mu = self.popsize // 2
+        w = np.log(mu + 0.5) - np.log(np.arange(1, mu + 1))
+        self.weights = w / w.sum()
+        self.mu_eff = 1.0 / np.sum(self.weights**2)
+
+        self.c_sigma = (self.mu_eff + 2) / (d + self.mu_eff + 5)
+        self.d_sigma = (
+            1 + 2 * max(0.0, math.sqrt((self.mu_eff - 1) / (d + 1)) - 1) + self.c_sigma
+        )
+        self.c_c = (4 + self.mu_eff / d) / (d + 4 + 2 * self.mu_eff / d)
+        self.c_1 = 2 / ((d + 1.3) ** 2 + self.mu_eff)
+        self.c_mu = min(
+            1 - self.c_1,
+            2 * (self.mu_eff - 2 + 1 / self.mu_eff) / ((d + 2) ** 2 + self.mu_eff),
+        )
+        self.chi_n = math.sqrt(d) * (1 - 1 / (4 * d) + 1 / (21 * d * d))
+        self._eig_cache: tuple[np.ndarray, np.ndarray] | None = None
+
+    def _eig(self) -> tuple[np.ndarray, np.ndarray]:
+        if self._eig_cache is None:
+            self.C = 0.5 * (self.C + self.C.T)
+            vals, vecs = np.linalg.eigh(self.C)
+            vals = np.maximum(vals, 1e-20)
+            self._eig_cache = (vals, vecs)
+        return self._eig_cache
+
+    def ask(self, rng: np.random.RandomState) -> np.ndarray:
+        vals, vecs = self._eig()
+        z = rng.standard_normal(self.dim)
+        y = vecs @ (np.sqrt(vals) * z)
+        x = self.mean + self.sigma * y
+        return np.clip(x, 0.0, 1.0)
+
+    def tell(self, solutions: list[tuple[np.ndarray, float]]) -> None:
+        """Update with one full generation: [(x in [0,1]^d, loss)], len==popsize."""
+        solutions = sorted(solutions, key=lambda s: s[1])
+        mu = len(self.weights)
+        xs = np.stack([s[0] for s in solutions[:mu]])
+        y_w = (xs - self.mean[None, :]) / max(self.sigma, 1e-30)
+        y_mean = self.weights @ y_w
+
+        vals, vecs = self._eig()
+        inv_sqrt = vecs @ np.diag(1.0 / np.sqrt(vals)) @ vecs.T
+
+        self.mean = self.mean + self.sigma * y_mean
+        self.ps = (1 - self.c_sigma) * self.ps + math.sqrt(
+            self.c_sigma * (2 - self.c_sigma) * self.mu_eff
+        ) * (inv_sqrt @ y_mean)
+        ps_norm = float(np.linalg.norm(self.ps))
+        h_sigma = ps_norm / math.sqrt(
+            1 - (1 - self.c_sigma) ** (2 * (self.generation + 1))
+        ) < (1.4 + 2 / (self.dim + 1)) * self.chi_n
+        self.pc = (1 - self.c_c) * self.pc + (
+            math.sqrt(self.c_c * (2 - self.c_c) * self.mu_eff) * y_mean if h_sigma else 0.0
+        )
+        delta_h = (1 - h_sigma) * self.c_c * (2 - self.c_c)
+        rank_one = np.outer(self.pc, self.pc)
+        rank_mu = (y_w * self.weights[:, None]).T @ y_w
+        self.C = (
+            (1 + self.c_1 * delta_h - self.c_1 - self.c_mu) * self.C
+            + self.c_1 * rank_one
+            + self.c_mu * rank_mu
+        )
+        self.sigma = self.sigma * math.exp(
+            (self.c_sigma / self.d_sigma) * (ps_norm / self.chi_n - 1)
+        )
+        self.sigma = float(np.clip(self.sigma, 1e-8, 1e3))
+        self.generation += 1
+        self._eig_cache = None
+
+
+class CmaEsSampler(BaseSampler):
+    def __init__(
+        self,
+        warmup_trials: int = 40,
+        independent_sampler: BaseSampler | None = None,
+        seed: int | None = None,
+        sigma0: float = 0.25,
+    ):
+        """Args:
+            warmup_trials: trials sampled by ``independent_sampler`` before
+                CMA-ES engages (the paper used TPE for the first 40 steps).
+            independent_sampler: fallback for warmup + conditional params
+                (defaults to :class:`RandomSampler`).
+        """
+        self._warmup = warmup_trials
+        self._independent = independent_sampler or RandomSampler(seed=seed)
+        self._seed = seed
+        self._sigma0 = sigma0
+        self._space_calc = IntersectionSearchSpace()
+
+    def reseed_rng(self) -> None:
+        self._seed = None
+        self._independent.reseed_rng()
+
+    # -- relational interface ----------------------------------------------------
+
+    def infer_relative_search_space(
+        self, study: "Study", trial: FrozenTrial
+    ) -> dict[str, BaseDistribution]:
+        space = self._space_calc.calculate(study)
+        # CMA-ES needs >= 2 numeric dims; categoricals are excluded (handled
+        # independently), single-point domains carry no information.
+        out = {}
+        for name, dist in space.items():
+            if isinstance(dist, CategoricalDistribution) or dist.single():
+                continue
+            out[name] = dist
+        return out if len(out) >= 2 else {}
+
+    def sample_relative(
+        self, study: "Study", trial: FrozenTrial, search_space: dict[str, BaseDistribution]
+    ) -> dict[str, Any]:
+        if not search_space:
+            return {}
+        completed = [
+            t
+            for t in study.get_trials(deepcopy=False, states=(TrialState.COMPLETE,))
+            if t.values is not None
+            and all(n in t.params for n in search_space)
+        ]
+        if len(completed) < self._warmup:
+            return {}
+
+        names = sorted(search_space.keys())
+        sign = 1.0 if study.direction == StudyDirection.MINIMIZE else -1.0
+
+        # deterministic replay: feed completed post-warmup trials to CMA in
+        # generation batches of popsize, in trial-number order
+        cma = CMA(
+            mean=np.full(len(names), 0.5),
+            sigma=self._sigma0,
+            seed=self._seed,
+        )
+        replay = completed[self._warmup - 1 :] if self._warmup > 0 else completed
+        batch: list[tuple[np.ndarray, float]] = []
+        for t in replay:
+            x = np.array(
+                [_to_unit(search_space[n], t.params[n]) for n in names], dtype=float
+            )
+            batch.append((x, sign * t.values[0]))
+            if len(batch) == cma.popsize:
+                cma.tell(batch)
+                batch = []
+
+        rng = np.random.RandomState(
+            None if self._seed is None else (self._seed + 7919 * trial.number)
+        )
+        x = cma.ask(rng)
+        return {n: _from_unit(search_space[n], float(v)) for n, v in zip(names, x)}
+
+    def sample_independent(
+        self, study: "Study", trial: FrozenTrial, param_name: str,
+        param_distribution: BaseDistribution,
+    ) -> Any:
+        return self._independent.sample_independent(
+            study, trial, param_name, param_distribution
+        )
+
+
+def _to_unit(dist: BaseDistribution, external: Any) -> float:
+    v = dist.to_internal_repr(external)
+    if isinstance(dist, (FloatDistribution, IntDistribution)):
+        lo, hi = float(dist.low), float(dist.high)
+        if dist.log:
+            lo, hi = math.log(lo), math.log(hi)
+            v = math.log(max(v, 1e-300))
+        return (v - lo) / (hi - lo) if hi > lo else 0.5
+    return v
+
+
+def _from_unit(dist: BaseDistribution, u: float) -> Any:
+    u = float(np.clip(u, 0.0, 1.0))
+    lo, hi = float(dist.low), float(dist.high)
+    if dist.log:
+        lo_, hi_ = math.log(lo), math.log(hi)
+        v = math.exp(lo_ + u * (hi_ - lo_))
+    else:
+        v = lo + u * (hi - lo)
+    if isinstance(dist, IntDistribution):
+        return int(np.clip(round_to_step(v, dist.low, dist.high, dist.step), dist.low, dist.high))
+    if isinstance(dist, FloatDistribution) and dist.step is not None:
+        return float(np.clip(round_to_step(v, dist.low, dist.high, dist.step), dist.low, dist.high))
+    return float(np.clip(v, lo, hi))

@@ -1,0 +1,34 @@
+"""Uniform-random independent sampler (the paper's §5.1 baseline)."""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any
+
+import numpy as np
+
+from ..distributions import BaseDistribution
+from ..frozen import FrozenTrial
+from .base import BaseSampler, sample_uniform_internal
+
+if TYPE_CHECKING:
+    from ..study import Study
+
+__all__ = ["RandomSampler"]
+
+
+class RandomSampler(BaseSampler):
+    def __init__(self, seed: int | None = None):
+        self._rng = np.random.RandomState(seed)
+
+    def reseed_rng(self) -> None:
+        self._rng = np.random.RandomState()
+
+    def sample_independent(
+        self,
+        study: "Study",
+        trial: FrozenTrial,
+        param_name: str,
+        param_distribution: BaseDistribution,
+    ) -> Any:
+        internal = sample_uniform_internal(self._rng, param_distribution)
+        return param_distribution.to_external_repr(internal)

@@ -1,0 +1,313 @@
+"""Tree-structured Parzen Estimator sampler (Bergstra et al., 2011).
+
+The paper's default independent sampler (§3.1).  For each parameter:
+
+1. split the observed (value, loss) history at the gamma-quantile into
+   "below" (good) and "above" (bad) sets,
+2. fit a Parzen estimator (truncated-Gaussian mixture + uniform prior
+   component) to each set,
+3. draw ``n_ei_candidates`` from the *below* estimator and keep the candidate
+   maximizing ``log l(x) - log g(x)`` (the EI-equivalent ratio).
+
+Numeric parameters with ``log=True`` are modeled in log space; ints are
+modeled continuously and rounded; categoricals use smoothed weighted counts.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import TYPE_CHECKING, Any, Callable
+
+import numpy as np
+
+from ..distributions import (
+    BaseDistribution,
+    CategoricalDistribution,
+    FloatDistribution,
+    IntDistribution,
+)
+from ..frozen import FrozenTrial, StudyDirection, TrialState
+from .base import BaseSampler, sample_uniform_internal
+
+if TYPE_CHECKING:
+    from ..study import Study
+
+__all__ = ["TPESampler", "default_gamma", "default_weights"]
+
+EPS = 1e-12
+
+
+def default_gamma(n: int) -> int:
+    """Size of the 'below' (good) set (Optuna's default)."""
+    return min(int(np.ceil(0.1 * n)), 25)
+
+
+def default_weights(n: int) -> np.ndarray:
+    """Older observations get linearly down-weighted past the 25 most recent."""
+    if n == 0:
+        return np.asarray([])
+    if n < 25:
+        return np.ones(n)
+    ramp = np.linspace(1.0 / n, 1.0, n - 25)
+    flat = np.ones(25)
+    return np.concatenate([ramp, flat])
+
+
+class _ParzenEstimator:
+    """1-D truncated-Gaussian mixture over [low, high] (+ a wide prior)."""
+
+    def __init__(
+        self,
+        mus: np.ndarray,
+        low: float,
+        high: float,
+        weights: np.ndarray,
+        consider_prior: bool = True,
+        prior_weight: float = 1.0,
+        magic_clip: bool = True,
+    ):
+        mus = np.asarray(mus, dtype=float)
+        order = np.argsort(mus)
+        mus = mus[order]
+        weights = np.asarray(weights, dtype=float)[order]
+
+        if consider_prior or len(mus) == 0:
+            prior_mu = 0.5 * (low + high)
+            prior_sigma = high - low if high > low else 1.0
+            # place the prior into sorted position
+            idx = np.searchsorted(mus, prior_mu)
+            mus = np.insert(mus, idx, prior_mu)
+            weights = np.insert(weights, idx, prior_weight)
+            prior_pos = idx
+        else:
+            prior_pos = None
+
+        n = len(mus)
+        sigmas = np.empty(n)
+        if n == 1:
+            sigmas[0] = high - low if high > low else 1.0
+        else:
+            padded = np.concatenate([[low], mus, [high]])
+            left = mus - padded[:-2]
+            right = padded[2:] - mus
+            sigmas = np.maximum(left, right)
+        if prior_pos is not None:
+            sigmas[prior_pos] = high - low if high > low else 1.0
+        maxsigma = high - low if high > low else 1.0
+        minsigma = (
+            maxsigma / min(100.0, 1.0 + n) if magic_clip else EPS
+        )
+        self.mus = mus
+        self.sigmas = np.clip(sigmas, minsigma, maxsigma)
+        self.weights = weights / max(weights.sum(), EPS)
+        self.low = low
+        self.high = high
+
+    def sample(self, rng: np.random.RandomState, size: int) -> np.ndarray:
+        comp = rng.choice(len(self.mus), size=size, p=self.weights)
+        out = np.empty(size)
+        for i, c in enumerate(comp):
+            # rejection-free truncated normal via clipped resampling (bounded loops)
+            v = rng.normal(self.mus[c], self.sigmas[c])
+            for _ in range(16):
+                if self.low <= v <= self.high:
+                    break
+                v = rng.normal(self.mus[c], self.sigmas[c])
+            out[i] = float(np.clip(v, self.low, self.high))
+        return out
+
+    def log_pdf(self, xs: np.ndarray) -> np.ndarray:
+        xs = np.asarray(xs, dtype=float)[:, None]
+        mus = self.mus[None, :]
+        sigmas = self.sigmas[None, :]
+        # truncated-normal normalization over [low, high]
+        z = _normal_cdf((self.high - mus) / sigmas) - _normal_cdf((self.low - mus) / sigmas)
+        z = np.maximum(z, EPS)
+        log_comp = (
+            -0.5 * ((xs - mus) / sigmas) ** 2
+            - np.log(sigmas)
+            - 0.5 * math.log(2 * math.pi)
+            - np.log(z)
+        )
+        log_w = np.log(self.weights[None, :] + EPS)
+        return _logsumexp(log_comp + log_w, axis=1)
+
+
+def _normal_cdf(x: np.ndarray) -> np.ndarray:
+    return 0.5 * (1.0 + np.vectorize(math.erf)(np.asarray(x) / math.sqrt(2.0)))
+
+
+def _logsumexp(a: np.ndarray, axis: int) -> np.ndarray:
+    m = np.max(a, axis=axis, keepdims=True)
+    return (m + np.log(np.sum(np.exp(a - m), axis=axis, keepdims=True))).squeeze(axis)
+
+
+class TPESampler(BaseSampler):
+    def __init__(
+        self,
+        n_startup_trials: int = 10,
+        n_ei_candidates: int = 24,
+        gamma: Callable[[int], int] = default_gamma,
+        weights: Callable[[int], np.ndarray] = default_weights,
+        seed: int | None = None,
+        consider_prior: bool = True,
+        prior_weight: float = 1.0,
+        consider_magic_clip: bool = True,
+        consider_pruned_trials: bool = False,
+    ):
+        self._n_startup = n_startup_trials
+        self._n_ei = n_ei_candidates
+        self._gamma = gamma
+        self._weights = weights
+        self._rng = np.random.RandomState(seed)
+        self._consider_prior = consider_prior
+        self._prior_weight = prior_weight
+        self._magic_clip = consider_magic_clip
+        self._consider_pruned = consider_pruned_trials
+
+    def reseed_rng(self) -> None:
+        self._rng = np.random.RandomState()
+
+    # -- observation collection ------------------------------------------------
+
+    def _observations(
+        self, study: "Study", param_name: str
+    ) -> tuple[np.ndarray, np.ndarray, list[BaseDistribution]]:
+        """(internal values, losses) for trials that suggested param_name."""
+        values, losses, dists = [], [], []
+        sign = 1.0 if study.direction == StudyDirection.MINIMIZE else -1.0
+        states = (
+            (TrialState.COMPLETE, TrialState.PRUNED)
+            if self._consider_pruned
+            else (TrialState.COMPLETE,)
+        )
+        for t in study.get_trials(deepcopy=False, states=states):
+            if param_name not in t.params:
+                continue
+            if t.state == TrialState.COMPLETE:
+                if t.values is None:
+                    continue
+                loss = sign * t.values[0]
+            else:  # PRUNED: use last intermediate value (pessimistic)
+                if not t.intermediate_values:
+                    continue
+                loss = sign * t.intermediate_values[t.last_step]
+            if not np.isfinite(loss):
+                continue
+            dist = t.distributions[param_name]
+            values.append(dist.to_internal_repr(t.params[param_name]))
+            losses.append(loss)
+            dists.append(dist)
+        return np.asarray(values), np.asarray(losses), dists
+
+    # -- sampling -----------------------------------------------------------------
+
+    def sample_independent(
+        self,
+        study: "Study",
+        trial: FrozenTrial,
+        param_name: str,
+        param_distribution: BaseDistribution,
+    ) -> Any:
+        if len(study.directions) > 1:
+            # TPE is single-objective; multi-objective studies fall back to
+            # uniform sampling (use a Pareto-aware sampler for real MO work)
+            internal = sample_uniform_internal(self._rng, param_distribution)
+            return param_distribution.to_external_repr(internal)
+        values, losses, _ = self._observations(study, param_name)
+        if len(values) < self._n_startup:
+            internal = sample_uniform_internal(self._rng, param_distribution)
+            return param_distribution.to_external_repr(internal)
+
+        n = len(values)
+        n_below = self._gamma(n)
+        order = np.argsort(losses, kind="stable")
+        below_idx, above_idx = order[:n_below], order[n_below:]
+        below, above = values[below_idx], values[above_idx]
+        w_all = self._weights(n)
+
+        # the weights function is defined over recency order; map via index
+        w_below = np.asarray([w_all[i] for i in below_idx])
+        w_above = np.asarray([w_all[i] for i in above_idx])
+
+        if isinstance(param_distribution, CategoricalDistribution):
+            internal = self._sample_categorical(param_distribution, below, above, w_below, w_above)
+        else:
+            internal = self._sample_numeric(param_distribution, below, above, w_below, w_above)
+        return param_distribution.to_external_repr(internal)
+
+    def _transform(self, dist: BaseDistribution, xs: np.ndarray) -> np.ndarray:
+        if getattr(dist, "log", False):
+            return np.log(np.maximum(xs, EPS))
+        return xs
+
+    def _untransform(self, dist: BaseDistribution, xs: np.ndarray) -> np.ndarray:
+        if getattr(dist, "log", False):
+            return np.exp(xs)
+        return xs
+
+    def _bounds(self, dist: BaseDistribution) -> tuple[float, float]:
+        low, high = float(dist.low), float(dist.high)
+        if isinstance(dist, IntDistribution):
+            low, high = low - 0.5, high + 0.5
+            if dist.log:
+                low = max(low, 0.5)
+        if getattr(dist, "log", False):
+            return math.log(low), math.log(high)
+        return low, high
+
+    def _sample_numeric(
+        self,
+        dist: BaseDistribution,
+        below: np.ndarray,
+        above: np.ndarray,
+        w_below: np.ndarray,
+        w_above: np.ndarray,
+    ) -> float:
+        low, high = self._bounds(dist)
+        l_est = _ParzenEstimator(
+            self._transform(dist, below), low, high, w_below,
+            self._consider_prior, self._prior_weight, self._magic_clip,
+        )
+        g_est = _ParzenEstimator(
+            self._transform(dist, above), low, high, w_above,
+            self._consider_prior, self._prior_weight, self._magic_clip,
+        )
+        cands = l_est.sample(self._rng, self._n_ei)
+        score = l_est.log_pdf(cands) - g_est.log_pdf(cands)
+        best = cands[int(np.argmax(score))]
+        x = float(self._untransform(dist, np.asarray([best]))[0])
+        if isinstance(dist, IntDistribution):
+            x = float(np.clip(round_to_step(x, dist.low, dist.high, dist.step), dist.low, dist.high))
+        elif isinstance(dist, FloatDistribution):
+            if dist.step is not None:
+                x = float(np.clip(round_to_step(x, dist.low, dist.high, dist.step), dist.low, dist.high))
+            else:
+                x = float(np.clip(x, dist.low, dist.high))
+        return x
+
+    def _sample_categorical(
+        self,
+        dist: CategoricalDistribution,
+        below: np.ndarray,
+        above: np.ndarray,
+        w_below: np.ndarray,
+        w_above: np.ndarray,
+    ) -> float:
+        k = len(dist.choices)
+
+        def weighted_probs(idxs: np.ndarray, ws: np.ndarray) -> np.ndarray:
+            counts = np.full(k, self._prior_weight)
+            for i, w in zip(idxs.astype(int), ws):
+                counts[i] += w
+            return counts / counts.sum()
+
+        p_l = weighted_probs(below, w_below)
+        p_g = weighted_probs(above, w_above)
+        cands = self._rng.choice(k, size=self._n_ei, p=p_l)
+        score = np.log(p_l[cands] + EPS) - np.log(p_g[cands] + EPS)
+        return float(cands[int(np.argmax(score))])
+
+
+def round_to_step(x: float, low: float, high: float, step: float | int) -> float:
+    return low + round((x - low) / step) * step

@@ -1,0 +1,80 @@
+"""Concurrence-relation inference for relational sampling (paper §3.1).
+
+In a define-by-run framework the search space is only revealed by running
+trials.  Relational samplers (CMA-ES, GP) need a *fixed* joint space, so we
+infer the **intersection search space**: the set of parameters that occurred
+in *every* completed trial so far, with their (latest) distributions.  After
+a few independently-sampled trials this recovers the stable joint structure,
+and the relational sampler takes over for those parameters while independent
+sampling covers the conditional remainder.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+from .distributions import BaseDistribution
+from .frozen import FrozenTrial, TrialState
+
+if TYPE_CHECKING:
+    from .study import Study
+
+__all__ = ["intersection_search_space", "IntersectionSearchSpace"]
+
+
+def intersection_search_space(
+    trials: list[FrozenTrial], include_pruned: bool = False
+) -> dict[str, BaseDistribution]:
+    states = (TrialState.COMPLETE, TrialState.PRUNED) if include_pruned else (
+        TrialState.COMPLETE,
+    )
+    space: dict[str, BaseDistribution] | None = None
+    for t in trials:
+        if t.state not in states:
+            continue
+        if space is None:
+            space = dict(t.distributions)
+            continue
+        # keep only params present in every trial, with matching dist types
+        keep = {}
+        for name, dist in space.items():
+            other = t.distributions.get(name)
+            if other is not None and type(other) is type(dist):
+                keep[name] = other  # latest distribution (bounds may drift)
+        space = keep
+        if not space:
+            break
+    return dict(sorted((space or {}).items()))
+
+
+class IntersectionSearchSpace:
+    """Incrementally-updated intersection space (avoids re-scanning all trials
+    on every ask; important when studies grow to 10^4+ trials)."""
+
+    def __init__(self, include_pruned: bool = False):
+        self._cursor = 0
+        self._space: dict[str, BaseDistribution] | None = None
+        self._include_pruned = include_pruned
+
+    def calculate(self, study: "Study") -> dict[str, BaseDistribution]:
+        states = (TrialState.COMPLETE, TrialState.PRUNED) if self._include_pruned else (
+            TrialState.COMPLETE,
+        )
+        trials = study.get_trials(deepcopy=False, states=None)
+        for t in trials[self._cursor:]:
+            if not t.state.is_finished():
+                # do not advance the cursor past live trials
+                break
+            self._cursor = t.number + 1
+            if t.state not in states:
+                continue
+            if self._space is None:
+                self._space = dict(t.distributions)
+                continue
+            keep = {}
+            for name, dist in self._space.items():
+                other = t.distributions.get(name)
+                if other is not None and type(other) is type(dist):
+                    keep[name] = other
+            self._space = keep
+        return dict(sorted((self._space or {}).items()))

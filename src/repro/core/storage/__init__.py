@@ -1,0 +1,44 @@
+"""Storage backends (paper §4): in-memory (lightweight), SQLite (RDB),
+append-only journal file (NFS-scale fleets)."""
+
+from __future__ import annotations
+
+from .base import BaseStorage, StudySummary
+from .inmemory import InMemoryStorage
+from .journal import JournalStorage
+from .sqlite import SQLiteStorage
+
+__all__ = [
+    "BaseStorage",
+    "StudySummary",
+    "InMemoryStorage",
+    "SQLiteStorage",
+    "JournalStorage",
+    "get_storage",
+]
+
+
+def get_storage(storage: "str | BaseStorage | None") -> BaseStorage:
+    """Resolve a storage URL / object, mirroring the paper's Fig. 7 usage:
+
+    * ``None``             -> fresh :class:`InMemoryStorage`
+    * ``sqlite:///path``   -> :class:`SQLiteStorage`
+    * ``journal://path``   -> :class:`JournalStorage`
+    * ``*.db`` / ``*.sqlite`` path -> :class:`SQLiteStorage`
+    * ``*.journal`` / ``*.log`` path -> :class:`JournalStorage`
+    """
+    if storage is None:
+        return InMemoryStorage()
+    if isinstance(storage, BaseStorage):
+        return storage
+    if storage.startswith("sqlite:///"):
+        return SQLiteStorage(storage)
+    if storage.startswith("journal://"):
+        return JournalStorage(storage)
+    if storage.endswith((".db", ".sqlite", ".sqlite3")):
+        return SQLiteStorage(storage)
+    if storage.endswith((".journal", ".log", ".jsonl")):
+        return JournalStorage(storage)
+    raise ValueError(
+        f"cannot infer storage backend from {storage!r}; use sqlite:/// or journal:// URLs"
+    )

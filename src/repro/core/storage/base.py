@@ -1,0 +1,166 @@
+"""Abstract storage API.
+
+Every worker in a distributed study shares progress exclusively through an
+implementation of :class:`BaseStorage` (paper §4, Fig. 6).  The API is
+deliberately small and transactional at the single-call level so backends can
+be implemented over an RDB, a journal file, or an in-process dict.
+
+Concurrency contract (what samplers/pruners may assume):
+
+* ``create_new_trial`` atomically assigns a unique, dense trial ``number``.
+* ``set_trial_state_values`` is atomic; transitioning RUNNING->finished is
+  last-writer-wins, WAITING->RUNNING returns False if another worker already
+  claimed the trial.
+* reads (``get_all_trials``) may lag writes from other workers — samplers are
+  designed for asynchrony (the paper's ASHA never blocks on peers).
+"""
+
+from __future__ import annotations
+
+import datetime
+from typing import Any, Iterable
+
+from ..distributions import BaseDistribution
+from ..frozen import FrozenTrial, StudyDirection, TrialState
+
+__all__ = ["BaseStorage", "StudySummary"]
+
+
+class StudySummary:
+    def __init__(
+        self,
+        study_id: int,
+        study_name: str,
+        directions: list[StudyDirection],
+        n_trials: int,
+        user_attrs: dict[str, Any] | None = None,
+        system_attrs: dict[str, Any] | None = None,
+    ):
+        self.study_id = study_id
+        self.study_name = study_name
+        self.directions = directions
+        self.n_trials = n_trials
+        self.user_attrs = user_attrs or {}
+        self.system_attrs = system_attrs or {}
+
+    def __repr__(self) -> str:
+        return f"StudySummary(name={self.study_name!r}, n_trials={self.n_trials})"
+
+
+class BaseStorage:
+    # -- study ---------------------------------------------------------------
+
+    def create_new_study(
+        self, directions: list[StudyDirection], study_name: str
+    ) -> int:
+        raise NotImplementedError
+
+    def delete_study(self, study_id: int) -> None:
+        raise NotImplementedError
+
+    def get_study_id_from_name(self, study_name: str) -> int:
+        raise NotImplementedError
+
+    def get_study_name_from_id(self, study_id: int) -> str:
+        raise NotImplementedError
+
+    def get_study_directions(self, study_id: int) -> list[StudyDirection]:
+        raise NotImplementedError
+
+    def get_all_studies(self) -> list[StudySummary]:
+        raise NotImplementedError
+
+    def set_study_user_attr(self, study_id: int, key: str, value: Any) -> None:
+        raise NotImplementedError
+
+    def set_study_system_attr(self, study_id: int, key: str, value: Any) -> None:
+        raise NotImplementedError
+
+    def get_study_user_attrs(self, study_id: int) -> dict[str, Any]:
+        raise NotImplementedError
+
+    def get_study_system_attrs(self, study_id: int) -> dict[str, Any]:
+        raise NotImplementedError
+
+    # -- trial ---------------------------------------------------------------
+
+    def create_new_trial(
+        self, study_id: int, template_trial: FrozenTrial | None = None
+    ) -> int:
+        raise NotImplementedError
+
+    def set_trial_param(
+        self,
+        trial_id: int,
+        param_name: str,
+        param_value_internal: float,
+        distribution: BaseDistribution,
+    ) -> None:
+        raise NotImplementedError
+
+    def set_trial_state_values(
+        self, trial_id: int, state: TrialState, values: Iterable[float] | None = None
+    ) -> bool:
+        """Atomically set state (and final values).  Returns False iff the
+        transition was a WAITING->RUNNING claim lost to another worker."""
+        raise NotImplementedError
+
+    def set_trial_intermediate_value(
+        self, trial_id: int, step: int, intermediate_value: float
+    ) -> None:
+        raise NotImplementedError
+
+    def set_trial_user_attr(self, trial_id: int, key: str, value: Any) -> None:
+        raise NotImplementedError
+
+    def set_trial_system_attr(self, trial_id: int, key: str, value: Any) -> None:
+        raise NotImplementedError
+
+    def get_trial(self, trial_id: int) -> FrozenTrial:
+        raise NotImplementedError
+
+    def get_all_trials(
+        self,
+        study_id: int,
+        deepcopy: bool = True,
+        states: tuple[TrialState, ...] | None = None,
+    ) -> list[FrozenTrial]:
+        raise NotImplementedError
+
+    def get_n_trials(
+        self, study_id: int, states: tuple[TrialState, ...] | None = None
+    ) -> int:
+        return len(self.get_all_trials(study_id, deepcopy=False, states=states))
+
+    def get_trial_id_from_study_and_number(self, study_id: int, number: int) -> int:
+        for t in self.get_all_trials(study_id, deepcopy=False):
+            if t.number == number:
+                return t.trial_id
+        from ..exceptions import TrialNotFoundError
+
+        raise TrialNotFoundError(f"no trial number {number} in study {study_id}")
+
+    # -- heartbeat / fault tolerance ------------------------------------------
+
+    def record_heartbeat(self, trial_id: int) -> None:
+        """Default: no-op.  Backends that support failover override this."""
+
+    def get_stale_trial_ids(self, study_id: int, grace_seconds: float) -> list[int]:
+        """Trial ids in RUNNING state whose last heartbeat is older than
+        ``grace_seconds`` (i.e. their worker likely died)."""
+        return []
+
+    def fail_stale_trials(self, study_id: int, grace_seconds: float) -> list[int]:
+        failed = []
+        for tid in self.get_stale_trial_ids(study_id, grace_seconds):
+            if self.set_trial_state_values(tid, TrialState.FAIL):
+                failed.append(tid)
+        return failed
+
+    # -- misc ------------------------------------------------------------------
+
+    def _now(self) -> datetime.datetime:
+        return datetime.datetime.now()
+
+    def close(self) -> None:
+        pass

@@ -1,0 +1,377 @@
+"""``Study`` — one optimization process (paper §2).
+
+A study owns a sampler, a pruner and a storage handle.  ``optimize`` runs the
+define-by-run objective repeatedly; distributed optimization is *the same
+call from N processes against the same storage* (paper Fig. 7) — there is no
+coordinator.  ``ask``/``tell`` expose the trial lifecycle for custom loops
+(e.g. the tune scheduler placing trials onto mesh slices).
+"""
+
+from __future__ import annotations
+
+import datetime
+import math
+import threading
+import time
+import warnings
+from typing import Any, Callable, Iterable, Sequence
+
+from .exceptions import DuplicatedStudyError, TrialPruned
+from .frozen import FrozenTrial, StudyDirection, TrialState
+from .pruners import BasePruner, NopPruner
+from .samplers import BaseSampler, TPESampler
+from .storage import BaseStorage, get_storage
+from .trial import Trial
+
+__all__ = ["Study", "create_study", "load_study", "delete_study"]
+
+ObjectiveFunc = Callable[[Trial], float]
+
+
+class Study:
+    def __init__(
+        self,
+        study_name: str,
+        storage: "str | BaseStorage | None" = None,
+        sampler: BaseSampler | None = None,
+        pruner: BasePruner | None = None,
+    ):
+        self._storage = get_storage(storage)
+        self.study_name = study_name
+        self._study_id = self._storage.get_study_id_from_name(study_name)
+        self.sampler = sampler or TPESampler()
+        self.pruner = pruner or NopPruner()
+        self._stop_requested = False
+        # heartbeat configuration (fault tolerance; see DESIGN.md)
+        self.heartbeat_interval: float | None = None
+        self.failed_trial_grace: float = 60.0
+
+    # -- directions ----------------------------------------------------------------
+
+    @property
+    def directions(self) -> list[StudyDirection]:
+        return self._storage.get_study_directions(self._study_id)
+
+    @property
+    def direction(self) -> StudyDirection:
+        ds = self.directions
+        if len(ds) != 1:
+            raise RuntimeError("multi-objective study; use .directions")
+        return ds[0]
+
+    # -- trial access ----------------------------------------------------------------
+
+    @property
+    def trials(self) -> list[FrozenTrial]:
+        return self.get_trials()
+
+    def get_trials(
+        self,
+        deepcopy: bool = True,
+        states: tuple[TrialState, ...] | None = None,
+    ) -> list[FrozenTrial]:
+        return self._storage.get_all_trials(self._study_id, deepcopy=deepcopy, states=states)
+
+    @property
+    def best_trial(self) -> FrozenTrial:
+        best = None
+        sign = 1.0 if self.direction == StudyDirection.MINIMIZE else -1.0
+        for t in self.get_trials(deepcopy=False, states=(TrialState.COMPLETE,)):
+            if t.values is None or not math.isfinite(t.values[0]):
+                continue
+            if best is None or sign * t.values[0] < sign * best.values[0]:
+                best = t
+        if best is None:
+            raise ValueError("no completed trials yet")
+        return best.copy()
+
+    @property
+    def best_params(self) -> dict[str, Any]:
+        return self.best_trial.params
+
+    @property
+    def best_value(self) -> float:
+        return self.best_trial.value
+
+    @property
+    def best_trials(self) -> list[FrozenTrial]:
+        """Pareto-optimal completed trials (multi-objective support)."""
+        directions = self.directions
+        completed = [
+            t for t in self.get_trials(deepcopy=False, states=(TrialState.COMPLETE,))
+            if t.values is not None and len(t.values) == len(directions)
+        ]
+
+        def dominates(a: FrozenTrial, b: FrozenTrial) -> bool:
+            better = False
+            for av, bv, d in zip(a.values, b.values, directions):
+                sa = av if d == StudyDirection.MINIMIZE else -av
+                sb = bv if d == StudyDirection.MINIMIZE else -bv
+                if sa > sb:
+                    return False
+                if sa < sb:
+                    better = True
+            return better
+
+        front = [
+            t for t in completed if not any(dominates(o, t) for o in completed if o is not t)
+        ]
+        return [t.copy() for t in front]
+
+    # -- attrs -------------------------------------------------------------------------
+
+    @property
+    def user_attrs(self) -> dict[str, Any]:
+        return self._storage.get_study_user_attrs(self._study_id)
+
+    @property
+    def system_attrs(self) -> dict[str, Any]:
+        return self._storage.get_study_system_attrs(self._study_id)
+
+    def set_user_attr(self, key: str, value: Any) -> None:
+        self._storage.set_study_user_attr(self._study_id, key, value)
+
+    def set_system_attr(self, key: str, value: Any) -> None:
+        self._storage.set_study_system_attr(self._study_id, key, value)
+
+    # -- ask / tell ----------------------------------------------------------------------
+
+    def ask(self) -> Trial:
+        """Create a new trial (claiming an enqueued WAITING one if present)."""
+        # claim enqueued trials first
+        for t in self.get_trials(deepcopy=False, states=(TrialState.WAITING,)):
+            if self._storage.set_trial_state_values(t.trial_id, TrialState.RUNNING):
+                return Trial(self, t.trial_id)
+        trial_id = self._storage.create_new_trial(self._study_id)
+        return Trial(self, trial_id)
+
+    def tell(
+        self,
+        trial: "Trial | int",
+        values: "float | Sequence[float] | None" = None,
+        state: TrialState = TrialState.COMPLETE,
+    ) -> None:
+        trial_id = trial._trial_id if isinstance(trial, Trial) else int(trial)
+        if values is not None and not isinstance(values, (list, tuple)):
+            values = [float(values)]
+        if state == TrialState.COMPLETE and values is None:
+            raise ValueError("completed trials need a value")
+        if values is not None and any(v != v for v in values):
+            state, values = TrialState.FAIL, None  # NaN objective -> failed
+        self._storage.set_trial_state_values(trial_id, state, values)
+        frozen = self._storage.get_trial(trial_id)
+        self.sampler.after_trial(self, frozen, state, values)
+
+    def enqueue_trial(self, params: dict[str, Any], user_attrs: dict[str, Any] | None = None) -> None:
+        """Seed the study with a known-good configuration (warm start)."""
+        t = FrozenTrial(number=-1, state=TrialState.WAITING, system_attrs={"fixed_params": params})
+        if user_attrs:
+            t.user_attrs.update(user_attrs)
+        self._storage.create_new_trial(self._study_id, template_trial=t)
+
+    def stop(self) -> None:
+        """Ask ``optimize`` loops in this process to stop after the current trial."""
+        self._stop_requested = True
+
+    # -- optimize -------------------------------------------------------------------------
+
+    def optimize(
+        self,
+        func: ObjectiveFunc,
+        n_trials: int | None = None,
+        timeout: float | None = None,
+        n_jobs: int = 1,
+        catch: tuple[type[Exception], ...] = (),
+        callbacks: Iterable[Callable[["Study", FrozenTrial], None]] | None = None,
+        gc_after_trial: bool = False,
+        show_progress_bar: bool = False,
+    ) -> None:
+        self._stop_requested = False
+        callbacks = list(callbacks or [])
+        deadline = time.time() + timeout if timeout is not None else None
+
+        if n_jobs == 1:
+            self._optimize_loop(func, n_trials, deadline, catch, callbacks)
+            return
+
+        # thread-based parallel trials against shared storage (the in-process
+        # version of paper Fig. 7; processes use repro.core.distributed)
+        budget_lock = threading.Lock()
+        remaining = [n_trials]
+
+        def take() -> bool:
+            with budget_lock:
+                if remaining[0] is None:
+                    return True
+                if remaining[0] <= 0:
+                    return False
+                remaining[0] -= 1
+                return True
+
+        def worker():
+            while not self._stop_requested and take():
+                if deadline is not None and time.time() > deadline:
+                    break
+                self._run_one(func, catch, callbacks)
+
+        threads = [threading.Thread(target=worker, daemon=True) for _ in range(n_jobs)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+
+    def _optimize_loop(self, func, n_trials, deadline, catch, callbacks) -> None:
+        i = 0
+        while n_trials is None or i < n_trials:
+            if self._stop_requested:
+                break
+            if deadline is not None and time.time() > deadline:
+                break
+            self._run_one(func, catch, callbacks)
+            i += 1
+
+    def _run_one(self, func, catch, callbacks) -> FrozenTrial:
+        trial = self.ask()
+        trial_id = trial._trial_id
+
+        # fixed params from enqueue_trial
+        fixed = self._storage.get_trial(trial_id).system_attrs.get("fixed_params")
+        if fixed:
+            trial._relative_params = dict(fixed)
+
+        hb_stop = self._start_heartbeat(trial_id)
+        state = TrialState.COMPLETE
+        values: list[float] | None = None
+        try:
+            raw = func(trial)
+            values = [float(v) for v in raw] if isinstance(raw, (list, tuple)) else [float(raw)]
+            if any(v != v for v in values):  # NaN objective -> failed trial
+                state, values = TrialState.FAIL, None
+                self._storage.set_trial_system_attr(trial_id, "fail:exception", "nan objective")
+        except TrialPruned as e:
+            state = TrialState.PRUNED
+            # record the pruned-at value as the final value when available
+            frozen = self._storage.get_trial(trial_id)
+            last = frozen.last_step
+            if last is not None:
+                values = [frozen.intermediate_values[last]]
+            self._storage.set_trial_system_attr(trial_id, "pruned:reason", str(e) or "pruned")
+        except Exception as e:
+            state = TrialState.FAIL
+            self._storage.set_trial_system_attr(trial_id, "fail:exception", repr(e))
+            if not isinstance(e, catch):
+                self._finish(trial_id, state, values, hb_stop)
+                raise
+        finally:
+            if state != TrialState.FAIL or not catch:
+                pass  # finish below (normal path) or already finished above
+        self._finish(trial_id, state, values, hb_stop)
+
+        frozen = self._storage.get_trial(trial_id)
+        self.sampler.after_trial(self, frozen, state, values)
+        for cb in callbacks:
+            cb(self, frozen)
+        return frozen
+
+    def _finish(self, trial_id, state, values, hb_stop) -> None:
+        if hb_stop is not None:
+            hb_stop.set()
+        try:
+            self._storage.set_trial_state_values(trial_id, state, values)
+        except Exception:
+            warnings.warn(f"could not persist final state for trial {trial_id}")
+
+    def _start_heartbeat(self, trial_id: int) -> threading.Event | None:
+        if self.heartbeat_interval is None:
+            return None
+        stop = threading.Event()
+
+        def beat():
+            while not stop.wait(self.heartbeat_interval):
+                try:
+                    self._storage.record_heartbeat(trial_id)
+                except Exception:
+                    pass
+
+        self._storage.record_heartbeat(trial_id)
+        threading.Thread(target=beat, daemon=True).start()
+        return stop
+
+    # -- fault tolerance -------------------------------------------------------------------
+
+    def fail_stale_trials(self) -> list[int]:
+        """Mark RUNNING trials with expired heartbeats as FAILED; returns their
+        trial ids.  Call from any worker (or a janitor) to recover from
+        worker crashes."""
+        return self._storage.fail_stale_trials(self._study_id, self.failed_trial_grace)
+
+    def retry_failed_trials(self) -> int:
+        """Re-enqueue failed trials' parameters (at-least-once execution)."""
+        n = 0
+        for t in self.get_trials(deepcopy=False, states=(TrialState.FAIL,)):
+            if t.system_attrs.get("retried"):
+                continue
+            self._storage.set_trial_system_attr(t.trial_id, "retried", True)
+            self.enqueue_trial(dict(t.params), user_attrs={"retry_of": t.number})
+            n += 1
+        return n
+
+    # -- export ---------------------------------------------------------------------------
+
+    def trials_dataframe(self) -> list[dict[str, Any]]:
+        """Rows of plain dicts (pandas-free analogue of the paper's §4 export;
+        feed to ``csv.DictWriter`` or pandas if installed)."""
+        rows = []
+        for t in self.get_trials(deepcopy=False):
+            row: dict[str, Any] = {
+                "number": t.number,
+                "state": t.state.name,
+                "value": t.values[0] if t.values else None,
+                "datetime_start": t.datetime_start.isoformat() if t.datetime_start else None,
+                "datetime_complete": t.datetime_complete.isoformat() if t.datetime_complete else None,
+            }
+            for k, v in t.params.items():
+                row[f"params_{k}"] = v
+            for k, v in t.user_attrs.items():
+                row[f"user_attrs_{k}"] = v
+            rows.append(row)
+        return rows
+
+
+def create_study(
+    study_name: str | None = None,
+    storage: "str | BaseStorage | None" = None,
+    sampler: BaseSampler | None = None,
+    pruner: BasePruner | None = None,
+    direction: "str | StudyDirection" = "minimize",
+    directions: "Sequence[str | StudyDirection] | None" = None,
+    load_if_exists: bool = False,
+) -> Study:
+    backend = get_storage(storage)
+    if directions is None:
+        directions = [direction]
+    dirs = [
+        d if isinstance(d, StudyDirection) else StudyDirection[d.upper()] for d in directions
+    ]
+    if study_name is None:
+        study_name = f"study-{datetime.datetime.now().strftime('%Y%m%d-%H%M%S-%f')}"
+    try:
+        backend.create_new_study(dirs, study_name)
+    except DuplicatedStudyError:
+        if not load_if_exists:
+            raise
+    return Study(study_name, backend, sampler=sampler, pruner=pruner)
+
+
+def load_study(
+    study_name: str,
+    storage: "str | BaseStorage",
+    sampler: BaseSampler | None = None,
+    pruner: BasePruner | None = None,
+) -> Study:
+    return Study(study_name, get_storage(storage), sampler=sampler, pruner=pruner)
+
+
+def delete_study(study_name: str, storage: "str | BaseStorage") -> None:
+    backend = get_storage(storage)
+    backend.delete_study(backend.get_study_id_from_name(study_name))

@@ -1,0 +1,247 @@
+"""The live ``Trial`` object — the paper's central abstraction.
+
+An objective function receives a *living trial object* and constructs the
+search space dynamically by calling the suggest API (paper §2, Fig. 1):
+
+    def objective(trial):
+        n_layers = trial.suggest_int("n_layers", 1, 4)
+        for i in range(n_layers):
+            ...
+
+``FixedTrial`` replays a fixed parameter set through the same objective for
+deployment (paper §2.2).
+"""
+
+from __future__ import annotations
+
+import datetime
+from typing import TYPE_CHECKING, Any, Sequence
+
+from .distributions import (
+    BaseDistribution,
+    CategoricalDistribution,
+    FloatDistribution,
+    IntDistribution,
+)
+from .exceptions import TrialPruned
+from .frozen import FrozenTrial, TrialState
+
+if TYPE_CHECKING:
+    from .study import Study
+
+__all__ = ["Trial", "FixedTrial"]
+
+
+class BaseTrial:
+    """Shared suggest API between live and fixed trials."""
+
+    # subclasses implement _suggest(name, distribution) -> external value
+
+    def suggest_float(
+        self,
+        name: str,
+        low: float,
+        high: float,
+        *,
+        log: bool = False,
+        step: float | None = None,
+    ) -> float:
+        return self._suggest(name, FloatDistribution(low, high, log=log, step=step))
+
+    def suggest_int(
+        self, name: str, low: int, high: int, *, log: bool = False, step: int = 1
+    ) -> int:
+        return self._suggest(name, IntDistribution(low, high, log=log, step=step))
+
+    def suggest_categorical(self, name: str, choices: Sequence[Any]) -> Any:
+        return self._suggest(name, CategoricalDistribution(choices))
+
+    # legacy aliases (paper-era API)
+    def suggest_uniform(self, name: str, low: float, high: float) -> float:
+        return self.suggest_float(name, low, high)
+
+    def suggest_loguniform(self, name: str, low: float, high: float) -> float:
+        return self.suggest_float(name, low, high, log=True)
+
+    def suggest_discrete_uniform(self, name: str, low: float, high: float, q: float) -> float:
+        return self.suggest_float(name, low, high, step=q)
+
+    def _suggest(self, name: str, distribution: BaseDistribution) -> Any:
+        raise NotImplementedError
+
+    def report(self, value: float, step: int) -> None:
+        raise NotImplementedError
+
+    def should_prune(self) -> bool:
+        raise NotImplementedError
+
+
+class Trial(BaseTrial):
+    """A live trial bound to a study + storage.
+
+    Every ``suggest_*`` call (1) checks whether this parameter was already
+    suggested in this trial (idempotent re-suggest returns the same value),
+    (2) otherwise asks the study's sampler for a value conditioned on trial
+    history, and (3) persists (value, distribution) to storage so *other
+    workers'* samplers see it immediately.
+    """
+
+    def __init__(self, study: "Study", trial_id: int):
+        self.study = study
+        self._trial_id = trial_id
+        self._cached: FrozenTrial | None = None
+        # relative (relational) sampling happens once, lazily, at first suggest
+        self._relative_params: dict[str, Any] | None = None
+
+    # -- identity -------------------------------------------------------------
+
+    @property
+    def number(self) -> int:
+        return self._frozen().number
+
+    @property
+    def params(self) -> dict[str, Any]:
+        return dict(self._frozen(refresh=True).params)
+
+    @property
+    def distributions(self) -> dict[str, BaseDistribution]:
+        return dict(self._frozen(refresh=True).distributions)
+
+    @property
+    def user_attrs(self) -> dict[str, Any]:
+        return dict(self._frozen(refresh=True).user_attrs)
+
+    @property
+    def system_attrs(self) -> dict[str, Any]:
+        return dict(self._frozen(refresh=True).system_attrs)
+
+    @property
+    def datetime_start(self) -> datetime.datetime | None:
+        return self._frozen().datetime_start
+
+    def _frozen(self, refresh: bool = False) -> FrozenTrial:
+        if self._cached is None or refresh:
+            self._cached = self.study._storage.get_trial(self._trial_id)
+        return self._cached
+
+    # -- suggest ---------------------------------------------------------------
+
+    def _suggest(self, name: str, distribution: BaseDistribution) -> Any:
+        storage = self.study._storage
+        frozen = self._frozen(refresh=True)
+        if name in frozen.distributions:
+            # idempotent re-suggest within a trial
+            from .distributions import check_distribution_compatibility
+
+            check_distribution_compatibility(frozen.distributions[name], distribution)
+            return frozen.params[name]
+
+        if distribution.single():
+            # domain of size one: no sampling needed
+            internal = distribution.to_internal_repr(
+                distribution.to_external_repr(
+                    distribution.low if hasattr(distribution, "low") else 0.0
+                )
+            )
+        else:
+            internal = self._sample(name, distribution, frozen)
+
+        storage.set_trial_param(self._trial_id, name, internal, distribution)
+        self._cached = None
+        return distribution.to_external_repr(internal)
+
+    def _sample(self, name: str, distribution: BaseDistribution, frozen: FrozenTrial) -> float:
+        sampler = self.study.sampler
+        if self._relative_params is None:
+            # infer the concurrence relations once per trial (paper §3.1) and
+            # run the relational sampler over them
+            space = sampler.infer_relative_search_space(self.study, frozen)
+            self._relative_params = sampler.sample_relative(self.study, frozen, space)
+        if name in self._relative_params:
+            ext = self._relative_params[name]
+            if distribution._contains(distribution.to_internal_repr(ext)):
+                return distribution.to_internal_repr(ext)
+        return distribution.to_internal_repr(
+            sampler.sample_independent(self.study, frozen, name, distribution)
+        )
+
+    # -- pruning interface (paper Fig. 5) ---------------------------------------
+
+    def report(self, value: float, step: int) -> None:
+        """Report an intermediate objective value at ``step`` ('report API')."""
+        self.study._storage.set_trial_intermediate_value(
+            self._trial_id, int(step), float(value)
+        )
+        self._cached = None
+
+    def should_prune(self) -> bool:
+        """Ask the study's pruner whether this trial should stop
+        ('should_prune API')."""
+        trial = self.study._storage.get_trial(self._trial_id)
+        return self.study.pruner.prune(self.study, trial)
+
+    def prune(self) -> None:
+        """Convenience: raise :class:`TrialPruned`."""
+        raise TrialPruned(f"trial {self.number} pruned")
+
+    # -- attrs --------------------------------------------------------------------
+
+    def set_user_attr(self, key: str, value: Any) -> None:
+        self.study._storage.set_trial_user_attr(self._trial_id, key, value)
+        self._cached = None
+
+    def set_system_attr(self, key: str, value: Any) -> None:
+        self.study._storage.set_trial_system_attr(self._trial_id, key, value)
+        self._cached = None
+
+
+class FixedTrial(BaseTrial):
+    """Replays a fixed parameter set through an objective (paper §2.2).
+
+    The suggest API returns the user-supplied values; unknown parameters raise.
+    Use it to *deploy* the best configuration through the very same
+    define-by-run objective used for search::
+
+        best = study.best_trial
+        objective(FixedTrial(best.params))
+    """
+
+    def __init__(self, params: dict[str, Any], number: int = 0):
+        self._params = dict(params)
+        self._suggested: dict[str, BaseDistribution] = {}
+        self._user_attrs: dict[str, Any] = {}
+        self._system_attrs: dict[str, Any] = {}
+        self._intermediate: dict[int, float] = {}
+        self.number = number
+
+    @property
+    def params(self) -> dict[str, Any]:
+        return dict(self._params)
+
+    @property
+    def user_attrs(self) -> dict[str, Any]:
+        return dict(self._user_attrs)
+
+    def _suggest(self, name: str, distribution: BaseDistribution) -> Any:
+        if name not in self._params:
+            raise ValueError(f"FixedTrial has no value for parameter {name!r}")
+        value = self._params[name]
+        internal = distribution.to_internal_repr(value)
+        if not distribution._contains(internal):
+            raise ValueError(
+                f"FixedTrial value {value!r} for {name!r} is outside {distribution!r}"
+            )
+        self._suggested[name] = distribution
+        return distribution.to_external_repr(internal)
+
+    def report(self, value: float, step: int) -> None:
+        self._intermediate[int(step)] = float(value)
+
+    def should_prune(self) -> bool:
+        return False
+
+    def set_user_attr(self, key: str, value: Any) -> None:
+        self._user_attrs[key] = value
+
+    def set_system_attr(self, key: str, value: Any) -> None:
+        self._system_attrs[key] = value

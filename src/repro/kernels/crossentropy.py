@@ -1,0 +1,120 @@
+"""Fused cross-entropy kernel (Pallas, TPU target).
+
+Computes per-token ``logsumexp(x@W) - (x@W)[label]`` without materializing
+the [T, V] logits in HBM — the hot spot for 256k-vocab gemma2, where logits
+would otherwise dominate the memory-roofline term.
+
+Grid (row_blocks, vocab_blocks), vocab innermost; scratch keeps the online
+(m, l) logsumexp state and the label logit per row.  Each step computes one
+[block_t, block_v] logits tile on the MXU directly from x and the W tile —
+logits never leave VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["crossentropy_kernel", "fused_crossentropy"]
+
+NEG_INF = -1e30
+
+
+def crossentropy_kernel(
+    x_ref, w_ref, label_ref,  # in: [bt, D], [D, bv], [bt]
+    nll_ref,  # out: [bt]
+    m_ref, l_ref, ll_ref,  # scratch: [bt] each
+    *,
+    n_vocab_blocks: int,
+    block_v: int,
+    vocab: int,
+    softcap: float,
+):
+    iv = pl.program_id(1)
+
+    @pl.when(iv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    logits = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [bt, bv]
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    bt = logits.shape[0]
+    v_ids = iv * block_v + jax.lax.broadcasted_iota(jnp.int32, (bt, block_v), 1)
+    valid = v_ids < vocab
+    logits = jnp.where(valid, logits, NEG_INF)
+
+    # pick the label logit if it lives in this tile
+    labels = label_ref[...]
+    is_label = v_ids == labels[:, None]
+    ll_ref[...] += jnp.sum(jnp.where(is_label, logits, 0.0), axis=1)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+    l_ref[...] = l_ref[...] * jnp.exp(m_prev - m_new) + jnp.sum(
+        jnp.exp(logits - m_new[:, None]), axis=1
+    )
+    m_ref[...] = m_new
+
+    @pl.when(iv == n_vocab_blocks - 1)
+    def _finalize():
+        nll_ref[...] = (m_ref[...] + jnp.log(jnp.maximum(l_ref[...], 1e-30))) - ll_ref[...]
+
+
+def fused_crossentropy(
+    x: jax.Array,  # [T, D]
+    w: jax.Array,  # [D, V]
+    labels: jax.Array,  # [T] int32
+    *,
+    softcap: float = 0.0,
+    block_t: int = 256,
+    block_v: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-token negative log-likelihood [T] (f32)."""
+    T, D = x.shape
+    V = w.shape[1]
+    block_t = min(block_t, T)
+    block_v = min(block_v, V)
+    T_p = -(-T // block_t) * block_t
+    V_p = -(-V // block_v) * block_v
+    if T_p != T:
+        x = jnp.pad(x, ((0, T_p - T), (0, 0)))
+        labels = jnp.pad(labels, (0, T_p - T))
+    if V_p != V:
+        w = jnp.pad(w, ((0, 0), (0, V_p - V)))
+    nt, nv = T_p // block_t, V_p // block_v
+
+    kernel = functools.partial(
+        crossentropy_kernel,
+        n_vocab_blocks=nv, block_v=block_v, vocab=V, softcap=softcap,
+    )
+    nll = pl.pallas_call(
+        kernel,
+        grid=(nt, nv),
+        in_specs=[
+            pl.BlockSpec((block_t, D), lambda it, iv: (it, 0)),
+            pl.BlockSpec((D, block_v), lambda it, iv: (0, iv)),
+            pl.BlockSpec((block_t,), lambda it, iv: (it,)),
+        ],
+        out_specs=pl.BlockSpec((block_t,), lambda it, iv: (it,)),
+        out_shape=jax.ShapeDtypeStruct((T_p,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_t,), jnp.float32),
+            pltpu.VMEM((block_t,), jnp.float32),
+            pltpu.VMEM((block_t,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, labels)
+    return nll[:T]

@@ -1,0 +1,157 @@
+"""Flash attention (Pallas, TPU target).
+
+Online-softmax blocked attention with GQA head folding, causal masking,
+sliding window, and gemma2-style logit softcap.  Grid is
+(batch, q_heads, q_blocks, kv_blocks) with the kv axis innermost — TPU grids
+execute sequentially, so the running (m, l, acc) state lives in VMEM scratch
+across kv iterations of one q block.
+
+BlockSpec tiling (MXU-aligned):
+  q/out: [1, 1, block_q, head_dim]   VMEM
+  k/v:   [1, 1, block_k, head_dim]   VMEM (kv head = q head // group)
+
+VMEM budget per step ~ block_q*D + 2*block_k*D + block_q*block_k (+f32 acc);
+default 512x512 blocks with D<=256 stays well under 16 MB v5e VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_kernel", "flash_attention"]
+
+NEG_INF = -1e30
+
+
+def flash_attention_kernel(
+    q_ref, k_ref, v_ref,  # inputs
+    o_ref,  # output
+    m_ref, l_ref, acc_ref,  # scratch (VMEM, persists across kv grid steps)
+    *,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    n_kv_blocks: int,
+    causal: bool,
+    window: int,
+    softcap: float,
+    seq_len: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)  # [bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [bq, bk]
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    # renormalize the running accumulator
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = -1,
+    softcap: float = 0.0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    # pad sequence dims to block multiples
+    Sq_p = -(-Sq // block_q) * block_q
+    Skv_p = -(-Skv // block_k) * block_k
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sq_p - Sq), (0, 0)))
+    if Skv_p != Skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Skv_p - Skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Skv_p - Skv), (0, 0)))
+    nq = Sq_p // block_q
+    nk = Skv_p // block_k
+
+    kernel = functools.partial(
+        flash_attention_kernel,
+        scale=1.0 / math.sqrt(D),
+        block_q=block_q,
+        block_k=block_k,
+        n_kv_blocks=nk,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        seq_len=Skv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq_p, D), q.dtype),
+        scratch_shapes=_scratch(block_q, D),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]
+
+
+def _scratch(block_q: int, D: int):
+    """VMEM scratch: running max m, normalizer l, f32 accumulator."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return [
+        pltpu.VMEM((block_q,), jnp.float32),
+        pltpu.VMEM((block_q,), jnp.float32),
+        pltpu.VMEM((block_q, D), jnp.float32),
+    ]

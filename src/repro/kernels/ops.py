@@ -1,0 +1,75 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``use_pallas``: on TPU hardware the kernels lower natively; on CPU we run
+``interpret=True`` (Pallas executes the kernel body with the XLA interpreter —
+bit-accurate semantics, no Mosaic).  The model layers call the pure-jnp
+chunked implementations by default and switch to these when
+``REPRO_USE_PALLAS=1`` (or on TPU backends).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .crossentropy import fused_crossentropy
+from .flash_attention import flash_attention
+from .slstm import slstm_scan
+from .ssd import ssd
+
+__all__ = [
+    "flash_attention_op",
+    "ssd_op",
+    "crossentropy_op",
+    "slstm_op",
+    "should_interpret",
+    "pallas_enabled",
+]
+
+
+def should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pallas_enabled() -> bool:
+    if os.environ.get("REPRO_USE_PALLAS") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "block_q", "block_k")
+)
+def flash_attention_op(
+    q, k, v, causal: bool = True, window: int = -1, softcap: float = 0.0,
+    block_q: int = 512, block_k: int = 512,
+):
+    """q: [B, Hq, S, D]; k/v: [B, Hkv, S, D] -> [B, Hq, S, D]."""
+    return flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=should_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_op(x, dt, A, Bm, Cm, chunk: int = 128):
+    """Folded-head SSD: x [BH,S,P], dt [BH,S], A [BH], Bm/Cm [BH,S,N]."""
+    return ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=should_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile",))
+def slstm_op(u, R, batch_tile: int = 8):
+    """Fused sLSTM scan: u [S,B,4,H,D], R [4,H,D,D] -> (h_seq, final states)."""
+    return slstm_scan(u, R, batch_tile=batch_tile, interpret=should_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "block_t", "block_v"))
+def crossentropy_op(x, w, labels, softcap: float = 0.0, block_t: int = 256, block_v: int = 1024):
+    """Fused per-token NLL: x [T,D], w [D,V], labels [T] -> [T] f32."""
+    return fused_crossentropy(
+        x, w, labels, softcap=softcap, block_t=block_t, block_v=block_v,
+        interpret=should_interpret(),
+    )

@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "ssd_ref", "crossentropy_ref", "mlstm_ref"]
+
+
+def attention_ref(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = -1,
+    softcap: float = 0.0,
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    kf = jnp.repeat(k, group, axis=1)
+    vf = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kf.astype(jnp.float32)
+    ) / math.sqrt(D)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(
+    x: jax.Array,  # [B, S, H, P]
+    dt: jax.Array,  # [B, S, H]  (post-softplus)
+    A: jax.Array,  # [H]  (negative)
+    Bm: jax.Array,  # [B, S, G, N]
+    Cm: jax.Array,  # [B, S, G, N]
+    initial_state: jax.Array | None = None,  # [B, H, P, N]
+) -> tuple:
+    """Sequential (step-by-step) SSD recurrence — the gold reference."""
+    b, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)  # [B,S,H,N]
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    dA = jnp.exp(dt.astype(jnp.float32) * A[None, None, :])  # [B,S,H]
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    state0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, H, P, N), jnp.float32)
+    )
+
+    def step(state, args):
+        xt, bt, ct, at = args  # [B,H,P], [B,H,N], [B,H,N], [B,H]
+        state = state * at[:, :, None, None] + jnp.einsum("bhp,bhn->bhpn", xt, bt)
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    final, ys = jax.lax.scan(
+        step,
+        state0,
+        (
+            xdt.transpose(1, 0, 2, 3),
+            Bh.transpose(1, 0, 2, 3),
+            Ch.transpose(1, 0, 2, 3),
+            dA.transpose(1, 0, 2),
+        ),
+    )
+    return ys.transpose(1, 0, 2, 3), final  # [B,S,H,P], [B,H,P,N]
+
+
+def crossentropy_ref(
+    x: jax.Array,  # [T, D]
+    w: jax.Array,  # [D, V]
+    labels: jax.Array,  # [T]
+    softcap: float = 0.0,
+) -> jax.Array:
+    logits = (x.astype(jnp.float32) @ w.astype(jnp.float32))
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse - ll  # per-token nll
+
+
+def mlstm_ref(q, k, v, logi, logf):
+    """Sequential mLSTM recurrence (oracle for the chunked-parallel form).
+    q,k,v: [B,S,H,D] (k pre-scaled); logi/logf: [B,S,H]."""
+    from repro.models.ssm_xlstm import empty_mlstm_state, mlstm_recurrent_step
+
+    B, S, H, D = q.shape
+    state = {
+        "C": jnp.zeros((B, H, D, D), jnp.float32),
+        "n": jnp.zeros((B, H, D), jnp.float32),
+        "m": jnp.full((B, H), -1e30, jnp.float32),
+    }
+    hs = []
+    for t in range(S):
+        state, h = mlstm_recurrent_step(
+            state, q[:, t : t + 1], k[:, t : t + 1], v[:, t : t + 1],
+            logi[:, t : t + 1], logf[:, t : t + 1],
+        )
+        hs.append(h)
+    return jnp.concatenate(hs, axis=1)

@@ -1,0 +1,125 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Terms (seconds per step, per chip — the analyzer's totals are per-partition):
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = collective_bytes_per_chip / link_bw
+
+The bottleneck is max(terms); the reported *roofline fraction* is
+useful-model-FLOPs MFU at the modeled step time:
+
+  MODEL_FLOPS/chips/peak / max(terms)
+
+MODEL_FLOPS uses 6·N·D for training (N = active matmul params; D = tokens)
+and 2·N·D for prefill/decode.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s per chip
+LINK_BW = 50e9  # B/s per ICI link
+
+__all__ = ["roofline_row", "load_all", "format_table", "PEAK_FLOPS", "HBM_BW", "LINK_BW"]
+
+
+def _model_flops(record: dict) -> float:
+    from repro import configs
+    from repro.models import SHAPES, count_active_params, param_specs
+    from repro.models.layers import Spec
+    import jax, math
+
+    cfg = configs.get_config(record["arch"])
+    shp = SHAPES[record["shape"]]
+    # matmul-active params: exclude the embedding lookup table (gather), keep
+    # the LM head (tied embeds are used as a matmul there: count once)
+    n_active = count_active_params(cfg)
+    specs = param_specs(cfg)
+    if "embed" in specs and not cfg.tie_embeddings:
+        n_active -= math.prod(specs["embed"].shape)
+    if shp.kind == "train":
+        tokens = shp.global_batch * shp.seq_len
+        return 6.0 * n_active * tokens
+    if shp.kind == "prefill":
+        tokens = shp.global_batch * shp.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shp.global_batch  # one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def roofline_row(record: dict) -> dict:
+    chips = record["n_chips"]
+    st = record["hlo_stats"]
+    t_compute = st["flops"] / PEAK_FLOPS
+    t_memory = st["bytes_accessed"] / HBM_BW
+    t_coll = st["collective_bytes"] / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values()) or 1e-12
+
+    mf = _model_flops(record)
+    useful_mfu_at_roofline = (mf / chips / PEAK_FLOPS) / step_time
+    flops_ratio = mf / max(st["flops"] * chips, 1e-9)
+
+    return {
+        "arch": record["arch"],
+        "shape": record["shape"],
+        "mesh": record["mesh"],
+        "chips": chips,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "useful_flops_ratio": flops_ratio,  # MODEL_FLOPS / (HLO_FLOPS*chips)
+        "roofline_fraction": useful_mfu_at_roofline,
+        "mem_per_dev_gib": record["memory"]["per_device_total"] / 2**30,
+        "collectives": st.get("collectives", {}),
+    }
+
+
+def load_all(results_dir: str) -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(roofline_row(json.load(f)))
+    return rows
+
+
+def format_table(rows: list, mesh: str | None = "pod16x16") -> str:
+    sel = [r for r in rows if mesh is None or r["mesh"] == mesh]
+    hdr = (
+        f"{'arch':24s} {'shape':12s} {'mesh':10s} {'compute_s':>10s} {'memory_s':>10s} "
+        f"{'collect_s':>10s} {'bound':>9s} {'useful':>7s} {'roofline':>9s} {'GiB/dev':>8s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in sel:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:10s} "
+            f"{r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} {r['t_collective_s']:10.4f} "
+            f"{r['bottleneck']:>9s} {r['useful_flops_ratio']:7.2f} "
+            f"{r['roofline_fraction']:9.3f} {r['mem_per_dev_gib']:8.2f}"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"))
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    rows = load_all(os.path.abspath(args.results))
+    print(format_table(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

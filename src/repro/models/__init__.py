@@ -1,0 +1,38 @@
+"""JAX model zoo: a single scanned-decoder assembly covering dense GQA,
+local/global attention, MLA, MoE, xLSTM, Mamba2-hybrid, VLM and audio
+backbones (the 10 assigned architectures)."""
+
+from __future__ import annotations
+
+from .config import SHAPES, BlockDef, ModelConfig, ShapeConfig
+from .transformer import (
+    abstract_params,
+    cache_logical,
+    count_active_params,
+    count_params,
+    forward,
+    init_cache,
+    init_model_params,
+    logits_from_hidden,
+    loss_fn,
+    param_specs,
+    params_logical,
+)
+
+__all__ = [
+    "BlockDef",
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "param_specs",
+    "init_model_params",
+    "abstract_params",
+    "params_logical",
+    "forward",
+    "loss_fn",
+    "logits_from_hidden",
+    "init_cache",
+    "cache_logical",
+    "count_params",
+    "count_active_params",
+]

@@ -1,0 +1,364 @@
+"""Attention: GQA with sliding-window / logit-softcap, MLA (DeepSeek), and
+KV-cache decode paths.
+
+The full-sequence path is *q-chunked*: we scan over query blocks so the
+[B, H, S, T] score tensor never materializes beyond one block — the pure-JAX
+analogue of the Pallas `flash_attention` kernel (and numerically identical to
+`kernels.ref.attention_ref`).  On TPU the Pallas kernel replaces the inner
+block computation; the chunk structure is what makes 32k-token prefill fit
+HBM on the dry-run meshes.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import Spec, apply_rope, rope, softcap
+from .sharding import constrain
+
+__all__ = [
+    "attn_specs",
+    "mla_specs",
+    "attention_full",
+    "attention_decode",
+    "attn_block_full",
+    "attn_block_decode",
+    "mla_block_full",
+    "mla_block_decode",
+    "empty_kv_cache",
+    "empty_mla_cache",
+]
+
+
+# -- parameter specs -----------------------------------------------------------------
+
+
+def attn_specs(cfg) -> dict:
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    std = 1.0 / math.sqrt(d)
+    return {
+        "wq": Spec((d, H, Dh), ("fsdp_embed", "heads", "head_dim"), std=std),
+        "wk": Spec((d, KV, Dh), ("fsdp_embed", "kv_heads", "head_dim"), std=std),
+        "wv": Spec((d, KV, Dh), ("fsdp_embed", "kv_heads", "head_dim"), std=std),
+        "wo": Spec((H, Dh, d), ("heads", "head_dim", "fsdp_embed"), std=1.0 / math.sqrt(H * Dh)),
+    }
+
+
+def mla_specs(cfg) -> dict:
+    """Multi-head Latent Attention (DeepSeek-V2).  K/V are stored compressed:
+    c_kv = x @ w_dkv (kv_lora dims) plus a single shared rope key head."""
+    d, H = cfg.d_model, cfg.n_heads
+    L = cfg.kv_lora_rank
+    nope, rp, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    std = 1.0 / math.sqrt(d)
+    return {
+        "wq": Spec((d, H, nope + rp), ("fsdp_embed", "heads", "head_dim"), std=std),
+        "w_dkv": Spec((d, L), ("fsdp_embed", "kv_lora"), std=std),
+        "kv_norm": Spec((L,), ("kv_lora",), init="zeros"),
+        "w_kr": Spec((d, rp), ("fsdp_embed", "head_dim"), std=std),
+        "w_uk": Spec((L, H, nope), ("kv_lora", "heads", "head_dim"), std=1.0 / math.sqrt(L)),
+        "w_uv": Spec((L, H, dv), ("kv_lora", "heads", "head_dim"), std=1.0 / math.sqrt(L)),
+        "wo": Spec((H, dv, d), ("heads", "head_dim", "fsdp_embed"), std=1.0 / math.sqrt(H * dv)),
+    }
+
+
+# -- core attention ---------------------------------------------------------------------
+
+
+def _scores_to_out(scores_f32, v, softcap_val, mask):
+    if softcap_val:
+        scores_f32 = softcap(scores_f32, softcap_val)
+    scores_f32 = jnp.where(mask, scores_f32, -1e30)
+    probs = jax.nn.softmax(scores_f32, axis=-1)
+    return probs
+
+
+def attention_full(
+    q: jax.Array,  # [B, S, H, D]
+    k: jax.Array,  # [B, T, KV, D]
+    v: jax.Array,  # [B, T, KV, D]
+    *,
+    window: int = -1,
+    attn_softcap: float | None = None,
+    q_offset: int = 0,
+    q_chunk: int = 512,
+    kv_len: jax.Array | None = None,
+) -> jax.Array:
+    """Causal (optionally sliding-window) attention, scanned over q blocks."""
+    B, S, H, D = q.shape
+    _, T, KV, _ = k.shape
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qc = min(q_chunk, S)
+    while S % qc != 0:
+        qc //= 2
+    n = S // qc
+    dtype = q.dtype
+
+    qs = q.reshape(B, n, qc, H, D).transpose(1, 0, 2, 3, 4)  # [n, B, qc, H, D]
+    k_pos = jnp.arange(T)
+
+    # remat per q-chunk: backward recomputes this chunk's scores instead of
+    # saving [n_chunks, B, H, qc, T] residuals (the full S^2 matrix)
+    @jax.checkpoint
+    def body(_, args):
+        i, qb = args  # qb: [B, qc, H, D]
+        q_pos = q_offset + i * qc + jnp.arange(qc)
+        qg = qb.reshape(B, qc, KV, G, D)
+        s = jnp.einsum(
+            "bqkgd,btkd->bkgqt", qg, k, preferred_element_type=jnp.float32
+        ) * scale  # [B, KV, G, qc, T]
+        mask = k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        if kv_len is not None:
+            mask &= k_pos[None, :] < kv_len
+        probs = _scores_to_out(s, v, attn_softcap, mask[None, None, None])
+        o = jnp.einsum("bkgqt,btkd->bqkgd", probs.astype(dtype), v)
+        return None, o.reshape(B, qc, H, D)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(n), qs))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+
+
+def attention_decode(
+    q: jax.Array,  # [B, 1, H, D]
+    k_cache: jax.Array,  # [B, T, KV, D]
+    v_cache: jax.Array,
+    index: jax.Array,  # current position (tokens < index are valid)
+    *,
+    window: int = -1,
+    attn_softcap: float | None = None,
+) -> jax.Array:
+    B, _, H, D = q.shape
+    _, T, KV, _ = k_cache.shape
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KV, G, D)
+    s = jnp.einsum(
+        "bkgd,btkd->bkgt", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    k_pos = jnp.arange(T)
+    mask = k_pos <= index
+    if window > 0:
+        mask &= (index - k_pos) < window
+    if attn_softcap:
+        s = softcap(s, attn_softcap)
+    s = jnp.where(mask[None, None, None, :], s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", probs.astype(q.dtype), v_cache)
+    return o.reshape(B, 1, H, D)
+
+
+# -- block-level wrappers (projections + rope + attention) ------------------------------------
+
+
+def _project_qkv(p, x, cfg, positions, compute_dtype):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(compute_dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(compute_dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(compute_dtype))
+    sin, cos = rope(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def _is_ring(bdef, cache) -> bool:
+    """Sliding-window layers keep only a window-sized ring cache (gemma2's
+    local layers: 4096 slots instead of the full context)."""
+    return bdef.window > 0 and cache["k"].shape[1] <= bdef.window
+
+
+def attn_block_full(p, x, cfg, bdef, positions, cache=None, cache_index=None):
+    """Full-sequence attention sub-block.  Returns (out, new_cache)."""
+    B, S, d = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions, x.dtype)
+    new_cache = None
+    if cache is not None and _is_ring(bdef, cache):
+        # prefill a window ring cache: attend locally, store the last W tokens
+        # at slots (pos % W).  (Ring prefill assumes cache_index == 0.)
+        o = attention_full(
+            q, k, v, window=bdef.window, attn_softcap=cfg.attn_softcap,
+            q_offset=0, q_chunk=cfg.q_chunk,
+        )
+        W = cache["k"].shape[1]
+        take = min(W, S)
+        pos = np.arange(S - take, S)
+        slots = np.mod(pos, W)
+        kc = cache["k"].at[:, slots].set(k[:, S - take :].astype(cache["k"].dtype))
+        vc = cache["v"].at[:, slots].set(v[:, S - take :].astype(cache["v"].dtype))
+        new_cache = {"k": kc, "v": vc}
+    else:
+        # NOTE (§Perf iteration 2, refuted): forcing a Megatron-SP k/v gather
+        # here (constrain k/v replicated over "model") made GSPMD replicate the
+        # whole attention computation (compute x3.4, memory x4.5 on gemma2).
+        # GSPMD's split-KV schedule — seq-sharded k/v with f32 partial-output
+        # all-reduces — is the better schedule for this chunk-scan structure.
+        if cfg.attn_head_shard and cache is None:
+            # Megatron attention: q sharded by heads over "model"; k/v small
+            # (few kv heads) and replicated (§Perf iteration 3)
+            q = constrain(q, ("batch", None, "heads", "head_dim"))
+            k = constrain(k, ("batch", None, "kv_heads", "head_dim"))
+            v = constrain(v, ("batch", None, "kv_heads", "head_dim"))
+        if cache is not None:
+            kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+            new_cache = {"k": kc, "v": vc}
+            k, v = kc, vc
+            kv_len = cache_index + S
+        else:
+            kv_len = None
+        o = attention_full(
+            q, k, v,
+            window=bdef.window,
+            attn_softcap=cfg.attn_softcap,
+            q_offset=cache_index if cache is not None else 0,
+            q_chunk=cfg.q_chunk if cache is None else cfg.prefill_q_chunk,
+            kv_len=kv_len,
+        )
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def attn_block_decode(p, x, cfg, bdef, cache, index):
+    """One-token decode with cache update.  x: [B, 1, d]."""
+    positions = jnp.full((x.shape[0], 1), index, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions, x.dtype)
+    if _is_ring(bdef, cache):
+        W = cache["k"].shape[1]
+        slot = index % W
+        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        # ring slots hold exactly the last W positions (rope was applied at the
+        # absolute position before caching); a slot s is filled iff s <= index.
+        o = attention_decode(q, kc, vc, index, window=-1, attn_softcap=cfg.attn_softcap)
+    else:
+        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, index, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, index, 0, 0))
+        o = attention_decode(
+            q, kc, vc, index, window=bdef.window, attn_softcap=cfg.attn_softcap
+        )
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, {"k": kc, "v": vc}
+
+
+def empty_kv_cache(cfg, batch: int, capacity: int, dtype, window: int = -1) -> dict:
+    if window > 0:
+        capacity = min(capacity, window)
+    return {
+        "k": jnp.zeros((batch, capacity, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+# -- MLA -------------------------------------------------------------------------------------
+
+
+def _mla_qkv(p, x, cfg, positions, compute_dtype):
+    from .layers import rms_norm
+
+    H = cfg.n_heads
+    nope, rp = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(compute_dtype))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    sin, cos = rope(positions, rp, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+
+    c_kv = jnp.einsum("bsd,dl->bsl", x, p["w_dkv"].astype(compute_dtype))
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dk->bsk", x, p["w_kr"].astype(compute_dtype))
+    k_rope = apply_rope(k_rope[:, :, None, :], sin, cos)[:, :, 0, :]  # single shared head
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cfg, q_offset, kv_len, compute_dtype, q_chunk):
+    """Attention in compressed space.
+
+    Absorb w_uk into q (the MLA trick): score = (q_nope @ w_uk) . c_kv
+    + q_rope . k_rope, so the cache stays [T, kv_lora + rope] — this is the
+    memory win over GQA.  Values are un-compressed per-head after the probs.
+    """
+    B, S, H, _ = q_nope.shape
+    T = c_kv.shape[1]
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    # q_abs: [B,S,H,L]
+    q_abs = jnp.einsum("bshn,lhn->bshl", q_nope, p["w_uk"].astype(compute_dtype))
+
+    qc = min(q_chunk, S)
+    while S % qc != 0:
+        qc //= 2
+    n = S // qc
+    k_pos = jnp.arange(T)
+    dtype = q_nope.dtype
+
+    qa = q_abs.reshape(B, n, qc, H, -1).transpose(1, 0, 2, 3, 4)
+    qr = q_rope.reshape(B, n, qc, H, -1).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def body(_, args):
+        i, qab, qrb = args
+        q_pos = q_offset + i * qc + jnp.arange(qc)
+        s = jnp.einsum("bqhl,btl->bhqt", qab, c_kv, preferred_element_type=jnp.float32)
+        s += jnp.einsum("bqhk,btk->bhqt", qrb, k_rope, preferred_element_type=jnp.float32)
+        s *= scale
+        mask = k_pos[None, :] <= q_pos[:, None]
+        if kv_len is not None:
+            mask &= k_pos[None, :] < kv_len
+        s = jnp.where(mask[None, None], s, -1e30)
+        probs = jax.nn.softmax(s, axis=-1)
+        # value up-projection after prob-weighting in compressed space:
+        # o = (probs @ c_kv) @ w_uv   [B,qc,H,dv]
+        ctx = jnp.einsum("bhqt,btl->bqhl", probs.astype(dtype), c_kv)
+        o = jnp.einsum("bqhl,lhv->bqhv", ctx, p["w_uv"].astype(compute_dtype))
+        return None, o
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(n), qa, qr))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, cfg.v_head_dim)
+
+
+def mla_block_full(p, x, cfg, bdef, positions, cache=None, cache_index=None):
+    B, S, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, positions, x.dtype)
+    new_cache = None
+    kv_len = None
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_index, 0))
+        kr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, cache_index, 0))
+        new_cache = {"c_kv": ckv, "k_rope": kr}
+        c_kv, k_rope = ckv, kr
+        kv_len = cache_index + S
+    o = _mla_attend(
+        p, q_nope, q_rope, c_kv, k_rope, cfg,
+        q_offset=cache_index if cache is not None else 0,
+        kv_len=kv_len, compute_dtype=x.dtype,
+        q_chunk=cfg.q_chunk if cache is None else cfg.prefill_q_chunk,
+    )
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def mla_block_decode(p, x, cfg, bdef, cache, index):
+    B = x.shape[0]
+    positions = jnp.full((B, 1), index, dtype=jnp.int32)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, positions, x.dtype)
+    ckv = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, index, 0))
+    kr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, index, 0))
+    o = _mla_attend(
+        p, q_nope, q_rope, ckv, kr, cfg,
+        q_offset=index, kv_len=index + 1, compute_dtype=x.dtype, q_chunk=1,
+    )
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(x.dtype))
+    return out, {"c_kv": ckv, "k_rope": kr}
+
+
+def empty_mla_cache(cfg, batch: int, capacity: int, dtype) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, capacity, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, capacity, cfg.qk_rope_dim), dtype),
+    }

@@ -1,0 +1,203 @@
+"""Shared layers + the parameter-spec machinery.
+
+Every parameter is declared as a :class:`Spec` (shape, logical axes, init).
+Spec trees give us, with no weight allocation:
+
+* ``jax.eval_shape``-style abstract params for the multi-pod dry-run,
+* NamedShardings via ``models.sharding`` rules,
+* deterministic per-path initialization for real runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Spec",
+    "spec_shapes",
+    "spec_logical",
+    "init_params",
+    "rms_norm",
+    "rope",
+    "apply_rope",
+    "swiglu",
+    "gelu_mlp",
+    "softcap",
+    "cross_entropy_chunked",
+    "Dtypes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple
+    logical: tuple
+    init: str = "normal"  # normal | zeros | ones | embed
+    std: float | None = None  # explicit stddev; default 1/sqrt(fan_in=shape[-2])
+
+    def stacked(self, n: int) -> "Spec":
+        """Prepend a scanned-layers dim (fan-in unchanged)."""
+        std = self.std
+        if std is None and self.init == "normal":
+            std = self._default_std()
+        return Spec((n, *self.shape), ("layers", *self.logical), self.init, std)
+
+    def _default_std(self) -> float:
+        # fan-in = product of all dims except the last (output) dim
+        fan_in = max(1, math.prod(self.shape[:-1]))
+        return 1.0 / math.sqrt(fan_in)
+
+
+def spec_shapes(tree, dtype) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, Spec),
+    )
+
+
+def spec_logical(tree) -> Any:
+    return jax.tree.map(
+        lambda s: s.logical, tree, is_leaf=lambda x: isinstance(x, Spec)
+    )
+
+
+def init_params(tree, key: jax.Array, dtype) -> Any:
+    """Deterministic per-path init: rng folded with a stable hash of the path."""
+    leaves = jax.tree.leaves_with_path(tree, is_leaf=lambda x: isinstance(x, Spec))
+
+    def one(path, s: Spec):
+        pkey = jax.random.fold_in(key, _path_hash(path))
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dtype)
+        std = s.std
+        if std is None:
+            std = s._default_std() if s.init == "normal" else 0.02
+        if s.init == "embed":
+            std = 0.02 if s.std is None else s.std
+        return (jax.random.normal(pkey, s.shape, jnp.float32) * std).astype(dtype)
+
+    vals = [one(p, s) for p, s in leaves]
+    treedef = jax.tree.structure(tree, is_leaf=lambda x: isinstance(x, Spec))
+    return jax.tree.unflatten(treedef, vals)
+
+
+def _path_hash(path) -> int:
+    s = jax.tree_util.keystr(path)
+    h = 2166136261
+    for ch in s:
+        h = ((h ^ ord(ch)) * 16777619) % (2**31)
+    return h
+
+
+@dataclasses.dataclass(frozen=True)
+class Dtypes:
+    param: Any = jnp.float32
+    compute: Any = jnp.bfloat16
+    accum: Any = jnp.float32
+
+
+# -- primitive layers -------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(positions: jax.Array, head_dim: int, theta: float = 10000.0) -> tuple:
+    """Rotary embedding tables for given positions [..., S] -> (sin, cos) of
+    shape [..., S, head_dim//2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: [B, S, H, D]; sin/cos: [B, S, D/2] (or broadcastable)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :] if sin.ndim == x.ndim - 1 else sin
+    cos = cos[..., None, :] if cos.ndim == x.ndim - 1 else cos
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array, compute_dtype) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, w1.astype(compute_dtype))
+    g = jnp.einsum("...d,df->...f", x, w3.astype(compute_dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(h) * g, w2.astype(compute_dtype))
+
+
+def gelu_mlp(x: jax.Array, w1: jax.Array, w2: jax.Array, compute_dtype) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, w1.astype(compute_dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(h), w2.astype(compute_dtype))
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """gemma2-style logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+def cross_entropy_chunked(
+    x: jax.Array,
+    w_out: jax.Array,
+    labels: jax.Array,
+    *,
+    chunk: int = 256,
+    final_softcap: float | None = None,
+    mask: jax.Array | None = None,
+) -> jax.Array:
+    """Mean token cross-entropy without materializing [B, S, V] logits.
+
+    Scans over sequence chunks; each chunk computes logits -> logsumexp ->
+    label logit and is rematerialized in the backward pass (``jax.checkpoint``)
+    so peak memory is O(B * chunk * V).  This is what makes 256k-vocab
+    (gemma2) training fit; the Pallas `crossentropy` kernel is the TPU-native
+    fused version of the same contraction.
+    """
+    B, S, D = x.shape
+    V = w_out.shape[-1]
+    chunk = min(chunk, S)
+    n = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    xs = x[:, : n * chunk].reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    ls = labels[:, : n * chunk].reshape(B, n, chunk).transpose(1, 0, 2)
+    ms = (
+        mask[:, : n * chunk].reshape(B, n, chunk).transpose(1, 0, 2)
+        if mask is not None
+        else jnp.ones((n, B, chunk), dtype=jnp.float32)
+    )
+
+    @jax.checkpoint
+    def chunk_loss(xc, lc, mc):
+        logits = jnp.einsum(
+            "bsd,dv->bsv", xc, w_out.astype(xc.dtype), preferred_element_type=jnp.float32
+        )
+        if final_softcap:
+            logits = softcap(logits, final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - ll) * mc), jnp.sum(mc)
+
+    def body(carry, args):
+        tot, cnt = carry
+        l, c = chunk_loss(*args)
+        return (tot + l, cnt + c), None
+
+    (total, count), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), (xs, ls, ms))
+    return total / jnp.maximum(count, 1.0)

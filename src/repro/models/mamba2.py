@@ -1,0 +1,213 @@
+"""Mamba2 / SSD block (Dao & Gu, 2024) — the zamba2 backbone.
+
+Train/prefill use the chunked SSD algorithm: intra-chunk quadratic attention
+-like contraction + inter-chunk linear recurrence over chunk states (a
+``lax.scan`` over chunks).  The Pallas ``ssd`` kernel implements the same
+chunk schedule with VMEM-resident carry.  Decode is the O(1) recurrent
+update on state [B, H, P, N].
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Spec, rms_norm
+
+__all__ = [
+    "mamba2_specs",
+    "mamba2_block_full",
+    "mamba2_block_decode",
+    "empty_mamba2_state",
+    "ssd_chunked",
+]
+
+
+def mamba2_specs(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = di // cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = di + 2 * G * N
+    return {
+        "norm": Spec((d,), ("embed",), init="zeros"),
+        "w_in": Spec(
+            (d, 2 * di + 2 * G * N + H), ("fsdp_embed", "mlp"), std=1.0 / math.sqrt(d)
+        ),
+        "conv_w": Spec((cfg.ssm_conv, conv_ch), (None, "mlp"), std=0.1),
+        "conv_b": Spec((conv_ch,), ("mlp",), init="zeros"),
+        "A_log": Spec((H,), ("heads",), init="ones"),  # A = -exp(A_log)
+        "D": Spec((H,), ("heads",), init="ones"),
+        "dt_bias": Spec((H,), ("heads",), init="zeros"),
+        "out_norm": Spec((di,), ("mlp",), init="zeros"),
+        "w_out": Spec((di, d), ("mlp", "fsdp_embed"), std=1.0 / math.sqrt(di)),
+    }
+
+
+def _split_in(p, x, cfg):
+    """in_proj + causal depthwise conv.  Returns z, xh, B, C, dt."""
+    b, S, d = x.shape
+    di = cfg.ssm_expand * d
+    H = di // cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(x.dtype))
+    z = proj[..., :di]
+    conv_in = proj[..., di : di + di + 2 * G * N]
+    dt = proj[..., di + di + 2 * G * N :]
+    return z, conv_in, dt, (di, H, G, N)
+
+
+def _causal_conv(conv_in, w, bias, state=None):
+    """Depthwise causal conv along S.  conv_in [B,S,C]; w [K,C].  If ``state``
+    ([B,K-1,C]) is given, it is prepended (decode/prefill continuation) and
+    the trailing K-1 inputs are returned as the new state."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((conv_in.shape[0], K - 1, conv_in.shape[2]), conv_in.dtype)
+    else:
+        pad = state.astype(conv_in.dtype)
+    xp = jnp.concatenate([pad, conv_in], axis=1)
+    out = sum(
+        xp[:, i : i + conv_in.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    new_state = xp[:, -(K - 1) :, :]
+    return jax.nn.silu(out + bias[None, None, :]), new_state
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int = 128, initial_state=None):
+    """Chunked SSD.  xh [B,S,H,P]; dt [B,S,H] (post-softplus); A [H] (<0);
+    Bm, Cm [B,S,G,N] (G divides H).  Returns (y [B,S,H,P], final_state
+    [B,H,P,N])."""
+    b, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    L = min(chunk, S)
+    while S % L != 0:
+        L //= 2
+    n = S // L
+
+    dA = dt * A[None, None, :]  # [B,S,H] log-decay per step (negative)
+    xdt = xh * dt[..., None]
+
+    def resh(t, feat_shape):
+        return t.reshape(b, n, L, *feat_shape)
+
+    dA_c = resh(dA, (H,))
+    x_c = resh(xdt, (H, P))
+    B_c = jnp.repeat(resh(Bm, (G, N)), rep, axis=3)  # [b,n,L,H,N]
+    C_c = jnp.repeat(resh(Cm, (G, N)), rep, axis=3)
+
+    cum = jnp.cumsum(dA_c, axis=2)  # [b,n,L,H] inclusive
+    total = cum[:, :, -1:, :]  # [b,n,1,H]
+
+    # intra-chunk (diagonal) term: decay[t,s] = exp(cum_t - cum_s) for s<=t
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [b,n,L,L,H]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None], seg, -jnp.inf))
+    cb = jnp.einsum("bcthn,bcshn->bctsh", C_c, B_c, preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum(
+        "bctsh,bctsh,bcshp->bcthp", cb, decay.astype(jnp.float32), x_c.astype(jnp.float32)
+    )
+
+    # chunk states: sum_s exp(total - cum_s) B_s x_s -> [b,n,H,N,P]
+    decay_out = jnp.exp(total - cum)  # [b,n,L,H]
+    states = jnp.einsum(
+        "bclhn,bclh,bclhp->bchnp",
+        B_c.astype(jnp.float32), decay_out.astype(jnp.float32), x_c.astype(jnp.float32),
+    )
+
+    # inter-chunk recurrence over n chunks
+    chunk_decay = jnp.exp(total[:, :, 0, :])  # [b,n,H]
+    init = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, H, P, N), jnp.float32)
+    )
+    # note states above are [b,n,H,N,P]; transpose to [b,n,H,P,N]
+    states = states.transpose(0, 1, 2, 4, 3)
+
+    def scan_body(carry, args):
+        st, dec = args  # st [b,H,P,N], dec [b,H]
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit state *entering* this chunk
+
+    final, entering = jax.lax.scan(
+        scan_body,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    entering = entering.transpose(1, 0, 2, 3, 4)  # [b,n,H,P,N]
+
+    # inter-chunk (off-diagonal) contribution: C_t . state_in * exp(cum_t)
+    y_off = jnp.einsum(
+        "bclhn,bchpn,bclh->bclhp",
+        C_c.astype(jnp.float32), entering, jnp.exp(cum).astype(jnp.float32),
+    )
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    return y, final
+
+
+def _mamba_out(p, y, z, xh, cfg, dtype):
+    b, S, H, P = y.shape
+    di = H * P
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    yf = rms_norm(y.reshape(b, S, di).astype(dtype), p["out_norm"], cfg.norm_eps)
+    gated = yf * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", gated, p["w_out"].astype(dtype))
+
+
+def mamba2_block_full(p, x, cfg, bdef, positions, cache=None, cache_index=None):
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    z, conv_in, dt_raw, (di, H, G, N) = _split_in(p, xn, cfg)
+    conv_state = cache["conv"] if cache is not None else None
+    conved, new_conv = _causal_conv(conv_in, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype), conv_state)
+    b, S, _ = x.shape
+    P = cfg.ssm_head_dim
+    xh = conved[..., :di].reshape(b, S, H, P)
+    Bm = conved[..., di : di + G * N].reshape(b, S, G, N)
+    Cm = conved[..., di + G * N :].reshape(b, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    init_state = cache["state"] if cache is not None else None
+    y, final = ssd_chunked(xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk, initial_state=init_state)
+    out = _mamba_out(p, y, z, xh, cfg, x.dtype)
+    new_cache = {"conv": new_conv, "state": final} if cache is not None else None
+    return out, new_cache
+
+
+def mamba2_block_decode(p, x, cfg, bdef, cache, index):
+    """x: [B,1,d]; O(1) state update."""
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    z, conv_in, dt_raw, (di, H, G, N) = _split_in(p, xn, cfg)
+    conved, new_conv = _causal_conv(
+        conv_in, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype), cache["conv"]
+    )
+    b = x.shape[0]
+    P = cfg.ssm_head_dim
+    xh = conved[..., :di].reshape(b, 1, H, P)
+    Bm = conved[..., di : di + G * N].reshape(b, 1, G, N)
+    Cm = conved[..., di + G * N :].reshape(b, 1, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))[:, 0]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    rep = H // G
+    Bh = jnp.repeat(Bm[:, 0], rep, axis=1).astype(jnp.float32)  # [b,H,N]
+    Ch = jnp.repeat(Cm[:, 0], rep, axis=1).astype(jnp.float32)
+    dA = jnp.exp(dt * A[None, :])  # [b,H]
+    x0 = xh[:, 0].astype(jnp.float32) * dt[..., None]  # [b,H,P]
+    state = cache["state"] * dA[:, :, None, None] + jnp.einsum("bhp,bhn->bhpn", x0, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)[:, None]  # [b,1,H,P]
+    out = _mamba_out(p, y, z, xh, cfg, x.dtype)
+    return out, {"conv": new_conv, "state": state}
+
+
+def empty_mamba2_state(cfg, batch: int) -> dict:
+    di = cfg.ssm_expand * cfg.d_model
+    H = di // cfg.ssm_head_dim
+    conv_ch = di + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), jnp.float32),
+        "state": jnp.zeros((batch, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,269 @@
+"""xLSTM blocks (Beck et al., 2024): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, truly recurrent).
+
+mLSTM is evaluated in its *stabilized parallel form* for train/prefill —
+the same q-chunked lazy pattern as attention but with an exponential-gating
+decay matrix instead of softmax — and in its recurrent form (O(1) state
+``C``: [B,H,D,D]) for decode.  This is what makes xlstm-1.3b the designated
+``long_500k`` architecture: decode cost is independent of context length.
+
+sLSTM has a genuine sequential dependency (recurrent weights feed h_{t-1}
+into the gates), so it is evaluated with ``lax.scan`` over time in all modes —
+the paper's own framing; we keep the 7:1 mLSTM:sLSTM pattern so the scans are
+rare.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Spec, rms_norm
+
+__all__ = [
+    "mlstm_specs",
+    "slstm_specs",
+    "mlstm_block_full",
+    "mlstm_block_decode",
+    "slstm_block_full",
+    "slstm_block_decode",
+    "empty_mlstm_state",
+    "empty_slstm_state",
+]
+
+
+# -- specs ----------------------------------------------------------------------------
+
+
+def mlstm_specs(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_proj_factor * d  # inner width
+    H = cfg.n_heads
+    D = di // H
+    return {
+        "norm": Spec((d,), ("embed",), init="zeros"),
+        "w_up": Spec((d, 2 * di), ("fsdp_embed", "mlp"), std=1.0 / math.sqrt(d)),
+        # block-diagonal per-head q/k (v = conv output directly)
+        "wq": Spec((H, D, D), ("heads", "head_dim", None), std=1.0 / math.sqrt(D)),
+        "wk": Spec((H, D, D), ("heads", "head_dim", None), std=1.0 / math.sqrt(D)),
+        "w_if": Spec((di, 2 * H), ("mlp", "heads"), std=1.0 / math.sqrt(di)),
+        "b_f": Spec((H,), ("heads",), init="ones"),  # forget-gate bias > 0 at init
+        "out_norm": Spec((di,), ("mlp",), init="zeros"),
+        "w_down": Spec((di, d), ("mlp", "fsdp_embed"), std=1.0 / math.sqrt(di)),
+    }
+
+
+def slstm_specs(cfg) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    D = d // H
+    return {
+        "norm": Spec((d,), ("embed",), init="zeros"),
+        "w_zifo": Spec((d, 4 * d), ("fsdp_embed", "mlp"), std=1.0 / math.sqrt(d)),
+        # block-diagonal recurrent weights per head
+        "r_zifo": Spec((4, H, D, D), (None, "heads", "head_dim", None), std=1.0 / math.sqrt(D)),
+        "b_zifo": Spec((4 * d,), ("mlp",), init="zeros"),
+        "out_norm": Spec((d,), ("embed",), init="zeros"),
+        "w_out": Spec((d, d), ("fsdp_embed", "embed"), std=1.0 / math.sqrt(d)),
+    }
+
+
+# -- mLSTM ---------------------------------------------------------------------------------
+
+
+def _mlstm_qkvif(p, x, cfg):
+    """Project to per-head q, k, v, and i/f gate logits.  x: [B,S,d]."""
+    B, S, d = x.shape
+    di = cfg.ssm_proj_factor * d
+    H = cfg.n_heads
+    D = di // H
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"].astype(x.dtype))
+    xc, z = up[..., :di], up[..., di:]
+    xh = xc.reshape(B, S, H, D)
+    q = jnp.einsum("bshd,hde->bshe", xh, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bshd,hde->bshe", xh, p["wk"].astype(x.dtype)) / math.sqrt(D)
+    v = xh
+    gates = jnp.einsum("bse,eh->bsh", xc, p["w_if"].astype(x.dtype)).astype(jnp.float32)
+    logi = gates[..., : H]
+    logf = jax.nn.log_sigmoid(gates[..., H:] + p["b_f"].astype(jnp.float32))
+    return q, k, v, z, logi, logf
+
+
+def mlstm_parallel(q, k, v, logi, logf, q_chunk: int = 256):
+    """Stabilized parallel mLSTM.  q,k,v: [B,S,H,D]; logi/logf: [B,S,H] (f32).
+
+    h_t = sum_s D_ts (q_t.k_s) v_s / max(|sum_s D_ts (q_t.k_s)|, exp(-m_t)),
+    log D_ts = F_t - F_s + logi_s (s<=t),  m_t = max_s log D_ts.
+    """
+    B, S, H, D = q.shape
+    F = jnp.cumsum(logf, axis=1)  # [B,S,H] inclusive
+    qc = min(q_chunk, S)
+    while S % qc != 0:
+        qc //= 2
+    n = S // qc
+
+    qs = q.reshape(B, n, qc, H, D).transpose(1, 0, 2, 3, 4)
+    Fq = F.reshape(B, n, qc, H).transpose(1, 0, 2, 3)
+    # NOTE: k is already scaled by 1/sqrt(D) at projection time (recurrent and
+    # parallel paths must agree), so no extra score scaling here.
+    scale = 1.0
+
+    @jax.checkpoint
+    def body(_, args):
+        i, qb, Fb = args  # qb [B,qc,H,D], Fb [B,qc,H]
+        q_pos = i * qc + jnp.arange(qc)
+        k_pos = jnp.arange(S)
+        # logD: [B, H, qc, S]
+        logD = (
+            Fb.transpose(0, 2, 1)[:, :, :, None]
+            - F.transpose(0, 2, 1)[:, :, None, :]
+            + logi.transpose(0, 2, 1)[:, :, None, :]
+        )
+        causal = k_pos[None, :] <= q_pos[:, None]
+        logD = jnp.where(causal[None, None], logD, -jnp.inf)
+        m = jnp.max(logD, axis=-1, keepdims=True)  # [B,H,qc,1]
+        m = jnp.maximum(m, -1e30)
+        Dmat = jnp.exp(logD - m)
+        qk = jnp.einsum("bqhd,bshd->bhqs", qb, k, preferred_element_type=jnp.float32) * scale
+        w = qk * Dmat
+        numer = jnp.einsum("bhqs,bshd->bqhd", w.astype(q.dtype), v)
+        denom = jnp.sum(w, axis=-1)  # [B,H,qc]
+        denom = jnp.maximum(jnp.abs(denom), jnp.exp(-m[..., 0]))
+        h = numer / denom.transpose(0, 2, 1)[..., None].astype(q.dtype)
+        return None, h
+
+    _, hs = jax.lax.scan(body, None, (jnp.arange(n), qs, Fq))
+    return hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+
+
+def mlstm_recurrent_step(state, q, k, v, logi, logf):
+    """One decode step.  state: dict(C [B,H,D,D], n [B,H,D], m [B,H]);
+    q,k,v: [B,1,H,D]; logi/logf: [B,1,H]."""
+    C, nvec, m = state["C"], state["n"], state["m"]
+    logi = logi[:, 0].astype(jnp.float32)
+    logf = logf[:, 0].astype(jnp.float32)
+    q_, k_, v_ = q[:, 0], k[:, 0], v[:, 0]
+
+    m_new = jnp.maximum(logf + m, logi)
+    f_ = jnp.exp(logf + m - m_new)[..., None]
+    i_ = jnp.exp(logi - m_new)[..., None]
+    C_new = f_[..., None] * C + i_[..., None] * jnp.einsum("bhd,bhe->bhde", k_, v_)
+    n_new = f_ * nvec + i_ * k_
+    numer = jnp.einsum("bhd,bhde->bhe", q_, C_new)
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", q_, n_new)), jnp.exp(-m_new)
+    )[..., None]
+    h = (numer / denom)[:, None].astype(q.dtype)
+    return {"C": C_new, "n": n_new, "m": m_new}, h
+
+
+def _mlstm_out(p, h, z, cfg, x_dtype):
+    B, S, H, D = h.shape
+    hf = rms_norm(h.reshape(B, S, H * D), p["out_norm"], cfg.norm_eps)
+    gated = hf * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", gated, p["w_down"].astype(x_dtype))
+
+
+def mlstm_block_full(p, x, cfg, bdef, positions, cache=None, cache_index=None):
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v, z, logi, logf = _mlstm_qkvif(p, xn, cfg)
+    h = mlstm_parallel(q, k, v, logi, logf, q_chunk=cfg.q_chunk)
+    out = _mlstm_out(p, h, z, cfg, x.dtype)
+    new_cache = None
+    if cache is not None:
+        # fold the processed prefix into the recurrent state for decode:
+        # replay recurrences in one scan over time (state-space prefill)
+        def step(st, args):
+            st, _ = mlstm_recurrent_step(st, *[a[:, None] for a in args])
+            return st, None
+
+        new_cache, _ = jax.lax.scan(
+            step,
+            cache,
+            (
+                q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3), v.transpose(1, 0, 2, 3),
+                logi.transpose(1, 0, 2), logf.transpose(1, 0, 2),
+            ),
+        )
+    return out, new_cache
+
+
+def mlstm_block_decode(p, x, cfg, bdef, cache, index):
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v, z, logi, logf = _mlstm_qkvif(p, xn, cfg)
+    new_state, h = mlstm_recurrent_step(cache, q, k, v, logi, logf)
+    out = _mlstm_out(p, h, z, cfg, x.dtype)
+    return out, new_state
+
+
+def empty_mlstm_state(cfg, batch: int) -> dict:
+    di = cfg.ssm_proj_factor * cfg.d_model
+    H = cfg.n_heads
+    D = di // H
+    return {
+        "C": jnp.zeros((batch, H, D, D), jnp.float32),
+        "n": jnp.zeros((batch, H, D), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+# -- sLSTM --------------------------------------------------------------------------------
+
+
+def _slstm_scan(p, zifo, cfg, state):
+    """Sequential sLSTM over time.  zifo: [B,S,4d] pre-activations (input part);
+    recurrent part added step-by-step.  Returns (h_seq [B,S,d], final state)."""
+    B, S, d4 = zifo.shape
+    d = d4 // 4
+    H = cfg.n_heads
+    D = d // H
+    R = p["r_zifo"].astype(jnp.float32)  # [4,H,D,D]
+
+    @jax.checkpoint  # BPTT residual = the 4 state tensors only; gates recomputed
+    def step(st, u_t):  # u_t: [B, 4d]
+        c, n, h, m = st["c"], st["n"], st["h"], st["m"]  # [B,H,D] each, m [B,H,D]
+        hr = h  # [B,H,D]
+        rec = jnp.einsum("bhd,ghde->gbhe", hr, R)  # [4,B,H,D]
+        u = u_t.reshape(B, 4, H, D).transpose(1, 0, 2, 3).astype(jnp.float32) + rec
+        z_t = jnp.tanh(u[0])
+        i_t = u[1]
+        f_t = u[2]
+        o_t = jax.nn.sigmoid(u[3])
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_ = jnp.exp(i_t - m_new)
+        f_ = jnp.exp(f_t + m - m_new)
+        c_new = f_ * c + i_ * z_t
+        n_new = jnp.maximum(f_ * n + i_, jnp.exp(-m_new))
+        h_new = o_t * c_new / n_new
+        return (
+            {"c": c_new, "n": n_new, "h": h_new, "m": m_new},
+            h_new.reshape(B, d),
+        )
+
+    final, hs = jax.lax.scan(step, state, zifo.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2), final
+
+
+def slstm_block_full(p, x, cfg, bdef, positions, cache=None, cache_index=None):
+    B, S, d = x.shape
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    zifo = jnp.einsum("bsd,de->bse", xn, p["w_zifo"].astype(x.dtype)) + p["b_zifo"].astype(x.dtype)
+    state = cache if cache is not None else empty_slstm_state(cfg, B)
+    hs, final = _slstm_scan(p, zifo, cfg, state)
+    hn = rms_norm(hs.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", hn, p["w_out"].astype(x.dtype))
+    return out, (final if cache is not None else None)
+
+
+def slstm_block_decode(p, x, cfg, bdef, cache, index):
+    out, final = slstm_block_full(p, x, cfg, bdef, None, cache=cache, cache_index=index)
+    return out, final
+
+
+def empty_slstm_state(cfg, batch: int) -> dict:
+    H = cfg.n_heads
+    D = cfg.d_model // H
+    z = lambda: jnp.zeros((batch, H, D), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, H, D), -1e30, jnp.float32)}

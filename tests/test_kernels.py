@@ -1,0 +1,195 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(+ hypothesis property sweeps)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ops import crossentropy_op, flash_attention_op, ssd_op
+
+
+RNG = np.random.RandomState(0)
+
+
+def randn(*shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray((RNG.randn(*shape) * scale).astype(dtype))
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "B,Hq,Hkv,S,D,bq,bk",
+        [
+            (1, 2, 2, 64, 32, 16, 16),    # MHA
+            (2, 4, 2, 128, 32, 32, 32),   # GQA 2x
+            (1, 8, 1, 96, 16, 32, 32),    # MQA, non-multiple seq (pad path)
+            (1, 2, 2, 128, 128, 128, 64), # MXU-width head_dim
+        ],
+    )
+    def test_matches_ref(self, dtype, B, Hq, Hkv, S, D, bq, bk):
+        q = randn(B, Hq, S, D).astype(dtype)
+        k = randn(B, Hkv, S, D).astype(dtype)
+        v = randn(B, Hkv, S, D).astype(dtype)
+        out = flash_attention_op(q, k, v, causal=True, block_q=bq, block_k=bk)
+        expect = ref.attention_ref(q, k, v, causal=True)
+        tol = 1e-4 if dtype == np.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=tol, rtol=tol
+        )
+
+    @pytest.mark.parametrize("window", [8, 32, 100])
+    def test_sliding_window(self, window):
+        q, k, v = (randn(1, 2, 64, 16) for _ in range(3))
+        out = flash_attention_op(q, k, v, causal=True, window=window, block_q=16, block_k=16)
+        expect = ref.attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4)
+
+    @pytest.mark.parametrize("softcap", [10.0, 50.0])
+    def test_softcap(self, softcap):
+        q, k, v = (randn(1, 2, 64, 16, scale=3.0) for _ in range(3))
+        out = flash_attention_op(q, k, v, causal=True, softcap=softcap, block_q=32, block_k=32)
+        expect = ref.attention_ref(q, k, v, causal=True, softcap=softcap)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4)
+
+    def test_non_causal(self):
+        q, k, v = (randn(1, 2, 48, 16) for _ in range(3))
+        out = flash_attention_op(q, k, v, causal=False, block_q=16, block_k=16)
+        expect = ref.attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4)
+
+    @settings(deadline=None, max_examples=10)
+    @given(
+        S=st.integers(16, 80),
+        D=st.sampled_from([8, 16, 32]),
+        Hkv=st.sampled_from([1, 2]),
+        g=st.sampled_from([1, 2, 4]),
+    )
+    def test_property_sweep(self, S, D, Hkv, g):
+        rng = np.random.RandomState(S * 7 + D)
+        q = jnp.asarray(rng.randn(1, Hkv * g, S, D).astype(np.float32))
+        k = jnp.asarray(rng.randn(1, Hkv, S, D).astype(np.float32))
+        v = jnp.asarray(rng.randn(1, Hkv, S, D).astype(np.float32))
+        out = flash_attention_op(q, k, v, causal=True, block_q=16, block_k=16)
+        expect = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-4)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("S,P,N,chunk", [(64, 16, 8, 16), (128, 32, 16, 32), (32, 8, 8, 32)])
+    def test_matches_sequential_ref(self, S, P, N, chunk):
+        BH = 3
+        x = randn(BH, S, P)
+        dt = jnp.abs(randn(BH, S)) * 0.5
+        A = -jnp.abs(randn(BH))
+        Bm = randn(BH, S, N)
+        Cm = randn(BH, S, N)
+        y, fin = ssd_op(x, dt, A, Bm, Cm, chunk=chunk)
+        for i in range(BH):
+            yr, fr = ref.ssd_ref(
+                x[i : i + 1, :, None], dt[i : i + 1, :, None], A[i : i + 1],
+                Bm[i : i + 1, :, None], Cm[i : i + 1, :, None],
+            )
+            np.testing.assert_allclose(np.asarray(y[i]), np.asarray(yr[0, :, 0]), atol=2e-3)
+            np.testing.assert_allclose(np.asarray(fin[i]), np.asarray(fr[0, 0]), atol=2e-3)
+
+    def test_chunked_jnp_matches_kernel_path(self):
+        """models.mamba2.ssd_chunked (the lowered path) == Pallas kernel."""
+        from repro.models.mamba2 import ssd_chunked
+
+        B, S, H, P, N = 2, 64, 4, 16, 8
+        x = randn(B, S, H, P)
+        dt = jnp.abs(randn(B, S, H)) * 0.5
+        A = -jnp.abs(randn(H))
+        Bm = randn(B, S, 1, N)
+        Cm = randn(B, S, 1, N)
+        y_jnp, fin_jnp = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+        # fold to kernel layout [B*H, S, ...]
+        xk = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+        dtk = dt.transpose(0, 2, 1).reshape(B * H, S)
+        Ak = jnp.tile(A, B)
+        Bk = jnp.repeat(Bm.transpose(0, 2, 1, 3), H, axis=1).reshape(B * H, S, N)
+        Ck = jnp.repeat(Cm.transpose(0, 2, 1, 3), H, axis=1).reshape(B * H, S, N)
+        y_k, fin_k = ssd_op(xk, dtk, Ak, Bk, Ck, chunk=16)
+        np.testing.assert_allclose(
+            np.asarray(y_k.reshape(B, H, S, P).transpose(0, 2, 1, 3)),
+            np.asarray(y_jnp), atol=2e-3,
+        )
+        np.testing.assert_allclose(
+            np.asarray(fin_k.reshape(B, H, P, N)), np.asarray(fin_jnp), atol=2e-3
+        )
+
+
+class TestCrossEntropy:
+    @pytest.mark.parametrize("T,D,V,bt,bv", [(64, 32, 500, 32, 128), (100, 48, 1000, 32, 256), (16, 16, 50, 16, 64)])
+    def test_matches_ref(self, T, D, V, bt, bv):
+        x = randn(T, D)
+        w = randn(D, V, scale=0.05)
+        labels = jnp.asarray(RNG.randint(0, V, (T,)).astype(np.int32))
+        nll = crossentropy_op(x, w, labels, block_t=bt, block_v=bv)
+        expect = ref.crossentropy_ref(x, w, labels)
+        np.testing.assert_allclose(np.asarray(nll), np.asarray(expect), atol=1e-4, rtol=1e-4)
+
+    def test_softcap_and_bf16(self):
+        x = randn(32, 16).astype(jnp.bfloat16)
+        w = randn(16, 100, scale=0.2).astype(jnp.bfloat16)
+        labels = jnp.asarray(RNG.randint(0, 100, (32,)).astype(np.int32))
+        nll = crossentropy_op(x, w, labels, softcap=30.0, block_t=16, block_v=64)
+        expect = ref.crossentropy_ref(x, w, labels, softcap=30.0)
+        np.testing.assert_allclose(np.asarray(nll), np.asarray(expect), atol=5e-2, rtol=5e-2)
+
+    def test_matches_model_chunked_ce(self):
+        """kernels CE == models.layers.cross_entropy_chunked (train path)."""
+        from repro.models.layers import cross_entropy_chunked
+
+        B, S, D, V = 2, 32, 16, 128
+        x = randn(B, S, D)
+        w = randn(D, V, scale=0.1)
+        labels = jnp.asarray(RNG.randint(0, V, (B, S)).astype(np.int32))
+        mean_chunked = cross_entropy_chunked(x, w, labels, chunk=8)
+        nll = crossentropy_op(x.reshape(B * S, D), w, labels.reshape(-1), block_t=16, block_v=64)
+        np.testing.assert_allclose(float(mean_chunked), float(nll.mean()), atol=1e-4)
+
+
+class TestSLSTMKernel:
+    @pytest.mark.parametrize("B,S,H,D,bt", [(4, 24, 2, 8, 2), (2, 16, 4, 16, 2), (8, 8, 2, 8, 8)])
+    def test_matches_model_scan(self, B, S, H, D, bt):
+        from repro.kernels.slstm import slstm_scan
+        from repro.models.ssm_xlstm import _slstm_scan, empty_slstm_state
+
+        rng = np.random.RandomState(B * 31 + S)
+        d = H * D
+
+        class Cfg:
+            n_heads = H
+            d_model = d
+            norm_eps = 1e-6
+
+        u = rng.randn(B, S, 4 * d).astype(np.float32) * 0.5
+        R = rng.randn(4, H, D, D).astype(np.float32) * 0.2
+        p = {"r_zifo": jnp.asarray(R)}
+        hs_ref, fin_ref = _slstm_scan(p, jnp.asarray(u), Cfg, empty_slstm_state(Cfg, B))
+        uk = jnp.asarray(u).reshape(B, S, 4, H, D).transpose(1, 0, 2, 3, 4)
+        h_seq, (c, n, h, m) = slstm_scan(uk, jnp.asarray(R), batch_tile=bt, interpret=True)
+        hs_k = h_seq.transpose(1, 0, 2, 3).reshape(B, S, d)
+        np.testing.assert_allclose(np.asarray(hs_k), np.asarray(hs_ref), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(fin_ref["c"]), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(m), np.asarray(fin_ref["m"]), atol=1e-4)
+
+
+class TestMLSTMParallelVsRecurrent:
+    def test_chunked_parallel_matches_recurrence(self):
+        from repro.models.ssm_xlstm import mlstm_parallel
+
+        B, S, H, D = 1, 32, 2, 8
+        q = randn(B, S, H, D)
+        k = randn(B, S, H, D) / np.sqrt(D)
+        v = randn(B, S, H, D)
+        logi = randn(B, S, H, scale=0.5)
+        logf = jnp.asarray(np.log(RNG.uniform(0.8, 0.999, (B, S, H))).astype(np.float32))
+        h_par = mlstm_parallel(q, k, v, logi, logf, q_chunk=8)
+        h_rec = ref.mlstm_ref(q, k, v, logi, logf)
+        np.testing.assert_allclose(np.asarray(h_par), np.asarray(h_rec), atol=2e-3)

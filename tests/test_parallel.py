@@ -1,0 +1,181 @@
+"""Multi-device tests (subprocess with XLA_FLAGS device-count override):
+pjit train step on a host mesh, pipeline parallelism, gradient compression,
+trial-slice scheduling."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_sub(script: str, n_devices: int = 8, timeout: int = 420) -> str:
+    full = (
+        f"import os\n"
+        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={n_devices}'\n"
+        f"import sys\nsys.path.insert(0, {SRC!r})\n" + script
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", full], capture_output=True, text=True, timeout=timeout
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_sharded_train_step_runs_on_host_mesh():
+    out = run_sub(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.launch.mesh import make_host_mesh
+from repro.launch.specs import build_step
+from repro.models import init_model_params
+from repro.models.sharding import TRAIN_RULES, tree_shardings
+from repro.models import abstract_params, params_logical
+from repro.train import SyntheticLM
+from repro.train.train_loop import make_optimizer_for, TrainConfig
+
+cfg = configs.get_smoke_config("tinyllama-1.1b")
+mesh = make_host_mesh((2, 4), ("data", "model"))
+cell = build_step(cfg, "train_4k", mesh)  # shape only defines kind; args rebuilt below
+# real (small) inputs with the cell's shardings
+params = init_model_params(cfg, jax.random.PRNGKey(0))
+opt = make_optimizer_for(cfg, TrainConfig())
+opt_state = opt.init(params)
+data = SyntheticLM(cfg, batch=8, seq=32, seed=0)
+batch = data.next_batch()
+with mesh:
+    jitted = jax.jit(cell.step)
+    p, o, m = jitted(params, opt_state, jnp.int32(0), batch)
+    loss1 = float(m["loss"])
+    p, o, m = jitted(p, o, jnp.int32(1), batch)
+    loss2 = float(m["loss"])
+assert np.isfinite(loss1) and np.isfinite(loss2)
+assert loss2 < loss1 + 1.0
+print("PJIT_TRAIN_OK", loss1, loss2)
+"""
+    )
+    assert "PJIT_TRAIN_OK" in out
+
+
+def test_pipeline_parallel_matches_sequential():
+    out = run_sub(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from repro.train.pipeline_parallel import pipelined_apply
+mesh = jax.make_mesh((4,), ("stage",))
+S, M, mb, d = 4, 8, 2, 16
+key = jax.random.PRNGKey(0)
+params = jax.random.normal(key, (S, d, d)) * 0.3
+
+def stage_fn(w, x):
+    return jnp.tanh(x @ w)
+
+x = jax.random.normal(jax.random.PRNGKey(1), (M, mb, d))
+out = pipelined_apply(stage_fn, params, x, mesh)
+# sequential reference
+ref = x
+for i in range(S):
+    ref = stage_fn(params[i], ref)
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+# gradients flow through the pipeline
+def loss(p):
+    return jnp.sum(pipelined_apply(stage_fn, p, x, mesh) ** 2)
+g = jax.grad(loss)(params)
+assert float(jnp.abs(g).sum()) > 0
+print("PP_OK")
+"""
+    )
+    assert "PP_OK" in out
+
+
+def test_gradient_compression_psum():
+    out = run_sub(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from functools import partial
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.train.compression import compressed_psum, int8_compress, int8_decompress
+
+mesh = jax.make_mesh((8,), ("data",))
+x = jnp.arange(64.0).reshape(8, 8) / 64.0
+
+def body(xs):
+    return compressed_psum(xs[0], "data", codec="int8")
+
+out = shard_map(body, mesh=mesh, in_specs=(P("data"),), out_specs=P(), check_rep=False)(x)
+expect = x.sum(axis=0)
+err = float(jnp.abs(out - expect).max()) / float(jnp.abs(expect).max())
+assert err < 0.05, err  # int8 quantization error bound
+
+q, s = int8_compress(jnp.asarray([0.5, -1.0, 0.25]))
+back = int8_decompress(q, s)
+np.testing.assert_allclose(np.asarray(back), [0.5, -1.0, 0.25], atol=0.02)
+print("COMPRESS_OK", err)
+"""
+    )
+    assert "COMPRESS_OK" in out
+
+
+def test_trial_slice_scheduler_backfills():
+    out = run_sub(
+        """
+import jax
+import repro.core as hpo
+from repro.launch.mesh import make_host_mesh, slice_mesh
+from repro.tune.scheduler import TrialSliceScheduler
+
+mesh = make_host_mesh((4, 2), ("data", "model"))
+slices = slice_mesh(mesh, 4, axis="data")
+assert len(slices) == 4 and all(s.devices.size == 2 for s in slices)
+
+study = hpo.create_study(sampler=hpo.RandomSampler(seed=0),
+                         pruner=hpo.SuccessiveHalvingPruner(1, 2, 0))
+
+import time
+
+def run_trial(trial, mesh):
+    x = trial.suggest_float("x", 0, 1)
+    for step in (1, 2, 4):
+        time.sleep(0.02)  # simulated train epochs so slices overlap
+        trial.report(x + step * 0.001, step)
+        if trial.should_prune():
+            raise hpo.TrialPruned()
+    return x
+
+sched = TrialSliceScheduler(study, slices, run_trial)
+sched.run(n_trials=16)
+trials = study.trials
+assert len(trials) == 16
+done = [t for t in trials if t.state.name == "COMPLETE"]
+pruned = [t for t in trials if t.state.name == "PRUNED"]
+assert len(done) >= 1 and len(pruned) >= 1
+slices_used = {e[1] for e in sched.events}
+assert len(slices_used) >= 2, slices_used  # concurrent slices got work (backfill)
+print("SCHED_OK", len(done), len(pruned))
+"""
+    )
+    assert "SCHED_OK" in out
+
+
+def test_dryrun_single_cell_multi_pod():
+    """End-to-end mini dry-run: the real dryrun module, 512 fake devices,
+    multi-pod mesh, smallest arch cell."""
+    out = run_sub(
+        """
+import sys
+from repro.launch.dryrun import run_cell
+rec = run_cell("smollm-135m", "decode_32k", multi_pod=True, out_dir="/tmp/dryrun_test")
+assert rec["n_chips"] == 512
+assert rec["memory"]["per_device_total"] < 16 * 2**30
+assert rec["hlo_stats"]["flops"] > 0
+print("DRYRUN_OK")
+""",
+        n_devices=512,
+        timeout=560,
+    )
+    assert "DRYRUN_OK" in out

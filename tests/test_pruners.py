@@ -1,0 +1,209 @@
+"""Pruner semantics — including exact Algorithm 1 behaviour from the paper."""
+
+import math
+
+import pytest
+
+import repro.core as hpo
+from repro.core.frozen import FrozenTrial, TrialState
+
+
+def _study_with(pruner=None, direction="minimize"):
+    return hpo.create_study(
+        sampler=hpo.RandomSampler(seed=0), pruner=pruner, direction=direction
+    )
+
+
+def _add_trial(study, ivs, state=TrialState.COMPLETE, value=None):
+    tid = study._storage.create_new_trial(study._study_id)
+    for s, v in ivs.items():
+        study._storage.set_trial_intermediate_value(tid, s, v)
+    if state.is_finished():
+        study._storage.set_trial_state_values(
+            tid, state, [value if value is not None else list(ivs.values())[-1]]
+        )
+    return tid
+
+
+class TestSuccessiveHalving:
+    """Pins down paper Algorithm 1 (r=min_resource, eta, s)."""
+
+    def test_only_acts_at_rung_boundaries(self):
+        # r=1, eta=2, s=0: rungs at steps 1,2,4,8,...
+        study = _study_with(hpo.SuccessiveHalvingPruner(1, 2, 0))
+        _add_trial(study, {1: 0.0, 2: 0.0, 3: 0.0, 4: 0.0})
+        t = study.ask()
+        t.report(1.0, 3)  # step 3 is not a rung boundary -> never prune
+        assert not t.should_prune()
+        t.report(1.0, 4)  # rung boundary, worse than peer -> prune
+        assert t.should_prune()
+
+    def test_min_resource_gates_first_rung(self):
+        study = _study_with(hpo.SuccessiveHalvingPruner(min_resource=4, reduction_factor=2))
+        _add_trial(study, {4: 0.0})
+        t = study.ask()
+        t.report(5.0, 1)
+        assert not t.should_prune()  # below min resource
+        t.report(5.0, 4)
+        assert t.should_prune()
+
+    def test_top_1_over_eta_survives(self):
+        # eta=4: with 8 peers at a rung, top-2 survive
+        study = _study_with(hpo.SuccessiveHalvingPruner(1, 4, 0))
+        for v in range(8):
+            _add_trial(study, {1: float(v)})
+        good = study.ask()
+        good.report(0.5, 1)  # rank 1 of 9
+        assert not good.should_prune()
+        bad = study.ask()
+        bad.report(7.5, 1)  # rank last
+        assert bad.should_prune()
+
+    def test_single_trial_promoted_when_fewer_than_eta(self):
+        # lines 8-10: top_k empty -> best single trial survives
+        study = _study_with(hpo.SuccessiveHalvingPruner(1, 4, 0))
+        t = study.ask()
+        t.report(123.0, 1)
+        assert not t.should_prune()  # alone at the rung: promoted
+
+    def test_min_early_stopping_rate_delays_pruning(self):
+        # s=2, r=1, eta=2: first rung at step r*eta^s = 4
+        study = _study_with(hpo.SuccessiveHalvingPruner(1, 2, 2))
+        _add_trial(study, {1: 0.0, 2: 0.0, 4: 0.0})
+        t = study.ask()
+        t.report(9.0, 1)
+        assert not t.should_prune()
+        t.report(9.0, 2)
+        assert not t.should_prune()
+        t.report(9.0, 4)
+        assert t.should_prune()
+
+    def test_maximize_direction(self):
+        study = _study_with(hpo.SuccessiveHalvingPruner(1, 2, 0), direction="maximize")
+        for v in range(4):
+            _add_trial(study, {1: float(v)})
+        t = study.ask()
+        t.report(5.0, 1)  # best
+        assert not t.should_prune()
+        t2 = study.ask()
+        t2.report(-1.0, 1)  # worst
+        assert t2.should_prune()
+
+    def test_nan_is_pruned(self):
+        study = _study_with(hpo.SuccessiveHalvingPruner(1, 2, 0))
+        _add_trial(study, {1: 0.0})
+        t = study.ask()
+        t.report(float("nan"), 1)
+        assert t.should_prune()
+
+    def test_asynchronous_no_waiting(self):
+        """ASHA property: decision uses whatever peers exist *now* — a lone
+        leader is promoted immediately even though future trials might beat it
+        (no rung barrier; paper §3.2)."""
+        study = _study_with(hpo.SuccessiveHalvingPruner(1, 2, 0))
+        t = study.ask()
+        for step in (1, 2, 4, 8):
+            t.report(1.0, step)
+            assert not t.should_prune()  # never blocks, never killed while best
+
+
+class TestMedianPruner:
+    def test_median_prunes_below_median(self):
+        study = _study_with(hpo.MedianPruner(n_startup_trials=2, n_warmup_steps=0))
+        for v in (1.0, 2.0, 3.0):
+            _add_trial(study, {0: v, 1: v})
+        t = study.ask()
+        t.report(10.0, 1)
+        assert t.should_prune()
+        t2 = study.ask()
+        t2.report(0.5, 1)
+        assert not t2.should_prune()
+
+    def test_startup_trials_protect(self):
+        study = _study_with(hpo.MedianPruner(n_startup_trials=5))
+        _add_trial(study, {0: 0.0})
+        t = study.ask()
+        t.report(99.0, 0)
+        assert not t.should_prune()  # only 1 completed peer < 5
+
+    def test_warmup_steps(self):
+        study = _study_with(hpo.MedianPruner(n_startup_trials=1, n_warmup_steps=5))
+        for v in (0.0, 0.1):
+            _add_trial(study, {6: v})
+        t = study.ask()
+        t.report(9.0, 3)
+        assert not t.should_prune()
+        t.report(9.0, 6)
+        assert t.should_prune()
+
+
+class TestOtherPruners:
+    def test_nop(self):
+        study = _study_with(hpo.NopPruner())
+        t = study.ask()
+        t.report(1e9, 1)
+        assert not t.should_prune()
+
+    def test_threshold(self):
+        study = _study_with(hpo.ThresholdPruner(upper=10.0))
+        t = study.ask()
+        t.report(5.0, 1)
+        assert not t.should_prune()
+        t.report(50.0, 2)
+        assert t.should_prune()
+        t2 = study.ask()
+        t2.report(float("inf"), 1)
+        assert t2.should_prune()
+
+    def test_patient_wrapper(self):
+        study = _study_with(hpo.PatientPruner(None, patience=2))
+        t = study.ask()
+        t.report(5.0, 0)
+        t.report(4.0, 1)
+        t.report(3.0, 2)
+        assert not t.should_prune()  # improving
+        t.report(3.0, 3)
+        t.report(3.1, 4)
+        t.report(3.2, 5)
+        assert t.should_prune()  # no improvement for `patience` reports
+
+    def test_hyperband_brackets_deterministic(self):
+        pruner = hpo.HyperbandPruner(min_resource=1, max_resource=16, reduction_factor=2)
+        assert pruner.n_brackets >= 3
+        t = FrozenTrial(number=7, state=TrialState.RUNNING)
+        assert pruner.bracket_of(t) == pruner.bracket_of(t)
+
+    def test_hyperband_prunes_within_bracket(self):
+        pruner = hpo.HyperbandPruner(min_resource=1, max_resource=8, reduction_factor=2)
+        study = _study_with(pruner)
+        # fill every bracket with good peers at every rung
+        for _ in range(40):
+            _add_trial(study, {1: 0.0, 2: 0.0, 4: 0.0, 8: 0.0})
+        t = study.ask()
+        pruned = False
+        for step in (1, 2, 4, 8):  # a bad trial must die at its bracket's first rung
+            t.report(9.0, step)
+            if t.should_prune():
+                pruned = True
+                break
+        assert pruned
+
+
+def test_pruned_trials_recorded_with_state():
+    study = _study_with(hpo.SuccessiveHalvingPruner(1, 2, 0))
+
+    def obj(trial):
+        x = trial.suggest_float("x", 0, 1)
+        for step in range(1, 17):
+            trial.report(x + step * 0.01, step)
+            if trial.should_prune():
+                raise hpo.TrialPruned()
+        return x
+
+    study.optimize(obj, n_trials=30)
+    states = [t.state for t in study.trials]
+    assert states.count(TrialState.PRUNED) > 5
+    assert states.count(TrialState.COMPLETE) >= 1
+    # pruned trials keep their last intermediate value as final value
+    pruned = [t for t in study.trials if t.state == TrialState.PRUNED]
+    assert all(t.values is not None for t in pruned)

@@ -1,0 +1,137 @@
+"""Sampler behaviour: convergence, determinism, relational inference."""
+
+import numpy as np
+import pytest
+
+import repro.core as hpo
+from repro.core.search_space import intersection_search_space
+
+
+def sphere(trial):
+    return sum(trial.suggest_float(f"x{i}", -3, 3) ** 2 for i in range(3))
+
+
+def rosenbrock(trial):
+    x = trial.suggest_float("x", -2, 2)
+    y = trial.suggest_float("y", -2, 2)
+    return (1 - x) ** 2 + 100 * (y - x * x) ** 2
+
+
+class TestTPE:
+    def test_beats_random_on_sphere(self):
+        def best_after(sampler, n=60):
+            s = hpo.create_study(sampler=sampler)
+            s.optimize(sphere, n_trials=n)
+            return s.best_value
+
+        tpe = np.median([best_after(hpo.TPESampler(seed=i)) for i in range(5)])
+        rnd = np.median([best_after(hpo.RandomSampler(seed=i)) for i in range(5)])
+        assert tpe < rnd
+
+    def test_seed_determinism(self):
+        def run(seed):
+            s = hpo.create_study(sampler=hpo.TPESampler(seed=seed))
+            s.optimize(sphere, n_trials=25)
+            return [t.values[0] for t in s.trials]
+
+        assert run(7) == run(7)
+        assert run(7) != run(8)
+
+    def test_categorical_and_conditional_space(self):
+        s = hpo.create_study(sampler=hpo.TPESampler(seed=0, n_startup_trials=5))
+
+        def obj(trial):
+            kind = trial.suggest_categorical("kind", ["a", "b"])
+            if kind == "a":
+                return trial.suggest_float("xa", 0, 1)
+            return trial.suggest_float("xb", 5, 6)
+
+        s.optimize(obj, n_trials=40)
+        # TPE should learn branch 'a' is better
+        kinds = [t.params["kind"] for t in s.trials[-10:]]
+        assert kinds.count("a") >= 6
+        assert s.best_value < 0.6
+
+    def test_log_domain(self):
+        s = hpo.create_study(sampler=hpo.TPESampler(seed=3, n_startup_trials=5))
+        s.optimize(lambda t: abs(np.log10(t.suggest_float("lr", 1e-6, 1.0, log=True)) + 3), n_trials=50)
+        assert s.best_value < 1.0  # found lr near 1e-3 within an order
+
+
+class TestCMAES:
+    def test_converges_on_rosenbrock(self):
+        s = hpo.create_study(
+            sampler=hpo.CmaEsSampler(warmup_trials=10, seed=0)
+        )
+        s.optimize(rosenbrock, n_trials=150)
+        assert s.best_value < 1.0
+
+    def test_mixture_tpe_cmaes(self):
+        # the paper's §5.1 configuration
+        s = hpo.create_study(sampler=hpo.make_sampler("tpe+cmaes", seed=0))
+        s.optimize(rosenbrock, n_trials=120)
+        assert s.best_value < 2.0
+
+    def test_falls_back_to_independent_for_conditionals(self):
+        s = hpo.create_study(sampler=hpo.CmaEsSampler(warmup_trials=5, seed=0))
+
+        def obj(trial):
+            x = trial.suggest_float("x", -1, 1)
+            y = trial.suggest_float("y", -1, 1)
+            if trial.number % 2:  # "z" not in every trial -> outside CMA space
+                z = trial.suggest_float("z", -1, 1)
+                return x * x + y * y + z * z
+            return x * x + y * y
+
+        s.optimize(obj, n_trials=40)
+        assert len(s.trials) == 40
+
+
+class TestGP:
+    def test_gp_improves_on_random(self):
+        s = hpo.create_study(sampler=hpo.GPSampler(seed=0, n_startup_trials=8))
+        s.optimize(sphere, n_trials=40)
+        r = hpo.create_study(sampler=hpo.RandomSampler(seed=0))
+        r.optimize(sphere, n_trials=40)
+        assert s.best_value < r.best_value * 1.5  # GP at least competitive
+
+
+class TestGrid:
+    def test_grid_covers_all_cells(self):
+        grid = {"a": [1, 2, 3], "b": [10.0, 20.0]}
+        s = hpo.create_study(sampler=hpo.GridSampler(grid, seed=0))
+
+        def obj(trial):
+            a = trial.suggest_int("a", 1, 3)
+            b = trial.suggest_float("b", 10.0, 20.0)
+            return a * b
+
+        s.optimize(obj, n_trials=6)
+        seen = {(t.params["a"], t.params["b"]) for t in s.trials}
+        assert len(seen) == 6
+
+
+class TestSearchSpaceInference:
+    def test_intersection_space(self):
+        s = hpo.create_study(sampler=hpo.RandomSampler(seed=0))
+
+        def obj(trial):
+            x = trial.suggest_float("x", 0, 1)
+            if trial.number % 2 == 0:
+                trial.suggest_float("sometimes", 0, 1)
+            return x
+
+        s.optimize(obj, n_trials=6)
+        space = intersection_search_space(s.get_trials(deepcopy=False))
+        assert set(space) == {"x"}  # only the always-present param survives
+
+    def test_enqueue_and_fixed_trial(self):
+        s = hpo.create_study(sampler=hpo.RandomSampler(seed=0))
+        s.enqueue_trial({"x": 0.123})
+        s.optimize(lambda t: t.suggest_float("x", 0, 1), n_trials=1)
+        assert abs(s.trials[0].values[0] - 0.123) < 1e-12
+
+        ft = hpo.FixedTrial({"x": 0.5})
+        assert abs(ft.suggest_float("x", 0, 1) - 0.5) < 1e-12
+        with pytest.raises(ValueError):
+            ft.suggest_float("missing", 0, 1)

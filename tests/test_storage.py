@@ -1,0 +1,166 @@
+"""Storage backends: API contract, concurrency, crash recovery."""
+
+import os
+import threading
+
+import pytest
+
+import repro.core as hpo
+from repro.core.distributions import FloatDistribution
+from repro.core.frozen import StudyDirection, TrialState
+from repro.core.storage import InMemoryStorage, JournalStorage, SQLiteStorage, get_storage
+
+BACKENDS = ["memory", "sqlite", "journal"]
+
+
+def make_storage(kind, tmp_path):
+    if kind == "memory":
+        return InMemoryStorage()
+    if kind == "sqlite":
+        return SQLiteStorage(str(tmp_path / f"s.db"))
+    return JournalStorage(str(tmp_path / "s.journal"))
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+class TestContract:
+    def test_study_lifecycle(self, kind, tmp_path):
+        st = make_storage(kind, tmp_path)
+        sid = st.create_new_study([StudyDirection.MINIMIZE], "s1")
+        assert st.get_study_id_from_name("s1") == sid
+        assert st.get_study_name_from_id(sid) == "s1"
+        assert st.get_study_directions(sid) == [StudyDirection.MINIMIZE]
+        with pytest.raises(hpo.DuplicatedStudyError):
+            st.create_new_study([StudyDirection.MINIMIZE], "s1")
+        st.set_study_user_attr(sid, "k", {"nested": [1, 2]})
+        assert st.get_study_user_attrs(sid)["k"] == {"nested": [1, 2]}
+        st.delete_study(sid)
+        with pytest.raises(KeyError):
+            st.get_study_id_from_name("s1")
+
+    def test_trial_lifecycle(self, kind, tmp_path):
+        st = make_storage(kind, tmp_path)
+        sid = st.create_new_study([StudyDirection.MINIMIZE], "s")
+        tid = st.create_new_trial(sid)
+        st.set_trial_param(tid, "x", 0.5, FloatDistribution(0, 1))
+        st.set_trial_intermediate_value(tid, 1, 10.0)
+        st.set_trial_intermediate_value(tid, 1, 9.0)  # overwrite
+        st.set_trial_user_attr(tid, "note", "hi")
+        assert st.set_trial_state_values(tid, TrialState.COMPLETE, [1.5])
+        t = st.get_trial(tid)
+        assert t.params["x"] == 0.5
+        assert t.intermediate_values == {1: 9.0}
+        assert t.user_attrs["note"] == "hi"
+        assert t.values == [1.5]
+        assert t.state == TrialState.COMPLETE
+        assert t.datetime_complete is not None
+        # finished trials reject writes
+        with pytest.raises(RuntimeError):
+            st.set_trial_param(tid, "y", 0.1, FloatDistribution(0, 1))
+        with pytest.raises(RuntimeError):
+            st.set_trial_intermediate_value(tid, 2, 0.0)
+
+    def test_trial_numbers_dense(self, kind, tmp_path):
+        st = make_storage(kind, tmp_path)
+        sid = st.create_new_study([StudyDirection.MINIMIZE], "s")
+        tids = [st.create_new_trial(sid) for _ in range(10)]
+        numbers = [st.get_trial(t).number for t in tids]
+        assert numbers == list(range(10))
+
+    def test_waiting_claim_race(self, kind, tmp_path):
+        st = make_storage(kind, tmp_path)
+        sid = st.create_new_study([StudyDirection.MINIMIZE], "s")
+        from repro.core.frozen import FrozenTrial
+
+        tid = st.create_new_trial(
+            sid, template_trial=FrozenTrial(number=-1, state=TrialState.WAITING)
+        )
+        assert st.set_trial_state_values(tid, TrialState.RUNNING)
+        assert not st.set_trial_state_values(tid, TrialState.RUNNING)  # second claim loses
+
+    def test_threaded_writers(self, kind, tmp_path):
+        st = make_storage(kind, tmp_path)
+        sid = st.create_new_study([StudyDirection.MINIMIZE], "s")
+        errs = []
+
+        def worker(i):
+            try:
+                for _ in range(10):
+                    tid = st.create_new_trial(sid)
+                    st.set_trial_param(tid, "x", 0.1, FloatDistribution(0, 1))
+                    st.set_trial_state_values(tid, TrialState.COMPLETE, [float(i)])
+            except Exception as e:  # pragma: no cover
+                errs.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs
+        trials = st.get_all_trials(sid)
+        assert len(trials) == 40
+        assert sorted(t.number for t in trials) == list(range(40))
+
+
+class TestJournalSpecifics:
+    def test_two_handles_share_state(self, tmp_path):
+        path = str(tmp_path / "j.journal")
+        a = JournalStorage(path)
+        b = JournalStorage(path)
+        sid = a.create_new_study([StudyDirection.MINIMIZE], "s")
+        tid = a.create_new_trial(sid)
+        a.set_trial_state_values(tid, TrialState.COMPLETE, [3.0])
+        # b sees a's writes after sync
+        assert b.get_trial(tid).values == [3.0]
+        # and b can extend
+        tid2 = b.create_new_trial(sid)
+        assert a.get_trial(tid2).number == 1
+
+    def test_torn_tail_line_ignored(self, tmp_path):
+        path = str(tmp_path / "j.journal")
+        a = JournalStorage(path)
+        sid = a.create_new_study([StudyDirection.MINIMIZE], "s")
+        a.create_new_trial(sid)
+        with open(path, "a") as f:
+            f.write('{"op": "create_trial", "trial_id": 99')  # torn write, no newline
+        b = JournalStorage(path)
+        assert len(b.get_all_trials(sid)) == 1  # torn line invisible
+
+    def test_replay_after_restart(self, tmp_path):
+        path = str(tmp_path / "j.journal")
+        a = JournalStorage(path)
+        sid = a.create_new_study([StudyDirection.MAXIMIZE], "s")
+        for i in range(5):
+            tid = a.create_new_trial(sid)
+            a.set_trial_state_values(tid, TrialState.COMPLETE, [float(i)])
+        del a
+        b = JournalStorage(path)
+        sid2 = b.get_study_id_from_name("s")
+        assert sid2 == sid
+        assert len(b.get_all_trials(sid)) == 5
+
+
+class TestHeartbeat:
+    @pytest.mark.parametrize("kind", BACKENDS)
+    def test_stale_detection_and_failover(self, kind, tmp_path):
+        import time
+
+        st = make_storage(kind, tmp_path)
+        sid = st.create_new_study([StudyDirection.MINIMIZE], "s")
+        tid = st.create_new_trial(sid)
+        st.record_heartbeat(tid)
+        time.sleep(0.03)
+        assert st.get_stale_trial_ids(sid, grace_seconds=0.01) == [tid]
+        assert st.get_stale_trial_ids(sid, grace_seconds=60.0) == []
+        failed = st.fail_stale_trials(sid, grace_seconds=0.01)
+        assert failed == [tid]
+        assert st.get_trial(tid).state == TrialState.FAIL
+
+
+def test_get_storage_url_routing(tmp_path):
+    assert isinstance(get_storage(None), InMemoryStorage)
+    assert isinstance(get_storage(f"sqlite:///{tmp_path}/a.db"), SQLiteStorage)
+    assert isinstance(get_storage(f"journal://{tmp_path}/a.journal"), JournalStorage)
+    assert isinstance(get_storage(str(tmp_path / "b.db")), SQLiteStorage)
+    with pytest.raises(ValueError):
+        get_storage("mysterious://x")

@@ -1,0 +1,72 @@
+"""End-to-end HPO-over-training integration (the paper's full loop):
+define-by-run model/optimizer spaces, ASHA pruning of real JAX train runs,
+dashboard artifact, deploy-best-with-FixedTrial."""
+
+import numpy as np
+import pytest
+
+import repro.core as hpo
+from repro.core.frozen import TrialState
+from repro.tune import LMTuneSpec, make_lm_objective
+from repro.tune.objective import suggest_model_config, suggest_train_config
+
+SPEC = LMTuneSpec(
+    vocab=64, seq=32, batch=4, total_steps=12, eval_every=3,
+    max_layers=2, max_width=64,
+)
+
+
+def test_define_by_run_space_is_conditional():
+    """Different families produce different parameter sets (paper Fig. 3)."""
+    seen_params = {}
+    study = hpo.create_study(sampler=hpo.RandomSampler(seed=0))
+    for _ in range(12):
+        t = study.ask()
+        cfg = suggest_model_config(t, SPEC)
+        seen_params[cfg.name] = set(t.params)
+        study.tell(t, 0.0)
+    families = {t.params["family"] for t in study.trials}
+    assert len(families) >= 2
+    # moe trials carry expert params, dense trials don't
+    moe_sets = [v for k, v in seen_params.items() if "moe" in k]
+    dense_sets = [v for k, v in seen_params.items() if "dense" in k]
+    if moe_sets and dense_sets:
+        assert any("n_experts" in s for s in moe_sets)
+        assert all("n_experts" not in s for s in dense_sets)
+
+
+def test_full_study_with_pruning_and_deploy(tmp_path):
+    study = hpo.create_study(
+        sampler=hpo.TPESampler(seed=0, n_startup_trials=3),
+        pruner=hpo.SuccessiveHalvingPruner(min_resource=3, reduction_factor=2),
+    )
+    objective = make_lm_objective(SPEC)
+    study.optimize(objective, n_trials=8, catch=(Exception,))
+
+    states = [t.state for t in study.trials]
+    assert states.count(TrialState.COMPLETE) >= 1
+    assert np.isfinite(study.best_value)
+
+    # every completed trial reported intermediate values at eval steps
+    for t in study.trials:
+        if t.state == TrialState.COMPLETE:
+            assert len(t.intermediate_values) >= 2
+
+    # deploy: re-run the best config through the SAME objective via FixedTrial
+    best = study.best_trial
+    value = objective(hpo.FixedTrial(best.params))
+    assert np.isfinite(value)
+
+    # dashboard renders with learning curves
+    html = hpo.render_dashboard(study)
+    assert "Learning curves" in html
+    (tmp_path / "dash.html").write_text(html)
+
+
+def test_train_config_space(tmp_path):
+    study = hpo.create_study(sampler=hpo.RandomSampler(seed=1))
+    t = study.ask()
+    tcfg = suggest_train_config(t, SPEC)
+    assert 1e-4 <= tcfg.lr <= 1e-1
+    assert 0 <= tcfg.warmup_steps <= 20
+    assert tcfg.total_steps == SPEC.total_steps
