@@ -1,5 +1,7 @@
 """Storage backend throughput (beyond-paper; Table-2 'lightweight' claim made
-quantitative): ops/sec per backend for the three dominant operations."""
+quantitative): ops/sec per backend for the three dominant operations, plus a
+remote-vs-sqlite-vs-cached comparison of the ``get_all_trials``-dominated
+``ask`` path (the per-suggest full-history read every sampler performs)."""
 
 from __future__ import annotations
 
@@ -9,11 +11,11 @@ import repro.core as hpo
 from repro.core.distributions import FloatDistribution
 from repro.core.frozen import StudyDirection, TrialState
 
-__all__ = ["run"]
+__all__ = ["run", "ask_latency"]
 
 
-def _bench(storage, n_trials: int = 200):
-    sid = storage.create_new_study([StudyDirection.MINIMIZE], "bench")
+def _bench(storage, n_trials: int = 200, study_name: str = "bench"):
+    sid = storage.create_new_study([StudyDirection.MINIMIZE], study_name)
     t0 = time.time()
     tids = [storage.create_new_trial(sid) for _ in range(n_trials)]
     t_create = time.time() - t0
@@ -37,6 +39,57 @@ def _bench(storage, n_trials: int = 200):
     }
 
 
+def ask_latency(n_trials: int = 1000, n_asks: int = 50, tmpdir: str = "/tmp/repro_ask_bench",
+                verbose: bool = True):
+    """Time the read that dominates ``ask`` — one ``get_all_trials`` per
+    suggest — at ``n_trials`` completed trials, for the uncached remote path
+    vs the :class:`CachedStorage` proxy over the same server.
+
+    Returns per-ask latencies and the cached-path speedup (acceptance target:
+    >= 2x at 1000 trials).
+    """
+    import os
+    import shutil
+
+    shutil.rmtree(tmpdir, ignore_errors=True)
+    os.makedirs(tmpdir, exist_ok=True)
+
+    backend = hpo.SQLiteStorage(f"{tmpdir}/ask.db")
+    with hpo.StorageServer(backend) as server:
+        seed = hpo.RemoteStorage(server.url)
+        sid = seed.create_new_study([StudyDirection.MINIMIZE], "ask-bench")
+        for i in range(n_trials):
+            tid = seed.create_new_trial(sid)
+            seed.set_trial_param(tid, "x", (i % 97) / 97.0, FloatDistribution(0, 1))
+            seed.set_trial_state_values(tid, TrialState.COMPLETE, [float(i % 13)])
+
+        def time_asks(storage) -> float:
+            storage.get_all_trials(sid, deepcopy=False)  # warm up / fill cache
+            t0 = time.time()
+            for _ in range(n_asks):
+                trials = storage.get_all_trials(sid, deepcopy=False)
+            assert len(trials) == n_trials
+            return (time.time() - t0) / n_asks
+
+        remote_s = time_asks(hpo.RemoteStorage(server.url))
+        cached_s = time_asks(hpo.CachedStorage(hpo.RemoteStorage(server.url)))
+
+    speedup = remote_s / max(cached_s, 1e-9)
+    row = {
+        "n_trials": n_trials,
+        "remote_ask_ms": remote_s * 1e3,
+        "cached_ask_ms": cached_s * 1e3,
+        "cached_speedup": speedup,
+    }
+    if verbose:
+        print(
+            f"[ask@{n_trials}] remote={row['remote_ask_ms']:8.2f}ms "
+            f"cached={row['cached_ask_ms']:8.3f}ms speedup={speedup:6.1f}x",
+            flush=True,
+        )
+    return row
+
+
 def run(tmpdir: str = "/tmp/repro_storage_bench", n_trials: int = 200, verbose: bool = True):
     import os
     import shutil
@@ -44,18 +97,28 @@ def run(tmpdir: str = "/tmp/repro_storage_bench", n_trials: int = 200, verbose: 
     shutil.rmtree(tmpdir, ignore_errors=True)
     os.makedirs(tmpdir, exist_ok=True)
     rows = {}
-    backends = {
-        "inmemory": hpo.InMemoryStorage(),
-        "sqlite": hpo.SQLiteStorage(f"{tmpdir}/b.db"),
-        "journal": hpo.JournalStorage(f"{tmpdir}/b.journal"),
-    }
-    for name, st in backends.items():
-        rows[name] = _bench(st, n_trials)
-        if verbose:
-            r = rows[name]
-            print(
-                f"[storage] {name:9s} create={r['create_per_sec']:9.0f}/s "
-                f"write={r['write_per_sec']:9.0f}/s read={r['full_read_per_sec']:7.1f}/s",
-                flush=True,
-            )
+
+    server = hpo.StorageServer(hpo.SQLiteStorage(f"{tmpdir}/served.db")).start()
+    try:
+        backends = {
+            "inmemory": hpo.InMemoryStorage(),
+            "sqlite": hpo.SQLiteStorage(f"{tmpdir}/b.db"),
+            "journal": hpo.JournalStorage(f"{tmpdir}/b.journal"),
+            "remote": hpo.RemoteStorage(server.url),
+            "remote+cache": hpo.CachedStorage(hpo.RemoteStorage(server.url)),
+        }
+        for name, st in backends.items():
+            # remote backends share one server -> unique study names
+            rows[name] = _bench(st, n_trials, study_name=f"bench-{name}")
+            if verbose:
+                r = rows[name]
+                print(
+                    f"[storage] {name:12s} create={r['create_per_sec']:9.0f}/s "
+                    f"write={r['write_per_sec']:9.0f}/s read={r['full_read_per_sec']:7.1f}/s",
+                    flush=True,
+                )
+    finally:
+        server.stop()
+
+    rows["ask_latency"] = ask_latency(verbose=verbose)
     return rows

@@ -5,6 +5,17 @@ times (or with --workers N to spawn locally) against a shared storage URL.
     PYTHONPATH=src python examples/distributed_study.py --storage sqlite:///example.db
     # or journal storage for NFS-scale fleets:
     PYTHONPATH=src python examples/distributed_study.py --storage journal:///shared/example.journal
+
+No shared filesystem?  Serve the storage over TCP instead (--serve wraps the
+backend in a StorageServer and hands workers its remote:// URL), or point
+workers on other machines at an already-running server:
+
+    # host A: serve a local sqlite file to the fleet
+    PYTHONPATH=src python -m repro.core.storage.server sqlite:///example.db --port 9000
+    # hosts B..N:
+    PYTHONPATH=src python examples/distributed_study.py --storage remote://hostA:9000
+    # or all-in-one on a single box:
+    PYTHONPATH=src python examples/distributed_study.py --workers 4 --serve
 """
 
 import argparse
@@ -35,11 +46,22 @@ def main():
     ap.add_argument("--trials", type=int, default=20)
     ap.add_argument("--workers", type=int, default=0,
                     help="spawn N local worker processes (0 = run inline)")
+    ap.add_argument("--serve", action="store_true",
+                    help="serve --storage over remote:// and hand workers the URL")
     args = ap.parse_args()
+
+    # inline run with --serve: host the backend ourselves so workers on other
+    # machines can join this same study via the printed remote:// URL
+    server = None
+    storage = args.storage
+    if args.serve and args.workers == 0:
+        server = hpo.StorageServer(hpo.get_storage(args.storage)).start()
+        storage = server.url
+        print(f"serving {args.storage} at {server.url} — point other workers here")
 
     study = hpo.create_study(
         study_name=args.study,
-        storage=args.storage,
+        storage=storage,
         sampler=hpo.TPESampler(),
         pruner=hpo.SuccessiveHalvingPruner(),
         load_if_exists=True,  # elastic: join an existing study at any time
@@ -50,6 +72,7 @@ def main():
             args.workers, args.storage, args.study, objective,
             n_trials_per_worker=args.trials // args.workers,
             pruner_factory=lambda: hpo.SuccessiveHalvingPruner(),
+            serve_storage=args.serve,
         )
         print(f"{args.workers} workers finished in {dur:.2f}s")
     else:
@@ -59,6 +82,8 @@ def main():
     study.fail_stale_trials()
     print(f"total trials in study: {len(study.trials)}; best: {study.best_value:.5f} "
           f"at {study.best_params}")
+    if server is not None:
+        server.stop()
 
 
 if __name__ == "__main__":

@@ -53,9 +53,12 @@ from .samplers import (
 from .search_space import IntersectionSearchSpace, intersection_search_space
 from .storage import (
     BaseStorage,
+    CachedStorage,
     InMemoryStorage,
     JournalStorage,
+    RemoteStorage,
     SQLiteStorage,
+    StorageServer,
     get_storage,
 )
 from .study import Study, create_study, delete_study, load_study
@@ -74,7 +77,8 @@ __all__ = [
     "BasePruner", "NopPruner", "SuccessiveHalvingPruner", "MedianPruner",
     "PercentilePruner", "HyperbandPruner", "ThresholdPruner", "PatientPruner", "make_pruner",
     # storage
-    "BaseStorage", "InMemoryStorage", "SQLiteStorage", "JournalStorage", "get_storage",
+    "BaseStorage", "InMemoryStorage", "SQLiteStorage", "JournalStorage",
+    "RemoteStorage", "CachedStorage", "StorageServer", "get_storage",
     # distributed / misc
     "run_workers", "worker_main", "RetryFailedTrialCallback",
     "TrialPruned", "DuplicatedStudyError", "StorageInternalError",

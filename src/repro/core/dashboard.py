@@ -224,3 +224,39 @@ def save_dashboard(study: "Study", path: str) -> str:
     with open(path, "w") as f:
         f.write(htm)
     return path
+
+
+def main(argv: "list[str] | None" = None) -> None:
+    """Render a dashboard for any storage URL — including a *live* remote
+    study being optimized by a worker fleet:
+
+        python -m repro.core.dashboard remote://host:9000 my-study out.html --watch 10
+    """
+    import argparse
+    import time
+
+    from .storage import get_storage
+    from .study import load_study
+
+    ap = argparse.ArgumentParser(description="render the study dashboard to HTML")
+    ap.add_argument("storage", help="storage URL (sqlite:///, journal://, remote://)")
+    ap.add_argument("study_name")
+    ap.add_argument("out", help="output HTML path")
+    ap.add_argument("--watch", type=float, default=0.0, metavar="SECONDS",
+                    help="re-render every N seconds (0 = render once)")
+    args = ap.parse_args(argv)
+
+    # cache=True: render_dashboard reads the trial list several times per
+    # tick, and --watch re-renders forever — fetch each finished trial once
+    study = load_study(args.study_name, get_storage(args.storage, cache=True))
+    while True:
+        save_dashboard(study, args.out)
+        n = len(study.get_trials(deepcopy=False))  # cache-local, no extra RPC
+        print(f"rendered {n} trials -> {args.out}", flush=True)
+        if args.watch <= 0:
+            break
+        time.sleep(args.watch)
+
+
+if __name__ == "__main__":
+    main()

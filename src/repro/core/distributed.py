@@ -10,13 +10,13 @@ joining late or dying early never corrupts the study.
 from __future__ import annotations
 
 import multiprocessing as mp
-import os
 import time
-from typing import Any, Callable
+from typing import Callable
 
 from .frozen import TrialState
 from .pruners import BasePruner
 from .samplers import BaseSampler
+from .storage import StorageServer, get_storage
 from .study import Study, load_study
 
 __all__ = ["run_workers", "worker_main", "RetryFailedTrialCallback"]
@@ -29,21 +29,32 @@ def worker_main(
     n_trials: int,
     sampler_factory: Callable[[], BaseSampler] | None = None,
     pruner_factory: Callable[[], BasePruner] | None = None,
-    seed_offset: int = 0,
+    seed_offset: int | None = None,
     heartbeat_interval: float | None = 2.0,
     timeout: float | None = None,
+    use_cache: bool = True,
 ) -> None:
-    """Entry point executed inside each worker process."""
+    """Entry point executed inside each worker process.
+
+    ``seed_offset`` reseeds the sampler deterministically per worker so
+    exploration streams are distinct but reproducible (``None`` keeps the
+    nondeterministic default).  ``use_cache`` wraps ``remote://`` storage in
+    :class:`CachedStorage` so per-``ask`` reads stay incremental.
+    """
+    storage = get_storage(
+        storage_url, cache=use_cache and storage_url.startswith("remote://")
+    )
     study = load_study(
         study_name,
-        storage_url,
+        storage,
         sampler=sampler_factory() if sampler_factory else None,
         pruner=pruner_factory() if pruner_factory else None,
     )
     # different workers must explore differently
-    study.sampler.reseed_rng()
+    study.sampler.reseed_rng(seed_offset)
     study.heartbeat_interval = heartbeat_interval
     study.optimize(objective, n_trials=n_trials, timeout=timeout, catch=(Exception,))
+    storage.close()
 
 
 def run_workers(
@@ -56,28 +67,47 @@ def run_workers(
     pruner_factory: Callable[[], BasePruner] | None = None,
     timeout: float | None = None,
     start_method: str = "fork",
+    serve_storage: bool = False,
+    serve_host: str = "127.0.0.1",
+    use_cache: bool = True,
 ) -> float:
     """Launch ``n_workers`` processes optimizing the same study; returns the
     wall-clock duration.  Storage must be shareable across processes
-    (``sqlite:///`` or ``journal://``)."""
+    (``sqlite:///``, ``journal://``, or ``remote://``).
+
+    With ``serve_storage=True`` the parent wraps ``storage_url`` in a
+    :class:`StorageServer` and hands workers its ``remote://`` URL instead —
+    the pattern for fleets without a shared filesystem: serve once (e.g. over
+    a SQLite file local to the server host), point every node at the URL.
+    """
+    server = None
+    worker_url = storage_url
+    if serve_storage:
+        server = StorageServer(get_storage(storage_url), host=serve_host).start()
+        worker_url = server.url
     ctx = mp.get_context(start_method)
     procs = []
     t0 = time.time()
-    for i in range(n_workers):
-        p = ctx.Process(
-            target=worker_main,
-            args=(storage_url, study_name, objective, n_trials_per_worker),
-            kwargs=dict(
-                sampler_factory=sampler_factory,
-                pruner_factory=pruner_factory,
-                seed_offset=i,
-                timeout=timeout,
-            ),
-        )
-        p.start()
-        procs.append(p)
-    for p in procs:
-        p.join()
+    try:
+        for i in range(n_workers):
+            p = ctx.Process(
+                target=worker_main,
+                args=(worker_url, study_name, objective, n_trials_per_worker),
+                kwargs=dict(
+                    sampler_factory=sampler_factory,
+                    pruner_factory=pruner_factory,
+                    seed_offset=i,
+                    timeout=timeout,
+                    use_cache=use_cache,
+                ),
+            )
+            p.start()
+            procs.append(p)
+        for p in procs:
+            p.join()
+    finally:
+        if server is not None:
+            server.stop()
     return time.time() - t0
 
 

@@ -49,8 +49,10 @@ class BaseSampler:
     ) -> Any:
         raise NotImplementedError
 
-    def reseed_rng(self) -> None:
-        pass
+    def reseed_rng(self, seed: int | None = None) -> None:
+        """Re-seed internal RNGs.  Workers call this with a distinct per-worker
+        seed so exploration streams are deterministic but non-overlapping;
+        ``None`` reseeds from OS entropy."""
 
     def after_trial(self, study: "Study", trial: FrozenTrial, state, values) -> None:
         pass

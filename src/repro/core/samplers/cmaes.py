@@ -149,9 +149,9 @@ class CmaEsSampler(BaseSampler):
         self._sigma0 = sigma0
         self._space_calc = IntersectionSearchSpace()
 
-    def reseed_rng(self) -> None:
-        self._seed = None
-        self._independent.reseed_rng()
+    def reseed_rng(self, seed: int | None = None) -> None:
+        self._seed = seed
+        self._independent.reseed_rng(seed)
 
     # -- relational interface ----------------------------------------------------
 

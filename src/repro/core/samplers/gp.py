@@ -48,9 +48,9 @@ class GPSampler(BaseSampler):
         self._fallback = RandomSampler(seed=seed)
         self._space_calc = IntersectionSearchSpace()
 
-    def reseed_rng(self) -> None:
-        self._rng = np.random.RandomState()
-        self._fallback.reseed_rng()
+    def reseed_rng(self, seed: int | None = None) -> None:
+        self._rng = np.random.RandomState(seed)
+        self._fallback.reseed_rng(seed)
 
     def infer_relative_search_space(
         self, study: "Study", trial: FrozenTrial

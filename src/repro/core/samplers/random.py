@@ -20,8 +20,8 @@ class RandomSampler(BaseSampler):
     def __init__(self, seed: int | None = None):
         self._rng = np.random.RandomState(seed)
 
-    def reseed_rng(self) -> None:
-        self._rng = np.random.RandomState()
+    def reseed_rng(self, seed: int | None = None) -> None:
+        self._rng = np.random.RandomState(seed)
 
     def sample_independent(
         self,

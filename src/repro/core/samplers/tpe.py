@@ -165,8 +165,8 @@ class TPESampler(BaseSampler):
         self._magic_clip = consider_magic_clip
         self._consider_pruned = consider_pruned_trials
 
-    def reseed_rng(self) -> None:
-        self._rng = np.random.RandomState()
+    def reseed_rng(self, seed: int | None = None) -> None:
+        self._rng = np.random.RandomState(seed)
 
     # -- observation collection ------------------------------------------------
 

@@ -1,11 +1,16 @@
 """Storage backends (paper §4): in-memory (lightweight), SQLite (RDB),
-append-only journal file (NFS-scale fleets)."""
+append-only journal file (NFS-scale fleets), and a networked client/server
+pair (``remote://``) for fleets without any shared filesystem.  See DESIGN.md
+for the backend matrix and the remote protocol."""
 
 from __future__ import annotations
 
-from .base import BaseStorage, StudySummary
+from .base import BaseStorage, StudySummary, get_trials_since
+from .cached import CachedStorage
+from .client import RemoteStorage
 from .inmemory import InMemoryStorage
 from .journal import JournalStorage
+from .server import StorageServer
 from .sqlite import SQLiteStorage
 
 __all__ = [
@@ -14,19 +19,36 @@ __all__ = [
     "InMemoryStorage",
     "SQLiteStorage",
     "JournalStorage",
+    "RemoteStorage",
+    "CachedStorage",
+    "StorageServer",
     "get_storage",
+    "get_trials_since",
 ]
 
 
-def get_storage(storage: "str | BaseStorage | None") -> BaseStorage:
+def get_storage(storage: "str | BaseStorage | None", cache: bool = False) -> BaseStorage:
     """Resolve a storage URL / object, mirroring the paper's Fig. 7 usage:
 
     * ``None``             -> fresh :class:`InMemoryStorage`
     * ``sqlite:///path``   -> :class:`SQLiteStorage`
     * ``journal://path``   -> :class:`JournalStorage`
+    * ``remote://host:port`` -> :class:`RemoteStorage` speaking to a
+      :class:`StorageServer` (no shared filesystem needed; see DESIGN.md)
     * ``*.db`` / ``*.sqlite`` path -> :class:`SQLiteStorage`
     * ``*.journal`` / ``*.log`` path -> :class:`JournalStorage`
+
+    ``cache=True`` wraps the resolved backend in :class:`CachedStorage`, the
+    client-side proxy that makes ``get_all_trials`` incremental (recommended
+    for workers talking to a ``remote://`` server).
     """
+    backend = _resolve(storage)
+    if cache and not isinstance(backend, CachedStorage):
+        backend = CachedStorage(backend)
+    return backend
+
+
+def _resolve(storage: "str | BaseStorage | None") -> BaseStorage:
     if storage is None:
         return InMemoryStorage()
     if isinstance(storage, BaseStorage):
@@ -35,10 +57,13 @@ def get_storage(storage: "str | BaseStorage | None") -> BaseStorage:
         return SQLiteStorage(storage)
     if storage.startswith("journal://"):
         return JournalStorage(storage)
+    if storage.startswith("remote://"):
+        return RemoteStorage(storage)
     if storage.endswith((".db", ".sqlite", ".sqlite3")):
         return SQLiteStorage(storage)
     if storage.endswith((".journal", ".log", ".jsonl")):
         return JournalStorage(storage)
     raise ValueError(
-        f"cannot infer storage backend from {storage!r}; use sqlite:/// or journal:// URLs"
+        f"cannot infer storage backend from {storage!r}; "
+        "use sqlite:///, journal://, or remote:// URLs"
     )

@@ -23,7 +23,7 @@ from typing import Any, Iterable
 from ..distributions import BaseDistribution
 from ..frozen import FrozenTrial, StudyDirection, TrialState
 
-__all__ = ["BaseStorage", "StudySummary"]
+__all__ = ["BaseStorage", "StudySummary", "get_trials_since"]
 
 
 class StudySummary:
@@ -124,7 +124,15 @@ class BaseStorage:
         study_id: int,
         deepcopy: bool = True,
         states: tuple[TrialState, ...] | None = None,
+        since: int | None = None,
     ) -> list[FrozenTrial]:
+        """All trials of a study, ordered by ``number``.
+
+        ``since`` restricts the result to trials with ``number >= since`` —
+        the incremental-fetch hook :class:`CachedStorage` uses to avoid
+        re-reading finished trials on every ``ask``.  Backends that predate
+        the parameter still work through :func:`get_trials_since`.
+        """
         raise NotImplementedError
 
     def get_n_trials(
@@ -164,3 +172,19 @@ class BaseStorage:
 
     def close(self) -> None:
         pass
+
+
+def get_trials_since(
+    storage: BaseStorage,
+    study_id: int,
+    since: int,
+    deepcopy: bool = True,
+    states: tuple[TrialState, ...] | None = None,
+) -> list[FrozenTrial]:
+    """Fetch trials with ``number >= since``, falling back to a full read +
+    filter for backends whose ``get_all_trials`` does not accept ``since``."""
+    try:
+        return storage.get_all_trials(study_id, deepcopy=deepcopy, states=states, since=since)
+    except TypeError:
+        trials = storage.get_all_trials(study_id, deepcopy=deepcopy, states=states)
+        return [t for t in trials if t.number >= since]

@@ -1,0 +1,279 @@
+"""``RemoteStorage`` — the client half of the networked storage service.
+
+Connects to a :class:`~repro.core.storage.server.StorageServer` via a
+``remote://host:port`` URL and implements the full :class:`BaseStorage`
+contract by forwarding each call as one JSON-RPC frame (see server.py for the
+wire format).
+
+Design points:
+
+* **Per-thread connections** — ``study.optimize(n_jobs=k)`` threads each get
+  their own socket, so responses can never interleave.
+* **Retry-on-reconnect** — a dropped connection is re-dialed transparently.
+  Idempotent calls (all reads, value-overwriting writes) are retried; calls
+  whose *effect* is not idempotent (``create_new_trial``,
+  ``create_new_study``, the WAITING->RUNNING claim) are only retried when the
+  request provably never reached the wire, otherwise
+  :class:`RetryableStorageError` is raised for the caller to decide.
+* **Atomic compare-and-set** — ``set_trial_state_values`` executes inside the
+  single server process against the wrapped backend, so ``ask()``'s
+  WAITING-claim race stays exactly-once across machines.
+"""
+
+from __future__ import annotations
+
+import json
+import socket
+import threading
+import time
+from typing import Any, Iterable
+
+from ..exceptions import (
+    DuplicatedStudyError,
+    RetryableStorageError,
+    StorageInternalError,
+    StudyNotFoundError,
+    TrialNotFoundError,
+)
+from ..frozen import FrozenTrial, StudyDirection, TrialState
+from .base import BaseStorage, StudySummary
+from .serde import pack, unpack
+from .server import recv_frame, send_frame
+
+__all__ = ["RemoteStorage", "parse_remote_url"]
+
+# server-side exception type name -> client-side class to re-raise
+_ERROR_TYPES: dict[str, type[Exception]] = {
+    "StudyNotFoundError": StudyNotFoundError,
+    "TrialNotFoundError": TrialNotFoundError,
+    "DuplicatedStudyError": DuplicatedStudyError,
+    "StorageInternalError": StorageInternalError,
+    "RetryableStorageError": RetryableStorageError,
+    "RuntimeError": RuntimeError,
+    "ValueError": ValueError,
+    "TypeError": TypeError,
+    "KeyError": KeyError,
+}
+
+# Calls that may NOT be blindly re-sent after a torn connection: re-executing
+# them would create a second trial/study or turn a won claim into a lost one.
+_NON_IDEMPOTENT = frozenset(
+    {"create_new_study", "create_new_trial", "set_trial_state_values"}
+)
+
+
+def parse_remote_url(url: str) -> tuple[str, int]:
+    if not url.startswith("remote://"):
+        raise ValueError(f"not a remote:// URL: {url!r}")
+    hostport = url[len("remote://"):].rstrip("/")
+    host, sep, port = hostport.rpartition(":")
+    if not sep or not port.isdigit():
+        raise ValueError(f"remote:// URL needs host:port, got {url!r}")
+    return host, int(port)
+
+
+class RemoteStorage(BaseStorage):
+    """Storage proxy speaking the length-prefixed JSON-RPC protocol.
+
+    Args:
+        url: ``remote://host:port`` of a running :class:`StorageServer`.
+        timeout: per-call socket timeout in seconds.
+        retries: reconnect attempts per call before giving up.
+    """
+
+    def __init__(self, url: str, timeout: float = 30.0, retries: int = 3):
+        self._host, self._port = parse_remote_url(url)
+        self._url = url
+        self._timeout = timeout
+        self._retries = max(1, retries)
+        self._local = threading.local()
+        self._id_lock = threading.Lock()
+        self._next_id = 0
+        self._call("ping")  # fail fast on a bad address
+
+    @property
+    def url(self) -> str:
+        return self._url
+
+    # -- transport -------------------------------------------------------------
+
+    def _sock(self) -> socket.socket:
+        sock = getattr(self._local, "sock", None)
+        if sock is None:
+            sock = socket.create_connection((self._host, self._port), timeout=self._timeout)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._local.sock = sock
+        return sock
+
+    def _drop_sock(self) -> None:
+        sock = getattr(self._local, "sock", None)
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+            self._local.sock = None
+
+    def _req_id(self) -> int:
+        with self._id_lock:
+            self._next_id += 1
+            return self._next_id
+
+    def _roundtrip(self, payload: bytes) -> Any:
+        """Send one frame, read one frame.  Raises (OSError-family, bool sent)
+        wrapped in a tuple-carrying exception via attributes."""
+        sock = self._sock()
+        sent = False
+        try:
+            send_frame(sock, payload)
+            sent = True
+            body = recv_frame(sock)
+        except (OSError, ConnectionError) as e:
+            self._drop_sock()
+            e._rpc_sent = sent  # type: ignore[attr-defined]
+            raise
+        if body is None:
+            self._drop_sock()
+            e = ConnectionError("server closed the connection")
+            e._rpc_sent = True  # type: ignore[attr-defined]
+            raise e
+        return json.loads(body)
+
+    def _call_raw(self, request: Any, *, idempotent: bool) -> Any:
+        payload = json.dumps(request).encode()
+        last: Exception | None = None
+        for attempt in range(self._retries):
+            try:
+                return self._roundtrip(payload)
+            except (OSError, ConnectionError) as e:
+                last = e
+                sent = getattr(e, "_rpc_sent", True)
+                if sent and not idempotent:
+                    raise RetryableStorageError(
+                        f"connection to {self._url} died after a non-idempotent "
+                        f"request was sent; cannot safely retry: {e}"
+                    ) from e
+                if attempt < self._retries - 1:
+                    time.sleep(0.05 * (attempt + 1))
+        raise RetryableStorageError(f"cannot reach storage server {self._url}: {last}") from last
+
+    def _call(self, method: str, *params: Any) -> Any:
+        request = {"id": self._req_id(), "method": method, "params": pack(list(params))}
+        response = self._call_raw(request, idempotent=method not in _NON_IDEMPOTENT)
+        return self._unwrap(response)
+
+    def call_batch(self, calls: list[tuple[str, tuple]]) -> list[Any]:
+        """Execute many calls in one round trip (server-side request batching).
+
+        Used by :class:`CachedStorage` to flush buffered writes.  The batch is
+        idempotent-retried only if *every* call in it is idempotent.
+        """
+        request = [
+            {"id": self._req_id(), "method": m, "params": pack(list(p))} for m, p in calls
+        ]
+        idempotent = all(m not in _NON_IDEMPOTENT for m, _ in calls)
+        responses = self._call_raw(request, idempotent=idempotent)
+        return [self._unwrap(r) for r in responses]
+
+    @staticmethod
+    def _unwrap(response: dict) -> Any:
+        if response.get("ok"):
+            return unpack(response.get("result"))
+        err = response.get("error") or {}
+        cls = _ERROR_TYPES.get(err.get("type", ""), StorageInternalError)
+        raise cls(err.get("message", "remote storage error"))
+
+    # -- study -----------------------------------------------------------------
+
+    def create_new_study(self, directions: list[StudyDirection], study_name: str) -> int:
+        return self._call("create_new_study", list(directions), study_name)
+
+    def delete_study(self, study_id: int) -> None:
+        self._call("delete_study", study_id)
+
+    def get_study_id_from_name(self, study_name: str) -> int:
+        return self._call("get_study_id_from_name", study_name)
+
+    def get_study_name_from_id(self, study_id: int) -> str:
+        return self._call("get_study_name_from_id", study_id)
+
+    def get_study_directions(self, study_id: int) -> list[StudyDirection]:
+        return self._call("get_study_directions", study_id)
+
+    def get_all_studies(self) -> list[StudySummary]:
+        return self._call("get_all_studies")
+
+    def set_study_user_attr(self, study_id: int, key: str, value: Any) -> None:
+        self._call("set_study_user_attr", study_id, key, value)
+
+    def set_study_system_attr(self, study_id: int, key: str, value: Any) -> None:
+        self._call("set_study_system_attr", study_id, key, value)
+
+    def get_study_user_attrs(self, study_id: int) -> dict[str, Any]:
+        return self._call("get_study_user_attrs", study_id)
+
+    def get_study_system_attrs(self, study_id: int) -> dict[str, Any]:
+        return self._call("get_study_system_attrs", study_id)
+
+    # -- trial -----------------------------------------------------------------
+
+    def create_new_trial(self, study_id: int, template_trial: FrozenTrial | None = None) -> int:
+        return self._call("create_new_trial", study_id, template_trial)
+
+    def set_trial_param(
+        self, trial_id: int, param_name: str, param_value_internal: float,
+        distribution,
+    ) -> None:
+        self._call("set_trial_param", trial_id, param_name, float(param_value_internal), distribution)
+
+    def set_trial_state_values(
+        self, trial_id: int, state: TrialState, values: Iterable[float] | None = None
+    ) -> bool:
+        vs = [float(v) for v in values] if values is not None else None
+        return self._call("set_trial_state_values", trial_id, state, vs)
+
+    def set_trial_intermediate_value(
+        self, trial_id: int, step: int, intermediate_value: float
+    ) -> None:
+        self._call("set_trial_intermediate_value", trial_id, int(step), float(intermediate_value))
+
+    def set_trial_user_attr(self, trial_id: int, key: str, value: Any) -> None:
+        self._call("set_trial_user_attr", trial_id, key, value)
+
+    def set_trial_system_attr(self, trial_id: int, key: str, value: Any) -> None:
+        self._call("set_trial_system_attr", trial_id, key, value)
+
+    def get_trial(self, trial_id: int) -> FrozenTrial:
+        return self._call("get_trial", trial_id)
+
+    def get_all_trials(
+        self, study_id: int, deepcopy: bool = True,
+        states: tuple[TrialState, ...] | None = None,
+        since: int | None = None,
+    ) -> list[FrozenTrial]:
+        states_list = list(states) if states is not None else None
+        return self._call("get_all_trials", study_id, deepcopy, states_list, since)
+
+    def get_n_trials(self, study_id: int, states: tuple[TrialState, ...] | None = None) -> int:
+        states_list = list(states) if states is not None else None
+        return self._call("get_n_trials", study_id, states_list)
+
+    def get_trial_id_from_study_and_number(self, study_id: int, number: int) -> int:
+        return self._call("get_trial_id_from_study_and_number", study_id, number)
+
+    # -- heartbeat ---------------------------------------------------------------
+
+    def record_heartbeat(self, trial_id: int) -> None:
+        self._call("record_heartbeat", trial_id)
+
+    def get_stale_trial_ids(self, study_id: int, grace_seconds: float) -> list[int]:
+        return self._call("get_stale_trial_ids", study_id, float(grace_seconds))
+
+    def fail_stale_trials(self, study_id: int, grace_seconds: float) -> list[int]:
+        return self._call("fail_stale_trials", study_id, float(grace_seconds))
+
+    # -- misc ---------------------------------------------------------------------
+
+    def close(self) -> None:
+        """Close this thread's connection (other threads' sockets close on GC)."""
+        self._drop_sock()

@@ -187,9 +187,12 @@ class InMemoryStorage(BaseStorage):
     def get_all_trials(
         self, study_id: int, deepcopy: bool = True,
         states: tuple[TrialState, ...] | None = None,
+        since: int | None = None,
     ) -> list[FrozenTrial]:
         with self._lock:
             trials = self._get_study(study_id).trials
+            if since is not None:
+                trials = trials[since:]  # numbers are dense list indices
             if states is not None:
                 trials = [t for t in trials if t.state in states]
             return [copy.deepcopy(t) for t in trials] if deepcopy else list(trials)

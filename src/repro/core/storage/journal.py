@@ -414,11 +414,14 @@ class JournalStorage(BaseStorage):
     def get_all_trials(
         self, study_id: int, deepcopy: bool = True,
         states: tuple[TrialState, ...] | None = None,
+        since: int | None = None,
     ) -> list[FrozenTrial]:
         self._sync()
         with self._mem_lock:
             self._check_study(study_id)
             tids = self._replay.study_trials[study_id]
+            if since is not None:
+                tids = tids[since:]  # study_trials is ordered by number
             ts = [self._replay.trials[tid] for tid in tids]
             if states is not None:
                 ts = [t for t in ts if t.state in states]

@@ -1,0 +1,121 @@
+"""JSON wire codec for the remote storage protocol.
+
+Everything that crosses the ``remote://`` socket is JSON; the handful of rich
+types in the storage API (``FrozenTrial``, ``BaseDistribution``,
+``StudySummary``, ``TrialState``/``StudyDirection``, ``datetime``) are encoded
+as tagged objects so the decoder can reconstruct them without ambiguity.
+Parameter *values* need no tagging: the suggest API guarantees external reprs
+are JSON-native (see ``CategoricalDistribution``).
+"""
+
+from __future__ import annotations
+
+import datetime
+from typing import Any
+
+from ..distributions import distribution_to_json, json_to_distribution
+from ..frozen import FrozenTrial, StudyDirection, TrialState
+from .base import StudySummary
+
+__all__ = ["pack", "unpack"]
+
+_TRIAL = "__frozen_trial__"
+_DIST = "__distribution__"
+_SUMMARY = "__study_summary__"
+_STATE = "__trial_state__"
+_DIRECTION = "__study_direction__"
+_DATETIME = "__datetime__"
+
+
+def pack(obj: Any) -> Any:
+    """Recursively convert a storage-API value into pure-JSON structures."""
+    # enum checks must precede the primitive check: IntEnum instances are ints
+    if isinstance(obj, TrialState):
+        return {_STATE: int(obj)}
+    if isinstance(obj, StudyDirection):
+        return {_DIRECTION: int(obj)}
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, datetime.datetime):
+        return {_DATETIME: obj.isoformat()}
+    if isinstance(obj, FrozenTrial):
+        return {
+            _TRIAL: {
+                "number": obj.number,
+                "state": int(obj.state),
+                "values": obj.values,
+                # attrs/params may legally hold rich values (e.g. datetimes in
+                # user_attrs) -> pack recursively, symmetric with unpack below
+                "params": pack(obj.params),
+                "distributions": {
+                    k: distribution_to_json(d) for k, d in obj.distributions.items()
+                },
+                "intermediate_values": {str(k): v for k, v in obj.intermediate_values.items()},
+                "user_attrs": pack(obj.user_attrs),
+                "system_attrs": pack(obj.system_attrs),
+                "trial_id": obj.trial_id,
+                "datetime_start": pack(obj.datetime_start),
+                "datetime_complete": pack(obj.datetime_complete),
+            }
+        }
+    if isinstance(obj, StudySummary):
+        return {
+            _SUMMARY: {
+                "study_id": obj.study_id,
+                "study_name": obj.study_name,
+                "directions": [int(d) for d in obj.directions],
+                "n_trials": obj.n_trials,
+                "user_attrs": pack(obj.user_attrs),
+                "system_attrs": pack(obj.system_attrs),
+            }
+        }
+    # distributions have no common tag field; detect by duck type
+    if hasattr(obj, "_asdict") and hasattr(obj, "to_internal_repr"):
+        return {_DIST: distribution_to_json(obj)}
+    if isinstance(obj, (list, tuple)):
+        return [pack(v) for v in obj]
+    if isinstance(obj, dict):
+        return {str(k): pack(v) for k, v in obj.items()}
+    raise TypeError(f"cannot serialize {type(obj).__name__} for the storage protocol")
+
+
+def unpack(obj: Any) -> Any:
+    """Inverse of :func:`pack`."""
+    if isinstance(obj, list):
+        return [unpack(v) for v in obj]
+    if not isinstance(obj, dict):
+        return obj
+    if _STATE in obj:
+        return TrialState(obj[_STATE])
+    if _DIRECTION in obj:
+        return StudyDirection(obj[_DIRECTION])
+    if _DATETIME in obj:
+        return datetime.datetime.fromisoformat(obj[_DATETIME])
+    if _DIST in obj:
+        return json_to_distribution(obj[_DIST])
+    if _TRIAL in obj:
+        d = obj[_TRIAL]
+        return FrozenTrial(
+            number=d["number"],
+            state=TrialState(d["state"]),
+            values=d["values"],
+            params=unpack(d["params"]),
+            distributions={k: json_to_distribution(s) for k, s in d["distributions"].items()},
+            intermediate_values={int(k): v for k, v in d["intermediate_values"].items()},
+            user_attrs=unpack(d["user_attrs"]),
+            system_attrs=unpack(d["system_attrs"]),
+            trial_id=d["trial_id"],
+            datetime_start=unpack(d["datetime_start"]),
+            datetime_complete=unpack(d["datetime_complete"]),
+        )
+    if _SUMMARY in obj:
+        d = obj[_SUMMARY]
+        return StudySummary(
+            d["study_id"],
+            d["study_name"],
+            [StudyDirection(x) for x in d["directions"]],
+            d["n_trials"],
+            unpack(d["user_attrs"]),
+            unpack(d["system_attrs"]),
+        )
+    return {k: unpack(v) for k, v in obj.items()}

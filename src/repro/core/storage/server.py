@@ -1,0 +1,284 @@
+"""Networked storage server — the piece that turns "N processes on one box"
+into "N workers on a fleet" (paper §4's scalable deployment criterion).
+
+A :class:`StorageServer` wraps *any* :class:`BaseStorage` backend and exposes
+it over TCP to :class:`~repro.core.storage.client.RemoteStorage` clients.
+
+Protocol
+--------
+Length-prefixed JSON-RPC: each frame is a 4-byte big-endian payload length
+followed by UTF-8 JSON.  A request is ``{"id", "method", "params"}`` (params
+encoded with :mod:`.serde`); the response is ``{"id", "ok", "result"}`` or
+``{"id", "ok": false, "error": {"type", "message"}}``.  A frame may carry a
+*list* of requests (a batch); the server executes them in order and answers
+with a list of responses in the same frame — one round trip for a whole
+write-behind flush.
+
+Concurrency: one daemon thread per connection; atomicity of each call (e.g.
+the WAITING->RUNNING compare-and-set in ``set_trial_state_values``) is
+delegated to the wrapped backend, which already guarantees it per the
+BaseStorage contract.  Graceful shutdown via :meth:`StorageServer.stop` —
+in-flight requests finish, then sockets close.
+"""
+
+from __future__ import annotations
+
+import json
+import socket
+import socketserver
+import struct
+import threading
+import time
+from typing import Any
+
+from .base import BaseStorage, get_trials_since
+from .serde import pack, unpack
+
+__all__ = ["StorageServer", "send_frame", "recv_frame", "MAX_FRAME_BYTES"]
+
+MAX_FRAME_BYTES = 64 * 1024 * 1024  # sanity cap on one frame
+MID_FRAME_STALL_SECONDS = 30.0  # max time a peer may stall between bytes of one frame
+
+# The RPC surface: exactly the BaseStorage API (plus ping for liveness).
+_METHODS = frozenset(
+    {
+        "create_new_study",
+        "delete_study",
+        "get_study_id_from_name",
+        "get_study_name_from_id",
+        "get_study_directions",
+        "get_all_studies",
+        "set_study_user_attr",
+        "set_study_system_attr",
+        "get_study_user_attrs",
+        "get_study_system_attrs",
+        "create_new_trial",
+        "set_trial_param",
+        "set_trial_state_values",
+        "set_trial_intermediate_value",
+        "set_trial_user_attr",
+        "set_trial_system_attr",
+        "get_trial",
+        "get_all_trials",
+        "get_n_trials",
+        "get_trial_id_from_study_and_number",
+        "record_heartbeat",
+        "get_stale_trial_ids",
+        "fail_stale_trials",
+    }
+)
+
+
+def send_frame(sock: socket.socket, payload: bytes) -> None:
+    sock.sendall(struct.pack(">I", len(payload)) + payload)
+
+
+def recv_frame(sock: socket.socket) -> bytes | None:
+    """Read one length-prefixed frame; ``None`` on clean EOF.
+
+    A ``socket.timeout`` escapes only while *idle* (no byte of the frame seen
+    yet) — once a frame has started, reads are retried so a slow peer cannot
+    cause a torn frame, but a peer that stalls longer than
+    ``MID_FRAME_STALL_SECONDS`` without sending a single byte raises
+    ``ConnectionError`` instead of hanging the caller forever.
+    """
+    header = _recv_exact(sock, 4, allow_idle_timeout=True)
+    if header is None:
+        return None
+    (length,) = struct.unpack(">I", header)
+    if length > MAX_FRAME_BYTES:
+        raise ValueError(f"frame of {length} bytes exceeds cap {MAX_FRAME_BYTES}")
+    body = _recv_exact(sock, length, allow_idle_timeout=False)
+    if body is None:
+        raise ConnectionError("connection closed mid-frame")
+    return body
+
+
+def _recv_exact(sock: socket.socket, n: int, allow_idle_timeout: bool) -> bytes | None:
+    buf = b""
+    stall_deadline: float | None = None
+    while len(buf) < n:
+        try:
+            chunk = sock.recv(n - len(buf))
+        except socket.timeout:
+            if allow_idle_timeout and not buf:
+                raise
+            now = time.monotonic()
+            if stall_deadline is None:
+                stall_deadline = now + MID_FRAME_STALL_SECONDS
+            elif now >= stall_deadline:
+                raise ConnectionError(
+                    f"peer stalled mid-frame for over {MID_FRAME_STALL_SECONDS}s"
+                ) from None
+            continue  # mid-frame: give the peer a bounded grace period
+        stall_deadline = None  # any progress resets the stall clock
+        if not chunk:
+            if buf:
+                raise ConnectionError("connection closed mid-frame")
+            return None
+        buf += chunk
+    return buf
+
+
+class _Handler(socketserver.BaseRequestHandler):
+    def handle(self) -> None:
+        sock: socket.socket = self.request
+        sock.settimeout(0.5)  # so the loop notices server shutdown promptly
+        server: "_RPCServer" = self.server  # type: ignore[assignment]
+        while not server.stopping.is_set():
+            try:
+                payload = recv_frame(sock)
+            except socket.timeout:
+                continue
+            except (ConnectionError, OSError):
+                return
+            if payload is None:
+                return
+            try:
+                request = json.loads(payload)
+            except json.JSONDecodeError:
+                return  # protocol violation; drop the connection
+            batch = isinstance(request, list)
+            responses = [server.dispatch(r) for r in (request if batch else [request])]
+            out = json.dumps(responses if batch else responses[0]).encode()
+            try:
+                sock.settimeout(30.0)
+                send_frame(sock, out)
+                sock.settimeout(0.5)
+            except (ConnectionError, OSError):
+                return
+
+
+class _RPCServer(socketserver.ThreadingTCPServer):
+    daemon_threads = True
+    allow_reuse_address = True
+
+    def __init__(self, addr: tuple[str, int], storage: BaseStorage):
+        super().__init__(addr, _Handler)
+        self.storage = storage
+        self.stopping = threading.Event()
+
+    def dispatch(self, request: dict) -> dict:
+        req_id = request.get("id")
+        method = request.get("method")
+        try:
+            if method == "ping":
+                return {"id": req_id, "ok": True, "result": "pong"}
+            if method not in _METHODS:
+                raise ValueError(f"unknown storage method {method!r}")
+            params = unpack(request.get("params") or [])
+            result = self._invoke(method, params)
+            response = {"id": req_id, "ok": True, "result": pack(result)}
+            # an unserializable result must become a typed error frame, not a
+            # dropped connection (the client would silently retry + misreport)
+            json.dumps(response)
+            return response
+        except Exception as e:  # every failure maps to a typed client-side raise
+            return {
+                "id": req_id,
+                "ok": False,
+                "error": {"type": type(e).__name__, "message": str(e)},
+            }
+
+    def _invoke(self, method: str, params: list[Any]) -> Any:
+        if method in ("get_all_trials", "get_n_trials"):
+            # states arrives as a JSON list; the API takes a tuple
+            if method == "get_all_trials":
+                study_id, deepcopy, states, since = params
+                states = tuple(states) if states is not None else None
+                if since is not None:
+                    return get_trials_since(
+                        self.storage, study_id, since, deepcopy=deepcopy, states=states
+                    )
+                return self.storage.get_all_trials(study_id, deepcopy=deepcopy, states=states)
+            if method == "get_n_trials":
+                study_id, states = params
+                states = tuple(states) if states is not None else None
+                return self.storage.get_n_trials(study_id, states=states)
+        return getattr(self.storage, method)(*params)
+
+
+class StorageServer:
+    """Serve a storage backend over TCP.
+
+    >>> server = StorageServer(SQLiteStorage("study.db")).start()
+    >>> server.url          # hand this to workers on other machines
+    'remote://10.0.0.5:38211'
+    >>> server.stop()
+
+    ``port=0`` binds an ephemeral port (read it back from ``.port``).
+    Usable as a context manager.
+    """
+
+    def __init__(self, storage: BaseStorage, host: str = "127.0.0.1", port: int = 0):
+        self._storage = storage
+        self._host = host
+        self._requested_port = port
+        self._server: _RPCServer | None = None
+        self._thread: threading.Thread | None = None
+
+    def start(self) -> "StorageServer":
+        if self._server is not None:
+            return self
+        self._server = _RPCServer((self._host, self._requested_port), self._storage)
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, kwargs={"poll_interval": 0.1}, daemon=True
+        )
+        self._thread.start()
+        return self
+
+    @property
+    def host(self) -> str:
+        return self._host
+
+    @property
+    def port(self) -> int:
+        if self._server is None:
+            raise RuntimeError("server not started")
+        return self._server.server_address[1]
+
+    @property
+    def url(self) -> str:
+        return f"remote://{self.host}:{self.port}"
+
+    def stop(self) -> None:
+        if self._server is None:
+            return
+        self._server.stopping.set()
+        self._server.shutdown()
+        self._server.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+        self._server = None
+        self._thread = None
+
+    def __enter__(self) -> "StorageServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> bool:
+        self.stop()
+        return False
+
+
+def main(argv: list[str] | None = None) -> None:
+    """``python -m repro.core.storage.server sqlite:///study.db --port 9000``"""
+    import argparse
+
+    from . import get_storage
+
+    ap = argparse.ArgumentParser(description="serve a storage backend over remote://")
+    ap.add_argument("storage", help="backend URL to wrap (sqlite:/// or journal://)")
+    ap.add_argument("--host", default="0.0.0.0")
+    ap.add_argument("--port", type=int, default=9000)
+    args = ap.parse_args(argv)
+
+    server = StorageServer(get_storage(args.storage), host=args.host, port=args.port).start()
+    print(f"serving {args.storage} at {server.url} (ctrl-c to stop)", flush=True)
+    try:
+        threading.Event().wait()
+    except KeyboardInterrupt:
+        server.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -414,6 +414,7 @@ class SQLiteStorage(BaseStorage):
     def get_all_trials(
         self, study_id: int, deepcopy: bool = True,
         states: tuple[TrialState, ...] | None = None,
+        since: int | None = None,
     ) -> list[FrozenTrial]:
         conn = self._conn()
         q = (
@@ -421,6 +422,9 @@ class SQLiteStorage(BaseStorage):
             " datetime_complete FROM trials WHERE study_id=?"
         )
         args: list[Any] = [study_id]
+        if since is not None:
+            q += " AND number >= ?"
+            args.append(int(since))
         if states is not None:
             q += f" AND state IN ({','.join('?' * len(states))})"
             args += [int(s) for s in states]

@@ -260,12 +260,11 @@ class Study:
             state = TrialState.FAIL
             self._storage.set_trial_system_attr(trial_id, "fail:exception", repr(e))
             if not isinstance(e, catch):
-                self._finish(trial_id, state, values, hb_stop)
                 raise
         finally:
-            if state != TrialState.FAIL or not catch:
-                pass  # finish below (normal path) or already finished above
-        self._finish(trial_id, state, values, hb_stop)
+            # exactly one finish on every path — including the uncaught-raise
+            # path above, which previously risked finishing the trial twice
+            self._finish(trial_id, state, values, hb_stop)
 
         frozen = self._storage.get_trial(trial_id)
         self.sampler.after_trial(self, frozen, state, values)

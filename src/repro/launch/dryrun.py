@@ -53,6 +53,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str, verbose: bool
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax returns [dict] per device
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     stats = analyze_hlo(hlo)
 

@@ -71,7 +71,7 @@ def spec_logical(tree) -> Any:
 
 def init_params(tree, key: jax.Array, dtype) -> Any:
     """Deterministic per-path init: rng folded with a stable hash of the path."""
-    leaves = jax.tree.leaves_with_path(tree, is_leaf=lambda x: isinstance(x, Spec))
+    leaves = jax.tree_util.tree_leaves_with_path(tree, is_leaf=lambda x: isinstance(x, Spec))
 
     def one(path, s: Spec):
         pkey = jax.random.fold_in(key, _path_hash(path))

@@ -159,7 +159,7 @@ def count_active_params(cfg: ModelConfig) -> int:
     """MoE-aware active parameter count (for MODEL_FLOPS = 6*N_active*D)."""
     total = 0
     specs = param_specs(cfg)
-    leaves = jax.tree.leaves_with_path(specs, is_leaf=lambda x: isinstance(x, Spec))
+    leaves = jax.tree_util.tree_leaves_with_path(specs, is_leaf=lambda x: isinstance(x, Spec))
     for path, s in leaves:
         n = math.prod(s.shape)
         pstr = jax.tree_util.keystr(path)
@@ -315,7 +315,7 @@ def cache_logical(cache) -> Any:
             base = base + (None,) * (rank - len(base))
         return (("layers",) + base) if in_stack else base
 
-    leaves = jax.tree.leaves_with_path(cache)
+    leaves = jax.tree_util.tree_leaves_with_path(cache)
     vals = [one(p, l) for p, l in leaves]
     return jax.tree.unflatten(jax.tree.structure(cache), vals)
 

@@ -28,7 +28,7 @@ _SEP = "::"
 
 def _flatten(tree) -> dict:
     out = {}
-    for path, leaf in jax.tree.leaves_with_path(tree):
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
         out[jax.tree_util.keystr(path)] = leaf
     return out
 
@@ -62,7 +62,7 @@ def restore_pytree(path: str, target, shardings=None):
     data = np.load(path)
     by_key = {k: data[f"a{i}"] for i, k in enumerate(manifest["keys"])}
 
-    leaves = jax.tree.leaves_with_path(target)
+    leaves = jax.tree_util.tree_leaves_with_path(target)
     sh_leaves = jax.tree.leaves(shardings) if shardings is not None else [None] * len(leaves)
     out = []
     for (p, leaf), sh in zip(leaves, sh_leaves):

@@ -128,7 +128,7 @@ def _opt_shardings(opt_abs, param_shardings):
 
     flat_p = {
         tuple(str(k) for k in path): s
-        for path, s in jax.tree.leaves_with_path(param_shardings)
+        for path, s in jax.tree_util.tree_leaves_with_path(param_shardings)
     }
 
     def param_spec_for(keys):
@@ -161,7 +161,7 @@ def _opt_shardings(opt_abs, param_shardings):
         some = next(iter(flat_p.values()))
         return NamedSharding(some.mesh, PartitionSpec())
 
-    leaves = jax.tree.leaves_with_path(opt_abs)
+    leaves = jax.tree_util.tree_leaves_with_path(opt_abs)
     vals = [one(p, l) for p, l in leaves]
     return jax.tree.unflatten(jax.tree.structure(opt_abs), vals)
 

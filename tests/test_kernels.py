@@ -3,6 +3,8 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; skip, don't abort collection
 from hypothesis import given, settings, strategies as st
 
 import jax

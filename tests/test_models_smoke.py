@@ -176,7 +176,7 @@ def test_gradient_flows_through_every_param():
     batch = make_batch(cfg, B=2, S=32)
     grads = jax.grad(lambda p: loss_fn(p, cfg, batch)[0])(params)
     zero_leaves = []
-    for path, g in jax.tree.leaves_with_path(grads):
+    for path, g in jax.tree_util.tree_leaves_with_path(grads):
         if not np.any(np.asarray(g)):
             zero_leaves.append(jax.tree_util.keystr(path))
     # conv bias / gates can be legitimately tiny but not ALL zero; allow a few

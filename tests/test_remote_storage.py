@@ -1,0 +1,305 @@
+"""Networked storage service: server round-trips, claim races, cache
+consistency, and an end-to-end served distributed study."""
+
+import threading
+
+import pytest
+
+import repro.core as hpo
+from repro.core.distributions import CategoricalDistribution, FloatDistribution, IntDistribution
+from repro.core.frozen import FrozenTrial, StudyDirection, TrialState
+from repro.core.storage import (
+    CachedStorage,
+    InMemoryStorage,
+    RemoteStorage,
+    SQLiteStorage,
+    StorageServer,
+    get_storage,
+    get_trials_since,
+)
+
+
+@pytest.fixture
+def server():
+    srv = StorageServer(InMemoryStorage()).start()
+    yield srv
+    srv.stop()
+
+
+@pytest.fixture
+def remote(server):
+    return RemoteStorage(server.url)
+
+
+class TestProtocolRoundTrip:
+    """Every BaseStorage method crosses the wire and comes back intact."""
+
+    def test_study_methods(self, remote):
+        sid = remote.create_new_study([StudyDirection.MINIMIZE, StudyDirection.MAXIMIZE], "s1")
+        assert remote.get_study_id_from_name("s1") == sid
+        assert remote.get_study_name_from_id(sid) == "s1"
+        assert remote.get_study_directions(sid) == [
+            StudyDirection.MINIMIZE, StudyDirection.MAXIMIZE,
+        ]
+        remote.set_study_user_attr(sid, "u", {"nested": [1, "two"]})
+        remote.set_study_system_attr(sid, "s", 3.5)
+        assert remote.get_study_user_attrs(sid) == {"u": {"nested": [1, "two"]}}
+        assert remote.get_study_system_attrs(sid) == {"s": 3.5}
+        summaries = remote.get_all_studies()
+        assert len(summaries) == 1 and summaries[0].study_name == "s1"
+        with pytest.raises(hpo.DuplicatedStudyError):
+            remote.create_new_study([StudyDirection.MINIMIZE], "s1")
+        remote.delete_study(sid)
+        with pytest.raises(KeyError):
+            remote.get_study_id_from_name("s1")
+
+    def test_trial_methods(self, remote):
+        sid = remote.create_new_study([StudyDirection.MINIMIZE], "s")
+        tid = remote.create_new_trial(sid)
+        remote.set_trial_param(tid, "f", 0.25, FloatDistribution(0, 1, log=False))
+        remote.set_trial_param(tid, "i", 3.0, IntDistribution(1, 10))
+        remote.set_trial_param(tid, "c", 1.0, CategoricalDistribution([None, "b", 4]))
+        remote.set_trial_intermediate_value(tid, 1, 5.0)
+        remote.set_trial_intermediate_value(tid, 2, 4.0)
+        remote.set_trial_user_attr(tid, "k", [1, 2])
+        remote.set_trial_system_attr(tid, "sys", "v")
+        assert remote.set_trial_state_values(tid, TrialState.COMPLETE, [0.5])
+        t = remote.get_trial(tid)
+        assert t.params == {"f": 0.25, "i": 3, "c": "b"}
+        assert isinstance(t.distributions["c"], CategoricalDistribution)
+        assert t.intermediate_values == {1: 5.0, 2: 4.0}
+        assert t.user_attrs == {"k": [1, 2]}
+        assert t.system_attrs == {"sys": "v"}
+        assert t.values == [0.5] and t.state == TrialState.COMPLETE
+        assert t.datetime_start is not None and t.datetime_complete is not None
+        assert remote.get_trial_id_from_study_and_number(sid, t.number) == tid
+        assert remote.get_n_trials(sid) == 1
+        assert remote.get_n_trials(sid, states=(TrialState.FAIL,)) == 0
+        # server-side errors surface as the right client-side exception types
+        with pytest.raises(KeyError):
+            remote.get_trial(tid + 999)
+        with pytest.raises(RuntimeError):
+            remote.set_trial_param(tid, "f", 0.1, FloatDistribution(0, 1))
+
+    def test_template_trial_and_states_filter(self, remote):
+        sid = remote.create_new_study([StudyDirection.MINIMIZE], "s")
+        template = FrozenTrial(
+            number=-1, state=TrialState.WAITING, system_attrs={"fixed_params": {"x": 1.0}},
+        )
+        remote.create_new_trial(sid, template_trial=template)
+        remote.create_new_trial(sid)  # RUNNING
+        waiting = remote.get_all_trials(sid, states=(TrialState.WAITING,))
+        assert len(waiting) == 1
+        assert waiting[0].system_attrs["fixed_params"] == {"x": 1.0}
+
+    def test_heartbeat_failover(self, remote):
+        sid = remote.create_new_study([StudyDirection.MINIMIZE], "s")
+        tid = remote.create_new_trial(sid)
+        remote.record_heartbeat(tid)
+        assert remote.get_stale_trial_ids(sid, grace_seconds=3600) == []
+        assert remote.fail_stale_trials(sid, grace_seconds=-1) == [tid]
+        assert remote.get_trial(tid).state == TrialState.FAIL
+
+    def test_batched_requests(self, remote):
+        sid = remote.create_new_study([StudyDirection.MINIMIZE], "s")
+        tid = remote.create_new_trial(sid)
+        results = remote.call_batch(
+            [
+                ("set_trial_param", (tid, "x", 0.5, FloatDistribution(0, 1))),
+                ("set_trial_user_attr", (tid, "a", 1)),
+                ("get_trial", (tid,)),
+            ]
+        )
+        assert results[2].params == {"x": 0.5}
+        assert results[2].user_attrs == {"a": 1}
+
+    def test_reconnect_after_dropped_connection(self, remote):
+        sid = remote.create_new_study([StudyDirection.MINIMIZE], "s")
+        # sever this thread's socket out from under the client
+        remote._local.sock.close()
+        remote._local.sock = None
+        assert remote.get_study_id_from_name("s") == sid
+
+    def test_bad_url_fails_fast(self):
+        from repro.core.exceptions import RetryableStorageError
+
+        with pytest.raises(RetryableStorageError):
+            RemoteStorage("remote://127.0.0.1:1", retries=1)
+        with pytest.raises(ValueError):
+            RemoteStorage("remote://noport")
+
+
+class TestClaimRace:
+    def test_exactly_one_client_wins_waiting_claim(self, server):
+        c1 = RemoteStorage(server.url)
+        c2 = RemoteStorage(server.url)
+        sid = c1.create_new_study([StudyDirection.MINIMIZE], "s")
+        results = []
+        for _ in range(10):
+            tid = c1.create_new_trial(
+                sid, template_trial=FrozenTrial(number=-1, state=TrialState.WAITING)
+            )
+            barrier = threading.Barrier(2)
+            wins = []
+
+            def claim(client):
+                barrier.wait()
+                wins.append(client.set_trial_state_values(tid, TrialState.RUNNING))
+
+            ts = [threading.Thread(target=claim, args=(c,)) for c in (c1, c2)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            results.append(sorted(wins))
+        assert all(r == [False, True] for r in results), results
+
+    def test_cached_clients_claim_through_backend(self, server):
+        """The cache must not short-circuit the compare-and-set."""
+        c1 = CachedStorage(RemoteStorage(server.url))
+        c2 = CachedStorage(RemoteStorage(server.url))
+        sid = c1.create_new_study([StudyDirection.MINIMIZE], "s")
+        tid = c1.create_new_trial(
+            sid, template_trial=FrozenTrial(number=-1, state=TrialState.WAITING)
+        )
+        for c in (c1, c2):  # both observe the WAITING trial
+            assert [t.trial_id for t in c.get_all_trials(sid, states=(TrialState.WAITING,))] == [tid]
+        wins = [c.set_trial_state_values(tid, TrialState.RUNNING) for c in (c1, c2)]
+        assert sorted(wins) == [False, True]
+
+
+class TestSinceFetch:
+    @pytest.mark.parametrize("kind", ["memory", "sqlite", "journal", "remote"])
+    def test_since_matches_filtered_full_read(self, kind, tmp_path, server):
+        if kind == "memory":
+            st = InMemoryStorage()
+        elif kind == "sqlite":
+            st = SQLiteStorage(str(tmp_path / "s.db"))
+        elif kind == "journal":
+            st = hpo.JournalStorage(str(tmp_path / "s.journal"))
+        else:
+            st = RemoteStorage(server.url)
+        sid = st.create_new_study([StudyDirection.MINIMIZE], "s")
+        for i in range(7):
+            tid = st.create_new_trial(sid)
+            if i < 4:
+                st.set_trial_state_values(tid, TrialState.COMPLETE, [float(i)])
+        full = st.get_all_trials(sid, deepcopy=False)
+        suffix = st.get_all_trials(sid, deepcopy=False, since=4)
+        assert [t.number for t in suffix] == [4, 5, 6]
+        assert [t.number for t in full] == list(range(7))
+        # helper falls back cleanly for backends without native support
+        assert [t.number for t in get_trials_since(st, sid, 5, deepcopy=False)] == [5, 6]
+
+    def test_cached_storage_stops_refetching_finished_trials(self, server):
+        probe = RemoteStorage(server.url)
+        cs = CachedStorage(RemoteStorage(server.url))
+        sid = cs.create_new_study([StudyDirection.MINIMIZE], "s")
+        for i in range(20):
+            tid = cs.create_new_trial(sid)
+            cs.set_trial_state_values(tid, TrialState.COMPLETE, [float(i)])
+        cs.get_all_trials(sid, deepcopy=False)
+        assert cs._studies[sid].watermark == 20  # nothing left to re-read
+        # and the cache still sees new work from other clients
+        other = probe.create_new_trial(sid)
+        assert [t.trial_id for t in cs.get_all_trials(sid, states=(TrialState.RUNNING,))] == [other]
+
+
+class TestCachedConsistency:
+    def test_interleaved_writes_match_backend(self, server):
+        """Writes through the proxy and direct backend writes interleave;
+        the proxy's view must converge to the backend's."""
+        backend = RemoteStorage(server.url)
+        cs = CachedStorage(RemoteStorage(server.url))
+        sid = cs.create_new_study([StudyDirection.MINIMIZE], "s")
+
+        t_own = cs.create_new_trial(sid)  # owned by the proxy
+        t_other = backend.create_new_trial(sid)  # some other worker's trial
+
+        cs.set_trial_param(t_own, "x", 0.5, FloatDistribution(0, 1))  # buffered
+        backend.set_trial_param(t_other, "x", 0.9, FloatDistribution(0, 1))
+        cs.set_trial_intermediate_value(t_own, 1, 3.0)  # forces a flush
+        backend.set_trial_state_values(t_other, TrialState.COMPLETE, [9.0])
+        cs.set_trial_user_attr(t_own, "note", "mine")  # buffered again
+        cs.set_trial_state_values(t_own, TrialState.COMPLETE, [1.0])  # flush + finish
+
+        ours = {t.number: t for t in cs.get_all_trials(sid)}
+        theirs = {t.number: t for t in backend.get_all_trials(sid)}
+        assert ours.keys() == theirs.keys()
+        for n in ours:
+            a, b = ours[n], theirs[n]
+            assert (a.state, a.values, a.params, a.intermediate_values, a.user_attrs) == (
+                b.state, b.values, b.params, b.intermediate_values, b.user_attrs,
+            )
+
+    def test_explicit_flush_pushes_buffered_writes(self, server):
+        backend = RemoteStorage(server.url)
+        cs = CachedStorage(RemoteStorage(server.url))
+        sid = cs.create_new_study([StudyDirection.MINIMIZE], "s")
+        tid = cs.create_new_trial(sid)
+        cs.set_trial_param(tid, "x", 0.5, FloatDistribution(0, 1))
+        assert backend.get_trial(tid).params == {}  # write-behind: not yet visible
+        cs.flush()
+        assert backend.get_trial(tid).params == {"x": 0.5}
+
+    def test_own_reads_never_hit_backend_midtrial(self, server):
+        cs = CachedStorage(RemoteStorage(server.url))
+        sid = cs.create_new_study([StudyDirection.MINIMIZE], "s")
+        tid = cs.create_new_trial(sid)
+        cs.set_trial_param(tid, "x", 0.5, FloatDistribution(0, 1))
+        t = cs.get_trial(tid)  # served from the local copy, incl. unflushed param
+        assert t.params == {"x": 0.5}
+
+
+class TestStudyOverRemote:
+    def test_optimize_through_remote_url(self, server):
+        study = hpo.create_study(study_name="remote-study", storage=get_storage(server.url))
+        study.optimize(lambda tr: (tr.suggest_float("x", -5, 5) - 1) ** 2, n_trials=15)
+        assert len(study.trials) == 15
+        assert study.best_value is not None
+
+    def test_optimize_through_cached_remote(self, server):
+        storage = get_storage(server.url, cache=True)
+        study = hpo.create_study(study_name="cached-study", storage=storage)
+        study.optimize(lambda tr: (tr.suggest_float("x", -5, 5) - 1) ** 2, n_trials=15)
+        trials = study.get_trials(states=(TrialState.COMPLETE,))
+        assert len(trials) == 15
+        # invariants also hold on the server's authoritative copy
+        raw = RemoteStorage(server.url)
+        sid = raw.get_study_id_from_name("cached-study")
+        backend_trials = raw.get_all_trials(sid)
+        assert [t.number for t in backend_trials] == list(range(15))
+        assert all(t.state == TrialState.COMPLETE for t in backend_trials)
+        assert all("x" in t.params for t in backend_trials)
+
+
+def _served_objective(trial):
+    x = trial.suggest_float("x", -5, 5)
+    trial.report(x * x, 1)
+    return (x - 1) ** 2
+
+
+class TestServedDistributedStudy:
+    def test_run_workers_serve_storage_end_to_end(self, tmp_path):
+        """>= 2 worker processes through remote:// (server wrapping SQLite)
+        keep the single-process storage invariants: dense trial numbers and
+        exactly one claim per enqueued WAITING trial."""
+        url = f"sqlite:///{tmp_path}/served.db"
+        study = hpo.create_study(study_name="fleet", storage=url)
+        study.enqueue_trial({"x": 1.0})
+        study.enqueue_trial({"x": -1.0})
+        hpo.run_workers(
+            2, url, "fleet", _served_objective,
+            n_trials_per_worker=5,
+            sampler_factory=lambda: hpo.RandomSampler(),
+            serve_storage=True,
+        )
+        trials = study.get_trials()
+        assert len(trials) == 10
+        assert [t.number for t in trials] == list(range(10))  # dense numbering
+        finished = [t for t in trials if t.state == TrialState.COMPLETE]
+        assert len(finished) == 10
+        # the two enqueued WAITING trials were each claimed exactly once
+        fixed = [t for t in trials if "fixed_params" in t.system_attrs]
+        assert sorted(t.params["x"] for t in fixed) == [-1.0, 1.0]
+        assert study.best_value == pytest.approx(0.0)
