@@ -53,6 +53,14 @@ def main() -> None:
             ("sampler_time_ratio_gp_vs_tpecmaes", f"{mean_tpe_time*1e6:.0f}",
              f"{mean_gp_time/max(mean_tpe_time,1e-9):.1f}x")
         )
+        ask = samplers.ask_throughput(
+            n_trials=2000 if args.full else 800, n_params=16,
+            n_asks=30 if args.full else 10, n_asks_legacy=5 if args.full else 3,
+        )
+        csv_rows.append(
+            ("sampler_ask_throughput_tpe", f"{ask['vectorized_ms_per_ask']*1e3:.0f}",
+             f"speedup={ask['speedup']:.1f}x@{ask['n_trials']}x{ask['n_params']}")
+        )
 
     if "pruning" in sections:
         from . import pruning

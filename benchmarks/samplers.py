@@ -1,21 +1,29 @@
 """Paper §5.1 (Fig. 9 + Fig. 10): sampler comparison on the 56-case black-box
-suite with paired Mann-Whitney U tests, plus per-trial wall time.
+suite with paired Mann-Whitney U tests, plus per-trial wall time, plus the
+**ask-throughput** benchmark for the columnar observation backbone (vectorized
+TPE vs the frozen pre-refactor scalar path in ``samplers/_legacy.py``).
 
 Default budget is scaled for CPU CI (full paper scale: repeats=30, trials=80,
-all 56 cases — pass --full).
+all 56 cases — pass --full).  ``python -m benchmarks.samplers --ask-bench``
+runs only the throughput comparison and writes ``BENCH_samplers.json`` (CI
+uploads it as an artifact).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import math
 import time
 
 import numpy as np
 
 import repro.core as hpo
+from repro.core.distributions import FloatDistribution
+from repro.core.frozen import TrialState
 from .testbed import CASES
 
-__all__ = ["run", "mann_whitney_u"]
+__all__ = ["run", "mann_whitney_u", "ask_throughput", "main"]
 
 
 def mann_whitney_u(a, b) -> float:
@@ -108,3 +116,126 @@ def run(
         if verbose:
             print(f"[samplers] tpe+cmaes vs {rival:8s}: {wins}W/{ties}T/{losses}L (alpha={alpha})")
     return {"results": results, "times": times, "summary": summary}
+
+
+# -- ask-throughput: columnar backbone vs pre-refactor scalar path ---------------
+
+
+def _seed_history(study, n_trials: int, n_params: int, seed: int) -> None:
+    """Populate a study with ``n_trials`` completed trials over ``n_params``
+    mixed (linear/log) float parameters, writing straight to storage."""
+    storage, sid = study._storage, study._study_id
+    rng = np.random.RandomState(seed)
+    dists = [
+        FloatDistribution(-5, 5) if j % 2 == 0 else FloatDistribution(1e-6, 1.0, log=True)
+        for j in range(n_params)
+    ]
+    for _ in range(n_trials):
+        tid = storage.create_new_trial(sid)
+        loss = 0.0
+        for j, d in enumerate(dists):
+            if d.log:
+                v = float(np.exp(rng.uniform(np.log(1e-6), 0.0)))
+                loss += abs(np.log10(v) + 3)
+            else:
+                v = float(rng.uniform(-5, 5))
+                loss += v * v
+            storage.set_trial_param(tid, f"p{j}", v, d)
+        storage.set_trial_state_values(tid, TrialState.COMPLETE, [loss])
+
+
+def _ask_once(study, n_params: int) -> None:
+    trial = study.ask()
+    for j in range(n_params):
+        if j % 2 == 0:
+            trial.suggest_float(f"p{j}", -5, 5)
+        else:
+            trial.suggest_float(f"p{j}", 1e-6, 1.0, log=True)
+
+
+def _bench_sampler(sampler, n_trials: int, n_params: int, n_asks: int, seed: int) -> float:
+    """Median ms per ask (create trial + suggest every parameter) against a
+    fixed completed history of ``n_trials``."""
+    study = hpo.create_study(sampler=sampler)
+    _seed_history(study, n_trials, n_params, seed)
+    _ask_once(study, n_params)  # warm caches / store ingest outside the clock
+    times = []
+    for _ in range(n_asks):
+        t0 = time.perf_counter()
+        _ask_once(study, n_params)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e3)
+
+
+def ask_throughput(
+    n_trials: int = 2000,
+    n_params: int = 16,
+    n_asks: int = 30,
+    n_asks_legacy: int = 5,
+    seed: int = 0,
+    verbose: bool = True,
+) -> dict:
+    """TPE ask throughput: vectorized columnar path vs the frozen
+    pre-refactor scalar path (``samplers/_legacy.py``), same seeded history.
+    The acceptance bar for the backbone is >= 10x at 2000 trials x 16
+    params."""
+    from repro.core.samplers._legacy import LegacyTPESampler
+
+    new_ms = _bench_sampler(hpo.TPESampler(seed=1), n_trials, n_params, n_asks, seed)
+    legacy_ms = _bench_sampler(
+        LegacyTPESampler(seed=1), n_trials, n_params, n_asks_legacy, seed
+    )
+    out = {
+        "n_trials": n_trials,
+        "n_params": n_params,
+        "n_asks": n_asks,
+        "vectorized_ms_per_ask": new_ms,
+        "legacy_ms_per_ask": legacy_ms,
+        "speedup": legacy_ms / max(new_ms, 1e-9),
+    }
+    if verbose:
+        print(
+            f"[samplers] TPE ask throughput @ {n_trials} trials x {n_params} params: "
+            f"vectorized {new_ms:.2f} ms/ask, legacy {legacy_ms:.2f} ms/ask "
+            f"-> {out['speedup']:.1f}x",
+            flush=True,
+        )
+    return out
+
+
+def write_bench_json(payload: dict, path: str = "BENCH_samplers.json") -> None:
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"[samplers] wrote {path}", flush=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description="sampler benchmarks")
+    ap.add_argument("--ask-bench", action="store_true",
+                    help="run only the ask-throughput comparison")
+    ap.add_argument("--trials", type=int, default=2000)
+    ap.add_argument("--params", type=int, default=16)
+    ap.add_argument("--asks", type=int, default=30)
+    ap.add_argument("--full", action="store_true", help="paper-scale comparison budgets")
+    ap.add_argument("--out", default="BENCH_samplers.json")
+    args = ap.parse_args(argv)
+
+    payload: dict = {}
+    payload["ask_throughput"] = ask_throughput(
+        n_trials=args.trials, n_params=args.params, n_asks=args.asks
+    )
+    if not args.ask_bench:
+        budget = (
+            dict(n_cases=56, n_trials=80, repeats=30) if args.full
+            else dict(n_cases=8, n_trials=30, repeats=3)
+        )
+        out = run(**budget)
+        payload["comparison"] = {
+            "summary": out["summary"],
+            "times": {f"{c}/{s}": v for (c, s), v in out["times"].items()},
+        }
+    write_bench_json(payload, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,7 @@ from .distributions import (
 from .exceptions import DuplicatedStudyError, StorageInternalError, TrialPruned
 from .frozen import FrozenTrial, StudyDirection, TrialState
 from .importance import param_importances, spearman_importances
+from .records import ObservationStore
 from .pruners import (
     BasePruner,
     HyperbandPruner,
@@ -83,6 +84,7 @@ __all__ = [
     "run_workers", "worker_main", "RetryFailedTrialCallback",
     "TrialPruned", "DuplicatedStudyError", "StorageInternalError",
     "intersection_search_space", "IntersectionSearchSpace",
+    "ObservationStore",
     "param_importances", "spearman_importances",
     "render_dashboard", "save_dashboard",
 ]

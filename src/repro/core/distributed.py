@@ -33,6 +33,7 @@ def worker_main(
     heartbeat_interval: float | None = 2.0,
     timeout: float | None = None,
     use_cache: bool = True,
+    ask_batch: int = 1,
 ) -> None:
     """Entry point executed inside each worker process.
 
@@ -40,6 +41,8 @@ def worker_main(
     exploration streams are distinct but reproducible (``None`` keeps the
     nondeterministic default).  ``use_cache`` wraps ``remote://`` storage in
     :class:`CachedStorage` so per-``ask`` reads stay incremental.
+    ``ask_batch > 1`` claims that many trials per storage round trip
+    (``Study.ask(n)``) — the remote-latency amortization knob.
     """
     storage = get_storage(
         storage_url, cache=use_cache and storage_url.startswith("remote://")
@@ -53,7 +56,10 @@ def worker_main(
     # different workers must explore differently
     study.sampler.reseed_rng(seed_offset)
     study.heartbeat_interval = heartbeat_interval
-    study.optimize(objective, n_trials=n_trials, timeout=timeout, catch=(Exception,))
+    study.optimize(
+        objective, n_trials=n_trials, timeout=timeout, catch=(Exception,),
+        ask_batch=ask_batch,
+    )
     storage.close()
 
 
@@ -70,6 +76,8 @@ def run_workers(
     serve_storage: bool = False,
     serve_host: str = "127.0.0.1",
     use_cache: bool = True,
+    ask_batch: int = 1,
+    auth_token: str | None = None,
 ) -> float:
     """Launch ``n_workers`` processes optimizing the same study; returns the
     wall-clock duration.  Storage must be shareable across processes
@@ -79,12 +87,21 @@ def run_workers(
     :class:`StorageServer` and hands workers its ``remote://`` URL instead —
     the pattern for fleets without a shared filesystem: serve once (e.g. over
     a SQLite file local to the server host), point every node at the URL.
+    ``auth_token`` arms the server's shared-secret handshake and embeds the
+    token in the workers' URL; ``ask_batch`` makes each worker claim that
+    many trials per round trip.
     """
     server = None
     worker_url = storage_url
     if serve_storage:
-        server = StorageServer(get_storage(storage_url), host=serve_host).start()
-        worker_url = server.url
+        server = StorageServer(
+            get_storage(storage_url), host=serve_host, auth_token=auth_token
+        ).start()
+        worker_url = (
+            f"remote://{auth_token}@{server.host}:{server.port}"
+            if auth_token
+            else server.url
+        )
     ctx = mp.get_context(start_method)
     procs = []
     t0 = time.time()
@@ -99,6 +116,7 @@ def run_workers(
                     seed_offset=i,
                     timeout=timeout,
                     use_cache=use_cache,
+                    ask_batch=ask_batch,
                 ),
             )
             p.start()

@@ -16,6 +16,22 @@ Every parameter value is stored as a float ("internal repr"):
 
 ``to_external_repr``/``to_internal_repr`` convert between the two.  This is
 the same trick Optuna uses so that storage backends only ever persist floats.
+
+Model space (array codecs)
+--------------------------
+Samplers model parameters in a second, *model-space* encoding where numeric
+domains are additionally log-transformed when ``log=True`` (categoricals stay
+choice indices).  The vectorized codecs convert whole arrays at once — this
+is the encoding the columnar observation store (``core/records.py``) keeps
+its ``(n_trials, n_params)`` matrix in:
+
+* ``to_internal(xs)``     external values -> model-space float array
+* ``from_internal(xs)``   model-space array -> internal-repr float array
+  (exp of log space, step rounding, clipping to the domain)
+* ``internal_bounds()``   the model-space domain, with the TPE-style ±0.5
+  integer expansion available via ``expand_int=True``
+* ``internal_to_unit()``  model space -> [0, 1] (the CMA-ES/GP coordinate)
+* ``sample_uniform(rng, size)``  vectorized uniform draws in internal repr
 """
 
 from __future__ import annotations
@@ -23,6 +39,8 @@ from __future__ import annotations
 import json
 import math
 from typing import Any, Sequence
+
+import numpy as np
 
 __all__ = [
     "BaseDistribution",
@@ -32,7 +50,17 @@ __all__ = [
     "distribution_to_json",
     "json_to_distribution",
     "check_distribution_compatibility",
+    "round_to_step",
 ]
+
+_EPS = 1e-12
+
+
+def round_to_step(x, low: float, high: float, step: "float | int"):
+    """Snap ``x`` (scalar or array) onto the grid ``low + k*step``."""
+    if isinstance(x, np.ndarray):
+        return low + np.round((x - low) / step) * step
+    return low + round((x - low) / step) * step
 
 
 class BaseDistribution:
@@ -43,6 +71,37 @@ class BaseDistribution:
 
     def to_internal_repr(self, external: Any) -> float:
         return float(external)
+
+    # -- vectorized model-space codecs ----------------------------------------
+
+    def to_internal(self, external: Sequence[Any]) -> np.ndarray:
+        """Vectorized: external values -> model-space float array."""
+        raise NotImplementedError
+
+    def from_internal(self, internal: np.ndarray) -> np.ndarray:
+        """Vectorized: model-space array -> internal-repr float array
+        (rounded onto the domain; convert each element with
+        ``to_external_repr`` to recover external values)."""
+        raise NotImplementedError
+
+    def internal_bounds(self, expand_int: bool = False) -> tuple[float, float]:
+        """The model-space domain ``[low, high]``.  ``expand_int=True`` widens
+        integer domains by ±0.5 (the continuous relaxation TPE models)."""
+        raise NotImplementedError
+
+    def internal_to_unit(self, internal: np.ndarray) -> np.ndarray:
+        """Model space -> [0, 1] coordinates (CMA-ES/GP design matrices)."""
+        low, high = self.internal_bounds()
+        xs = np.asarray(internal, dtype=float)
+        if high > low:
+            return (xs - low) / (high - low)
+        return np.full_like(xs, 0.5)
+
+    def sample_uniform(self, rng: np.random.RandomState, size: int) -> np.ndarray:
+        """Vectorized uniform draws in *internal repr* (honoring log/step).
+        Stream-compatible with the historical scalar draws: ``size=1``
+        consumes the RNG exactly as one scalar call did."""
+        raise NotImplementedError
 
     def single(self) -> bool:
         """True if the domain contains exactly one value."""
@@ -101,6 +160,33 @@ class FloatDistribution(BaseDistribution):
     def to_external_repr(self, internal: float) -> float:
         return float(internal)
 
+    def to_internal(self, external: Sequence[Any]) -> np.ndarray:
+        xs = np.asarray(external, dtype=float)
+        if self.log:
+            return np.log(np.maximum(xs, _EPS))
+        return xs
+
+    def from_internal(self, internal: np.ndarray) -> np.ndarray:
+        xs = np.asarray(internal, dtype=float)
+        if self.log:
+            xs = np.exp(xs)
+        if self.step is not None:
+            xs = round_to_step(xs, self.low, self.high, self.step)
+        return np.clip(xs, self.low, self.high)
+
+    def internal_bounds(self, expand_int: bool = False) -> tuple[float, float]:
+        if self.log:
+            return math.log(self.low), math.log(self.high)
+        return self.low, self.high
+
+    def sample_uniform(self, rng: np.random.RandomState, size: int) -> np.ndarray:
+        if self.log:
+            return np.exp(rng.uniform(np.log(self.low), np.log(self.high), size=size))
+        if self.step is not None:
+            n = int(np.floor((self.high - self.low) / self.step + 1e-12)) + 1
+            return self.low + rng.randint(n, size=size) * self.step
+        return rng.uniform(self.low, self.high, size=size)
+
     def _asdict(self) -> dict:
         return {"low": self.low, "high": self.high, "log": self.log, "step": self.step}
 
@@ -131,6 +217,37 @@ class IntDistribution(BaseDistribution):
 
     def to_external_repr(self, internal: float) -> int:
         return int(round(internal))
+
+    def to_internal(self, external: Sequence[Any]) -> np.ndarray:
+        xs = np.asarray(external, dtype=float)
+        if self.log:
+            return np.log(np.maximum(xs, _EPS))
+        return xs
+
+    def from_internal(self, internal: np.ndarray) -> np.ndarray:
+        xs = np.asarray(internal, dtype=float)
+        if self.log:
+            xs = np.exp(xs)
+        xs = round_to_step(xs, self.low, self.high, self.step)
+        return np.clip(xs, self.low, self.high)
+
+    def internal_bounds(self, expand_int: bool = False) -> tuple[float, float]:
+        low, high = float(self.low), float(self.high)
+        if expand_int:
+            low, high = low - 0.5, high + 0.5
+            if self.log:
+                low = max(low, 0.5)
+        if self.log:
+            return math.log(low), math.log(high)
+        return low, high
+
+    def sample_uniform(self, rng: np.random.RandomState, size: int) -> np.ndarray:
+        if self.log:
+            lo, hi = np.log(self.low - 0.5), np.log(self.high + 0.5)
+            v = np.clip(np.round(np.exp(rng.uniform(lo, hi, size=size))), self.low, self.high)
+            return v.astype(float)
+        n = (self.high - self.low) // self.step + 1
+        return (self.low + rng.randint(n, size=size) * self.step).astype(float)
 
     def _asdict(self) -> dict:
         return {"low": self.low, "high": self.high, "log": self.log, "step": self.step}
@@ -174,6 +291,26 @@ class CategoricalDistribution(BaseDistribution):
             if c == external:
                 return float(i)
         raise ValueError(f"{external!r} is not one of the choices {self.choices!r}")
+
+    def to_internal(self, external: Sequence[Any]) -> np.ndarray:
+        # choice matching is type-aware (see to_internal_repr) so this stays a
+        # per-element loop; it only runs on the few rows of an incremental
+        # ingest, never on the ask hot path
+        return np.asarray([self.to_internal_repr(v) for v in external], dtype=float)
+
+    def from_internal(self, internal: np.ndarray) -> np.ndarray:
+        xs = np.round(np.asarray(internal, dtype=float))
+        return np.clip(xs, 0.0, float(len(self.choices) - 1))
+
+    def internal_bounds(self, expand_int: bool = False) -> tuple[float, float]:
+        return 0.0, float(len(self.choices) - 1)
+
+    def internal_to_unit(self, internal: np.ndarray) -> np.ndarray:
+        # CMA-ES/GP exclude categoricals; the unit coordinate is the index
+        return np.asarray(internal, dtype=float)
+
+    def sample_uniform(self, rng: np.random.RandomState, size: int) -> np.ndarray:
+        return rng.randint(len(self.choices), size=size).astype(float)
 
     def _asdict(self) -> dict:
         return {"choices": list(self.choices)}

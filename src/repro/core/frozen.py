@@ -92,7 +92,24 @@ class FrozenTrial:
         return self.datetime_complete - self.datetime_start
 
     def copy(self) -> "FrozenTrial":
-        return copy.deepcopy(self)
+        """Structured copy on the suggest hot path: containers are fresh
+        dicts/lists, leaf values are shared.  Params, objective values, and
+        intermediate values are immutable scalars; distributions are never
+        mutated after construction.  Only attr *values* (arbitrary JSON) are
+        deep-copied, since callers may mutate those in place."""
+        t = FrozenTrial.__new__(FrozenTrial)
+        t.number = self.number
+        t.state = self.state
+        t.values = list(self.values) if self.values is not None else None
+        t.params = dict(self.params)
+        t.distributions = dict(self.distributions)
+        t.intermediate_values = dict(self.intermediate_values)
+        t.user_attrs = copy.deepcopy(self.user_attrs)
+        t.system_attrs = copy.deepcopy(self.system_attrs)
+        t._trial_id = self._trial_id
+        t.datetime_start = self.datetime_start
+        t.datetime_complete = self.datetime_complete
+        return t
 
     def __repr__(self) -> str:
         return (

@@ -1,0 +1,247 @@
+"""Columnar observation store — the sampler stack's shared array substrate.
+
+Before this module existed, every ``ask`` re-materialized the full trial
+history as Python ``FrozenTrial`` lists and looped per-parameter in scalar
+numpy — O(trials x params) interpreter work per trial.  The
+:class:`ObservationStore` replaces that with an incrementally-maintained
+structure-of-arrays view of *finished* trials:
+
+* one ``(n_trials, n_params)`` float64 matrix in **model space**
+  (log-transformed numerics / categorical indices; see
+  ``BaseDistribution.to_internal``), NaN where a trial did not suggest a
+  parameter (define-by-run conditionals),
+* aligned ``numbers`` / ``states`` / ``values`` (first objective) /
+  ``last_intermediate_values`` vectors.
+
+Maintenance is incremental and storage-agnostic:
+
+* ``refresh()`` first polls the storage's monotonic **revision counter**
+  (``get_trials_revision``) — if nothing changed since the last look, the
+  refresh is O(1) and touches no trial data,
+* otherwise it fetches only the suffix ``number >= watermark`` via
+  ``get_all_trials(since=...)`` (the same hook :class:`CachedStorage` uses,
+  so the two compose: through a cached remote backend a refresh is at most
+  one revision RPC),
+* finished trials are immutable (BaseStorage contract), so each is encoded
+  into the matrix exactly once, O(n_params) amortized per ``Study.tell``.
+
+Out-of-order finishes (trial #5 completing before #3) are appended as they
+arrive; the number-sorted view is re-materialized lazily, only when new rows
+landed.  Returned arrays are read-only views shared between callers — never
+mutate them.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from .frozen import TrialState
+from .storage.base import get_trials_since
+
+if TYPE_CHECKING:
+    from .distributions import BaseDistribution
+    from .storage.base import BaseStorage
+
+__all__ = ["ObservationStore"]
+
+_MIN_CAPACITY = 32
+
+
+class ObservationStore:
+    def __init__(self, storage: "BaseStorage", study_id: int):
+        self._storage = storage
+        self._study_id = study_id
+        self._lock = threading.RLock()
+
+        self._n = 0
+        self._capacity = 0
+        self._numbers = np.empty(0, dtype=np.int64)
+        self._states = np.empty(0, dtype=np.int64)
+        self._values = np.empty(0)
+        self._last_iv = np.empty(0)
+        self._cols: dict[str, np.ndarray] = {}
+        self._dists: dict[str, "BaseDistribution"] = {}
+
+        self._watermark = 0          # every number < watermark is ingested
+        self._finished: set[int] = set()  # ingested numbers >= watermark
+        self._revision: int | None = None
+        self._revision_supported = True
+
+        self._dirty = False
+        self._view_numbers = self._numbers
+        self._view_states = self._states
+        self._view_values = self._values
+        self._view_last_iv = self._last_iv
+        self._view_cols: dict[str, np.ndarray] = {}
+
+        #: bumped whenever new observations land; samplers key caches on it
+        self.version = 0
+
+    # -- maintenance -----------------------------------------------------------
+
+    def refresh(self) -> None:
+        """Bring the store up to date with storage.  O(1) when the storage
+        revision is unchanged; otherwise one incremental suffix fetch."""
+        with self._lock:
+            rev: int | None = None
+            if self._revision_supported:
+                get_rev = getattr(self._storage, "get_trials_revision", None)
+                if get_rev is None:
+                    self._revision_supported = False
+                else:
+                    try:
+                        rev = get_rev(self._study_id)
+                    except NotImplementedError:
+                        self._revision_supported = False
+            if rev is not None and rev == self._revision:
+                return
+            # capture the revision *before* reading trial data: concurrent
+            # writes between the two reads surface as a new revision next time
+            fresh = get_trials_since(
+                self._storage, self._study_id, self._watermark, deepcopy=False
+            )
+            for t in fresh:
+                if not t.state.is_finished() or t.number in self._finished:
+                    continue
+                self._append(t)
+            while self._watermark in self._finished:
+                self._finished.discard(self._watermark)
+                self._watermark += 1
+            self._revision = rev
+
+    def _append(self, trial) -> None:
+        if self._n == self._capacity:
+            self._grow(max(_MIN_CAPACITY, 2 * self._capacity))
+        row = self._n
+        self._numbers[row] = trial.number
+        self._states[row] = int(trial.state)
+        self._values[row] = trial.values[0] if trial.values else np.nan
+        last = trial.last_step
+        self._last_iv[row] = (
+            trial.intermediate_values[last] if last is not None else np.nan
+        )
+        for name, dist in trial.distributions.items():
+            col = self._cols.get(name)
+            if col is None:
+                col = np.full(self._capacity, np.nan)
+                self._cols[name] = col
+            col[row] = float(dist.to_internal([trial.params[name]])[0])
+            self._dists[name] = dist
+        self._n += 1
+        self._finished.add(trial.number)
+        self._dirty = True
+        self.version += 1
+
+    def _grow(self, capacity: int) -> None:
+        def enlarge(arr: np.ndarray, fill) -> np.ndarray:
+            out = np.full(capacity, fill, dtype=arr.dtype)
+            out[: self._n] = arr[: self._n]
+            return out
+
+        self._numbers = enlarge(self._numbers, 0)
+        self._states = enlarge(self._states, 0)
+        self._values = enlarge(self._values, np.nan)
+        self._last_iv = enlarge(self._last_iv, np.nan)
+        for name in self._cols:
+            self._cols[name] = enlarge(self._cols[name], np.nan)
+        self._capacity = capacity
+
+    def _materialize(self) -> None:
+        if not self._dirty:
+            return
+        n = self._n
+        order = np.argsort(self._numbers[:n], kind="stable")
+
+        def view(arr: np.ndarray) -> np.ndarray:
+            out = arr[:n][order]
+            out.flags.writeable = False
+            return out
+
+        self._view_numbers = view(self._numbers)
+        self._view_states = view(self._states)
+        self._view_values = view(self._values)
+        self._view_last_iv = view(self._last_iv)
+        self._view_cols = {name: view(col) for name, col in self._cols.items()}
+        self._dirty = False
+
+    # -- columnar accessors (all number-ordered, read-only) ---------------------
+
+    @property
+    def n_observations(self) -> int:
+        with self._lock:
+            return self._n
+
+    @property
+    def numbers(self) -> np.ndarray:
+        with self._lock:
+            self._materialize()
+            return self._view_numbers
+
+    @property
+    def states(self) -> np.ndarray:
+        with self._lock:
+            self._materialize()
+            return self._view_states
+
+    @property
+    def values(self) -> np.ndarray:
+        """First objective value per finished trial (NaN when absent)."""
+        with self._lock:
+            self._materialize()
+            return self._view_values
+
+    @property
+    def last_intermediate_values(self) -> np.ndarray:
+        with self._lock:
+            self._materialize()
+            return self._view_last_iv
+
+    def param_names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._cols)
+
+    def column(self, name: str) -> "np.ndarray | None":
+        """Model-space values of one parameter (NaN where not suggested)."""
+        with self._lock:
+            self._materialize()
+            return self._view_cols.get(name)
+
+    def distribution(self, name: str) -> "BaseDistribution | None":
+        with self._lock:
+            return self._dists.get(name)
+
+    def matrix(self, names: "list[str] | None" = None) -> np.ndarray:
+        """The ``(n_trials, n_params)`` model-space matrix (NaN = missing)."""
+        with self._lock:
+            self._materialize()
+            names = self.param_names() if names is None else names
+            if not names:
+                return np.empty((self._n, 0))
+            cols = [
+                self._view_cols.get(n, np.full(self._n, np.nan)) for n in names
+            ]
+            return np.stack(cols, axis=1) if self._n else np.empty((0, len(names)))
+
+    def design_matrix(self, names: list[str]) -> tuple[np.ndarray, np.ndarray]:
+        """``(X, y)`` over COMPLETE trials that carry a value and suggested
+        every parameter in ``names`` — the rows relational samplers (CMA-ES,
+        GP) train on, straight from the store with no re-encoding."""
+        with self._lock:
+            self._materialize()
+            mask = (self._view_states == int(TrialState.COMPLETE)) & ~np.isnan(
+                self._view_values
+            )
+            cols = []
+            for name in names:
+                col = self._view_cols.get(name)
+                if col is None:
+                    return np.empty((0, len(names))), np.empty(0)
+                mask = mask & ~np.isnan(col)
+                cols.append(col)
+            if not names:
+                return np.empty((int(mask.sum()), 0)), self._view_values[mask]
+            X = np.stack([c[mask] for c in cols], axis=1)
+            return X, self._view_values[mask]

@@ -19,8 +19,16 @@ __all__ = [
 ]
 
 
-def make_sampler(name: str, seed: int | None = None) -> BaseSampler:
-    """Factory used by CLIs and benchmarks (``--sampler tpe+cmaes`` etc.)."""
+def make_sampler(
+    name: str,
+    seed: int | None = None,
+    search_space: "dict | None" = None,
+) -> BaseSampler:
+    """Factory used by CLIs and benchmarks (``--sampler tpe+cmaes`` etc.).
+
+    ``grid`` needs the grid declared up front (it cannot be define-by-run):
+    pass ``search_space={"param": [choices, ...], ...}``.
+    """
     name = name.lower()
     if name == "random":
         return RandomSampler(seed=seed)
@@ -35,4 +43,11 @@ def make_sampler(name: str, seed: int | None = None) -> BaseSampler:
         )
     if name == "gp":
         return GPSampler(seed=seed)
+    if name == "grid":
+        if search_space is None:
+            raise ValueError(
+                "the grid sampler needs its cells declared up front: "
+                "make_sampler('grid', search_space={'param': [values, ...]})"
+            )
+        return GridSampler(search_space, seed=seed)
     raise ValueError(f"unknown sampler {name!r}")

@@ -1,0 +1,601 @@
+"""Frozen pre-refactor scalar sampler implementations (the PR-1-era hot path).
+
+These are verbatim copies of the samplers as they existed before the columnar
+observation backbone landed: every ``ask`` re-materializes the full trial
+history as ``FrozenTrial`` lists and loops per-parameter in scalar numpy.
+
+They exist for two purposes only:
+
+* the seeded **sample-parity suite** (``tests/test_vectorized_parity.py``)
+  asserts the vectorized samplers produce bit-identical samples, and
+* the **ask-throughput benchmark** (``benchmarks/samplers.py``) measures the
+  speedup of the columnar path against this baseline.
+
+Do not modify and do not use in new code.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from typing import TYPE_CHECKING, Any, Callable, Mapping, Sequence
+
+import numpy as np
+
+from ..distributions import (
+    BaseDistribution,
+    CategoricalDistribution,
+    FloatDistribution,
+    IntDistribution,
+)
+from ..frozen import FrozenTrial, StudyDirection, TrialState
+from ..search_space import IntersectionSearchSpace
+from .base import BaseSampler
+from .cmaes import CMA
+
+if TYPE_CHECKING:
+    from ..study import Study
+
+__all__ = [
+    "LegacyRandomSampler",
+    "LegacyGridSampler",
+    "LegacyTPESampler",
+    "LegacyCmaEsSampler",
+    "LegacyGPSampler",
+]
+
+EPS = 1e-12
+
+_GRID_KEY = "grid_sampler:grid_id"
+
+
+def round_to_step(x: float, low: float, high: float, step: float | int) -> float:
+    return low + round((x - low) / step) * step
+
+
+def sample_uniform_internal(rng: np.random.RandomState, dist: BaseDistribution) -> float:
+    """Pre-refactor scalar uniform sample in internal representation."""
+    if isinstance(dist, FloatDistribution):
+        if dist.log:
+            return float(np.exp(rng.uniform(np.log(dist.low), np.log(dist.high))))
+        if dist.step is not None:
+            n = int(np.floor((dist.high - dist.low) / dist.step + 1e-12)) + 1
+            return float(dist.low + rng.randint(n) * dist.step)
+        return float(rng.uniform(dist.low, dist.high))
+    if isinstance(dist, IntDistribution):
+        if dist.log:
+            lo, hi = np.log(dist.low - 0.5), np.log(dist.high + 0.5)
+            v = int(np.clip(np.round(np.exp(rng.uniform(lo, hi))), dist.low, dist.high))
+            return float(v)
+        n = (dist.high - dist.low) // dist.step + 1
+        return float(dist.low + rng.randint(n) * dist.step)
+    if isinstance(dist, CategoricalDistribution):
+        return float(rng.randint(len(dist.choices)))
+    raise TypeError(f"unknown distribution {dist!r}")
+
+
+class LegacyRandomSampler(BaseSampler):
+    def __init__(self, seed: int | None = None):
+        self._rng = np.random.RandomState(seed)
+
+    def reseed_rng(self, seed: int | None = None) -> None:
+        self._rng = np.random.RandomState(seed)
+
+    def sample_independent(
+        self,
+        study: "Study",
+        trial: FrozenTrial,
+        param_name: str,
+        param_distribution: BaseDistribution,
+    ) -> Any:
+        internal = sample_uniform_internal(self._rng, param_distribution)
+        return param_distribution.to_external_repr(internal)
+
+
+class LegacyGridSampler(BaseSampler):
+    def __init__(self, search_space: Mapping[str, Sequence[Any]], seed: int | None = None):
+        self._space = {k: list(v) for k, v in sorted(search_space.items())}
+        self._grid = list(itertools.product(*self._space.values()))
+        self._rng = np.random.RandomState(seed)
+
+    def __len__(self) -> int:
+        return len(self._grid)
+
+    def _taken(self, study: "Study") -> set[int]:
+        taken: set[int] = set()
+        for t in study.get_trials(deepcopy=False):
+            gid = t.system_attrs.get(_GRID_KEY)
+            if gid is not None and (t.state.is_finished() or t.state == TrialState.RUNNING):
+                taken.add(int(gid))
+        return taken
+
+    def sample_relative(
+        self, study: "Study", trial: FrozenTrial, search_space: dict[str, BaseDistribution]
+    ) -> dict[str, Any]:
+        taken = self._taken(study)
+        free = [i for i in range(len(self._grid)) if i not in taken]
+        if not free:
+            gid = int(self._rng.randint(len(self._grid)))
+        else:
+            gid = free[0]
+        study._storage.set_trial_system_attr(trial.trial_id, _GRID_KEY, gid)
+        return dict(zip(self._space.keys(), self._grid[gid]))
+
+    def infer_relative_search_space(
+        self, study: "Study", trial: FrozenTrial
+    ) -> dict[str, BaseDistribution]:
+        return {}
+
+    def sample_independent(
+        self, study: "Study", trial: FrozenTrial, param_name: str,
+        param_distribution: BaseDistribution,
+    ) -> Any:
+        internal = sample_uniform_internal(self._rng, param_distribution)
+        return param_distribution.to_external_repr(internal)
+
+
+# -- legacy TPE ------------------------------------------------------------------
+
+
+def default_gamma(n: int) -> int:
+    return min(int(np.ceil(0.1 * n)), 25)
+
+
+def default_weights(n: int) -> np.ndarray:
+    if n == 0:
+        return np.asarray([])
+    if n < 25:
+        return np.ones(n)
+    ramp = np.linspace(1.0 / n, 1.0, n - 25)
+    flat = np.ones(25)
+    return np.concatenate([ramp, flat])
+
+
+class _LegacyParzenEstimator:
+    """1-D truncated-Gaussian mixture over [low, high] (+ a wide prior)."""
+
+    def __init__(
+        self,
+        mus: np.ndarray,
+        low: float,
+        high: float,
+        weights: np.ndarray,
+        consider_prior: bool = True,
+        prior_weight: float = 1.0,
+        magic_clip: bool = True,
+    ):
+        mus = np.asarray(mus, dtype=float)
+        order = np.argsort(mus)
+        mus = mus[order]
+        weights = np.asarray(weights, dtype=float)[order]
+
+        if consider_prior or len(mus) == 0:
+            prior_mu = 0.5 * (low + high)
+            prior_sigma = high - low if high > low else 1.0
+            idx = np.searchsorted(mus, prior_mu)
+            mus = np.insert(mus, idx, prior_mu)
+            weights = np.insert(weights, idx, prior_weight)
+            prior_pos = idx
+        else:
+            prior_pos = None
+
+        n = len(mus)
+        sigmas = np.empty(n)
+        if n == 1:
+            sigmas[0] = high - low if high > low else 1.0
+        else:
+            padded = np.concatenate([[low], mus, [high]])
+            left = mus - padded[:-2]
+            right = padded[2:] - mus
+            sigmas = np.maximum(left, right)
+        if prior_pos is not None:
+            sigmas[prior_pos] = high - low if high > low else 1.0
+        maxsigma = high - low if high > low else 1.0
+        minsigma = maxsigma / min(100.0, 1.0 + n) if magic_clip else EPS
+        self.mus = mus
+        self.sigmas = np.clip(sigmas, minsigma, maxsigma)
+        self.weights = weights / max(weights.sum(), EPS)
+        self.low = low
+        self.high = high
+
+    def sample(self, rng: np.random.RandomState, size: int) -> np.ndarray:
+        comp = rng.choice(len(self.mus), size=size, p=self.weights)
+        out = np.empty(size)
+        for i, c in enumerate(comp):
+            v = rng.normal(self.mus[c], self.sigmas[c])
+            for _ in range(16):
+                if self.low <= v <= self.high:
+                    break
+                v = rng.normal(self.mus[c], self.sigmas[c])
+            out[i] = float(np.clip(v, self.low, self.high))
+        return out
+
+    def log_pdf(self, xs: np.ndarray) -> np.ndarray:
+        xs = np.asarray(xs, dtype=float)[:, None]
+        mus = self.mus[None, :]
+        sigmas = self.sigmas[None, :]
+        z = _normal_cdf((self.high - mus) / sigmas) - _normal_cdf((self.low - mus) / sigmas)
+        z = np.maximum(z, EPS)
+        log_comp = (
+            -0.5 * ((xs - mus) / sigmas) ** 2
+            - np.log(sigmas)
+            - 0.5 * math.log(2 * math.pi)
+            - np.log(z)
+        )
+        log_w = np.log(self.weights[None, :] + EPS)
+        return _logsumexp(log_comp + log_w, axis=1)
+
+
+def _normal_cdf(x: np.ndarray) -> np.ndarray:
+    return 0.5 * (1.0 + np.vectorize(math.erf)(np.asarray(x) / math.sqrt(2.0)))
+
+
+def _logsumexp(a: np.ndarray, axis: int) -> np.ndarray:
+    m = np.max(a, axis=axis, keepdims=True)
+    return (m + np.log(np.sum(np.exp(a - m), axis=axis, keepdims=True))).squeeze(axis)
+
+
+class LegacyTPESampler(BaseSampler):
+    def __init__(
+        self,
+        n_startup_trials: int = 10,
+        n_ei_candidates: int = 24,
+        gamma: Callable[[int], int] = default_gamma,
+        weights: Callable[[int], np.ndarray] = default_weights,
+        seed: int | None = None,
+        consider_prior: bool = True,
+        prior_weight: float = 1.0,
+        consider_magic_clip: bool = True,
+        consider_pruned_trials: bool = False,
+    ):
+        self._n_startup = n_startup_trials
+        self._n_ei = n_ei_candidates
+        self._gamma = gamma
+        self._weights = weights
+        self._rng = np.random.RandomState(seed)
+        self._consider_prior = consider_prior
+        self._prior_weight = prior_weight
+        self._magic_clip = consider_magic_clip
+        self._consider_pruned = consider_pruned_trials
+
+    def reseed_rng(self, seed: int | None = None) -> None:
+        self._rng = np.random.RandomState(seed)
+
+    def _observations(
+        self, study: "Study", param_name: str
+    ) -> tuple[np.ndarray, np.ndarray, list[BaseDistribution]]:
+        values, losses, dists = [], [], []
+        sign = 1.0 if study.direction == StudyDirection.MINIMIZE else -1.0
+        states = (
+            (TrialState.COMPLETE, TrialState.PRUNED)
+            if self._consider_pruned
+            else (TrialState.COMPLETE,)
+        )
+        for t in study.get_trials(deepcopy=False, states=states):
+            if param_name not in t.params:
+                continue
+            if t.state == TrialState.COMPLETE:
+                if t.values is None:
+                    continue
+                loss = sign * t.values[0]
+            else:
+                if not t.intermediate_values:
+                    continue
+                loss = sign * t.intermediate_values[t.last_step]
+            if not np.isfinite(loss):
+                continue
+            dist = t.distributions[param_name]
+            values.append(dist.to_internal_repr(t.params[param_name]))
+            losses.append(loss)
+            dists.append(dist)
+        return np.asarray(values), np.asarray(losses), dists
+
+    def sample_independent(
+        self,
+        study: "Study",
+        trial: FrozenTrial,
+        param_name: str,
+        param_distribution: BaseDistribution,
+    ) -> Any:
+        if len(study.directions) > 1:
+            internal = sample_uniform_internal(self._rng, param_distribution)
+            return param_distribution.to_external_repr(internal)
+        values, losses, _ = self._observations(study, param_name)
+        if len(values) < self._n_startup:
+            internal = sample_uniform_internal(self._rng, param_distribution)
+            return param_distribution.to_external_repr(internal)
+
+        n = len(values)
+        n_below = self._gamma(n)
+        order = np.argsort(losses, kind="stable")
+        below_idx, above_idx = order[:n_below], order[n_below:]
+        below, above = values[below_idx], values[above_idx]
+        w_all = self._weights(n)
+
+        w_below = np.asarray([w_all[i] for i in below_idx])
+        w_above = np.asarray([w_all[i] for i in above_idx])
+
+        if isinstance(param_distribution, CategoricalDistribution):
+            internal = self._sample_categorical(param_distribution, below, above, w_below, w_above)
+        else:
+            internal = self._sample_numeric(param_distribution, below, above, w_below, w_above)
+        return param_distribution.to_external_repr(internal)
+
+    def _transform(self, dist: BaseDistribution, xs: np.ndarray) -> np.ndarray:
+        if getattr(dist, "log", False):
+            return np.log(np.maximum(xs, EPS))
+        return xs
+
+    def _untransform(self, dist: BaseDistribution, xs: np.ndarray) -> np.ndarray:
+        if getattr(dist, "log", False):
+            return np.exp(xs)
+        return xs
+
+    def _bounds(self, dist: BaseDistribution) -> tuple[float, float]:
+        low, high = float(dist.low), float(dist.high)
+        if isinstance(dist, IntDistribution):
+            low, high = low - 0.5, high + 0.5
+            if dist.log:
+                low = max(low, 0.5)
+        if getattr(dist, "log", False):
+            return math.log(low), math.log(high)
+        return low, high
+
+    def _sample_numeric(
+        self,
+        dist: BaseDistribution,
+        below: np.ndarray,
+        above: np.ndarray,
+        w_below: np.ndarray,
+        w_above: np.ndarray,
+    ) -> float:
+        low, high = self._bounds(dist)
+        l_est = _LegacyParzenEstimator(
+            self._transform(dist, below), low, high, w_below,
+            self._consider_prior, self._prior_weight, self._magic_clip,
+        )
+        g_est = _LegacyParzenEstimator(
+            self._transform(dist, above), low, high, w_above,
+            self._consider_prior, self._prior_weight, self._magic_clip,
+        )
+        cands = l_est.sample(self._rng, self._n_ei)
+        score = l_est.log_pdf(cands) - g_est.log_pdf(cands)
+        best = cands[int(np.argmax(score))]
+        x = float(self._untransform(dist, np.asarray([best]))[0])
+        if isinstance(dist, IntDistribution):
+            x = float(np.clip(round_to_step(x, dist.low, dist.high, dist.step), dist.low, dist.high))
+        elif isinstance(dist, FloatDistribution):
+            if dist.step is not None:
+                x = float(np.clip(round_to_step(x, dist.low, dist.high, dist.step), dist.low, dist.high))
+            else:
+                x = float(np.clip(x, dist.low, dist.high))
+        return x
+
+    def _sample_categorical(
+        self,
+        dist: CategoricalDistribution,
+        below: np.ndarray,
+        above: np.ndarray,
+        w_below: np.ndarray,
+        w_above: np.ndarray,
+    ) -> float:
+        k = len(dist.choices)
+
+        def weighted_probs(idxs: np.ndarray, ws: np.ndarray) -> np.ndarray:
+            counts = np.full(k, self._prior_weight)
+            for i, w in zip(idxs.astype(int), ws):
+                counts[i] += w
+            return counts / counts.sum()
+
+        p_l = weighted_probs(below, w_below)
+        p_g = weighted_probs(above, w_above)
+        cands = self._rng.choice(k, size=self._n_ei, p=p_l)
+        score = np.log(p_l[cands] + EPS) - np.log(p_g[cands] + EPS)
+        return float(cands[int(np.argmax(score))])
+
+
+# -- legacy CMA-ES ---------------------------------------------------------------
+
+
+def _to_unit(dist: BaseDistribution, external: Any) -> float:
+    v = dist.to_internal_repr(external)
+    if isinstance(dist, (FloatDistribution, IntDistribution)):
+        lo, hi = float(dist.low), float(dist.high)
+        if dist.log:
+            lo, hi = math.log(lo), math.log(hi)
+            v = math.log(max(v, 1e-300))
+        return (v - lo) / (hi - lo) if hi > lo else 0.5
+    return v
+
+
+def _from_unit(dist: BaseDistribution, u: float) -> Any:
+    u = float(np.clip(u, 0.0, 1.0))
+    lo, hi = float(dist.low), float(dist.high)
+    if dist.log:
+        lo_, hi_ = math.log(lo), math.log(hi)
+        v = math.exp(lo_ + u * (hi_ - lo_))
+    else:
+        v = lo + u * (hi - lo)
+    if isinstance(dist, IntDistribution):
+        return int(np.clip(round_to_step(v, dist.low, dist.high, dist.step), dist.low, dist.high))
+    if isinstance(dist, FloatDistribution) and dist.step is not None:
+        return float(np.clip(round_to_step(v, dist.low, dist.high, dist.step), dist.low, dist.high))
+    return float(np.clip(v, lo, hi))
+
+
+class LegacyCmaEsSampler(BaseSampler):
+    def __init__(
+        self,
+        warmup_trials: int = 40,
+        independent_sampler: BaseSampler | None = None,
+        seed: int | None = None,
+        sigma0: float = 0.25,
+    ):
+        self._warmup = warmup_trials
+        self._independent = independent_sampler or LegacyRandomSampler(seed=seed)
+        self._seed = seed
+        self._sigma0 = sigma0
+        self._space_calc = IntersectionSearchSpace()
+
+    def reseed_rng(self, seed: int | None = None) -> None:
+        self._seed = seed
+        self._independent.reseed_rng(seed)
+
+    def infer_relative_search_space(
+        self, study: "Study", trial: FrozenTrial
+    ) -> dict[str, BaseDistribution]:
+        space = self._space_calc.calculate(study)
+        out = {}
+        for name, dist in space.items():
+            if isinstance(dist, CategoricalDistribution) or dist.single():
+                continue
+            out[name] = dist
+        return out if len(out) >= 2 else {}
+
+    def sample_relative(
+        self, study: "Study", trial: FrozenTrial, search_space: dict[str, BaseDistribution]
+    ) -> dict[str, Any]:
+        if not search_space:
+            return {}
+        completed = [
+            t
+            for t in study.get_trials(deepcopy=False, states=(TrialState.COMPLETE,))
+            if t.values is not None
+            and all(n in t.params for n in search_space)
+        ]
+        if len(completed) < self._warmup:
+            return {}
+
+        names = sorted(search_space.keys())
+        sign = 1.0 if study.direction == StudyDirection.MINIMIZE else -1.0
+
+        cma = CMA(
+            mean=np.full(len(names), 0.5),
+            sigma=self._sigma0,
+            seed=self._seed,
+        )
+        replay = completed[self._warmup - 1 :] if self._warmup > 0 else completed
+        batch: list[tuple[np.ndarray, float]] = []
+        for t in replay:
+            x = np.array(
+                [_to_unit(search_space[n], t.params[n]) for n in names], dtype=float
+            )
+            batch.append((x, sign * t.values[0]))
+            if len(batch) == cma.popsize:
+                cma.tell(batch)
+                batch = []
+
+        rng = np.random.RandomState(
+            None if self._seed is None else (self._seed + 7919 * trial.number)
+        )
+        x = cma.ask(rng)
+        return {n: _from_unit(search_space[n], float(v)) for n, v in zip(names, x)}
+
+    def sample_independent(
+        self, study: "Study", trial: FrozenTrial, param_name: str,
+        param_distribution: BaseDistribution,
+    ) -> Any:
+        return self._independent.sample_independent(
+            study, trial, param_name, param_distribution
+        )
+
+
+# -- legacy GP -------------------------------------------------------------------
+
+
+def _matern52(X: np.ndarray, Y: np.ndarray, ls: float) -> np.ndarray:
+    d = np.sqrt(np.maximum(((X[:, None, :] - Y[None, :, :]) ** 2).sum(-1), 1e-30)) / ls
+    s5 = math.sqrt(5.0)
+    return (1 + s5 * d + 5.0 / 3.0 * d * d) * np.exp(-s5 * d)
+
+
+def _ncdf(x: np.ndarray) -> np.ndarray:
+    return 0.5 * (1 + np.vectorize(math.erf)(x / math.sqrt(2)))
+
+
+def _npdf(x: np.ndarray) -> np.ndarray:
+    return np.exp(-0.5 * x * x) / math.sqrt(2 * math.pi)
+
+
+class LegacyGPSampler(BaseSampler):
+    def __init__(
+        self,
+        n_startup_trials: int = 10,
+        n_candidates: int = 512,
+        seed: int | None = None,
+        noise: float = 1e-6,
+    ):
+        self._n_startup = n_startup_trials
+        self._n_candidates = n_candidates
+        self._rng = np.random.RandomState(seed)
+        self._noise = noise
+        self._fallback = LegacyRandomSampler(seed=seed)
+        self._space_calc = IntersectionSearchSpace()
+
+    def reseed_rng(self, seed: int | None = None) -> None:
+        self._rng = np.random.RandomState(seed)
+        self._fallback.reseed_rng(seed)
+
+    def infer_relative_search_space(
+        self, study: "Study", trial: FrozenTrial
+    ) -> dict[str, BaseDistribution]:
+        space = self._space_calc.calculate(study)
+        return {
+            n: d
+            for n, d in space.items()
+            if not isinstance(d, CategoricalDistribution) and not d.single()
+        }
+
+    def sample_relative(
+        self, study: "Study", trial: FrozenTrial, search_space: dict[str, BaseDistribution]
+    ) -> dict[str, Any]:
+        if not search_space:
+            return {}
+        names = sorted(search_space)
+        sign = 1.0 if study.direction == StudyDirection.MINIMIZE else -1.0
+        X, y = [], []
+        for t in study.get_trials(deepcopy=False, states=(TrialState.COMPLETE,)):
+            if t.values is None or not all(n in t.params for n in names):
+                continue
+            X.append([_to_unit(search_space[n], t.params[n]) for n in names])
+            y.append(sign * t.values[0])
+        if len(X) < self._n_startup:
+            return {}
+        X = np.asarray(X)
+        y = np.asarray(y)
+        mu, std = y.mean(), max(y.std(), 1e-12)
+        yz = (y - mu) / std
+
+        best_ls, best_ml = 0.5, -np.inf
+        for ls in (0.1, 0.2, 0.5, 1.0):
+            K = _matern52(X, X, ls) + self._noise * np.eye(len(X))
+            try:
+                L = np.linalg.cholesky(K)
+            except np.linalg.LinAlgError:
+                continue
+            alpha = np.linalg.solve(L.T, np.linalg.solve(L, yz))
+            ml = -0.5 * yz @ alpha - np.log(np.diag(L)).sum()
+            if ml > best_ml:
+                best_ml, best_ls = ml, ls
+        ls = best_ls
+        K = _matern52(X, X, ls) + self._noise * np.eye(len(X))
+        L = np.linalg.cholesky(K + 1e-10 * np.eye(len(X)))
+        alpha = np.linalg.solve(L.T, np.linalg.solve(L, yz))
+
+        C = self._rng.uniform(size=(self._n_candidates, len(names)))
+        Ks = _matern52(C, X, ls)
+        mean = Ks @ alpha
+        v = np.linalg.solve(L, Ks.T)
+        var = np.maximum(1.0 - (v**2).sum(0), 1e-12)
+        sd = np.sqrt(var)
+        best = yz.min()
+        z = (best - mean) / sd
+        ei = sd * (z * _ncdf(z) + _npdf(z))
+        x = C[int(np.argmax(ei))]
+        return {n: _from_unit(search_space[n], float(u)) for n, u in zip(names, x)}
+
+    def sample_independent(
+        self, study: "Study", trial: FrozenTrial, param_name: str,
+        param_distribution: BaseDistribution,
+    ) -> Any:
+        return self._fallback.sample_independent(study, trial, param_name, param_distribution)

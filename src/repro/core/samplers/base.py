@@ -15,12 +15,7 @@ from typing import TYPE_CHECKING, Any
 
 import numpy as np
 
-from ..distributions import (
-    BaseDistribution,
-    CategoricalDistribution,
-    FloatDistribution,
-    IntDistribution,
-)
+from ..distributions import BaseDistribution
 from ..frozen import FrozenTrial
 
 if TYPE_CHECKING:
@@ -59,21 +54,9 @@ class BaseSampler:
 
 
 def sample_uniform_internal(rng: np.random.RandomState, dist: BaseDistribution) -> float:
-    """Uniform sample in *internal* representation, honoring log/step."""
-    if isinstance(dist, FloatDistribution):
-        if dist.log:
-            return float(np.exp(rng.uniform(np.log(dist.low), np.log(dist.high))))
-        if dist.step is not None:
-            n = int(np.floor((dist.high - dist.low) / dist.step + 1e-12)) + 1
-            return float(dist.low + rng.randint(n) * dist.step)
-        return float(rng.uniform(dist.low, dist.high))
-    if isinstance(dist, IntDistribution):
-        if dist.log:
-            lo, hi = np.log(dist.low - 0.5), np.log(dist.high + 0.5)
-            v = int(np.clip(np.round(np.exp(rng.uniform(lo, hi))), dist.low, dist.high))
-            return float(v)
-        n = (dist.high - dist.low) // dist.step + 1
-        return float(dist.low + rng.randint(n) * dist.step)
-    if isinstance(dist, CategoricalDistribution):
-        return float(rng.randint(len(dist.choices)))
-    raise TypeError(f"unknown distribution {dist!r}")
+    """Uniform sample in *internal* representation, honoring log/step.
+
+    Thin scalar wrapper over the vectorized ``BaseDistribution.sample_uniform``
+    codec — the ``size=1`` draw consumes the RNG stream exactly as the
+    historical scalar implementation did, so seeded studies reproduce."""
+    return float(dist.sample_uniform(rng, 1)[0])

@@ -31,12 +31,12 @@ from ..distributions import (
     CategoricalDistribution,
     FloatDistribution,
     IntDistribution,
+    round_to_step,
 )
-from ..frozen import FrozenTrial, StudyDirection, TrialState
+from ..frozen import FrozenTrial, StudyDirection
 from ..search_space import IntersectionSearchSpace
 from .base import BaseSampler
 from .random import RandomSampler
-from .tpe import round_to_step
 
 if TYPE_CHECKING:
     from ..study import Study
@@ -173,17 +173,18 @@ class CmaEsSampler(BaseSampler):
     ) -> dict[str, Any]:
         if not search_space:
             return {}
-        completed = [
-            t
-            for t in study.get_trials(deepcopy=False, states=(TrialState.COMPLETE,))
-            if t.values is not None
-            and all(n in t.params for n in search_space)
-        ]
-        if len(completed) < self._warmup:
+        names = sorted(search_space.keys())
+        # the design matrix comes straight from the columnar observation
+        # store (model space, trial-number order) — no FrozenTrial re-walk
+        Xi, y0 = study.observations().design_matrix(names)
+        if len(Xi) < self._warmup:
             return {}
 
-        names = sorted(search_space.keys())
         sign = 1.0 if study.direction == StudyDirection.MINIMIZE else -1.0
+        U = np.empty_like(Xi)
+        for j, n in enumerate(names):
+            U[:, j] = search_space[n].internal_to_unit(Xi[:, j])
+        losses = sign * y0
 
         # deterministic replay: feed completed post-warmup trials to CMA in
         # generation batches of popsize, in trial-number order
@@ -192,13 +193,10 @@ class CmaEsSampler(BaseSampler):
             sigma=self._sigma0,
             seed=self._seed,
         )
-        replay = completed[self._warmup - 1 :] if self._warmup > 0 else completed
+        start = self._warmup - 1 if self._warmup > 0 else 0
         batch: list[tuple[np.ndarray, float]] = []
-        for t in replay:
-            x = np.array(
-                [_to_unit(search_space[n], t.params[n]) for n in names], dtype=float
-            )
-            batch.append((x, sign * t.values[0]))
+        for i in range(start, len(U)):
+            batch.append((U[i], float(losses[i])))
             if len(batch) == cma.popsize:
                 cma.tell(batch)
                 batch = []
@@ -219,6 +217,8 @@ class CmaEsSampler(BaseSampler):
 
 
 def _to_unit(dist: BaseDistribution, external: Any) -> float:
+    """Scalar external -> [0,1].  The batched path goes through the
+    observation store + ``BaseDistribution.internal_to_unit`` instead."""
     v = dist.to_internal_repr(external)
     if isinstance(dist, (FloatDistribution, IntDistribution)):
         lo, hi = float(dist.low), float(dist.high)

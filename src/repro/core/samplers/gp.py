@@ -15,10 +15,10 @@ from typing import TYPE_CHECKING, Any
 import numpy as np
 
 from ..distributions import BaseDistribution, CategoricalDistribution
-from ..frozen import FrozenTrial, StudyDirection, TrialState
+from ..frozen import FrozenTrial, StudyDirection
 from ..search_space import IntersectionSearchSpace
 from .base import BaseSampler
-from .cmaes import _from_unit, _to_unit
+from .cmaes import _from_unit
 from .random import RandomSampler
 
 if TYPE_CHECKING:
@@ -69,16 +69,15 @@ class GPSampler(BaseSampler):
             return {}
         names = sorted(search_space)
         sign = 1.0 if study.direction == StudyDirection.MINIMIZE else -1.0
-        X, y = [], []
-        for t in study.get_trials(deepcopy=False, states=(TrialState.COMPLETE,)):
-            if t.values is None or not all(n in t.params for n in names):
-                continue
-            X.append([_to_unit(search_space[n], t.params[n]) for n in names])
-            y.append(sign * t.values[0])
-        if len(X) < self._n_startup:
+        # design matrix straight from the columnar observation store: model
+        # space -> [0,1] via the vectorized per-distribution codec
+        Xi, y0 = study.observations().design_matrix(names)
+        if len(Xi) < self._n_startup:
             return {}
-        X = np.asarray(X)
-        y = np.asarray(y)
+        X = np.empty_like(Xi)
+        for j, n in enumerate(names):
+            X[:, j] = search_space[n].internal_to_unit(Xi[:, j])
+        y = sign * y0
         # standardize targets
         mu, std = y.mean(), max(y.std(), 1e-12)
         yz = (y - mu) / std

@@ -11,6 +11,20 @@ The paper's default independent sampler (§3.1).  For each parameter:
 
 Numeric parameters with ``log=True`` are modeled in log space; ints are
 modeled continuously and rounded; categoricals use smoothed weighted counts.
+
+Hot path
+--------
+Observations come from the study's **columnar observation store**
+(``core/records.py``): one ``(n_trials, n_params)`` model-space matrix
+instead of a per-``ask`` re-walk of ``FrozenTrial`` lists.  On the first
+suggest of each trial the sampler splits the loss vector once and slices
+below/above observations for *all* parameters out of the matrix (the split,
+weights, and gather are shared numpy ops — the old path redid them per
+parameter in interpreted loops).  Candidate scoring evaluates both mixture
+log-pdfs in one broadcasted matrix op (optionally jitted via jax with
+``jit_scoring=True``).  Sampling draws are RNG-stream-identical to the
+pre-refactor scalar path, so seeded studies reproduce bit-for-bit (see
+``samplers/_legacy.py`` and ``tests/test_vectorized_parity.py``).
 """
 
 from __future__ import annotations
@@ -20,21 +34,22 @@ from typing import TYPE_CHECKING, Any, Callable
 
 import numpy as np
 
-from ..distributions import (
-    BaseDistribution,
-    CategoricalDistribution,
-    FloatDistribution,
-    IntDistribution,
-)
+from ..distributions import BaseDistribution, CategoricalDistribution
 from ..frozen import FrozenTrial, StudyDirection, TrialState
 from .base import BaseSampler, sample_uniform_internal
 
 if TYPE_CHECKING:
+    from ..records import ObservationStore
     from ..study import Study
 
 __all__ = ["TPESampler", "default_gamma", "default_weights"]
 
 EPS = 1e-12
+
+try:  # vectorized C erf; the portable fallback loops math.erf per element
+    from scipy.special import erf as _erf
+except ImportError:  # pragma: no cover - scipy is an optional accelerator
+    _erf = np.vectorize(math.erf)
 
 
 def default_gamma(n: int) -> int:
@@ -102,44 +117,162 @@ class _ParzenEstimator:
         self.weights = weights / max(weights.sum(), EPS)
         self.low = low
         self.high = high
+        # truncated-normal normalization + log component constants, computed
+        # once per fit: log_pdf then reduces to one broadcasted quadratic
+        z = _normal_cdf((high - self.mus) / self.sigmas) - _normal_cdf(
+            (low - self.mus) / self.sigmas
+        )
+        self._log_norm = (
+            -np.log(self.sigmas)
+            - 0.5 * math.log(2 * math.pi)
+            - np.log(np.maximum(z, EPS))
+            + np.log(self.weights + EPS)
+        )
 
     def sample(self, rng: np.random.RandomState, size: int) -> np.ndarray:
         comp = rng.choice(len(self.mus), size=size, p=self.weights)
+        mus, sigmas = self.mus, self.sigmas
+        low, high = self.low, self.high
         out = np.empty(size)
         for i, c in enumerate(comp):
             # rejection-free truncated normal via clipped resampling (bounded loops)
-            v = rng.normal(self.mus[c], self.sigmas[c])
+            v = float(rng.normal(mus[c], sigmas[c]))
             for _ in range(16):
-                if self.low <= v <= self.high:
+                if low <= v <= high:
                     break
-                v = rng.normal(self.mus[c], self.sigmas[c])
-            out[i] = float(np.clip(v, self.low, self.high))
+                v = float(rng.normal(mus[c], sigmas[c]))
+            out[i] = min(max(v, low), high)
         return out
 
     def log_pdf(self, xs: np.ndarray) -> np.ndarray:
-        xs = np.asarray(xs, dtype=float)[:, None]
-        mus = self.mus[None, :]
-        sigmas = self.sigmas[None, :]
-        # truncated-normal normalization over [low, high]
-        z = _normal_cdf((self.high - mus) / sigmas) - _normal_cdf((self.low - mus) / sigmas)
-        z = np.maximum(z, EPS)
-        log_comp = (
-            -0.5 * ((xs - mus) / sigmas) ** 2
-            - np.log(sigmas)
-            - 0.5 * math.log(2 * math.pi)
-            - np.log(z)
+        return _mixture_log_pdf(
+            np.asarray(xs, dtype=float), self.mus, self.sigmas, self._log_norm
         )
-        log_w = np.log(self.weights[None, :] + EPS)
-        return _logsumexp(log_comp + log_w, axis=1)
 
 
 def _normal_cdf(x: np.ndarray) -> np.ndarray:
-    return 0.5 * (1.0 + np.vectorize(math.erf)(np.asarray(x) / math.sqrt(2.0)))
+    return 0.5 * (1.0 + _erf(np.asarray(x) / math.sqrt(2.0)))
 
 
 def _logsumexp(a: np.ndarray, axis: int) -> np.ndarray:
     m = np.max(a, axis=axis, keepdims=True)
     return (m + np.log(np.sum(np.exp(a - m), axis=axis, keepdims=True))).squeeze(axis)
+
+
+def _mixture_log_pdf(
+    cands: np.ndarray, mus: np.ndarray, sigmas: np.ndarray, log_norm: np.ndarray
+) -> np.ndarray:
+    """Mixture log-pdf over all candidates in one broadcasted matrix op.
+
+    Works in-place on a single ``(n_cands, n_components)`` buffer.  The
+    max-shifted exponent is floored at -700 before ``exp``: the shifted
+    maximum is exactly 0, so the per-row sum is >= 1 and any term below
+    ``exp(-700) ~ 1e-304`` is absorbed with no effect on the result — but
+    flooring keeps ``exp`` out of the subnormal range, which costs ~30x on
+    common hardware (far candidates in log-space domains land there
+    constantly)."""
+    z = cands[:, None] - mus[None, :]
+    z /= sigmas[None, :]
+    np.square(z, out=z)
+    z *= -0.5
+    z += log_norm[None, :]
+    m = z.max(axis=1)
+    z -= m[:, None]
+    np.maximum(z, -700.0, out=z)
+    np.exp(z, out=z)
+    return m + np.log(z.sum(axis=1))
+
+
+def _score_numpy(
+    cands: np.ndarray,
+    l_mus: np.ndarray, l_sigmas: np.ndarray, l_log_norm: np.ndarray,
+    g_mus: np.ndarray, g_sigmas: np.ndarray, g_log_norm: np.ndarray,
+) -> np.ndarray:
+    """``log l(x) - log g(x)`` for all candidates, two batched mixture ops."""
+    return _mixture_log_pdf(cands, l_mus, l_sigmas, l_log_norm) - _mixture_log_pdf(
+        cands, g_mus, g_sigmas, g_log_norm
+    )
+
+
+_jax_score = None
+
+
+def _get_jax_score():
+    """Jitted scorer, built lazily.  Pays off only when observation counts are
+    stable between asks (each new shape retraces)."""
+    global _jax_score
+    if _jax_score is None:
+        import jax
+        import jax.numpy as jnp
+
+        def score(cands, l_mus, l_sigmas, l_log_norm, g_mus, g_sigmas, g_log_norm):
+            def lse(a):
+                m = jnp.max(a, axis=1, keepdims=True)
+                return (m + jnp.log(jnp.sum(jnp.exp(a - m), axis=1, keepdims=True)))[:, 0]
+
+            xs = cands[:, None]
+            log_l = lse(-0.5 * ((xs - l_mus[None, :]) / l_sigmas[None, :]) ** 2 + l_log_norm[None, :])
+            log_g = lse(-0.5 * ((xs - g_mus[None, :]) / g_sigmas[None, :]) ** 2 + g_log_norm[None, :])
+            return log_l - log_g
+
+        _jax_score = jax.jit(score)
+    return _jax_score
+
+
+class _TrialFit:
+    """Per-trial batched observation split, shared by every suggest call of
+    one trial: the loss vector, its argsort, and the recency weights are
+    computed once; per-parameter below/above slices are cut lazily from the
+    store's matrix columns."""
+
+    __slots__ = (
+        "store", "valid", "loss", "full_order", "w_by_n", "splits",
+        "gamma", "weights_fn",
+    )
+
+    def __init__(self, store, valid, loss, gamma, weights_fn):
+        self.store: "ObservationStore" = store
+        self.valid: np.ndarray = valid
+        self.loss: np.ndarray = loss
+        self.full_order: np.ndarray | None = None
+        self.w_by_n: dict[int, np.ndarray] = {}
+        self.splits: dict[str, "tuple | None"] = {}
+        self.gamma = gamma
+        self.weights_fn = weights_fn
+
+    def split(self, param_name: str) -> "tuple | None":
+        """(n, below, above, w_below, w_above) in model space, or None when
+        the parameter has never been observed."""
+        if param_name in self.splits:
+            return self.splits[param_name]
+        col = self.store.column(param_name)
+        if col is None:
+            self.splits[param_name] = None
+            return None
+        present = self.valid & ~np.isnan(col)
+        idx = np.flatnonzero(present)
+        n = len(idx)
+        if n == 0:
+            self.splits[param_name] = None
+            return None
+        vals = col[idx]
+        losses = self.loss[idx]
+        if np.array_equal(present, self.valid):
+            # unconditional parameter: every such column shares one argsort
+            if self.full_order is None:
+                self.full_order = np.argsort(losses, kind="stable")
+            order = self.full_order
+        else:
+            order = np.argsort(losses, kind="stable")
+        n_below = self.gamma(n)
+        w_all = self.w_by_n.get(n)
+        if w_all is None:
+            w_all = np.asarray(self.weights_fn(n), dtype=float)
+            self.w_by_n[n] = w_all
+        below_idx, above_idx = order[:n_below], order[n_below:]
+        out = (n, vals[below_idx], vals[above_idx], w_all[below_idx], w_all[above_idx])
+        self.splits[param_name] = out
+        return out
 
 
 class TPESampler(BaseSampler):
@@ -154,6 +287,7 @@ class TPESampler(BaseSampler):
         prior_weight: float = 1.0,
         consider_magic_clip: bool = True,
         consider_pruned_trials: bool = False,
+        jit_scoring: bool = False,
     ):
         self._n_startup = n_startup_trials
         self._n_ei = n_ei_candidates
@@ -164,41 +298,42 @@ class TPESampler(BaseSampler):
         self._prior_weight = prior_weight
         self._magic_clip = consider_magic_clip
         self._consider_pruned = consider_pruned_trials
+        self._jit_scoring = jit_scoring
+        self._fit: tuple[Any, _TrialFit] | None = None  # (cache key, fit)
+        # fitted estimators are deterministic functions of (observations,
+        # bounds); memoize them per store version so back-to-back asks with
+        # an unchanged history (batched ask, fixed-history scoring) skip the
+        # refit entirely
+        self._est_cache: tuple[Any, dict] | None = None
 
     def reseed_rng(self, seed: int | None = None) -> None:
         self._rng = np.random.RandomState(seed)
 
     # -- observation collection ------------------------------------------------
 
-    def _observations(
-        self, study: "Study", param_name: str
-    ) -> tuple[np.ndarray, np.ndarray, list[BaseDistribution]]:
-        """(internal values, losses) for trials that suggested param_name."""
-        values, losses, dists = [], [], []
+    def _trial_fit(self, study: "Study", trial: FrozenTrial) -> _TrialFit:
+        """The batched split for this trial, built on first use and reused by
+        every subsequent suggest of the same trial."""
+        store = study.observations()
+        key = (id(study), trial.number, store.version)
+        cached = self._fit
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        states = store.states
+        values = store.values
         sign = 1.0 if study.direction == StudyDirection.MINIMIZE else -1.0
-        states = (
-            (TrialState.COMPLETE, TrialState.PRUNED)
-            if self._consider_pruned
-            else (TrialState.COMPLETE,)
-        )
-        for t in study.get_trials(deepcopy=False, states=states):
-            if param_name not in t.params:
-                continue
-            if t.state == TrialState.COMPLETE:
-                if t.values is None:
-                    continue
-                loss = sign * t.values[0]
-            else:  # PRUNED: use last intermediate value (pessimistic)
-                if not t.intermediate_values:
-                    continue
-                loss = sign * t.intermediate_values[t.last_step]
-            if not np.isfinite(loss):
-                continue
-            dist = t.distributions[param_name]
-            values.append(dist.to_internal_repr(t.params[param_name]))
-            losses.append(loss)
-            dists.append(dist)
-        return np.asarray(values), np.asarray(losses), dists
+        complete = states == int(TrialState.COMPLETE)
+        with np.errstate(invalid="ignore"):
+            valid = complete & np.isfinite(values)
+            loss = sign * values
+            if self._consider_pruned:
+                last_iv = store.last_intermediate_values
+                pruned = (states == int(TrialState.PRUNED)) & np.isfinite(last_iv)
+                valid = valid | pruned
+                loss = np.where(complete, loss, sign * last_iv)
+        fit = _TrialFit(store, valid, loss, self._gamma, self._weights)
+        self._fit = (key, fit)
+        return fit
 
     # -- sampling -----------------------------------------------------------------
 
@@ -214,47 +349,45 @@ class TPESampler(BaseSampler):
             # uniform sampling (use a Pareto-aware sampler for real MO work)
             internal = sample_uniform_internal(self._rng, param_distribution)
             return param_distribution.to_external_repr(internal)
-        values, losses, _ = self._observations(study, param_name)
-        if len(values) < self._n_startup:
+        fit = self._trial_fit(study, trial)
+        split = fit.split(param_name)
+        if split is None or split[0] < self._n_startup:
             internal = sample_uniform_internal(self._rng, param_distribution)
             return param_distribution.to_external_repr(internal)
+        _, below, above, w_below, w_above = split
 
-        n = len(values)
-        n_below = self._gamma(n)
-        order = np.argsort(losses, kind="stable")
-        below_idx, above_idx = order[:n_below], order[n_below:]
-        below, above = values[below_idx], values[above_idx]
-        w_all = self._weights(n)
-
-        # the weights function is defined over recency order; map via index
-        w_below = np.asarray([w_all[i] for i in below_idx])
-        w_above = np.asarray([w_all[i] for i in above_idx])
+        version = (id(study), fit.store.version)
+        if self._est_cache is None or self._est_cache[0] != version:
+            self._est_cache = (version, {})
+        cache = self._est_cache[1]
 
         if isinstance(param_distribution, CategoricalDistribution):
-            internal = self._sample_categorical(param_distribution, below, above, w_below, w_above)
+            internal = self._sample_categorical(
+                param_distribution, below, above, w_below, w_above, cache, param_name
+            )
         else:
-            internal = self._sample_numeric(param_distribution, below, above, w_below, w_above)
+            internal = self._sample_numeric(
+                param_distribution, below, above, w_below, w_above, cache, param_name
+            )
         return param_distribution.to_external_repr(internal)
 
-    def _transform(self, dist: BaseDistribution, xs: np.ndarray) -> np.ndarray:
-        if getattr(dist, "log", False):
-            return np.log(np.maximum(xs, EPS))
-        return xs
-
-    def _untransform(self, dist: BaseDistribution, xs: np.ndarray) -> np.ndarray:
-        if getattr(dist, "log", False):
-            return np.exp(xs)
-        return xs
-
-    def _bounds(self, dist: BaseDistribution) -> tuple[float, float]:
-        low, high = float(dist.low), float(dist.high)
-        if isinstance(dist, IntDistribution):
-            low, high = low - 0.5, high + 0.5
-            if dist.log:
-                low = max(low, 0.5)
-        if getattr(dist, "log", False):
-            return math.log(low), math.log(high)
-        return low, high
+    def _score(self, l_est: _ParzenEstimator, g_est: _ParzenEstimator, cands: np.ndarray) -> np.ndarray:
+        if self._jit_scoring:
+            try:
+                return np.asarray(
+                    _get_jax_score()(
+                        cands,
+                        l_est.mus, l_est.sigmas, l_est._log_norm,
+                        g_est.mus, g_est.sigmas, g_est._log_norm,
+                    )
+                )
+            except ImportError:
+                self._jit_scoring = False
+        return _score_numpy(
+            cands,
+            l_est.mus, l_est.sigmas, l_est._log_norm,
+            g_est.mus, g_est.sigmas, g_est._log_norm,
+        )
 
     def _sample_numeric(
         self,
@@ -263,28 +396,27 @@ class TPESampler(BaseSampler):
         above: np.ndarray,
         w_below: np.ndarray,
         w_above: np.ndarray,
+        cache: dict,
+        param_name: str,
     ) -> float:
-        low, high = self._bounds(dist)
-        l_est = _ParzenEstimator(
-            self._transform(dist, below), low, high, w_below,
-            self._consider_prior, self._prior_weight, self._magic_clip,
-        )
-        g_est = _ParzenEstimator(
-            self._transform(dist, above), low, high, w_above,
-            self._consider_prior, self._prior_weight, self._magic_clip,
-        )
+        low, high = dist.internal_bounds(expand_int=True)
+        key = (param_name, low, high)
+        ests = cache.get(key)
+        if ests is None:
+            l_est = _ParzenEstimator(
+                below, low, high, w_below,
+                self._consider_prior, self._prior_weight, self._magic_clip,
+            )
+            g_est = _ParzenEstimator(
+                above, low, high, w_above,
+                self._consider_prior, self._prior_weight, self._magic_clip,
+            )
+            cache[key] = ests = (l_est, g_est)
+        l_est, g_est = ests
         cands = l_est.sample(self._rng, self._n_ei)
-        score = l_est.log_pdf(cands) - g_est.log_pdf(cands)
+        score = self._score(l_est, g_est, cands)
         best = cands[int(np.argmax(score))]
-        x = float(self._untransform(dist, np.asarray([best]))[0])
-        if isinstance(dist, IntDistribution):
-            x = float(np.clip(round_to_step(x, dist.low, dist.high, dist.step), dist.low, dist.high))
-        elif isinstance(dist, FloatDistribution):
-            if dist.step is not None:
-                x = float(np.clip(round_to_step(x, dist.low, dist.high, dist.step), dist.low, dist.high))
-            else:
-                x = float(np.clip(x, dist.low, dist.high))
-        return x
+        return float(dist.from_internal(np.asarray([best]))[0])
 
     def _sample_categorical(
         self,
@@ -293,21 +425,25 @@ class TPESampler(BaseSampler):
         above: np.ndarray,
         w_below: np.ndarray,
         w_above: np.ndarray,
+        cache: dict,
+        param_name: str,
     ) -> float:
         k = len(dist.choices)
+        key = (param_name, "categorical", k)
+        probs = cache.get(key)
+        if probs is None:
 
-        def weighted_probs(idxs: np.ndarray, ws: np.ndarray) -> np.ndarray:
-            counts = np.full(k, self._prior_weight)
-            for i, w in zip(idxs.astype(int), ws):
-                counts[i] += w
-            return counts / counts.sum()
+            def weighted_probs(idxs: np.ndarray, ws: np.ndarray) -> np.ndarray:
+                counts = np.full(k, self._prior_weight)
+                # np.add.at accumulates in element order, matching a scalar loop
+                np.add.at(counts, idxs.astype(int), ws)
+                return counts / counts.sum()
 
-        p_l = weighted_probs(below, w_below)
-        p_g = weighted_probs(above, w_above)
+            cache[key] = probs = (
+                weighted_probs(below, w_below),
+                weighted_probs(above, w_above),
+            )
+        p_l, p_g = probs
         cands = self._rng.choice(k, size=self._n_ei, p=p_l)
         score = np.log(p_l[cands] + EPS) - np.log(p_g[cands] + EPS)
         return float(cands[int(np.argmax(score))])
-
-
-def round_to_step(x: float, low: float, high: float, step: float | int) -> float:
-    return low + round((x - low) / step) * step

@@ -89,6 +89,14 @@ class BaseStorage:
     ) -> int:
         raise NotImplementedError
 
+    def create_new_trials(
+        self, study_id: int, n: int, template_trial: FrozenTrial | None = None
+    ) -> list[int]:
+        """Create ``n`` trials; the batched form ``Study.ask(n)`` uses.
+        Backends with request batching (``remote://``) override this to claim
+        all ids in one round trip."""
+        return [self.create_new_trial(study_id, template_trial) for _ in range(n)]
+
     def set_trial_param(
         self,
         trial_id: int,
@@ -147,6 +155,16 @@ class BaseStorage:
         from ..exceptions import TrialNotFoundError
 
         raise TrialNotFoundError(f"no trial number {number} in study {study_id}")
+
+    def get_trials_revision(self, study_id: int) -> int:
+        """Monotonic per-study counter, bumped by **every** trial mutation —
+        including in-place updates to RUNNING trials that a number-based
+        ``get_all_trials(since=...)`` poll alone cannot distinguish from "no
+        change".  Readers (``CachedStorage``, ``ObservationStore``) poll it to
+        skip suffix fetches entirely when nothing moved.  Backends that cannot
+        provide one raise ``NotImplementedError``; callers must then fall back
+        to always refetching."""
+        raise NotImplementedError
 
     # -- heartbeat / fault tolerance ------------------------------------------
 

@@ -39,6 +39,7 @@ class _StudyCache:
     def __init__(self) -> None:
         self.trials: dict[int, FrozenTrial] = {}  # by number
         self.watermark = 0  # every number < watermark is finished and cached
+        self.revision: int | None = None  # backend revision at last fetch
 
 
 class CachedStorage(BaseStorage):
@@ -54,6 +55,7 @@ class CachedStorage(BaseStorage):
         self._index: dict[int, tuple[int, int]] = {}  # trial_id -> (study_id, number)
         self._own: dict[int, FrozenTrial] = {}  # trial_id -> local copy (RUNNING, ours)
         self._pending: dict[int, list[tuple[str, tuple]]] = {}  # trial_id -> buffered ops
+        self._revision_supported = True  # until the backend says otherwise
 
     @property
     def backend(self) -> BaseStorage:
@@ -107,13 +109,34 @@ class CachedStorage(BaseStorage):
         tid = self._backend.create_new_trial(study_id, template_trial)
         t = self._backend.get_trial(tid)
         with self._lock:
-            cache = self._studies.setdefault(study_id, _StudyCache())
-            self._index[tid] = (study_id, t.number)
-            cache.trials[t.number] = t
-            # WAITING (enqueued) trials belong to whoever claims them, not us
-            if t.state == TrialState.RUNNING:
-                self._own[tid] = t
+            self._adopt_created_locked(study_id, t)
         return tid
+
+    def create_new_trials(
+        self, study_id: int, n: int, template_trial: FrozenTrial | None = None
+    ) -> list[int]:
+        """Batched creation: ids in one round trip, trial rows in a second
+        (when the backend supports request batching)."""
+        if n <= 0:
+            return []
+        tids = self._backend.create_new_trials(study_id, n, template_trial)
+        call_batch = getattr(self._backend, "call_batch", None)
+        if call_batch is not None and len(tids) > 1:
+            trials = call_batch([("get_trial", (tid,)) for tid in tids])
+        else:
+            trials = [self._backend.get_trial(tid) for tid in tids]
+        with self._lock:
+            for t in trials:
+                self._adopt_created_locked(study_id, t)
+        return tids
+
+    def _adopt_created_locked(self, study_id: int, t: FrozenTrial) -> None:
+        cache = self._studies.setdefault(study_id, _StudyCache())
+        self._index[t.trial_id] = (study_id, t.number)
+        cache.trials[t.number] = t
+        # WAITING (enqueued) trials belong to whoever claims them, not us
+        if t.state == TrialState.RUNNING:
+            self._own[t.trial_id] = t
 
     def set_trial_param(
         self, trial_id: int, param_name: str, param_value_internal: float,
@@ -144,10 +167,11 @@ class CachedStorage(BaseStorage):
             ok = self._backend.set_trial_state_values(trial_id, state, values)
             if not ok:
                 return False
-            if own and state.is_finished():
+            if own and (state.is_finished() or state == TrialState.WAITING):
                 # hand the record back to the backend as the source of truth:
-                # drop our local copy so the next fetch picks up the
-                # authoritative finished row (incl. datetime_complete)
+                # finished rows are refetched authoritative (incl.
+                # datetime_complete); WAITING means we released a batch-asked
+                # trial for anyone to claim, so it is no longer ours either
                 self._own.pop(trial_id)
                 sid, number = self._index[trial_id]
                 self._studies.setdefault(sid, _StudyCache()).trials.pop(number, None)
@@ -233,8 +257,24 @@ class CachedStorage(BaseStorage):
 
     def _refresh_locked(self, study_id: int) -> _StudyCache:
         """Fetch the unfinished suffix from the backend and advance the
-        watermark past newly finished trials."""
+        watermark past newly finished trials.
+
+        The fetch is skipped entirely when the backend's monotonic trial
+        revision is unchanged since the last refresh — one cheap counter read
+        (a single RPC over ``remote://``) instead of re-shipping every
+        RUNNING trial on every ``ask``.  Any trial mutation bumps the
+        revision, so in-place updates to RUNNING trials are still seen."""
         cache = self._studies.setdefault(study_id, _StudyCache())
+        rev: int | None = None
+        if self._revision_supported:
+            try:
+                rev = self._backend.get_trials_revision(study_id)
+            except NotImplementedError:
+                self._revision_supported = False
+        if rev is not None and rev == cache.revision:
+            return cache
+        # read the revision before the data: writes landing between the two
+        # reads show up as a fresh revision on the next refresh
         fresh = get_trials_since(self._backend, study_id, cache.watermark, deepcopy=False)
         for t in fresh:
             if t.trial_id in self._own:
@@ -247,6 +287,7 @@ class CachedStorage(BaseStorage):
                 cache.trials[number] = t
         while cache.watermark in cache.trials and cache.trials[cache.watermark].state.is_finished():
             cache.watermark += 1
+        cache.revision = rev
         return cache
 
     # -- write-behind flushing ----------------------------------------------------
@@ -269,6 +310,9 @@ class CachedStorage(BaseStorage):
                 self._flush_trial_locked(tid)
 
     # -- heartbeat / misc ---------------------------------------------------------
+
+    def get_trials_revision(self, study_id: int) -> int:
+        return self._backend.get_trials_revision(study_id)
 
     def record_heartbeat(self, trial_id: int) -> None:
         self._backend.record_heartbeat(trial_id)

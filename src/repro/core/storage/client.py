@@ -23,6 +23,7 @@ Design points:
 from __future__ import annotations
 
 import json
+import os
 import socket
 import threading
 import time
@@ -53,6 +54,8 @@ _ERROR_TYPES: dict[str, type[Exception]] = {
     "ValueError": ValueError,
     "TypeError": TypeError,
     "KeyError": KeyError,
+    "PermissionError": PermissionError,
+    "NotImplementedError": NotImplementedError,
 }
 
 # Calls that may NOT be blindly re-sent after a torn connection: re-executing
@@ -63,13 +66,23 @@ _NON_IDEMPOTENT = frozenset(
 
 
 def parse_remote_url(url: str) -> tuple[str, int]:
+    host, port, _ = parse_remote_url_auth(url)
+    return host, port
+
+
+def parse_remote_url_auth(url: str) -> tuple[str, int, "str | None"]:
+    """Parse ``remote://[token@]host:port`` into (host, port, token)."""
     if not url.startswith("remote://"):
         raise ValueError(f"not a remote:// URL: {url!r}")
     hostport = url[len("remote://"):].rstrip("/")
+    token: str | None = None
+    if "@" in hostport:
+        token, _, hostport = hostport.rpartition("@")
+        token = token or None
     host, sep, port = hostport.rpartition(":")
     if not sep or not port.isdigit():
         raise ValueError(f"remote:// URL needs host:port, got {url!r}")
-    return host, int(port)
+    return host, int(port), token
 
 
 class RemoteStorage(BaseStorage):
@@ -77,19 +90,29 @@ class RemoteStorage(BaseStorage):
 
     Args:
         url: ``remote://host:port`` of a running :class:`StorageServer`.
+            A shared-secret token may be embedded as
+            ``remote://token@host:port``.
         timeout: per-call socket timeout in seconds.
         retries: reconnect attempts per call before giving up.
+        auth_token: shared secret for servers started with one.  Falls back
+            to the URL userinfo, then the ``REPRO_STORAGE_TOKEN`` env var.
+            Sent once per connection as an ``auth`` handshake frame; the
+            server drops unauthenticated connections when configured.
     """
 
-    def __init__(self, url: str, timeout: float = 30.0, retries: int = 3):
-        self._host, self._port = parse_remote_url(url)
-        self._url = url
+    def __init__(
+        self, url: str, timeout: float = 30.0, retries: int = 3,
+        auth_token: "str | None" = None,
+    ):
+        self._host, self._port, url_token = parse_remote_url_auth(url)
+        self._auth_token = auth_token or url_token or os.environ.get("REPRO_STORAGE_TOKEN")
+        self._url = f"remote://{self._host}:{self._port}"  # token never echoed
         self._timeout = timeout
         self._retries = max(1, retries)
         self._local = threading.local()
         self._id_lock = threading.Lock()
         self._next_id = 0
-        self._call("ping")  # fail fast on a bad address
+        self._call("ping")  # fail fast on a bad address (or a bad token)
 
     @property
     def url(self) -> str:
@@ -103,7 +126,31 @@ class RemoteStorage(BaseStorage):
             sock = socket.create_connection((self._host, self._port), timeout=self._timeout)
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             self._local.sock = sock
+            if self._auth_token is not None:
+                self._authenticate(sock)
         return sock
+
+    def _authenticate(self, sock: socket.socket) -> None:
+        """Per-connection handshake: the first frame carries the shared
+        secret; everything else is rejected by a token-protected server."""
+        request = {"id": self._req_id(), "method": "auth", "params": [self._auth_token]}
+        try:
+            send_frame(sock, json.dumps(request).encode())
+            body = recv_frame(sock)
+        except (OSError, ConnectionError):
+            self._drop_sock()
+            raise
+        if body is None:
+            self._drop_sock()
+            raise ConnectionError("server closed the connection during auth")
+        try:
+            self._unwrap(json.loads(body))  # raises PermissionError on a bad token
+        except Exception:
+            # the server drops rejected connections: never cache the socket,
+            # or the next call would surface a torn-connection error instead
+            # of the real auth failure
+            self._drop_sock()
+            raise
 
     def _drop_sock(self) -> None:
         sock = getattr(self._local, "sock", None)
@@ -122,7 +169,14 @@ class RemoteStorage(BaseStorage):
     def _roundtrip(self, payload: bytes) -> Any:
         """Send one frame, read one frame.  Raises (OSError-family, bool sent)
         wrapped in a tuple-carrying exception via attributes."""
-        sock = self._sock()
+        try:
+            sock = self._sock()
+        except PermissionError:
+            raise  # bad auth token: surface immediately, never retry
+        except (OSError, ConnectionError) as e:
+            # connect/auth-transport failure: the request never hit the wire
+            e._rpc_sent = False  # type: ignore[attr-defined]
+            raise
         sent = False
         try:
             send_frame(sock, payload)
@@ -145,6 +199,8 @@ class RemoteStorage(BaseStorage):
         for attempt in range(self._retries):
             try:
                 return self._roundtrip(payload)
+            except PermissionError:
+                raise  # auth rejection is terminal (PermissionError < OSError)
             except (OSError, ConnectionError) as e:
                 last = e
                 sent = getattr(e, "_rpc_sent", True)
@@ -220,6 +276,16 @@ class RemoteStorage(BaseStorage):
     def create_new_trial(self, study_id: int, template_trial: FrozenTrial | None = None) -> int:
         return self._call("create_new_trial", study_id, template_trial)
 
+    def create_new_trials(
+        self, study_id: int, n: int, template_trial: FrozenTrial | None = None
+    ) -> list[int]:
+        if n <= 0:
+            return []
+        if n == 1:
+            return [self.create_new_trial(study_id, template_trial)]
+        # one batched frame: n trials claimed per round trip
+        return self.call_batch([("create_new_trial", (study_id, template_trial))] * n)
+
     def set_trial_param(
         self, trial_id: int, param_name: str, param_value_internal: float,
         distribution,
@@ -260,6 +326,9 @@ class RemoteStorage(BaseStorage):
 
     def get_trial_id_from_study_and_number(self, study_id: int, number: int) -> int:
         return self._call("get_trial_id_from_study_and_number", study_id, number)
+
+    def get_trials_revision(self, study_id: int) -> int:
+        return self._call("get_trials_revision", study_id)
 
     # -- heartbeat ---------------------------------------------------------------
 

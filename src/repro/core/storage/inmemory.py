@@ -28,6 +28,7 @@ class _StudyRecord:
         self.user_attrs: dict[str, Any] = {}
         self.system_attrs: dict[str, Any] = {}
         self.trials: list[FrozenTrial] = []  # index == number
+        self.revision = 0  # bumped on every trial mutation (get_trials_revision)
 
 
 class InMemoryStorage(BaseStorage):
@@ -121,6 +122,7 @@ class InMemoryStorage(BaseStorage):
                     t.datetime_start = self._now()
             rec.trials.append(t)
             self._trial_index[tid] = (study_id, number)
+            rec.revision += 1
             return tid
 
     def _get_study(self, study_id: int) -> _StudyRecord:
@@ -134,6 +136,12 @@ class InMemoryStorage(BaseStorage):
         sid, number = self._trial_index[trial_id]
         return self._studies[sid].trials[number]
 
+    def _bump_revision(self, trial_id: int) -> None:
+        sid, _ = self._trial_index[trial_id]
+        rec = self._studies.get(sid)
+        if rec is not None:
+            rec.revision += 1
+
     def set_trial_param(
         self, trial_id: int, param_name: str, param_value_internal: float,
         distribution: BaseDistribution,
@@ -145,6 +153,7 @@ class InMemoryStorage(BaseStorage):
                 check_distribution_compatibility(t.distributions[param_name], distribution)
             t.params[param_name] = distribution.to_external_repr(param_value_internal)
             t.distributions[param_name] = distribution
+            self._bump_revision(trial_id)
 
     def set_trial_state_values(
         self, trial_id: int, state: TrialState, values: Iterable[float] | None = None
@@ -161,6 +170,7 @@ class InMemoryStorage(BaseStorage):
             if state.is_finished():
                 t.datetime_complete = self._now()
                 self._heartbeats.pop(trial_id, None)
+            self._bump_revision(trial_id)
             return True
 
     def set_trial_intermediate_value(self, trial_id: int, step: int, intermediate_value: float) -> None:
@@ -168,17 +178,20 @@ class InMemoryStorage(BaseStorage):
             t = self._get_trial_ref(trial_id)
             self._check_not_finished(t)
             t.intermediate_values[int(step)] = float(intermediate_value)
+            self._bump_revision(trial_id)
 
     def set_trial_user_attr(self, trial_id: int, key: str, value: Any) -> None:
         with self._lock:
             t = self._get_trial_ref(trial_id)
             self._check_not_finished(t)
             t.user_attrs[key] = value
+            self._bump_revision(trial_id)
 
     def set_trial_system_attr(self, trial_id: int, key: str, value: Any) -> None:
         with self._lock:
             t = self._get_trial_ref(trial_id)
             t.system_attrs[key] = value
+            self._bump_revision(trial_id)
 
     def get_trial(self, trial_id: int) -> FrozenTrial:
         with self._lock:
@@ -196,6 +209,10 @@ class InMemoryStorage(BaseStorage):
             if states is not None:
                 trials = [t for t in trials if t.state in states]
             return [copy.deepcopy(t) for t in trials] if deepcopy else list(trials)
+
+    def get_trials_revision(self, study_id: int) -> int:
+        with self._lock:
+            return self._get_study(study_id).revision
 
     @staticmethod
     def _check_not_finished(t: FrozenTrial) -> None:

@@ -95,9 +95,16 @@ class _Replay:
         self.name_to_id: dict[str, int] = {}
         self.trials: dict[int, FrozenTrial] = {}
         self.study_trials: dict[int, list[int]] = {}
+        self.trial_study: dict[int, int] = {}
         self.heartbeats: dict[int, float] = {}
+        self.revisions: dict[int, int] = {}  # study_id -> trial-mutation count
         self.next_study_id = 0
         self.next_trial_id = 0
+
+    def _bump(self, trial_id: int) -> None:
+        sid = self.trial_study.get(trial_id)
+        if sid is not None:
+            self.revisions[sid] = self.revisions.get(sid, 0) + 1
 
     def apply(self, op: dict) -> None:
         kind = op["op"]
@@ -118,6 +125,8 @@ class _Replay:
                 self.name_to_id.pop(self.studies[sid]["name"], None)
                 for tid in self.study_trials.pop(sid, []):
                     self.trials.pop(tid, None)
+                    self.trial_study.pop(tid, None)
+                self.revisions.pop(sid, None)
                 del self.studies[sid]
         elif kind == _CREATE_TRIAL:
             tid = op["trial_id"]
@@ -145,7 +154,9 @@ class _Replay:
                 t.system_attrs[k] = v
             self.trials[tid] = t
             self.study_trials[sid].append(tid)
+            self.trial_study[tid] = sid
             self.next_trial_id = max(self.next_trial_id, tid + 1)
+            self._bump(tid)
         elif kind == _SET_PARAM:
             t = self.trials.get(op["trial_id"])
             if t is None:
@@ -153,6 +164,7 @@ class _Replay:
             dist = json_to_distribution(op["dist"])
             t.params[op["name"]] = dist.to_external_repr(op["value"])
             t.distributions[op["name"]] = dist
+            self._bump(op["trial_id"])
         elif kind == _SET_STATE:
             t = self.trials.get(op["trial_id"])
             if t is None:
@@ -168,14 +180,17 @@ class _Replay:
                     t.datetime_start = _dt(op["ts"])
                 elif new_state.is_finished():
                     t.datetime_complete = _dt(op["ts"])
+            self._bump(op["trial_id"])
         elif kind == _SET_IV:
             t = self.trials.get(op["trial_id"])
             if t is not None:
                 t.intermediate_values[int(op["step"])] = op["value"]
+                self._bump(op["trial_id"])
         elif kind == _SET_TATTR:
             t = self.trials.get(op["trial_id"])
             if t is not None:
                 (t.system_attrs if op["sys"] else t.user_attrs)[op["key"]] = op["value"]
+                self._bump(op["trial_id"])
         elif kind == _SET_SATTR:
             s = self.studies.get(op["study_id"])
             if s is not None:
@@ -426,6 +441,16 @@ class JournalStorage(BaseStorage):
             if states is not None:
                 ts = [t for t in ts if t.state in states]
             return [t.copy() for t in ts] if deepcopy else ts
+
+    def get_trials_revision(self, study_id: int) -> int:
+        # the journal must be replayed to learn the revision, so this does not
+        # avoid I/O like the RDB/in-memory counters do — but it keeps the
+        # revision *semantics* uniform across backends (every trial mutation,
+        # including in-place RUNNING updates, bumps it exactly once)
+        self._sync()
+        with self._mem_lock:
+            self._check_study(study_id)
+            return self._replay.revisions.get(study_id, 0)
 
     # -- heartbeat --------------------------------------------------------------------
 

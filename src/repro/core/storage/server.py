@@ -23,7 +23,9 @@ in-flight requests finish, then sockets close.
 
 from __future__ import annotations
 
+import hmac
 import json
+import os
 import socket
 import socketserver
 import struct
@@ -65,6 +67,7 @@ _METHODS = frozenset(
         "record_heartbeat",
         "get_stale_trial_ids",
         "fail_stale_trials",
+        "get_trials_revision",
     }
 )
 
@@ -125,6 +128,7 @@ class _Handler(socketserver.BaseRequestHandler):
         sock: socket.socket = self.request
         sock.settimeout(0.5)  # so the loop notices server shutdown promptly
         server: "_RPCServer" = self.server  # type: ignore[assignment]
+        authed = server.auth_token is None
         while not server.stopping.is_set():
             try:
                 payload = recv_frame(sock)
@@ -138,8 +142,31 @@ class _Handler(socketserver.BaseRequestHandler):
                 request = json.loads(payload)
             except json.JSONDecodeError:
                 return  # protocol violation; drop the connection
-            batch = isinstance(request, list)
-            responses = [server.dispatch(r) for r in (request if batch else [request])]
+            drop_after_reply = False
+            if not authed:
+                # token-protected server: the first frame must be a valid auth
+                # handshake; anything else is answered with a typed error and
+                # the connection is dropped
+                if _auth_ok(request, server.auth_token):
+                    authed = True
+                    responses = [{"id": request.get("id"), "ok": True, "result": "ok"}]
+                    batch = False
+                else:
+                    responses = [
+                        {
+                            "id": request.get("id") if isinstance(request, dict) else None,
+                            "ok": False,
+                            "error": {
+                                "type": "PermissionError",
+                                "message": "storage server requires an auth token",
+                            },
+                        }
+                    ]
+                    batch = False
+                    drop_after_reply = True
+            else:
+                batch = isinstance(request, list)
+                responses = [server.dispatch(r) for r in (request if batch else [request])]
             out = json.dumps(responses if batch else responses[0]).encode()
             try:
                 sock.settimeout(30.0)
@@ -147,15 +174,27 @@ class _Handler(socketserver.BaseRequestHandler):
                 sock.settimeout(0.5)
             except (ConnectionError, OSError):
                 return
+            if drop_after_reply:
+                return
+
+
+def _auth_ok(request: Any, token: str) -> bool:
+    if not isinstance(request, dict) or request.get("method") != "auth":
+        return False
+    params = request.get("params")
+    if not isinstance(params, list) or len(params) != 1 or not isinstance(params[0], str):
+        return False
+    return hmac.compare_digest(params[0], token)
 
 
 class _RPCServer(socketserver.ThreadingTCPServer):
     daemon_threads = True
     allow_reuse_address = True
 
-    def __init__(self, addr: tuple[str, int], storage: BaseStorage):
+    def __init__(self, addr: tuple[str, int], storage: BaseStorage, auth_token: "str | None" = None):
         super().__init__(addr, _Handler)
         self.storage = storage
+        self.auth_token = auth_token
         self.stopping = threading.Event()
 
     def dispatch(self, request: dict) -> dict:
@@ -164,6 +203,10 @@ class _RPCServer(socketserver.ThreadingTCPServer):
         try:
             if method == "ping":
                 return {"id": req_id, "ok": True, "result": "pong"}
+            if method == "auth":
+                # reaching dispatch means no token is required (or the
+                # connection already authenticated); accept idempotently
+                return {"id": req_id, "ok": True, "result": "ok"}
             if method not in _METHODS:
                 raise ValueError(f"unknown storage method {method!r}")
             params = unpack(request.get("params") or [])
@@ -208,19 +251,32 @@ class StorageServer:
 
     ``port=0`` binds an ephemeral port (read it back from ``.port``).
     Usable as a context manager.
+
+    ``auth_token`` arms a shared-secret handshake: every connection must
+    present the token in its first frame (``RemoteStorage`` does this
+    automatically for ``remote://token@host:port`` URLs or an explicit
+    ``auth_token=``) or it is rejected with ``PermissionError`` and dropped.
+    This is authentication only — the wire stays plaintext; run inside a
+    trusted network or tunnel for confidentiality.
     """
 
-    def __init__(self, storage: BaseStorage, host: str = "127.0.0.1", port: int = 0):
+    def __init__(
+        self, storage: BaseStorage, host: str = "127.0.0.1", port: int = 0,
+        auth_token: "str | None" = None,
+    ):
         self._storage = storage
         self._host = host
         self._requested_port = port
+        self._auth_token = auth_token
         self._server: _RPCServer | None = None
         self._thread: threading.Thread | None = None
 
     def start(self) -> "StorageServer":
         if self._server is not None:
             return self
-        self._server = _RPCServer((self._host, self._requested_port), self._storage)
+        self._server = _RPCServer(
+            (self._host, self._requested_port), self._storage, auth_token=self._auth_token
+        )
         self._thread = threading.Thread(
             target=self._server.serve_forever, kwargs={"poll_interval": 0.1}, daemon=True
         )
@@ -270,9 +326,18 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("storage", help="backend URL to wrap (sqlite:/// or journal://)")
     ap.add_argument("--host", default="0.0.0.0")
     ap.add_argument("--port", type=int, default=9000)
+    ap.add_argument(
+        "--auth-token",
+        default=os.environ.get("REPRO_STORAGE_TOKEN"),
+        help="shared secret; clients connect with remote://TOKEN@host:port "
+        "(default: $REPRO_STORAGE_TOKEN)",
+    )
     args = ap.parse_args(argv)
 
-    server = StorageServer(get_storage(args.storage), host=args.host, port=args.port).start()
+    server = StorageServer(
+        get_storage(args.storage), host=args.host, port=args.port,
+        auth_token=args.auth_token,
+    ).start()
     print(f"serving {args.storage} at {server.url} (ctrl-c to stop)", flush=True)
     try:
         threading.Event().wait()

@@ -89,6 +89,10 @@ CREATE TABLE IF NOT EXISTS trial_heartbeats (
     trial_id INTEGER PRIMARY KEY,
     heartbeat_at REAL NOT NULL
 );
+CREATE TABLE IF NOT EXISTS study_revisions (
+    study_id INTEGER PRIMARY KEY,
+    revision INTEGER NOT NULL
+);
 """
 
 _MAX_RETRIES = 16
@@ -184,6 +188,7 @@ class SQLiteStorage(BaseStorage):
                 cur.executemany(f"DELETE FROM {table} WHERE trial_id=?", [(t,) for t in tids])
             cur.execute("DELETE FROM trials WHERE study_id=?", (study_id,))
             cur.execute("DELETE FROM study_attrs WHERE study_id=?", (study_id,))
+            cur.execute("DELETE FROM study_revisions WHERE study_id=?", (study_id,))
             cur.execute("DELETE FROM studies WHERE study_id=?", (study_id,))
 
     @_retry
@@ -293,7 +298,23 @@ class SQLiteStorage(BaseStorage):
                     cur.execute("INSERT INTO trial_attrs VALUES (?, 0, ?, ?)", (tid, k, json.dumps(v)))
                 for k, v in t.system_attrs.items():
                     cur.execute("INSERT INTO trial_attrs VALUES (?, 1, ?, ?)", (tid, k, json.dumps(v)))
+            self._bump_revision(cur, study_id)
             return tid
+
+    @staticmethod
+    def _bump_revision(cur: sqlite3.Cursor, study_id: int) -> None:
+        cur.execute(
+            "INSERT INTO study_revisions VALUES (?, 1)"
+            " ON CONFLICT(study_id) DO UPDATE SET revision = revision + 1",
+            (study_id,),
+        )
+
+    @staticmethod
+    def _bump_revision_for_trial(cur: sqlite3.Cursor, trial_id: int) -> None:
+        cur.execute("SELECT study_id FROM trials WHERE trial_id=?", (trial_id,))
+        row = cur.fetchone()
+        if row is not None:
+            SQLiteStorage._bump_revision(cur, row[0])
 
     @_retry
     def set_trial_param(
@@ -315,6 +336,7 @@ class SQLiteStorage(BaseStorage):
                 "INSERT OR REPLACE INTO trial_params VALUES (?, ?, ?, ?)",
                 (trial_id, param_name, float(param_value_internal), distribution_to_json(distribution)),
             )
+            self._bump_revision_for_trial(cur, trial_id)
 
     @_retry
     def set_trial_state_values(
@@ -339,6 +361,7 @@ class SQLiteStorage(BaseStorage):
             cur.execute(f"UPDATE trials SET {', '.join(sets)} WHERE trial_id=?", args)
             if state.is_finished():
                 cur.execute("DELETE FROM trial_heartbeats WHERE trial_id=?", (trial_id,))
+            self._bump_revision_for_trial(cur, trial_id)
             return True
 
     @_retry
@@ -350,6 +373,7 @@ class SQLiteStorage(BaseStorage):
                 "INSERT OR REPLACE INTO trial_intermediate_values VALUES (?, ?, ?)",
                 (trial_id, int(step), float(intermediate_value)),
             )
+            self._bump_revision_for_trial(cur, trial_id)
 
     def _set_trial_attr(self, trial_id: int, key: str, value: Any, is_system: int) -> None:
         with self._tx() as cur:
@@ -358,6 +382,7 @@ class SQLiteStorage(BaseStorage):
                 "INSERT OR REPLACE INTO trial_attrs VALUES (?, ?, ?, ?)",
                 (trial_id, is_system, key, json.dumps(value)),
             )
+            self._bump_revision_for_trial(cur, trial_id)
 
     set_trial_user_attr = _retry(lambda self, tid, k, v: self._set_trial_attr(tid, k, v, 0))
     set_trial_system_attr = _retry(lambda self, tid, k, v: self._set_trial_attr(tid, k, v, 1))
@@ -442,6 +467,20 @@ class SQLiteStorage(BaseStorage):
             q += f" AND state IN ({','.join('?' * len(states))})"
             args += [int(s) for s in states]
         return self._conn().execute(q, args).fetchone()[0]
+
+    @_retry
+    def get_trials_revision(self, study_id: int) -> int:
+        cur = self._conn().execute(
+            "SELECT revision FROM study_revisions WHERE study_id=?", (study_id,)
+        )
+        row = cur.fetchone()
+        if row is not None:
+            return row[0]
+        if self._conn().execute(
+            "SELECT COUNT(*) FROM studies WHERE study_id=?", (study_id,)
+        ).fetchone()[0] == 0:
+            raise StudyNotFoundError(study_id)
+        return 0
 
     @staticmethod
     def _trial_state(cur: sqlite3.Cursor, trial_id: int) -> TrialState:

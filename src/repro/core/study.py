@@ -19,6 +19,7 @@ from typing import Any, Callable, Iterable, Sequence
 from .exceptions import DuplicatedStudyError, TrialPruned
 from .frozen import FrozenTrial, StudyDirection, TrialState
 from .pruners import BasePruner, NopPruner
+from .records import ObservationStore
 from .samplers import BaseSampler, TPESampler
 from .storage import BaseStorage, get_storage
 from .trial import Trial
@@ -42,6 +43,7 @@ class Study:
         self.sampler = sampler or TPESampler()
         self.pruner = pruner or NopPruner()
         self._stop_requested = False
+        self._records: ObservationStore | None = None
         # heartbeat configuration (fault tolerance; see DESIGN.md)
         self.heartbeat_interval: float | None = None
         self.failed_trial_grace: float = 60.0
@@ -71,6 +73,17 @@ class Study:
         states: tuple[TrialState, ...] | None = None,
     ) -> list[FrozenTrial]:
         return self._storage.get_all_trials(self._study_id, deepcopy=deepcopy, states=states)
+
+    def observations(self) -> ObservationStore:
+        """The study's columnar observation store: finished-trial history as
+        number-ordered arrays (one model-space matrix + values/states
+        vectors), refreshed incrementally.  This is the substrate every
+        array-native sampler reads instead of ``get_trials`` — see
+        ``core/records.py``."""
+        if self._records is None:
+            self._records = ObservationStore(self._storage, self._study_id)
+        self._records.refresh()
+        return self._records
 
     @property
     def best_trial(self) -> FrozenTrial:
@@ -136,14 +149,31 @@ class Study:
 
     # -- ask / tell ----------------------------------------------------------------------
 
-    def ask(self) -> Trial:
-        """Create a new trial (claiming an enqueued WAITING one if present)."""
-        # claim enqueued trials first
+    def ask(self, n: int | None = None) -> "Trial | list[Trial]":
+        """Create a new trial (claiming an enqueued WAITING one if present).
+
+        ``ask(n)`` is the batched form: it claims up to ``n`` enqueued
+        WAITING trials, creates the remainder in one storage round trip
+        (``create_new_trials`` batches over ``remote://``), and returns a
+        list of ``n`` trials.  Distributed workers and the tune scheduler use
+        it to seed a whole wave of trials per round trip."""
+        if n is None:
+            for t in self.get_trials(deepcopy=False, states=(TrialState.WAITING,)):
+                if self._storage.set_trial_state_values(t.trial_id, TrialState.RUNNING):
+                    return Trial(self, t.trial_id)
+            trial_id = self._storage.create_new_trial(self._study_id)
+            return Trial(self, trial_id)
+        if n < 0:
+            raise ValueError(f"ask(n) needs n >= 0, got {n}")
+        trials: list[Trial] = []
         for t in self.get_trials(deepcopy=False, states=(TrialState.WAITING,)):
+            if len(trials) == n:
+                break
             if self._storage.set_trial_state_values(t.trial_id, TrialState.RUNNING):
-                return Trial(self, t.trial_id)
-        trial_id = self._storage.create_new_trial(self._study_id)
-        return Trial(self, trial_id)
+                trials.append(Trial(self, t.trial_id))
+        for trial_id in self._storage.create_new_trials(self._study_id, n - len(trials)):
+            trials.append(Trial(self, trial_id))
+        return trials
 
     def tell(
         self,
@@ -151,16 +181,53 @@ class Study:
         values: "float | Sequence[float] | None" = None,
         state: TrialState = TrialState.COMPLETE,
     ) -> None:
+        trial_id, state, values = self._normalize_tell(trial, values, state)
+        self._storage.set_trial_state_values(trial_id, state, values)
+        frozen = self._storage.get_trial(trial_id)
+        self.sampler.after_trial(self, frozen, state, values)
+        if self._records is not None:
+            self._records.refresh()  # ingest the finished trial incrementally
+
+    def tell_batch(
+        self,
+        results: Sequence[tuple],
+        state: TrialState = TrialState.COMPLETE,
+    ) -> None:
+        """Report many finished trials at once.  Each item is ``(trial,
+        values)`` or ``(trial, values, state)``.  Over a batching backend
+        (``remote://``) all state transitions travel in one frame."""
+        normalized = []
+        for item in results:
+            trial, values = item[0], item[1]
+            st = item[2] if len(item) > 2 else state
+            normalized.append(self._normalize_tell(trial, values, st))
+        call_batch = getattr(self._storage, "call_batch", None)
+        if call_batch is not None and len(normalized) > 1:
+            call_batch(
+                [("set_trial_state_values", (tid, st, vs)) for tid, st, vs in normalized]
+            )
+            frozens = call_batch([("get_trial", (tid,)) for tid, _, _ in normalized])
+        else:
+            for tid, st, vs in normalized:
+                self._storage.set_trial_state_values(tid, st, vs)
+            frozens = [self._storage.get_trial(tid) for tid, _, _ in normalized]
+        for frozen, (tid, st, vs) in zip(frozens, normalized):
+            self.sampler.after_trial(self, frozen, st, vs)
+        if self._records is not None:
+            self._records.refresh()
+
+    @staticmethod
+    def _normalize_tell(trial, values, state) -> tuple[int, TrialState, "list[float] | None"]:
         trial_id = trial._trial_id if isinstance(trial, Trial) else int(trial)
-        if values is not None and not isinstance(values, (list, tuple)):
-            values = [float(values)]
+        if values is not None:
+            values = [float(values)] if not isinstance(values, (list, tuple)) else [
+                float(v) for v in values
+            ]
         if state == TrialState.COMPLETE and values is None:
             raise ValueError("completed trials need a value")
         if values is not None and any(v != v for v in values):
             state, values = TrialState.FAIL, None  # NaN objective -> failed
-        self._storage.set_trial_state_values(trial_id, state, values)
-        frozen = self._storage.get_trial(trial_id)
-        self.sampler.after_trial(self, frozen, state, values)
+        return trial_id, state, values
 
     def enqueue_trial(self, params: dict[str, Any], user_attrs: dict[str, Any] | None = None) -> None:
         """Seed the study with a known-good configuration (warm start)."""
@@ -185,13 +252,17 @@ class Study:
         callbacks: Iterable[Callable[["Study", FrozenTrial], None]] | None = None,
         gc_after_trial: bool = False,
         show_progress_bar: bool = False,
+        ask_batch: int = 1,
     ) -> None:
+        """``ask_batch > 1`` claims that many trials per storage round trip
+        (``ask(n)``) and evaluates them sequentially — the lever distributed
+        workers use to amortize remote-storage latency."""
         self._stop_requested = False
         callbacks = list(callbacks or [])
         deadline = time.time() + timeout if timeout is not None else None
 
         if n_jobs == 1:
-            self._optimize_loop(func, n_trials, deadline, catch, callbacks)
+            self._optimize_loop(func, n_trials, deadline, catch, callbacks, ask_batch)
             return
 
         # thread-based parallel trials against shared storage (the in-process
@@ -209,10 +280,26 @@ class Study:
                 return True
 
         def worker():
-            while not self._stop_requested and take():
+            while not self._stop_requested:
                 if deadline is not None and time.time() > deadline:
                     break
-                self._run_one(func, catch, callbacks)
+                # grab up to ask_batch budget slots, claim them in one round
+                # trip, evaluate sequentially
+                slots = 0
+                while slots < max(1, ask_batch) and take():
+                    slots += 1
+                if slots == 0:
+                    break
+                pending = self.ask(slots) if ask_batch > 1 else [None] * slots
+                try:
+                    while pending:
+                        if self._stop_requested or (
+                            deadline is not None and time.time() > deadline
+                        ):
+                            break
+                        self._run_one(func, catch, callbacks, trial=pending.pop(0))
+                finally:
+                    self._release_unrun(pending)
 
         threads = [threading.Thread(target=worker, daemon=True) for _ in range(n_jobs)]
         for th in threads:
@@ -220,18 +307,40 @@ class Study:
         for th in threads:
             th.join()
 
-    def _optimize_loop(self, func, n_trials, deadline, catch, callbacks) -> None:
+    def _optimize_loop(self, func, n_trials, deadline, catch, callbacks, ask_batch=1) -> None:
         i = 0
-        while n_trials is None or i < n_trials:
-            if self._stop_requested:
-                break
-            if deadline is not None and time.time() > deadline:
-                break
-            self._run_one(func, catch, callbacks)
-            i += 1
+        pending: list[Trial] = []
+        try:
+            while n_trials is None or i < n_trials:
+                if self._stop_requested:
+                    break
+                if deadline is not None and time.time() > deadline:
+                    break
+                if ask_batch > 1 and not pending:
+                    want = ask_batch if n_trials is None else min(ask_batch, n_trials - i)
+                    pending = self.ask(want)
+                trial = pending.pop(0) if pending else None
+                self._run_one(func, catch, callbacks, trial=trial)
+                i += 1
+        finally:
+            self._release_unrun(pending)
 
-    def _run_one(self, func, catch, callbacks) -> FrozenTrial:
-        trial = self.ask()
+    def _release_unrun(self, trials: "list[Trial]") -> None:
+        """Return batch-asked but never-evaluated trials (stop/deadline/raise)
+        to the WAITING queue: no parameter was suggested yet, so enqueued
+        warm-start configurations survive and any later ``ask`` — here or on
+        another worker — claims them intact instead of leaking RUNNING rows."""
+        for t in trials:
+            if t is None:
+                continue
+            try:
+                self._storage.set_trial_state_values(t._trial_id, TrialState.WAITING)
+            except Exception:
+                warnings.warn(f"could not release unevaluated trial {t._trial_id}")
+
+    def _run_one(self, func, catch, callbacks, trial: "Trial | None" = None) -> FrozenTrial:
+        if trial is None:
+            trial = self.ask()
         trial_id = trial._trial_id
 
         # fixed params from enqueue_trial
@@ -268,6 +377,8 @@ class Study:
 
         frozen = self._storage.get_trial(trial_id)
         self.sampler.after_trial(self, frozen, state, values)
+        if self._records is not None:
+            self._records.refresh()  # keep the columnar store warm
         for cb in callbacks:
             cb(self, frozen)
         return frozen

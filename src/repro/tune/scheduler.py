@@ -45,9 +45,15 @@ class TrialSliceScheduler:
     def run(self, n_trials: int) -> None:
         """Run ``n_trials`` total across the slices; each slice loops
         ask -> train -> tell, backfilling as soon as its trial finishes or is
-        pruned."""
+        pruned.
+
+        The opening wave is claimed with one batched ``study.ask(n)`` — one
+        storage round trip seeds every slice — after which backfill stays
+        elastic (one ask per freed slice, no global barrier)."""
         budget = [n_trials]
         lock = threading.Lock()
+
+        seeded: list = list(self.study.ask(min(n_trials, len(self.meshes))))
 
         def take() -> bool:
             with lock:
@@ -56,9 +62,15 @@ class TrialSliceScheduler:
                 budget[0] -= 1
                 return True
 
+        def next_trial():
+            with lock:
+                if seeded:
+                    return seeded.pop(0)
+            return self.study.ask()
+
         def slice_worker(slice_id: int, mesh) -> None:
             while take():
-                trial = self.study.ask()
+                trial = next_trial()
                 self._log("start", slice_id, trial.number)
                 try:
                     value = self.run_trial(trial, mesh)

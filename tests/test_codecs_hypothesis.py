@@ -1,0 +1,74 @@
+"""Hypothesis property tests for the vectorized model-space codecs.
+
+Complements ``test_codecs.py`` (which always runs); this module is skipped
+when hypothesis is not installed, mirroring ``test_distributions.py``."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distributions import (
+    CategoricalDistribution,
+    FloatDistribution,
+    IntDistribution,
+)
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    low=st.floats(-1e6, 1e6, allow_nan=False),
+    width=st.floats(1e-6, 1e6, allow_nan=False),
+    data=st.lists(st.floats(0.0, 1.0), min_size=1, max_size=16),
+)
+def test_float_roundtrip(low, width, data):
+    d = FloatDistribution(low, low + width)
+    xs = np.asarray([low + u * width for u in data])
+    back = d.from_internal(d.to_internal(xs))
+    assert np.all(back >= d.low) and np.all(back <= d.high)
+    assert np.allclose(back, xs, rtol=1e-12, atol=1e-9)
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    low=st.floats(1e-8, 1e3),
+    mult=st.floats(1.5, 1e3),
+    data=st.lists(st.floats(0.0, 1.0), min_size=1, max_size=16),
+)
+def test_float_log_roundtrip(low, mult, data):
+    d = FloatDistribution(low, low * mult, log=True)
+    xs = np.exp(np.log(low) + np.asarray(data) * np.log(mult))
+    back = d.from_internal(d.to_internal(xs))
+    assert np.all(back >= d.low) and np.all(back <= d.high)
+    assert np.allclose(back, xs, rtol=1e-9)
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    low=st.integers(-1000, 1000),
+    width=st.integers(0, 1000),
+    step=st.integers(1, 7),
+    data=st.lists(st.integers(0, 10**6), min_size=1, max_size=16),
+)
+def test_int_roundtrip(low, width, step, data):
+    d = IntDistribution(low, low + width, step=step)
+    n_cells = (d.high - d.low) // d.step + 1
+    xs = [d.low + (v % n_cells) * d.step for v in data]
+    back = d.from_internal(d.to_internal(xs))
+    assert list(back.astype(int)) == xs
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    st.lists(
+        st.one_of(st.integers(), st.text(max_size=6), st.booleans(), st.none()),
+        min_size=1, max_size=8, unique_by=lambda x: (type(x).__name__, x),
+    ),
+    st.lists(st.integers(0, 10**6), min_size=1, max_size=16),
+)
+def test_categorical_roundtrip(choices, picks, ):
+    d = CategoricalDistribution(choices)
+    xs = [choices[p % len(choices)] for p in picks]
+    back = [d.to_external_repr(v) for v in d.from_internal(d.to_internal(xs))]
+    assert all(type(a) is type(b) and a == b for a, b in zip(xs, back))

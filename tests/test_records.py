@@ -1,0 +1,315 @@
+"""Columnar observation store, storage revision counters, and the batched
+ask/tell lifecycle."""
+
+import numpy as np
+import pytest
+
+import repro.core as hpo
+from repro.core.frozen import TrialState
+from repro.core.records import ObservationStore
+
+
+def _finish(storage, sid, params=None, value=0.0, state=TrialState.COMPLETE):
+    from repro.core.distributions import FloatDistribution
+
+    tid = storage.create_new_trial(sid)
+    for name, v in (params or {}).items():
+        storage.set_trial_param(tid, name, v, FloatDistribution(-10, 10))
+    vals = [value] if state == TrialState.COMPLETE else None
+    storage.set_trial_state_values(tid, state, vals)
+    return tid
+
+
+class TestObservationStore:
+    def test_incremental_ingest_and_order(self):
+        storage = hpo.InMemoryStorage()
+        sid = storage.create_new_study([hpo.StudyDirection.MINIMIZE], "s")
+        store = ObservationStore(storage, sid)
+        store.refresh()
+        assert store.n_observations == 0
+
+        for i in range(5):
+            _finish(storage, sid, {"x": float(i)}, value=float(i))
+        store.refresh()
+        assert store.n_observations == 5
+        assert list(store.numbers) == [0, 1, 2, 3, 4]
+        assert np.allclose(store.column("x"), [0, 1, 2, 3, 4])
+        assert np.allclose(store.values, [0, 1, 2, 3, 4])
+
+        v0 = store.version
+        store.refresh()  # no change -> no version bump
+        assert store.version == v0
+
+    def test_out_of_order_finishes_sorted_by_number(self):
+        storage = hpo.InMemoryStorage()
+        sid = storage.create_new_study([hpo.StudyDirection.MINIMIZE], "s")
+        from repro.core.distributions import FloatDistribution
+
+        t0 = storage.create_new_trial(sid)
+        t1 = storage.create_new_trial(sid)
+        storage.set_trial_param(t1, "x", 1.0, FloatDistribution(-10, 10))
+        storage.set_trial_state_values(t1, TrialState.COMPLETE, [1.0])
+        store = ObservationStore(storage, sid)
+        store.refresh()
+        assert list(store.numbers) == [1]  # trial 0 still running
+
+        storage.set_trial_param(t0, "x", 0.0, FloatDistribution(-10, 10))
+        storage.set_trial_state_values(t0, TrialState.COMPLETE, [0.0])
+        store.refresh()
+        assert list(store.numbers) == [0, 1]
+        assert np.allclose(store.column("x"), [0.0, 1.0])
+
+    def test_conditional_params_are_nan(self):
+        storage = hpo.InMemoryStorage()
+        sid = storage.create_new_study([hpo.StudyDirection.MINIMIZE], "s")
+        _finish(storage, sid, {"x": 1.0, "cond": 5.0}, value=1.0)
+        _finish(storage, sid, {"x": 2.0}, value=2.0)
+        store = ObservationStore(storage, sid)
+        store.refresh()
+        cond = store.column("cond")
+        assert np.isnan(cond[1]) and cond[0] == 5.0
+
+    def test_failed_and_pruned_rows_kept_with_state(self):
+        storage = hpo.InMemoryStorage()
+        sid = storage.create_new_study([hpo.StudyDirection.MINIMIZE], "s")
+        _finish(storage, sid, {"x": 1.0}, value=1.0)
+        _finish(storage, sid, {"x": 2.0}, state=TrialState.FAIL)
+        tid = storage.create_new_trial(sid)
+        storage.set_trial_intermediate_value(tid, 0, 7.5)
+        storage.set_trial_state_values(tid, TrialState.PRUNED)
+        store = ObservationStore(storage, sid)
+        store.refresh()
+        assert list(store.states) == [
+            int(TrialState.COMPLETE), int(TrialState.FAIL), int(TrialState.PRUNED),
+        ]
+        assert np.isnan(store.values[1]) and np.isnan(store.values[2])
+        assert store.last_intermediate_values[2] == 7.5
+
+    def test_model_space_encoding_log(self):
+        from repro.core.distributions import FloatDistribution
+
+        storage = hpo.InMemoryStorage()
+        sid = storage.create_new_study([hpo.StudyDirection.MINIMIZE], "s")
+        tid = storage.create_new_trial(sid)
+        storage.set_trial_param(tid, "lr", 1e-3, FloatDistribution(1e-6, 1.0, log=True))
+        storage.set_trial_state_values(tid, TrialState.COMPLETE, [0.0])
+        store = ObservationStore(storage, sid)
+        store.refresh()
+        assert np.isclose(store.column("lr")[0], np.log(1e-3))
+
+    def test_design_matrix(self):
+        storage = hpo.InMemoryStorage()
+        sid = storage.create_new_study([hpo.StudyDirection.MINIMIZE], "s")
+        _finish(storage, sid, {"a": 1.0, "b": 2.0}, value=3.0)
+        _finish(storage, sid, {"a": 4.0}, value=5.0)  # missing b -> excluded
+        _finish(storage, sid, {"a": 6.0, "b": 7.0}, state=TrialState.FAIL)
+        store = ObservationStore(storage, sid)
+        store.refresh()
+        X, y = store.design_matrix(["a", "b"])
+        assert X.shape == (1, 2)
+        assert list(X[0]) == [1.0, 2.0] and list(y) == [3.0]
+        X2, y2 = store.design_matrix(["a", "never_seen"])
+        assert X2.shape == (0, 2) and len(y2) == 0
+
+    def test_views_are_read_only(self):
+        storage = hpo.InMemoryStorage()
+        sid = storage.create_new_study([hpo.StudyDirection.MINIMIZE], "s")
+        _finish(storage, sid, {"x": 1.0}, value=1.0)
+        store = ObservationStore(storage, sid)
+        store.refresh()
+        with pytest.raises(ValueError):
+            store.values[0] = 99.0
+
+    def test_study_observations_composes_with_cached_storage(self):
+        backend = hpo.InMemoryStorage()
+        storage = hpo.CachedStorage(backend)
+        study = hpo.create_study(storage=storage, sampler=hpo.RandomSampler(seed=0))
+        study.optimize(lambda t: t.suggest_float("x", 0, 1), n_trials=6)
+        store = study.observations()
+        assert store.n_observations == 6
+        assert store.column("x") is not None
+
+
+class TestRevisionCounter:
+    def _check(self, storage):
+        sid = storage.create_new_study([hpo.StudyDirection.MINIMIZE], "rev-study")
+        r0 = storage.get_trials_revision(sid)
+        tid = storage.create_new_trial(sid)
+        r1 = storage.get_trials_revision(sid)
+        assert r1 > r0
+        from repro.core.distributions import FloatDistribution
+
+        storage.set_trial_param(tid, "x", 0.5, FloatDistribution(0, 1))
+        r2 = storage.get_trials_revision(sid)
+        assert r2 > r1
+        # in-place update to a RUNNING trial is visible (the ROADMAP gap a
+        # number-based since= poll could not see)
+        storage.set_trial_intermediate_value(tid, 0, 1.0)
+        r3 = storage.get_trials_revision(sid)
+        assert r3 > r2
+        storage.set_trial_system_attr(tid, "k", "v")
+        r4 = storage.get_trials_revision(sid)
+        assert r4 > r3
+        storage.set_trial_state_values(tid, TrialState.COMPLETE, [1.0])
+        assert storage.get_trials_revision(sid) > r4
+
+    def test_inmemory(self):
+        self._check(hpo.InMemoryStorage())
+
+    def test_sqlite(self, tmp_sqlite):
+        self._check(hpo.get_storage(tmp_sqlite))
+
+    def test_journal(self, tmp_journal):
+        self._check(hpo.get_storage(tmp_journal))
+
+    def test_remote(self):
+        backend = hpo.InMemoryStorage()
+        with hpo.StorageServer(backend) as server:
+            remote = hpo.RemoteStorage(server.url)
+            self._check(remote)
+            remote.close()
+
+    def test_cached_refresh_skips_fetch_when_unchanged(self):
+        class CountingStorage(hpo.InMemoryStorage):
+            def __init__(self):
+                super().__init__()
+                self.full_reads = 0
+
+            def get_all_trials(self, *a, **k):
+                self.full_reads += 1
+                return super().get_all_trials(*a, **k)
+
+        backend = CountingStorage()
+        cached = hpo.CachedStorage(backend)
+        sid = cached.create_new_study([hpo.StudyDirection.MINIMIZE], "s")
+        _finish(backend, sid, {"x": 1.0}, value=1.0)
+        cached.get_all_trials(sid)
+        reads = backend.full_reads
+        for _ in range(5):  # nothing changed -> revision short-circuits
+            cached.get_all_trials(sid)
+        assert backend.full_reads == reads
+        _finish(backend, sid, {"x": 2.0}, value=2.0)
+        cached.get_all_trials(sid)
+        assert backend.full_reads > reads
+        assert len(cached.get_all_trials(sid)) == 2
+
+
+class TestBatchedAskTell:
+    def test_ask_n_returns_n_trials(self):
+        study = hpo.create_study(sampler=hpo.RandomSampler(seed=0))
+        trials = study.ask(4)
+        assert len(trials) == 4
+        assert len({t._trial_id for t in trials}) == 4
+        assert study.ask(0) == []
+        with pytest.raises(ValueError):
+            study.ask(-1)
+
+    def test_ask_n_claims_enqueued_first(self):
+        study = hpo.create_study(sampler=hpo.RandomSampler(seed=0))
+        study.enqueue_trial({"x": 0.25})
+        trials = study.ask(3)
+        assert len(trials) == 3
+        fixed = [
+            t for t in trials
+            if t.study._storage.get_trial(t._trial_id).system_attrs.get("fixed_params")
+        ]
+        assert len(fixed) == 1
+
+    def test_tell_batch(self):
+        study = hpo.create_study(sampler=hpo.RandomSampler(seed=0))
+        trials = study.ask(3)
+        for t in trials:
+            t.suggest_float("x", 0, 1)
+        study.tell_batch([(trials[0], 1.0), (trials[1], 2.0),
+                          (trials[2], None, TrialState.FAIL)])
+        states = [t.state for t in study.trials]
+        assert states == [TrialState.COMPLETE, TrialState.COMPLETE, TrialState.FAIL]
+        assert study.best_value == 1.0
+
+    def test_tell_batch_feeds_observation_store(self):
+        study = hpo.create_study(sampler=hpo.RandomSampler(seed=0))
+        trials = study.ask(2)
+        for i, t in enumerate(trials):
+            t.suggest_float("x", 0, 1)
+        study.tell_batch([(trials[0], 5.0), (trials[1], 6.0)])
+        assert study.observations().n_observations == 2
+
+    def test_optimize_ask_batch(self):
+        study = hpo.create_study(sampler=hpo.RandomSampler(seed=1))
+        study.optimize(lambda t: t.suggest_float("x", 0, 1), n_trials=7, ask_batch=3)
+        assert len(study.trials) == 7
+        assert all(t.state == TrialState.COMPLETE for t in study.trials)
+
+    def test_optimize_ask_batch_releases_unconsumed_on_stop(self):
+        study = hpo.create_study(sampler=hpo.RandomSampler(seed=1))
+
+        def objective(trial):
+            trial.suggest_float("x", 0, 1)
+            if trial.number == 0:
+                study.stop()
+            return 0.0
+
+        study.optimize(objective, n_trials=9, ask_batch=3)
+        states = [t.state for t in study.trials]
+        assert TrialState.COMPLETE in states
+        # batch-asked but unevaluated trials must not linger RUNNING; they go
+        # back to WAITING so a later ask can claim them
+        assert TrialState.RUNNING not in states
+        assert TrialState.WAITING in states
+
+    def test_ask_batch_release_preserves_enqueued_configs(self):
+        study = hpo.create_study(sampler=hpo.RandomSampler(seed=1))
+        study.enqueue_trial({"x": 0.123})
+        study.enqueue_trial({"x": 0.456})
+
+        def stop_immediately(trial):
+            trial.suggest_float("x", 0, 1)
+            study.stop()
+            return 0.0
+
+        # batch claims both enqueued configs; only the first runs
+        study.optimize(stop_immediately, n_trials=4, ask_batch=4)
+        # the unevaluated warm-start config survives and runs on resume
+        study.optimize(lambda t: t.suggest_float("x", 0, 1), n_trials=1)
+        done = [t.params["x"] for t in study.trials if t.state == TrialState.COMPLETE]
+        assert sorted(done) == [0.123, 0.456]
+
+    def test_optimize_ask_batch_threaded(self):
+        study = hpo.create_study(sampler=hpo.RandomSampler(seed=2))
+        study.optimize(
+            lambda t: t.suggest_float("x", 0, 1), n_trials=8, n_jobs=2, ask_batch=3
+        )
+        done = [t for t in study.trials if t.state == TrialState.COMPLETE]
+        assert len(done) == 8
+        assert all(t.state != TrialState.RUNNING for t in study.trials)
+
+    def test_worker_main_ask_batch(self, tmp_path):
+        url = f"sqlite:///{tmp_path}/s.db"
+        study = hpo.create_study(study_name="batched", storage=url)
+        from repro.core.distributed import worker_main
+
+        worker_main(
+            url, "batched", lambda t: t.suggest_float("x", 0, 1) ** 2,
+            n_trials=6, seed_offset=0, heartbeat_interval=None, ask_batch=3,
+        )
+        study2 = hpo.load_study("batched", url)
+        done = [t for t in study2.trials if t.state == TrialState.COMPLETE]
+        assert len(done) == 6
+
+
+class TestMakeSamplerGrid:
+    def test_grid_registered(self):
+        sampler = hpo.make_sampler("grid", seed=0, search_space={"a": [1, 2], "b": [0.5, 1.5]})
+        assert isinstance(sampler, hpo.GridSampler)
+        study = hpo.create_study(sampler=sampler)
+
+        def objective(trial):
+            return trial.suggest_int("a", 1, 2) * trial.suggest_float("b", 0.5, 1.5)
+
+        study.optimize(objective, n_trials=4)
+        seen = {(t.params["a"], t.params["b"]) for t in study.trials}
+        assert len(seen) == 4  # all cells covered exactly once
+
+    def test_grid_without_space_raises(self):
+        with pytest.raises(ValueError, match="search_space"):
+            hpo.make_sampler("grid")

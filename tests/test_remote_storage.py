@@ -303,3 +303,75 @@ class TestServedDistributedStudy:
         fixed = [t for t in trials if "fixed_params" in t.system_attrs]
         assert sorted(t.params["x"] for t in fixed) == [-1.0, 1.0]
         assert study.best_value == pytest.approx(0.0)
+
+
+class TestAuthToken:
+    """Shared-secret handshake on the remote protocol."""
+
+    @pytest.fixture
+    def auth_server(self):
+        srv = StorageServer(InMemoryStorage(), auth_token="sekrit").start()
+        yield srv
+        srv.stop()
+
+    def test_authenticated_client_works(self, auth_server):
+        client = RemoteStorage(auth_server.url, auth_token="sekrit")
+        sid = client.create_new_study([StudyDirection.MINIMIZE], "a")
+        assert client.get_study_id_from_name("a") == sid
+        client.close()
+
+    def test_token_in_url(self, auth_server):
+        url = f"remote://sekrit@{auth_server.host}:{auth_server.port}"
+        client = get_storage(url)
+        sid = client.create_new_study([StudyDirection.MINIMIZE], "u")
+        assert client.get_study_name_from_id(sid) == "u"
+        # the secret never leaks through the url property
+        assert "sekrit" not in client.url
+        client.close()
+
+    def test_unauthenticated_client_rejected(self, auth_server):
+        with pytest.raises(PermissionError):
+            RemoteStorage(auth_server.url)
+
+    def test_wrong_token_rejected(self, auth_server):
+        with pytest.raises(PermissionError):
+            RemoteStorage(auth_server.url, auth_token="wrong")
+
+    def test_token_ignored_when_server_open(self, server):
+        # an auth frame against an open server is accepted idempotently
+        client = RemoteStorage(server.url, auth_token="whatever")
+        client.create_new_study([StudyDirection.MINIMIZE], "open")
+        client.close()
+
+    def test_reconnect_reauthenticates(self, auth_server):
+        client = RemoteStorage(auth_server.url, auth_token="sekrit")
+        sid = client.create_new_study([StudyDirection.MINIMIZE], "r")
+        client.close()  # drop this thread's socket; next call re-dials + re-auths
+        assert client.get_study_id_from_name("r") == sid
+        client.close()
+
+
+class TestBatchedCreateOverRemote:
+    def test_create_new_trials_single_round_trip(self, server, remote):
+        sid = remote.create_new_study([StudyDirection.MINIMIZE], "batch")
+        tids = remote.create_new_trials(sid, 5)
+        assert len(tids) == 5 and len(set(tids)) == 5
+        assert remote.get_n_trials(sid) == 5
+
+    def test_ask_n_over_cached_remote(self, remote):
+        cached = CachedStorage(remote)
+        study = hpo.create_study(
+            study_name="askn", storage=cached, sampler=hpo.RandomSampler(seed=0)
+        )
+        trials = study.ask(4)
+        assert len(trials) == 4
+        for t in trials:
+            t.suggest_float("x", 0, 1)
+        study.tell_batch([(t, float(i)) for i, t in enumerate(trials)])
+        assert study.observations().n_observations == 4
+
+    def test_remote_revision_counter(self, remote):
+        sid = remote.create_new_study([StudyDirection.MINIMIZE], "rev")
+        r0 = remote.get_trials_revision(sid)
+        remote.create_new_trial(sid)
+        assert remote.get_trials_revision(sid) > r0
