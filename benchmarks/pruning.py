@@ -1,5 +1,8 @@
 """Paper §5.2 (Fig. 11a): pruning speedup on hyperparameter search over a
-real iterative training task.
+real iterative training task — plus the **prune-decision throughput**
+benchmark for the intermediate-value backbone (vectorized pruner stack vs
+the frozen scalar path in ``pruners/_legacy.py``) and the report-path
+round-trip count for the fused ``report_and_prune`` storage op.
 
 The paper trains 'simplified AlexNet' (3 conv + 1 fc, 8 hyperparameters) on
 SVHN with a 4-hour GPU budget.  The CPU-scale analogue keeps the *shape* of
@@ -7,10 +10,16 @@ the experiment: an 8-hyperparameter MLP classifier trained by JAX SGD on a
 synthetic SVHN-like task, a fixed wall-clock budget, and four arms:
 {random, tpe} x {no pruning, ASHA} + median pruning — measuring trials
 explored and best test error vs time.
+
+``python -m benchmarks.pruning --prune-bench`` runs only the throughput +
+round-trip measurements and writes ``BENCH_pruning.json`` (CI uploads it as
+an artifact next to ``BENCH_samplers.json``).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -18,8 +27,15 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core as hpo
+from repro.core.frozen import TrialState
 
-__all__ = ["run", "make_task"]
+__all__ = [
+    "run",
+    "make_task",
+    "prune_decision_throughput",
+    "report_path_round_trips",
+    "main",
+]
 
 
 def make_task(seed: int = 0, n: int = 2048, dim: int = 64, classes: int = 10):
@@ -135,3 +151,198 @@ def run(budget_seconds: float = 25.0, epochs: int = 16, verbose: bool = True, se
                 flush=True,
             )
     return rows
+
+
+# -- prune-decision throughput: vectorized stack vs frozen scalar pruners --------
+
+
+def _seed_pruning_history(study, n_trials: int, n_steps: int, seed: int) -> None:
+    """``n_trials`` COMPLETE trials that each reported ``n_steps`` values —
+    the peer population every prune decision ranks against."""
+    storage, sid = study._storage, study._study_id
+    rng = np.random.RandomState(seed)
+    for _ in range(n_trials):
+        tid = storage.create_new_trial(sid)
+        base = float(rng.rand())
+        for step in range(1, n_steps + 1):
+            storage.set_trial_intermediate_value(
+                tid, step, base + 0.1 * float(rng.randn())
+            )
+        storage.set_trial_state_values(tid, TrialState.COMPLETE, [base])
+
+
+def _bench_decision(pruner, study, frozen, n_decisions: int) -> float:
+    """Median ms per ``prune`` decision (first call warms stores off-clock)."""
+    pruner.prune(study, frozen)
+    times = []
+    for _ in range(n_decisions):
+        t0 = time.perf_counter()
+        pruner.prune(study, frozen)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e3)
+
+
+def prune_decision_throughput(
+    n_trials: int = 1000,
+    n_steps: int = 100,
+    n_decisions: int = 15,
+    n_decisions_legacy: int = 5,
+    seed: int = 0,
+    verbose: bool = True,
+) -> dict:
+    """Decision latency, vectorized vs frozen-legacy, same seeded history.
+
+    The acceptance bar for the intermediate-value backbone is >= 10x at
+    1000 trials x 100 steps.  The target trial reports at a rung-boundary
+    step so ASHA/Hyperband actually rank (r=1, eta=2 -> step 64)."""
+    from repro.core.pruners._legacy import (
+        LegacyHyperbandPruner,
+        LegacyMedianPruner,
+        LegacySuccessiveHalvingPruner,
+    )
+
+    study = hpo.create_study()
+    _seed_pruning_history(study, n_trials, n_steps, seed)
+    target = study._storage.create_new_trial(study._study_id)
+    rng = np.random.RandomState(seed + 1)
+    for step in range(1, n_steps + 1):
+        study._storage.set_trial_intermediate_value(
+            target, step, 0.5 + 0.1 * float(rng.randn())
+        )
+    frozen = study._storage.get_trial(target)
+    rung_step = 1  # largest r=1, eta=2 rung boundary within n_steps, so the
+    while rung_step * 2 <= n_steps:  # ASHA/Hyperband rows measure a real
+        rung_step *= 2  # ranking decision, not the boundary-check early exit
+    at_rung = frozen.copy()
+    at_rung.intermediate_values = {
+        s: v for s, v in frozen.intermediate_values.items() if s <= rung_step
+    }
+
+    # hyperband: steer the target into bracket 0 (its rungs are every power
+    # of two), so the row measures a ranking decision at rung_step for any
+    # --steps instead of a bracket-boundary early exit
+    hb = hpo.HyperbandPruner(1, 64, 2)
+    hb_trial = at_rung.copy()
+    while hb.bracket_of(hb_trial) != 0:
+        hb_trial.number += 1
+
+    pairs = {
+        "median": (hpo.MedianPruner(), LegacyMedianPruner(), frozen),
+        "asha": (
+            hpo.SuccessiveHalvingPruner(1, 2, 0),
+            LegacySuccessiveHalvingPruner(1, 2, 0),
+            at_rung,
+        ),
+        "hyperband": (hb, LegacyHyperbandPruner(1, 64, 2), hb_trial),
+    }
+    out: dict = {"n_trials": n_trials, "n_steps": n_steps, "pruners": {}}
+    for name, (new, legacy, trial) in pairs.items():
+        new_ms = _bench_decision(new, study, trial, n_decisions)
+        legacy_ms = _bench_decision(legacy, study, trial, n_decisions_legacy)
+        row = {
+            "vectorized_ms_per_decision": new_ms,
+            "legacy_ms_per_decision": legacy_ms,
+            "speedup": legacy_ms / max(new_ms, 1e-9),
+        }
+        out["pruners"][name] = row
+        if verbose:
+            print(
+                f"[pruning] {name:10s} decision @ {n_trials} trials x {n_steps} steps: "
+                f"vectorized {new_ms:.3f} ms, legacy {legacy_ms:.2f} ms "
+                f"-> {row['speedup']:.1f}x",
+                flush=True,
+            )
+    out["min_speedup"] = min(r["speedup"] for r in out["pruners"].values())
+    return out
+
+
+# -- report-path round trips: fused report_and_prune vs the pre-fusion calls -----
+
+
+def report_path_round_trips(n_steps: int = 16, n_peers: int = 8, verbose: bool = True) -> dict:
+    """Wire frames per report+should_prune over ``remote://`` + cache:
+    the fused path vs the pre-fusion sequence (set value, refetch own trial,
+    re-read all peers for the scalar pruner)."""
+    from repro.core.pruners._legacy import LegacyMedianPruner
+    from repro.core.storage import CachedStorage, RemoteStorage, StorageServer
+
+    with StorageServer(hpo.InMemoryStorage()) as server:
+        remote = RemoteStorage(server.url)
+        frames = {"n": 0}
+        orig = remote._roundtrip
+
+        def counting(payload):
+            frames["n"] += 1
+            return orig(payload)
+
+        remote._roundtrip = counting
+        study = hpo.create_study(
+            study_name="bench", storage=CachedStorage(remote),
+            pruner=hpo.MedianPruner(n_startup_trials=1),
+        )
+        for i in range(n_peers):
+            t = study.ask()
+            for step in range(1, n_steps + 1):
+                t.report(float(i + step), step)
+            study.tell(t, float(i))
+
+        # fused: report() carries the decision back on the same frame
+        trial = study.ask()
+        frames["n"] = 0
+        for step in range(1, n_steps + 1):
+            trial.report(float(step), step)
+            trial.should_prune()
+        fused = frames["n"] / n_steps
+
+        # pre-fusion sequence, measured over the same wire
+        legacy_pruner = LegacyMedianPruner(n_startup_trials=1)
+        trial2 = study.ask()
+        storage = study._storage
+        frames["n"] = 0
+        for step in range(1, n_steps + 1):
+            storage.set_trial_intermediate_value(trial2._trial_id, step, float(step))
+            frozen = storage.get_trial(trial2._trial_id)
+            legacy_pruner.prune(study, frozen)
+        unfused = frames["n"] / n_steps
+    out = {
+        "fused_round_trips_per_step": fused,
+        "unfused_round_trips_per_step": unfused,
+    }
+    if verbose:
+        print(
+            f"[pruning] report+prune round trips/step: fused {fused:.2f}, "
+            f"pre-fusion {unfused:.2f}",
+            flush=True,
+        )
+    return out
+
+
+def write_bench_json(payload: dict, path: str = "BENCH_pruning.json") -> None:
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"[pruning] wrote {path}", flush=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description="pruning benchmarks")
+    ap.add_argument("--prune-bench", action="store_true",
+                    help="run only the decision-throughput + round-trip benchmarks")
+    ap.add_argument("--trials", type=int, default=1000)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--budget", type=float, default=25.0,
+                    help="wall-clock budget for the Fig. 11a-style comparison")
+    ap.add_argument("--out", default="BENCH_pruning.json")
+    args = ap.parse_args(argv)
+
+    payload: dict = {}
+    payload["decision_throughput"] = prune_decision_throughput(
+        n_trials=args.trials, n_steps=args.steps
+    )
+    payload["report_path"] = report_path_round_trips()
+    if not args.prune_bench:
+        payload["fig11a"] = run(budget_seconds=args.budget)
+    write_bench_json(payload, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ __all__ = [
     "ThresholdPruner",
     "PatientPruner",
     "make_pruner",
+    "pruner_from_spec",
 ]
 
 
@@ -34,3 +35,23 @@ def make_pruner(name: str, **kwargs) -> BasePruner:
     if name == "threshold":
         return ThresholdPruner(**kwargs)
     raise ValueError(f"unknown pruner {name!r}")
+
+
+def pruner_from_spec(spec: dict) -> BasePruner:
+    """Rebuild a pruner from its ``BasePruner.spec()`` wire form.
+
+    This is the server side of the fused ``report_and_prune`` storage op:
+    the worker ships ``{"name": ..., **constructor_kwargs}``, the backend
+    reconstructs the pruner and evaluates its vectorized ``decide`` against
+    its own intermediate-value store.  Specs are tiny and pruners are cheap
+    to build, so no instance caching is needed.
+    """
+    if not isinstance(spec, dict) or "name" not in spec:
+        raise ValueError(f"malformed pruner spec: {spec!r}")
+    kwargs = {k: v for k, v in spec.items() if k != "name"}
+    if spec["name"] == "patient":
+        wrapped = kwargs.pop("wrapped", None)
+        return PatientPruner(
+            pruner_from_spec(wrapped) if wrapped is not None else None, **kwargs
+        )
+    return make_pruner(spec["name"], **kwargs)

@@ -1,0 +1,285 @@
+"""Frozen pre-refactor scalar pruner implementations (the PR-2-era path).
+
+These are verbatim copies of the pruners as they existed before the
+intermediate-value backbone landed: every ``prune`` call re-walks all trials'
+``intermediate_values`` dicts in pure Python — O(n_trials x n_steps)
+interpreter work per reported step.
+
+They exist for two purposes only:
+
+* the **decision-parity suite** (``tests/test_pruner_parity.py``) asserts
+  the vectorized pruners produce bit-identical prune decisions, and
+* the **prune-decision benchmark** (``benchmarks/pruning.py --prune-bench``)
+  measures the speedup of the columnar path against this baseline.
+
+One deliberate deviation from the verbatim freeze: the RUNNING-peer
+inconsistency fix (PercentilePruner peers are COMPLETE trials only, matching
+Optuna) is applied here too, so parity compares vectorization — not the
+semantics change, which lands in both stacks.  See ``median.py``.
+
+Do not modify and do not use in new code.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from ..frozen import FrozenTrial, StudyDirection, TrialState
+from .base import BasePruner
+
+if TYPE_CHECKING:
+    from ..study import Study
+
+__all__ = [
+    "LegacyPercentilePruner",
+    "LegacyMedianPruner",
+    "LegacySuccessiveHalvingPruner",
+    "LegacyHyperbandPruner",
+    "LegacyThresholdPruner",
+    "LegacyPatientPruner",
+]
+
+
+class LegacyPercentilePruner(BasePruner):
+    """Prune if the trial's best-so-far intermediate value is worse than the
+    given percentile of peer best-so-far values at the same step."""
+
+    def __init__(
+        self,
+        percentile: float,
+        n_startup_trials: int = 5,
+        n_warmup_steps: int = 0,
+        interval_steps: int = 1,
+    ):
+        if not 0.0 <= percentile <= 100.0:
+            raise ValueError("percentile must be in [0, 100]")
+        if n_startup_trials < 0 or n_warmup_steps < 0 or interval_steps < 1:
+            raise ValueError("invalid pruner configuration")
+        self._q = percentile
+        self._n_startup = n_startup_trials
+        self._warmup = n_warmup_steps
+        self._interval = interval_steps
+
+    def prune(self, study: "Study", trial: FrozenTrial) -> bool:
+        step = trial.last_step
+        if step is None or step < self._warmup:
+            return False
+        if (step - self._warmup) % self._interval != 0:
+            return False
+
+        minimize = study.direction == StudyDirection.MINIMIZE
+
+        def best_until(t: FrozenTrial, upto: int) -> float | None:
+            vals = [v for s, v in t.intermediate_values.items() if s <= upto and v == v]
+            if not vals:
+                return None
+            return min(vals) if minimize else max(vals)
+
+        peers = []
+        for t in study.get_trials(deepcopy=False, states=(TrialState.COMPLETE,)):
+            if t.trial_id == trial.trial_id:
+                continue
+            b = best_until(t, step)
+            if b is not None:
+                peers.append(b)
+        if len(peers) < self._n_startup:
+            return False
+
+        mine = best_until(trial, step)
+        if mine is None:
+            return False
+        if mine != mine:  # NaN
+            return True
+        cutoff = float(np.percentile(peers, self._q if minimize else 100.0 - self._q))
+        return mine > cutoff if minimize else mine < cutoff
+
+
+class LegacyMedianPruner(LegacyPercentilePruner):
+    def __init__(
+        self, n_startup_trials: int = 5, n_warmup_steps: int = 0, interval_steps: int = 1
+    ):
+        super().__init__(50.0, n_startup_trials, n_warmup_steps, interval_steps)
+
+
+class LegacySuccessiveHalvingPruner(BasePruner):
+    """The paper's Algorithm 1, scalar (see ``successive_halving.py``)."""
+
+    def __init__(
+        self,
+        min_resource: int = 1,
+        reduction_factor: int = 4,
+        min_early_stopping_rate: int = 0,
+    ):
+        if min_resource < 1:
+            raise ValueError("min_resource must be >= 1")
+        if reduction_factor < 2:
+            raise ValueError("reduction_factor must be >= 2")
+        if min_early_stopping_rate < 0:
+            raise ValueError("min_early_stopping_rate must be >= 0")
+        self._r = min_resource
+        self._eta = reduction_factor
+        self._s = min_early_stopping_rate
+
+    def prune(self, study: "Study", trial: FrozenTrial) -> bool:
+        step = trial.last_step
+        if step is None:
+            return False
+
+        r, eta, s = self._r, self._eta, self._s
+
+        # line 1: rung <- max(0, log_eta(floor(step/r)) - s)
+        if step < r:
+            return False
+        rung = max(0, int(math.log(step // r, eta)) - s)
+
+        # line 2: only act exactly at rung boundaries step == r * eta^(s+rung)
+        if step != r * eta ** (s + rung):
+            return False
+
+        value = trial.intermediate_values[step]
+        if value != value:  # NaN never survives a rung
+            return True
+
+        # line 6: all peer intermediate values at this step
+        all_values = []
+        for t in study.get_trials(deepcopy=False):
+            if t.trial_id == trial.trial_id:
+                continue
+            if t.state in (TrialState.COMPLETE, TrialState.PRUNED, TrialState.RUNNING):
+                v = t.intermediate_values.get(step)
+                if v is not None and v == v:
+                    all_values.append(v)
+        all_values.append(value)
+
+        # lines 7-10: keep top floor(n/eta); if that's empty, keep the single best
+        k = len(all_values) // eta
+        if k == 0:
+            k = 1
+        if study.direction == StudyDirection.MINIMIZE:
+            top_k = sorted(all_values)[:k]
+            return not value <= top_k[-1]
+        else:
+            top_k = sorted(all_values, reverse=True)[:k]
+            return not value >= top_k[-1]
+
+
+class LegacyHyperbandPruner(BasePruner):
+    def __init__(
+        self,
+        min_resource: int = 1,
+        max_resource: int = 64,
+        reduction_factor: int = 4,
+    ):
+        self._r = min_resource
+        self._R = max_resource
+        self._eta = reduction_factor
+        n_brackets = int(math.log(max(self._R // self._r, 1), self._eta)) + 1
+        self._pruners = [
+            LegacySuccessiveHalvingPruner(
+                min_resource=min_resource,
+                reduction_factor=reduction_factor,
+                min_early_stopping_rate=s,
+            )
+            for s in range(n_brackets)
+        ]
+        weights = [self._eta**s / (s + 1) for s in range(n_brackets)]
+        total = sum(weights)
+        self._cum = []
+        acc = 0.0
+        for w in weights:
+            acc += w / total
+            self._cum.append(acc)
+
+    @property
+    def n_brackets(self) -> int:
+        return len(self._pruners)
+
+    def bracket_of(self, trial: FrozenTrial) -> int:
+        h = (trial.number * 2654435761) % (2**32) / 2**32
+        for i, c in enumerate(self._cum):
+            if h <= c:
+                return i
+        return len(self._cum) - 1
+
+    def prune(self, study: "Study", trial: FrozenTrial) -> bool:
+        bracket = self.bracket_of(trial)
+        view = _LegacyBracketView(study, self, bracket)
+        return self._pruners[bracket].prune(view, trial)
+
+
+class _LegacyBracketView:
+    """A study view that filters trials to one bracket so SHA ranks only
+    within-bracket peers."""
+
+    def __init__(self, study: "Study", hb: LegacyHyperbandPruner, bracket: int):
+        self._study = study
+        self._hb = hb
+        self._bracket = bracket
+
+    @property
+    def direction(self):
+        return self._study.direction
+
+    def get_trials(self, deepcopy: bool = False, states=None):
+        return [
+            t
+            for t in self._study.get_trials(deepcopy=deepcopy, states=states)
+            if self._hb.bracket_of(t) == self._bracket
+        ]
+
+
+class LegacyThresholdPruner(BasePruner):
+    def __init__(
+        self,
+        lower: float | None = None,
+        upper: float | None = None,
+        n_warmup_steps: int = 0,
+    ):
+        if lower is None and upper is None:
+            raise ValueError("give at least one of lower/upper")
+        self._lower = lower
+        self._upper = upper
+        self._warmup = n_warmup_steps
+
+    def prune(self, study: "Study", trial: FrozenTrial) -> bool:
+        step = trial.last_step
+        if step is None or step < self._warmup:
+            return False
+        v = trial.intermediate_values[step]
+        if v != v or math.isinf(v):
+            return True
+        if self._lower is not None and v < self._lower:
+            return True
+        if self._upper is not None and v > self._upper:
+            return True
+        return False
+
+
+class LegacyPatientPruner(BasePruner):
+    def __init__(self, wrapped: BasePruner | None, patience: int, min_delta: float = 0.0):
+        if patience < 0 or min_delta < 0:
+            raise ValueError("invalid patience/min_delta")
+        self._wrapped = wrapped
+        self._patience = patience
+        self._min_delta = min_delta
+
+    def prune(self, study: "Study", trial: FrozenTrial) -> bool:
+        ivs = trial.intermediate_values
+        if len(ivs) <= self._patience:
+            return False
+        steps = sorted(ivs)
+        vals = [ivs[s] for s in steps]
+        minimize = study.direction == StudyDirection.MINIMIZE
+        window = vals[-(self._patience + 1):]
+        if minimize:
+            improved = min(window[1:]) < window[0] - self._min_delta
+        else:
+            improved = max(window[1:]) > window[0] + self._min_delta
+        if improved:
+            return False
+        if self._wrapped is None:
+            return True
+        return self._wrapped.prune(study, trial)

@@ -5,6 +5,11 @@ with different minimum early-stopping rates ``s``.  Each trial is hashed into
 a bracket (deterministic in trial number, so distributed workers agree without
 coordination), and within a bracket the paper's Algorithm 1 applies.
 Bracket sizes follow the standard Hyperband budget allocation.
+
+Vectorized: bracket assignment is one hashed vector op over the store's row
+numbers (Knuth multiplicative hash + ``searchsorted`` into the cumulative
+bracket weights), producing the peer mask the bracket's SHA decision applies
+— the old per-trial study-view filter re-hashed every trial per decision.
 """
 
 from __future__ import annotations
@@ -12,11 +17,14 @@ from __future__ import annotations
 import math
 from typing import TYPE_CHECKING
 
-from ..frozen import FrozenTrial, TrialState
-from .base import BasePruner
+import numpy as np
+
+from ..frozen import FrozenTrial, StudyDirection
+from .base import BasePruner, study_iv_store
 from .successive_halving import SuccessiveHalvingPruner
 
 if TYPE_CHECKING:
+    from ..records import IntermediateValueStore
     from ..study import Study
 
 __all__ = ["HyperbandPruner"]
@@ -49,41 +57,53 @@ class HyperbandPruner(BasePruner):
         for w in weights:
             acc += w / total
             self._cum.append(acc)
+        self._cum_arr = np.asarray(self._cum)
 
     @property
     def n_brackets(self) -> int:
         return len(self._pruners)
 
+    def spec(self) -> "dict | None":
+        if not self._fusable(HyperbandPruner):
+            return None
+        return {
+            "name": "hyperband",
+            "min_resource": self._r,
+            "max_resource": self._R,
+            "reduction_factor": self._eta,
+        }
+
     def bracket_of(self, trial: FrozenTrial) -> int:
-        # deterministic, coordination-free bracket assignment
-        h = (trial.number * 2654435761) % (2**32) / 2**32
-        for i, c in enumerate(self._cum):
-            if h <= c:
-                return i
-        return len(self._cum) - 1
+        return int(self.brackets_of(np.asarray([trial.number]))[0])
+
+    def brackets_of(self, numbers: np.ndarray) -> np.ndarray:
+        """Deterministic, coordination-free bracket assignment, batched:
+        h = (number * 2654435761) mod 2^32 / 2^32, first cumulative weight
+        >= h wins."""
+        h = (numbers.astype(np.int64) * 2654435761) % (2**32) / 2**32
+        idx = np.searchsorted(self._cum_arr, h, side="left")
+        return np.minimum(idx, len(self._cum) - 1)
 
     def prune(self, study: "Study", trial: FrozenTrial) -> bool:
+        store = study_iv_store(study)
+        if store is None:  # duck-typed study: scalar fallback
+            from ._legacy import LegacyHyperbandPruner
+
+            return LegacyHyperbandPruner(self._r, self._R, self._eta).prune(
+                study, trial
+            )
+        return self.decide(study.direction, store, trial)
+
+    def decide(
+        self, direction: StudyDirection, store: "IntermediateValueStore",
+        trial: FrozenTrial,
+    ) -> bool:
         bracket = self.bracket_of(trial)
-        view = _BracketView(study, self, bracket)
-        return self._pruners[bracket].prune(view, trial)
-
-
-class _BracketView:
-    """A study view that filters trials to one bracket so SHA ranks only
-    within-bracket peers."""
-
-    def __init__(self, study: "Study", hb: HyperbandPruner, bracket: int):
-        self._study = study
-        self._hb = hb
-        self._bracket = bracket
-
-    @property
-    def direction(self):
-        return self._study.direction
-
-    def get_trials(self, deepcopy: bool = False, states=None):
-        return [
-            t
-            for t in self._study.get_trials(deepcopy=deepcopy, states=states)
-            if self._hb.bracket_of(t) == self._bracket
-        ]
+        # hold the store lock across mask construction *and* the SHA decision
+        # (reentrant), so a concurrent refresh cannot grow the rows between
+        # the two and misalign the bracket mask
+        with store.lock():
+            peer_mask = self.brackets_of(np.arange(store.n_rows)) == bracket
+            return self._pruners[bracket]._decide_masked(
+                direction, store, trial, peer_mask
+            )

@@ -1,24 +1,45 @@
-"""Median / percentile pruning — the Vizier-style baseline of Fig. 11a."""
+"""Median / percentile pruning — the Vizier-style baseline of Fig. 11a.
+
+Vectorized: one decision is a column slice of the intermediate-value store's
+cached best-so-far matrix plus one ``np.percentile`` — O(n_trials) numpy work
+instead of a Python re-walk of every peer's ``intermediate_values`` dict
+(the frozen scalar twin lives in ``pruners/_legacy.py``; the parity suite
+asserts bit-identical decisions).
+"""
 
 from __future__ import annotations
 
-import math
 from typing import TYPE_CHECKING
 
 import numpy as np
 
 from ..frozen import FrozenTrial, StudyDirection, TrialState
-from .base import BasePruner
+from .base import BasePruner, study_iv_store
 
 if TYPE_CHECKING:
+    from ..records import IntermediateValueStore
     from ..study import Study
 
 __all__ = ["MedianPruner", "PercentilePruner"]
 
 
+def _best_until(trial: FrozenTrial, upto: int, minimize: bool) -> "float | None":
+    vals = [v for s, v in trial.intermediate_values.items() if s <= upto and v == v]
+    if not vals:
+        return None
+    return min(vals) if minimize else max(vals)
+
+
 class PercentilePruner(BasePruner):
     """Prune if the trial's best-so-far intermediate value is worse than the
-    given percentile of peer best-so-far values at the same step."""
+    given percentile of peer best-so-far values at the same step.
+
+    Peer semantics (pinned by ``tests/test_pruners.py``): the peer set is
+    **COMPLETE trials only** — RUNNING and PRUNED trials are excluded,
+    matching Optuna's percentile/median pruners.  Contrast with
+    :class:`~.successive_halving.SuccessiveHalvingPruner`, which by ASHA's
+    asynchronous design ranks against RUNNING (and PRUNED) peers as well.
+    """
 
     def __init__(
         self,
@@ -36,32 +57,53 @@ class PercentilePruner(BasePruner):
         self._warmup = n_warmup_steps
         self._interval = interval_steps
 
+    def spec(self) -> "dict | None":
+        if not self._fusable(PercentilePruner, MedianPruner):
+            return None
+        return {
+            "name": "percentile",
+            "percentile": self._q,
+            "n_startup_trials": self._n_startup,
+            "n_warmup_steps": self._warmup,
+            "interval_steps": self._interval,
+        }
+
     def prune(self, study: "Study", trial: FrozenTrial) -> bool:
+        store = study_iv_store(study)
+        if store is None:  # duck-typed study: scalar fallback
+            from ._legacy import LegacyPercentilePruner
+
+            return LegacyPercentilePruner(
+                self._q, self._n_startup, self._warmup, self._interval
+            ).prune(study, trial)
+        return self.decide(study.direction, store, trial)
+
+    def decide(
+        self, direction: StudyDirection, store: "IntermediateValueStore",
+        trial: FrozenTrial,
+    ) -> bool:
         step = trial.last_step
         if step is None or step < self._warmup:
             return False
         if (step - self._warmup) % self._interval != 0:
             return False
 
-        minimize = study.direction == StudyDirection.MINIMIZE
-
-        def best_until(t: FrozenTrial, upto: int) -> float | None:
-            vals = [v for s, v in t.intermediate_values.items() if s <= upto and v == v]
-            if not vals:
-                return None
-            return min(vals) if minimize else max(vals)
-
-        peers = []
-        for t in study.get_trials(deepcopy=False, states=(TrialState.COMPLETE, TrialState.PRUNED)):
-            if t.trial_id == trial.trial_id:
-                continue
-            b = best_until(t, step)
-            if b is not None:
-                peers.append(b)
+        minimize = direction == StudyDirection.MINIMIZE
+        with store.lock():
+            col = store.index_upto(step)
+            if col < 0:
+                peers = np.empty(0)
+            else:
+                bsf = store.best_so_far(minimize)[:, col]
+                mask = (store.states == int(TrialState.COMPLETE)) & (
+                    store.trial_ids != trial.trial_id
+                )
+                peers = bsf[mask]
+                peers = peers[~np.isnan(peers)]
         if len(peers) < self._n_startup:
             return False
 
-        mine = best_until(trial, step)
+        mine = _best_until(trial, step, minimize)
         if mine is None:
             return False
         if mine != mine:  # NaN

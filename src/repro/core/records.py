@@ -1,4 +1,5 @@
-"""Columnar observation store — the sampler stack's shared array substrate.
+"""Columnar observation + intermediate-value stores — the array substrate
+shared by the sampler *and* pruner stacks.
 
 Before this module existed, every ``ask`` re-materialized the full trial
 history as Python ``FrozenTrial`` lists and looped per-parameter in scalar
@@ -29,6 +30,18 @@ Out-of-order finishes (trial #5 completing before #3) are appended as they
 arrive; the number-sorted view is re-materialized lazily, only when new rows
 landed.  Returned arrays are read-only views shared between callers — never
 mutate them.
+
+The :class:`IntermediateValueStore` is the pruner-side sibling: an
+``(n_trials, n_steps)`` NaN-padded matrix of reported intermediate values
+(rows indexed by trial number — dense by the storage contract — columns by a
+sorted side table of distinct steps, so sparse/irregular step grids cost only
+the columns they use), plus aligned ``states`` / ``trial_ids`` vectors and
+lazily-cached best-so-far prefix matrices (``fmin.accumulate`` /
+``fmax.accumulate`` along the step axis).  Unlike the observation store it
+must track *live* RUNNING trials — their rows are rewritten on refresh —
+so its revision gate is the whole optimization: when ``get_trials_revision``
+is unchanged a refresh is O(1), otherwise only the suffix past the dense
+finished prefix is refetched and re-encoded.
 """
 
 from __future__ import annotations
@@ -45,9 +58,36 @@ if TYPE_CHECKING:
     from .distributions import BaseDistribution
     from .storage.base import BaseStorage
 
-__all__ = ["ObservationStore"]
+__all__ = ["ObservationStore", "IntermediateValueStore"]
 
 _MIN_CAPACITY = 32
+
+#: system-attr key the grid sampler claims cells under (imported by
+#: ``samplers/grid.py``); ingested as a dedicated column so ``_taken`` is a
+#: vector op over finished trials instead of a FrozenTrial walk
+_GRID_ATTR = "grid_sampler:grid_id"
+
+
+def _poll_revision(store) -> "int | None":
+    """Shared revision-gate probe for both columnar stores.
+
+    Returns the storage's current per-study revision, or None when the
+    backend does not support one (the probe downgrades
+    ``store._revision_supported`` permanently on the first
+    ``NotImplementedError``/missing method, so later refreshes skip the
+    call).  Callers MUST read the revision *before* reading trial data:
+    writes landing between the two reads then surface as a fresh revision on
+    the next refresh instead of being lost."""
+    if store._revision_supported:
+        get_rev = getattr(store._storage, "get_trials_revision", None)
+        if get_rev is None:
+            store._revision_supported = False
+        else:
+            try:
+                return get_rev(store._study_id)
+            except NotImplementedError:
+                store._revision_supported = False
+    return None
 
 
 class ObservationStore:
@@ -62,8 +102,15 @@ class ObservationStore:
         self._states = np.empty(0, dtype=np.int64)
         self._values = np.empty(0)
         self._last_iv = np.empty(0)
+        self._grid_ids = np.empty(0, dtype=np.int64)
         self._cols: dict[str, np.ndarray] = {}
         self._dists: dict[str, "BaseDistribution"] = {}
+        # distribution-type tracking for the vectorized intersection space:
+        # per-param int8 row of type codes (-1 = not suggested), a type->code
+        # registry, and the latest distribution per (name, code, state)
+        self._type_rows: dict[str, np.ndarray] = {}
+        self._type_codes: dict[type, int] = {}
+        self._latest_dist: dict[tuple, tuple[int, "BaseDistribution"]] = {}
 
         self._watermark = 0          # every number < watermark is ingested
         self._finished: set[int] = set()  # ingested numbers >= watermark
@@ -75,7 +122,9 @@ class ObservationStore:
         self._view_states = self._states
         self._view_values = self._values
         self._view_last_iv = self._last_iv
+        self._view_grid_ids = self._grid_ids
         self._view_cols: dict[str, np.ndarray] = {}
+        self._view_type_rows: dict[str, np.ndarray] = {}
 
         #: bumped whenever new observations land; samplers key caches on it
         self.version = 0
@@ -86,20 +135,9 @@ class ObservationStore:
         """Bring the store up to date with storage.  O(1) when the storage
         revision is unchanged; otherwise one incremental suffix fetch."""
         with self._lock:
-            rev: int | None = None
-            if self._revision_supported:
-                get_rev = getattr(self._storage, "get_trials_revision", None)
-                if get_rev is None:
-                    self._revision_supported = False
-                else:
-                    try:
-                        rev = get_rev(self._study_id)
-                    except NotImplementedError:
-                        self._revision_supported = False
+            rev = _poll_revision(self)
             if rev is not None and rev == self._revision:
                 return
-            # capture the revision *before* reading trial data: concurrent
-            # writes between the two reads surface as a new revision next time
             fresh = get_trials_since(
                 self._storage, self._study_id, self._watermark, deepcopy=False
             )
@@ -123,6 +161,8 @@ class ObservationStore:
         self._last_iv[row] = (
             trial.intermediate_values[last] if last is not None else np.nan
         )
+        gid = trial.system_attrs.get(_GRID_ATTR)
+        self._grid_ids[row] = int(gid) if gid is not None else -1
         for name, dist in trial.distributions.items():
             col = self._cols.get(name)
             if col is None:
@@ -130,6 +170,17 @@ class ObservationStore:
                 self._cols[name] = col
             col[row] = float(dist.to_internal([trial.params[name]])[0])
             self._dists[name] = dist
+            code = self._type_codes.setdefault(type(dist), len(self._type_codes))
+            trow = self._type_rows.get(name)
+            if trow is None:
+                trow = np.full(self._capacity, -1, dtype=np.int8)
+                self._type_rows[name] = trow
+            trow[row] = code
+            if trial.state in (TrialState.COMPLETE, TrialState.PRUNED):
+                key = (name, code, int(trial.state))
+                prev = self._latest_dist.get(key)
+                if prev is None or trial.number > prev[0]:
+                    self._latest_dist[key] = (trial.number, dist)
         self._n += 1
         self._finished.add(trial.number)
         self._dirty = True
@@ -145,8 +196,11 @@ class ObservationStore:
         self._states = enlarge(self._states, 0)
         self._values = enlarge(self._values, np.nan)
         self._last_iv = enlarge(self._last_iv, np.nan)
+        self._grid_ids = enlarge(self._grid_ids, -1)
         for name in self._cols:
             self._cols[name] = enlarge(self._cols[name], np.nan)
+        for name in self._type_rows:
+            self._type_rows[name] = enlarge(self._type_rows[name], -1)
         self._capacity = capacity
 
     def _materialize(self) -> None:
@@ -164,7 +218,11 @@ class ObservationStore:
         self._view_states = view(self._states)
         self._view_values = view(self._values)
         self._view_last_iv = view(self._last_iv)
+        self._view_grid_ids = view(self._grid_ids)
         self._view_cols = {name: view(col) for name, col in self._cols.items()}
+        self._view_type_rows = {
+            name: view(row) for name, row in self._type_rows.items()
+        }
         self._dirty = False
 
     # -- columnar accessors (all number-ordered, read-only) ---------------------
@@ -198,6 +256,47 @@ class ObservationStore:
         with self._lock:
             self._materialize()
             return self._view_last_iv
+
+    @property
+    def grid_ids(self) -> np.ndarray:
+        """Grid-sampler cell ids per finished trial (-1 where unclaimed)."""
+        with self._lock:
+            self._materialize()
+            return self._view_grid_ids
+
+    def intersection_space(
+        self, include_pruned: bool = False
+    ) -> "dict[str, BaseDistribution]":
+        """The intersection search space over finished trials, as one vector
+        op per parameter: a parameter survives iff its type-code row has no
+        -1 (absent) and a single code across the state mask; the returned
+        distribution is the one from the highest-numbered included trial
+        (bounds may drift).  Semantics match
+        ``search_space.intersection_search_space``."""
+        with self._lock:
+            self._materialize()
+            states = self._view_states
+            mask = states == int(TrialState.COMPLETE)
+            allowed = [TrialState.COMPLETE]
+            if include_pruned:
+                mask = mask | (states == int(TrialState.PRUNED))
+                allowed.append(TrialState.PRUNED)
+            if not bool(mask.any()):
+                return {}
+            out: dict[str, "BaseDistribution"] = {}
+            for name, trow in self._view_type_rows.items():
+                codes = trow[mask]
+                code = int(codes[0])
+                if code < 0 or bool((codes != code).any()):
+                    continue
+                cands = [
+                    ent
+                    for st in allowed
+                    if (ent := self._latest_dist.get((name, code, int(st))))
+                ]
+                if cands:
+                    out[name] = max(cands, key=lambda e: e[0])[1]
+            return dict(sorted(out.items()))
 
     def param_names(self) -> list[str]:
         with self._lock:
@@ -245,3 +344,194 @@ class ObservationStore:
                 return np.empty((int(mask.sum()), 0)), self._view_values[mask]
             X = np.stack([c[mask] for c in cols], axis=1)
             return X, self._view_values[mask]
+
+
+class IntermediateValueStore:
+    """Revision-gated ``(n_trials, n_steps)`` matrix of reported values.
+
+    * Rows are indexed directly by trial ``number`` (dense per the storage
+      contract); columns by a sorted side table of the distinct steps seen so
+      far, so sparse or irregular step grids (rungs 1, 2, 4, 8, ...) cost
+      only the columns they use.  Cells are NaN where nothing was reported.
+    * ``states`` / ``trial_ids`` vectors are aligned with the rows; rows not
+      yet observed carry state -1 so every pruner mask excludes them.
+    * ``best_so_far(minimize)`` caches the NaN-ignoring prefix-best matrix
+      (``np.fmin/fmax.accumulate`` over the step axis) — the array the
+      percentile pruners slice one column out of per decision.
+    * ``refresh()`` is O(1) when the storage's ``get_trials_revision`` is
+      unchanged; otherwise it refetches only ``number >= watermark``, where
+      the watermark advances over the dense *finished* prefix (finished
+      trials are immutable, so their rows are never rewritten; RUNNING rows
+      are re-encoded each refresh because their dicts mutate in place).
+
+    Every backend hosts one instance per study for the fused
+    ``report_and_prune`` storage op; ``Study.intermediate_values()`` exposes
+    a client-side one for direct ``pruner.prune`` calls.  Readers that slice
+    several arrays must do so inside ``with store.lock():`` for a torn-free
+    snapshot.
+    """
+
+    def __init__(self, storage: "BaseStorage", study_id: int):
+        self._storage = storage
+        self._study_id = study_id
+        self._lock = threading.RLock()
+
+        self._n_rows = 0
+        self._row_cap = 0
+        self._steps = np.empty(0, dtype=np.int64)  # sorted distinct steps
+        self._step_index: dict[int, int] = {}
+        self._matrix = np.empty((0, 0))
+        self._states = np.empty(0, dtype=np.int64)
+        self._trial_ids = np.empty(0, dtype=np.int64)
+
+        self._watermark = 0  # every number < watermark is finished + encoded
+        self._revision: int | None = None
+        self._revision_supported = True
+        self._bsf: dict[bool, np.ndarray] = {}  # minimize? -> prefix-best
+
+        #: bumped whenever any cell changes; decisions may key caches on it
+        self.version = 0
+
+    def lock(self):
+        """Context manager for a consistent multi-array read."""
+        return self._lock
+
+    # -- maintenance -----------------------------------------------------------
+
+    def refresh(self) -> None:
+        with self._lock:
+            rev = _poll_revision(self)
+            if rev is not None and rev == self._revision:
+                return
+            fresh = get_trials_since(
+                self._storage, self._study_id, self._watermark, deepcopy=False
+            )
+            if fresh:
+                self._ingest(fresh)
+            self._revision = rev
+
+    def _ingest(self, trials) -> None:
+        top = max(t.number for t in trials)
+        if top >= self._row_cap:
+            self._grow_rows(max(_MIN_CAPACITY, 2 * self._row_cap, top + 1))
+        self._n_rows = max(self._n_rows, top + 1)
+
+        new_steps = set()
+        for t in trials:
+            for s in t.intermediate_values:
+                if int(s) not in self._step_index:
+                    new_steps.add(int(s))
+        if new_steps:
+            self._grow_cols(new_steps)
+
+        for t in trials:
+            row = t.number
+            self._states[row] = int(t.state)
+            self._trial_ids[row] = t.trial_id
+            self._matrix[row, :] = np.nan
+            # deepcopy=False feeds live dict refs on in-process backends: a
+            # concurrent report can mutate mid-iteration, so retry the row
+            for _ in range(3):
+                try:
+                    for s, v in list(t.intermediate_values.items()):
+                        self._matrix[row, self._step_index[int(s)]] = v
+                    break
+                except RuntimeError:  # pragma: no cover - dict-resize race
+                    continue
+        while self._watermark < self._n_rows and TrialState(
+            self._states[self._watermark]
+        ).is_finished():
+            self._watermark += 1
+        self._bsf.clear()
+        self.version += 1
+
+    def _grow_rows(self, capacity: int) -> None:
+        n_cols = self._matrix.shape[1]
+        matrix = np.full((capacity, n_cols), np.nan)
+        matrix[: self._n_rows] = self._matrix[: self._n_rows]
+        self._matrix = matrix
+
+        def enlarge(arr: np.ndarray, fill) -> np.ndarray:
+            out = np.full(capacity, fill, dtype=arr.dtype)
+            out[: self._n_rows] = arr[: self._n_rows]
+            return out
+
+        self._states = enlarge(self._states, -1)
+        self._trial_ids = enlarge(self._trial_ids, -1)
+        self._row_cap = capacity
+
+    def _grow_cols(self, new_steps: set) -> None:
+        steps = np.asarray(
+            sorted(set(self._steps.tolist()) | new_steps), dtype=np.int64
+        )
+        matrix = np.full((self._row_cap, len(steps)), np.nan)
+        if self._steps.size:
+            matrix[:, np.searchsorted(steps, self._steps)] = self._matrix
+        self._matrix = matrix
+        self._steps = steps
+        self._step_index = {int(s): j for j, s in enumerate(steps)}
+
+    # -- accessors (hold ``lock()`` across multi-array reads) -------------------
+
+    @staticmethod
+    def _ro(arr: np.ndarray) -> np.ndarray:
+        """Read-only view: these buffers are long-lived and shared across
+        every decision on the backend — a caller mutating one would corrupt
+        peer data for all subsequent prunes (same policy as the
+        ObservationStore views)."""
+        out = arr.view()
+        out.flags.writeable = False
+        return out
+
+    @property
+    def n_rows(self) -> int:
+        with self._lock:
+            return self._n_rows
+
+    @property
+    def steps(self) -> np.ndarray:
+        with self._lock:
+            return self._ro(self._steps)
+
+    @property
+    def states(self) -> np.ndarray:
+        with self._lock:
+            return self._ro(self._states[: self._n_rows])
+
+    @property
+    def trial_ids(self) -> np.ndarray:
+        with self._lock:
+            return self._ro(self._trial_ids[: self._n_rows])
+
+    @property
+    def matrix(self) -> np.ndarray:
+        with self._lock:
+            return self._ro(self._matrix[: self._n_rows])
+
+    def step_index(self, step: int) -> "int | None":
+        """Column of exactly ``step``, or None if never reported."""
+        with self._lock:
+            return self._step_index.get(int(step))
+
+    def index_upto(self, step: int) -> int:
+        """Column of the largest recorded step <= ``step`` (-1 if none)."""
+        with self._lock:
+            return int(np.searchsorted(self._steps, int(step), side="right")) - 1
+
+    def step_column(self, step: int) -> "np.ndarray | None":
+        """All trials' values at exactly ``step`` (NaN where unreported)."""
+        with self._lock:
+            j = self._step_index.get(int(step))
+            return self._ro(self._matrix[: self._n_rows, j]) if j is not None else None
+
+    def best_so_far(self, minimize: bool) -> np.ndarray:
+        """Prefix-best matrix: cell (i, j) is trial i's best reported value
+        over steps[0..j], ignoring NaN reports (NaN iff none reported)."""
+        with self._lock:
+            cached = self._bsf.get(minimize)
+            if cached is None:
+                op = np.fmin if minimize else np.fmax
+                cached = op.accumulate(self._matrix[: self._n_rows], axis=1)
+                cached.flags.writeable = False
+                self._bsf[minimize] = cached
+            return cached

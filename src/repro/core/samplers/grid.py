@@ -15,14 +15,13 @@ import numpy as np
 
 from ..distributions import BaseDistribution
 from ..frozen import FrozenTrial, TrialState
+from ..records import _GRID_ATTR as _GRID_KEY  # one key, shared with the store
 from .base import BaseSampler, sample_uniform_internal
 
 if TYPE_CHECKING:
     from ..study import Study
 
 __all__ = ["GridSampler"]
-
-_GRID_KEY = "grid_sampler:grid_id"
 
 
 class GridSampler(BaseSampler):
@@ -35,10 +34,22 @@ class GridSampler(BaseSampler):
         return len(self._grid)
 
     def _taken(self, study: "Study") -> set[int]:
-        taken: set[int] = set()
-        for t in study.get_trials(deepcopy=False):
+        """Claimed grid cells: finished trials' ids come straight off the
+        observation store's ``grid_ids`` column (one vector op, incremental);
+        only the handful of live RUNNING trials still need a per-trial look."""
+        obs = getattr(study, "observations", None)
+        if not callable(obs):  # duck-typed study: scalar fallback
+            taken: set[int] = set()
+            for t in study.get_trials(deepcopy=False):
+                gid = t.system_attrs.get(_GRID_KEY)
+                if gid is not None and (t.state.is_finished() or t.state == TrialState.RUNNING):
+                    taken.add(int(gid))
+            return taken
+        gids = obs().grid_ids
+        taken = set(np.unique(gids[gids >= 0]).tolist())
+        for t in study.get_trials(deepcopy=False, states=(TrialState.RUNNING,)):
             gid = t.system_attrs.get(_GRID_KEY)
-            if gid is not None and (t.state.is_finished() or t.state == TrialState.RUNNING):
+            if gid is not None:
                 taken.add(int(gid))
         return taken
 

@@ -195,17 +195,25 @@ def _score_numpy(
 
 
 _jax_score = None
+#: number of XLA traces taken so far (the traced python body increments it);
+#: tests assert it stays bounded while the observation count grows
+_jax_trace_count = 0
 
 
 def _get_jax_score():
-    """Jitted scorer, built lazily.  Pays off only when observation counts are
-    stable between asks (each new shape retraces)."""
+    """Jitted scorer, built lazily.  Component arrays arrive padded to
+    power-of-two buckets (see :func:`_pad_pow2`), so the set of shapes XLA
+    ever sees — and hence the number of retraces — stays logarithmic in the
+    observation count instead of linear."""
     global _jax_score
     if _jax_score is None:
         import jax
         import jax.numpy as jnp
 
         def score(cands, l_mus, l_sigmas, l_log_norm, g_mus, g_sigmas, g_log_norm):
+            global _jax_trace_count
+            _jax_trace_count += 1  # body runs once per trace, not per call
+
             def lse(a):
                 m = jnp.max(a, axis=1, keepdims=True)
                 return (m + jnp.log(jnp.sum(jnp.exp(a - m), axis=1, keepdims=True)))[:, 0]
@@ -217,6 +225,31 @@ def _get_jax_score():
 
         _jax_score = jax.jit(score)
     return _jax_score
+
+
+_MIN_PAD = 8
+
+
+def _pad_pow2(mus: np.ndarray, sigmas: np.ndarray, log_norm: np.ndarray):
+    """Pad one estimator's component arrays to the next power-of-two length.
+
+    Padding components carry ``log_norm = -inf``: they contribute
+    ``exp(-inf) = 0`` to the logsumexp row sums, so the score is exactly the
+    unpadded one (adding 0.0 to a float sum is exact) while the shape only
+    changes when the component count crosses a power of two."""
+    n = len(mus)
+    size = _MIN_PAD
+    while size < n:
+        size *= 2
+    if size == n:
+        return mus, sigmas, log_norm
+
+    def pad(arr: np.ndarray, fill: float) -> np.ndarray:
+        out = np.full(size, fill)
+        out[:n] = arr
+        return out
+
+    return pad(mus, 0.0), pad(sigmas, 1.0), pad(log_norm, -np.inf)
 
 
 class _TrialFit:
@@ -377,8 +410,8 @@ class TPESampler(BaseSampler):
                 return np.asarray(
                     _get_jax_score()(
                         cands,
-                        l_est.mus, l_est.sigmas, l_est._log_norm,
-                        g_est.mus, g_est.sigmas, g_est._log_norm,
+                        *_pad_pow2(l_est.mus, l_est.sigmas, l_est._log_norm),
+                        *_pad_pow2(g_est.mus, g_est.sigmas, g_est._log_norm),
                     )
                 )
             except ImportError:

@@ -49,7 +49,15 @@ def intersection_search_space(
 
 class IntersectionSearchSpace:
     """Incrementally-updated intersection space (avoids re-scanning all trials
-    on every ask; important when studies grow to 10^4+ trials)."""
+    on every ask; important when studies grow to 10^4+ trials).
+
+    Against a real :class:`~repro.core.study.Study` the calculation rides the
+    columnar observation store: per parameter, one vector op over the store's
+    distribution-type rows decides survival (present in every included trial,
+    single type), and the store hands back the latest included distribution —
+    no ``FrozenTrial`` materialization at all.  The cursor loop below remains
+    as the fallback for duck-typed study objects.
+    """
 
     def __init__(self, include_pruned: bool = False):
         self._cursor = 0
@@ -57,6 +65,9 @@ class IntersectionSearchSpace:
         self._include_pruned = include_pruned
 
     def calculate(self, study: "Study") -> dict[str, BaseDistribution]:
+        obs = getattr(study, "observations", None)
+        if callable(obs):
+            return obs().intersection_space(self._include_pruned)
         states = (TrialState.COMPLETE, TrialState.PRUNED) if self._include_pruned else (
             TrialState.COMPLETE,
         )

@@ -18,6 +18,7 @@ Concurrency contract (what samplers/pruners may assume):
 from __future__ import annotations
 
 import datetime
+import threading
 from typing import Any, Iterable
 
 from ..distributions import BaseDistribution
@@ -117,6 +118,68 @@ class BaseStorage:
         self, trial_id: int, step: int, intermediate_value: float
     ) -> None:
         raise NotImplementedError
+
+    # class-level: guards lazy creation of per-instance store dicts
+    _iv_stores_lock = threading.Lock()
+
+    def report_and_prune(
+        self,
+        study_id: int,
+        trial_id: int,
+        step: int,
+        value: float,
+        pruner_spec: dict,
+        direction: "StudyDirection | int",
+    ) -> bool:
+        """Fused report→prune: persist one intermediate value and return the
+        prune decision against this backend's peer data, in a single storage
+        operation.
+
+        ``pruner_spec`` is the wire form from ``BasePruner.spec()``;
+        ``direction`` the study's optimization direction.  The decision runs
+        the pruner's vectorized ``decide`` against a per-study
+        :class:`~repro.core.records.IntermediateValueStore` hosted *on this
+        backend* — for ``remote://`` that means the server evaluates with its
+        own (always-warm) peer data and a worker's ``trial.report()`` +
+        ``should_prune()`` costs exactly one round trip, instead of
+        set-value + trial refetch + a full peer re-read.
+
+        This default implementation serves every in-process backend
+        (in-memory / sqlite / journal); :class:`RemoteStorage` forwards it as
+        one RPC and :class:`CachedStorage` batches it with any buffered
+        write-behind ops.
+        """
+        self.set_trial_intermediate_value(trial_id, int(step), float(value))
+        if pruner_spec.get("name") in ("nop", "none"):
+            return False  # nothing to rank: skip the store refresh entirely
+        from ..pruners import pruner_from_spec
+
+        pruner = pruner_from_spec(pruner_spec)
+        store = self._intermediate_store(study_id)
+        store.refresh()
+        trial = self.get_trial(trial_id)
+        return bool(pruner.decide(StudyDirection(direction), store, trial))
+
+    def _intermediate_store(self, study_id: int):
+        """The per-study intermediate-value store hosted on this backend,
+        created lazily (kept warm across fused calls)."""
+        from ..records import IntermediateValueStore
+
+        with BaseStorage._iv_stores_lock:
+            stores = self.__dict__.setdefault("_iv_stores", {})
+            store = stores.get(study_id)
+            if store is None:
+                stores[study_id] = store = IntermediateValueStore(self, study_id)
+            return store
+
+    def _drop_intermediate_store(self, study_id: int) -> None:
+        """Evict a deleted study's store — backends call this from
+        ``delete_study`` so a long-lived server does not pin one warm matrix
+        per study it ever pruned for."""
+        with BaseStorage._iv_stores_lock:
+            stores = self.__dict__.get("_iv_stores")
+            if stores is not None:
+                stores.pop(study_id, None)
 
     def set_trial_user_attr(self, trial_id: int, key: str, value: Any) -> None:
         raise NotImplementedError

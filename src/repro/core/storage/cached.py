@@ -206,6 +206,31 @@ class CachedStorage(BaseStorage):
                 return
         self._backend.set_trial_intermediate_value(trial_id, step, intermediate_value)
 
+    def report_and_prune(
+        self, study_id: int, trial_id: int, step: int, value: float,
+        pruner_spec: dict, direction,
+    ) -> bool:
+        """Fused report→prune through the cache: the local copy of an owned
+        trial is updated write-through, then any buffered write-behind ops
+        ride the *same* batched frame as the fused op — the whole
+        report+should_prune round still costs one backend round trip."""
+        step, value = int(step), float(value)
+        fused = ("report_and_prune", (study_id, trial_id, step, value, pruner_spec, direction))
+        with self._lock:
+            t = self._own.get(trial_id)
+            if t is not None:
+                if t.state.is_finished():
+                    raise RuntimeError(f"trial {trial_id} is already finished")
+                t.intermediate_values[step] = value
+                ops = self._pending.pop(trial_id, None) or []
+                call_batch = getattr(self._backend, "call_batch", None)
+                if call_batch is not None and ops:
+                    return bool(call_batch(ops + [fused])[-1])
+                for method, params in ops:
+                    getattr(self._backend, method)(*params)
+                return bool(self._backend.report_and_prune(*fused[1]))
+        return bool(self._backend.report_and_prune(*fused[1]))
+
     def set_trial_user_attr(self, trial_id: int, key: str, value: Any) -> None:
         with self._lock:
             t = self._own.get(trial_id)

@@ -303,6 +303,21 @@ class RemoteStorage(BaseStorage):
     ) -> None:
         self._call("set_trial_intermediate_value", trial_id, int(step), float(intermediate_value))
 
+    def report_and_prune(
+        self, study_id: int, trial_id: int, step: int, value: float,
+        pruner_spec: dict, direction,
+    ) -> bool:
+        """Fused report→prune in one frame: the server writes the value and
+        evaluates the pruner spec against its own warm peer store.  Safe to
+        retry on a torn connection (the write is an overwrite, the decision
+        a pure read)."""
+        return bool(
+            self._call(
+                "report_and_prune", study_id, trial_id, int(step), float(value),
+                pruner_spec, direction,
+            )
+        )
+
     def set_trial_user_attr(self, trial_id: int, key: str, value: Any) -> None:
         self._call("set_trial_user_attr", trial_id, key, value)
 

@@ -58,6 +58,7 @@ class InMemoryStorage(BaseStorage):
             rec = self._get_study(study_id)
             del self._study_name_to_id[rec.name]
             del self._studies[study_id]
+        self._drop_intermediate_store(study_id)
 
     def get_study_id_from_name(self, study_name: str) -> int:
         with self._lock:

@@ -287,6 +287,7 @@ class JournalStorage(BaseStorage):
 
     def delete_study(self, study_id: int) -> None:
         self._append({"op": _DELETE_STUDY, "study_id": study_id})
+        self._drop_intermediate_store(study_id)
 
     def get_study_id_from_name(self, study_name: str) -> int:
         self._sync()

@@ -58,6 +58,7 @@ _METHODS = frozenset(
         "set_trial_param",
         "set_trial_state_values",
         "set_trial_intermediate_value",
+        "report_and_prune",
         "set_trial_user_attr",
         "set_trial_system_attr",
         "get_trial",

@@ -190,6 +190,7 @@ class SQLiteStorage(BaseStorage):
             cur.execute("DELETE FROM study_attrs WHERE study_id=?", (study_id,))
             cur.execute("DELETE FROM study_revisions WHERE study_id=?", (study_id,))
             cur.execute("DELETE FROM studies WHERE study_id=?", (study_id,))
+        self._drop_intermediate_store(study_id)
 
     @_retry
     def get_study_id_from_name(self, study_name: str) -> int:

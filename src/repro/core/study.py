@@ -19,7 +19,7 @@ from typing import Any, Callable, Iterable, Sequence
 from .exceptions import DuplicatedStudyError, TrialPruned
 from .frozen import FrozenTrial, StudyDirection, TrialState
 from .pruners import BasePruner, NopPruner
-from .records import ObservationStore
+from .records import IntermediateValueStore, ObservationStore
 from .samplers import BaseSampler, TPESampler
 from .storage import BaseStorage, get_storage
 from .trial import Trial
@@ -44,6 +44,12 @@ class Study:
         self.pruner = pruner or NopPruner()
         self._stop_requested = False
         self._records: ObservationStore | None = None
+        self._ivs: IntermediateValueStore | None = None
+        # directions are immutable after creation: fetch once here so the
+        # fused report path never pays an extra storage call for them
+        self._directions: list[StudyDirection] = (
+            self._storage.get_study_directions(self._study_id)
+        )
         # heartbeat configuration (fault tolerance; see DESIGN.md)
         self.heartbeat_interval: float | None = None
         self.failed_trial_grace: float = 60.0
@@ -52,7 +58,7 @@ class Study:
 
     @property
     def directions(self) -> list[StudyDirection]:
-        return self._storage.get_study_directions(self._study_id)
+        return list(self._directions)
 
     @property
     def direction(self) -> StudyDirection:
@@ -84,6 +90,17 @@ class Study:
             self._records = ObservationStore(self._storage, self._study_id)
         self._records.refresh()
         return self._records
+
+    def intermediate_values(self) -> IntermediateValueStore:
+        """The study's columnar intermediate-value store: every trial's
+        reported values as one revision-gated ``(n_trials, n_steps)``
+        NaN-padded matrix with cached best-so-far prefixes — the substrate
+        the vectorized pruner stack reads instead of re-walking
+        ``intermediate_values`` dicts (see ``core/records.py``)."""
+        if self._ivs is None:
+            self._ivs = IntermediateValueStore(self._storage, self._study_id)
+        self._ivs.refresh()
+        return self._ivs
 
     @property
     def best_trial(self) -> FrozenTrial:

@@ -92,6 +92,9 @@ class Trial(BaseTrial):
         self._cached: FrozenTrial | None = None
         # relative (relational) sampling happens once, lazily, at first suggest
         self._relative_params: dict[str, Any] | None = None
+        # fused report→prune: decision for the last reported step, if any
+        self._prune_decision: "tuple[int, bool] | None" = None
+        self._last_report: "tuple[int, float] | None" = None
 
     # -- identity -------------------------------------------------------------
 
@@ -168,15 +171,47 @@ class Trial(BaseTrial):
     # -- pruning interface (paper Fig. 5) ---------------------------------------
 
     def report(self, value: float, step: int) -> None:
-        """Report an intermediate objective value at ``step`` ('report API')."""
-        self.study._storage.set_trial_intermediate_value(
-            self._trial_id, int(step), float(value)
-        )
+        """Report an intermediate objective value at ``step`` ('report API').
+
+        When the study's pruner ships a wire spec (every built-in does), the
+        report rides the fused ``report_and_prune`` storage op: the value is
+        persisted *and* the prune decision comes back on the same round trip
+        — server-side peer data over ``remote://`` — so the following
+        ``should_prune()`` answers from the cached decision with zero extra
+        storage calls."""
+        step, value = int(step), float(value)
+        study = self.study
+        spec = None
+        spec_fn = getattr(study.pruner, "spec", None)
+        if callable(spec_fn):
+            spec = spec_fn()
+        if spec is not None and len(study.directions) == 1:
+            decision = study._storage.report_and_prune(
+                study._study_id, self._trial_id, step, value, spec, study.direction
+            )
+            self._prune_decision = (step, bool(decision))
+        else:
+            study._storage.set_trial_intermediate_value(self._trial_id, step, value)
+            self._prune_decision = None
+        if self._last_report is None or step >= self._last_report[0]:
+            self._last_report = (step, value)
         self._cached = None
+
+    @property
+    def last_reported(self) -> "tuple[int, float] | None":
+        """(step, value) of this process's highest-step ``report`` so far —
+        the same value ``FrozenTrial.last_step`` would select, so e.g. the
+        tune scheduler can record a pruned trial's final value without a
+        refetch even when steps were reported out of order."""
+        return self._last_report
 
     def should_prune(self) -> bool:
         """Ask the study's pruner whether this trial should stop
-        ('should_prune API')."""
+        ('should_prune API').  Answers from the fused decision cached by the
+        preceding ``report`` when available (no storage round trip);
+        otherwise evaluates the pruner client-side."""
+        if self._prune_decision is not None:
+            return self._prune_decision[1]
         trial = self.study._storage.get_trial(self._trial_id)
         return self.study.pruner.prune(self.study, trial)
 

@@ -75,7 +75,14 @@ class TrialSliceScheduler:
                 try:
                     value = self.run_trial(trial, mesh)
                 except hpo.TrialPruned:
-                    self.study.tell(trial, state=TrialState.PRUNED)
+                    # record the highest-step reported value as the final
+                    # value (matching Study._run_one's last_step choice); the
+                    # report path already tracked it locally, so no storage
+                    # refetch is needed.  A NaN final report is recorded with
+                    # no value (Study.tell would reclassify NaN as FAIL).
+                    last = trial.last_reported
+                    final = last[1] if last is not None and last[1] == last[1] else None
+                    self.study.tell(trial, final, state=TrialState.PRUNED)
                     self._log("pruned", slice_id, trial.number)
                     continue
                 except Exception:

@@ -1,0 +1,189 @@
+"""Decision parity: the vectorized pruner stack must produce bit-identical
+prune decisions to the frozen scalar implementations in ``pruners/_legacy.py``
+across randomized studies — dense and sparse step grids, NaN reports, both
+directions, every finished/live state mix — and the fused
+``report_and_prune`` storage path must agree with both."""
+
+import numpy as np
+import pytest
+
+import repro.core as hpo
+from repro.core.frozen import TrialState
+from repro.core.pruners import pruner_from_spec
+from repro.core.pruners._legacy import (
+    LegacyHyperbandPruner,
+    LegacyMedianPruner,
+    LegacyPatientPruner,
+    LegacyPercentilePruner,
+    LegacySuccessiveHalvingPruner,
+    LegacyThresholdPruner,
+)
+
+
+def _build_random_study(seed, direction, sparse, with_nan, n_trials=30, n_steps=12):
+    """A study whose trials reported random (possibly NaN) values over dense
+    or sparse step grids and ended in a random state."""
+    study = hpo.create_study(direction=direction)
+    storage, sid = study._storage, study._study_id
+    rng = np.random.RandomState(seed)
+    for _ in range(n_trials):
+        tid = storage.create_new_trial(sid)
+        if sparse:
+            size = rng.randint(1, n_steps + 1)
+            steps = sorted(rng.choice(np.arange(1, 3 * n_steps), size=size, replace=False))
+        else:
+            steps = range(1, rng.randint(2, n_steps + 2))
+        last = None
+        for s in steps:
+            v = float(rng.randn())
+            if with_nan and rng.rand() < 0.15:
+                v = float("nan")
+            storage.set_trial_intermediate_value(tid, int(s), v)
+            last = v
+        state = TrialState(int(rng.choice(
+            [int(TrialState.COMPLETE), int(TrialState.PRUNED),
+             int(TrialState.RUNNING), int(TrialState.FAIL)],
+            p=[0.45, 0.25, 0.2, 0.1],
+        )))
+        if state == TrialState.COMPLETE:
+            storage.set_trial_state_values(
+                tid, state, [last if last == last else 0.0]
+            )
+        elif state != TrialState.RUNNING:
+            storage.set_trial_state_values(tid, state)
+    return study
+
+
+def _truncated(frozen, step):
+    """The frozen trial as it looked when ``step`` was its latest report."""
+    t = frozen.copy()
+    t.intermediate_values = {s: v for s, v in frozen.intermediate_values.items() if s <= step}
+    return t
+
+
+PRUNER_PAIRS = [
+    (
+        "median",
+        lambda: hpo.MedianPruner(n_startup_trials=2),
+        lambda: LegacyMedianPruner(n_startup_trials=2),
+    ),
+    (
+        "percentile",
+        lambda: hpo.PercentilePruner(25.0, n_startup_trials=1, n_warmup_steps=2, interval_steps=2),
+        lambda: LegacyPercentilePruner(25.0, n_startup_trials=1, n_warmup_steps=2, interval_steps=2),
+    ),
+    (
+        "asha",
+        lambda: hpo.SuccessiveHalvingPruner(1, 2, 0),
+        lambda: LegacySuccessiveHalvingPruner(1, 2, 0),
+    ),
+    (
+        "asha-s1",
+        lambda: hpo.SuccessiveHalvingPruner(2, 4, 1),
+        lambda: LegacySuccessiveHalvingPruner(2, 4, 1),
+    ),
+    (
+        "hyperband",
+        lambda: hpo.HyperbandPruner(1, 16, 2),
+        lambda: LegacyHyperbandPruner(1, 16, 2),
+    ),
+    (
+        "threshold",
+        lambda: hpo.ThresholdPruner(lower=-1.5, upper=1.5, n_warmup_steps=1),
+        lambda: LegacyThresholdPruner(lower=-1.5, upper=1.5, n_warmup_steps=1),
+    ),
+    (
+        "patient-median",
+        lambda: hpo.PatientPruner(hpo.MedianPruner(n_startup_trials=2), patience=2),
+        lambda: LegacyPatientPruner(LegacyMedianPruner(n_startup_trials=2), patience=2),
+    ),
+]
+
+
+@pytest.mark.parametrize("direction", ["minimize", "maximize"])
+@pytest.mark.parametrize("sparse", [False, True], ids=["dense", "sparse"])
+@pytest.mark.parametrize("name,make_new,make_legacy", PRUNER_PAIRS,
+                         ids=[p[0] for p in PRUNER_PAIRS])
+def test_decisions_bit_identical(direction, sparse, name, make_new, make_legacy):
+    for seed in (0, 1, 2):
+        study = _build_random_study(seed, direction, sparse, with_nan=True)
+        new, legacy = make_new(), make_legacy()
+        checked = 0
+        for frozen in study.get_trials(deepcopy=False):
+            if frozen.state != TrialState.RUNNING:
+                continue
+            for step in sorted(frozen.intermediate_values):
+                t = _truncated(frozen, step)
+                got, want = new.prune(study, t), legacy.prune(study, t)
+                assert got == want, (
+                    f"{name} seed={seed} trial={frozen.number} step={step}: "
+                    f"vectorized={got} legacy={want}"
+                )
+                checked += 1
+        assert checked > 0  # the random mix always leaves RUNNING trials
+
+
+@pytest.mark.parametrize("direction", ["minimize", "maximize"])
+@pytest.mark.parametrize("name,make_new,make_legacy", PRUNER_PAIRS,
+                         ids=[p[0] for p in PRUNER_PAIRS])
+def test_fused_report_path_matches_legacy(direction, name, make_new, make_legacy):
+    """`trial.report()` + `should_prune()` over the fused storage op must
+    agree with the frozen scalar pruner evaluated on the same history."""
+    study = _build_random_study(7, direction, sparse=False, with_nan=False)
+    study.pruner = make_new()
+    legacy = make_legacy()
+    rng = np.random.RandomState(11)
+    trial = study.ask()
+    for step in range(1, 9):
+        v = float(rng.randn())
+        trial.report(v, step)
+        fused = trial.should_prune()
+        frozen = study._storage.get_trial(trial._trial_id)
+        assert fused == legacy.prune(study, frozen), f"{name} step={step}"
+
+
+def test_spec_round_trip_rebuilds_equivalent_pruners():
+    for _, make_new, _ in PRUNER_PAIRS:
+        pruner = make_new()
+        spec = pruner.spec()
+        assert spec is not None
+        rebuilt = pruner_from_spec(spec)
+        # Median rebuilds as its Percentile base class — same decisions
+        assert isinstance(rebuilt, type(pruner)) or isinstance(pruner, type(rebuilt))
+        assert rebuilt.spec() == spec
+    assert pruner_from_spec({"name": "nop"}).spec() == {"name": "nop"}
+
+
+def test_builtin_subclass_override_is_not_bypassed_by_fusion():
+    """A subclass of a built-in pruner must not ship the parent's spec: the
+    fused path would rebuild the plain built-in server-side and silently skip
+    the override."""
+
+    class Always(hpo.MedianPruner):
+        def prune(self, study, trial):
+            return True
+
+    pruner = Always(n_startup_trials=0)
+    assert pruner.spec() is None  # subclass -> no fusion
+    study = hpo.create_study(pruner=pruner)
+    t = study.ask()
+    t.report(0.0, 1)  # a MedianPruner would never prune the only trial
+    assert t.should_prune()  # the override decides, client-side
+
+
+def test_custom_pruner_without_spec_falls_back_unfused():
+    class Custom(hpo.BasePruner):
+        def __init__(self):
+            self.calls = 0
+
+        def prune(self, study, trial):
+            self.calls += 1
+            return trial.last_step is not None and trial.last_step >= 3
+
+    study = hpo.create_study(pruner=Custom())
+    t = study.ask()
+    t.report(1.0, 1)
+    assert not t.should_prune()
+    t.report(1.0, 3)
+    assert t.should_prune()
+    assert study.pruner.calls == 2  # evaluated client-side, not fused

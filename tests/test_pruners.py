@@ -189,6 +189,35 @@ class TestOtherPruners:
         assert pruned
 
 
+class TestPeerSetSemantics:
+    """Pins the documented (Optuna-matching) peer-visibility split:
+    percentile/median rank against COMPLETE peers only, while ASHA — being
+    asynchronous by design — also ranks against RUNNING (and PRUNED) peers."""
+
+    def test_percentile_ignores_running_and_pruned_peers(self):
+        study = _study_with(hpo.MedianPruner(n_startup_trials=1))
+        # two terrible COMPLETE peers set the median; excellent RUNNING and
+        # PRUNED peers must not drag the cutoff down
+        for v in (100.0, 100.0):
+            _add_trial(study, {1: v})
+        for _ in range(8):
+            _add_trial(study, {1: 0.0}, state=TrialState.RUNNING)
+        for _ in range(8):
+            _add_trial(study, {1: 0.0}, state=TrialState.PRUNED, value=0.0)
+        t = study.ask()
+        t.report(50.0, 1)  # far better than every COMPLETE peer
+        assert not t.should_prune()
+
+    def test_asha_sees_running_peers(self):
+        study = _study_with(hpo.SuccessiveHalvingPruner(1, 2, 0))
+        # only RUNNING peers exist at the rung — ASHA must rank against them
+        for _ in range(8):
+            _add_trial(study, {1: 0.0}, state=TrialState.RUNNING)
+        t = study.ask()
+        t.report(9.0, 1)  # worst of 9 at rung 0, eta=2 -> pruned
+        assert t.should_prune()
+
+
 def test_pruned_trials_recorded_with_state():
     study = _study_with(hpo.SuccessiveHalvingPruner(1, 2, 0))
 

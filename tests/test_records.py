@@ -313,3 +313,165 @@ class TestMakeSamplerGrid:
     def test_grid_without_space_raises(self):
         with pytest.raises(ValueError, match="search_space"):
             hpo.make_sampler("grid")
+
+
+class TestIntermediateValueStore:
+    """The pruner-side columnar backbone: the (n_trials, n_steps) matrix,
+    step side table, best-so-far caches, and the revision gate."""
+
+    def _store(self, study):
+        from repro.core.records import IntermediateValueStore
+
+        return IntermediateValueStore(study._storage, study._study_id)
+
+    def test_matrix_rows_are_trial_numbers_and_steps_sorted(self):
+        study = hpo.create_study()
+        storage, sid = study._storage, study._study_id
+        t0 = storage.create_new_trial(sid)
+        t1 = storage.create_new_trial(sid)
+        storage.set_trial_intermediate_value(t1, 8, 1.5)   # sparse rungs,
+        storage.set_trial_intermediate_value(t0, 2, 0.5)   # out of order
+        storage.set_trial_intermediate_value(t1, 2, 2.5)
+        store = self._store(study)
+        store.refresh()
+        assert store.steps.tolist() == [2, 8]
+        m = store.matrix
+        assert m.shape == (2, 2)
+        assert m[0, 0] == 0.5 and np.isnan(m[0, 1])
+        assert m[1, 0] == 2.5 and m[1, 1] == 1.5
+        assert store.step_index(8) == 1 and store.step_index(3) is None
+        assert store.index_upto(7) == 0 and store.index_upto(1) == -1
+
+    def test_running_rows_are_rewritten_on_refresh(self):
+        study = hpo.create_study()
+        storage, sid = study._storage, study._study_id
+        tid = storage.create_new_trial(sid)
+        storage.set_trial_intermediate_value(tid, 1, 3.0)
+        store = self._store(study)
+        store.refresh()
+        assert store.matrix[0, 0] == 3.0
+        storage.set_trial_intermediate_value(tid, 2, 1.0)  # live trial grows
+        store.refresh()
+        assert store.matrix[0].tolist() == [3.0, 1.0]
+        assert store.states[0] == int(TrialState.RUNNING)
+
+    def test_best_so_far_ignores_nan_and_caches(self):
+        study = hpo.create_study()
+        storage, sid = study._storage, study._study_id
+        tid = storage.create_new_trial(sid)
+        for step, v in ((1, 5.0), (2, float("nan")), (3, 2.0), (4, 4.0)):
+            storage.set_trial_intermediate_value(tid, step, v)
+        store = self._store(study)
+        store.refresh()
+        lo = store.best_so_far(minimize=True)
+        hi = store.best_so_far(minimize=False)
+        assert lo[0].tolist() == [5.0, 5.0, 2.0, 2.0]
+        assert hi[0].tolist() == [5.0, 5.0, 5.0, 5.0]
+        assert store.best_so_far(minimize=True) is lo  # cached until refresh
+        storage.set_trial_intermediate_value(tid, 5, 1.0)
+        store.refresh()
+        assert store.best_so_far(minimize=True) is not lo  # invalidated
+
+    def test_revision_gate_skips_refetch(self):
+        calls = {"n": 0}
+        study = hpo.create_study()
+        storage, sid = study._storage, study._study_id
+        tid = storage.create_new_trial(sid)
+        storage.set_trial_intermediate_value(tid, 1, 1.0)
+        store = self._store(study)
+        orig = storage.get_all_trials
+
+        def counting(*a, **kw):
+            calls["n"] += 1
+            return orig(*a, **kw)
+
+        storage.get_all_trials = counting
+        store.refresh()
+        assert calls["n"] == 1
+        store.refresh()  # unchanged revision -> no trial fetch
+        store.refresh()
+        assert calls["n"] == 1
+        storage.set_trial_intermediate_value(tid, 2, 2.0)
+        store.refresh()
+        assert calls["n"] == 2
+
+    def test_watermark_skips_finished_prefix(self):
+        study = hpo.create_study()
+        storage, sid = study._storage, study._study_id
+        for v in (1.0, 2.0):
+            tid = storage.create_new_trial(sid)
+            storage.set_trial_intermediate_value(tid, 1, v)
+            storage.set_trial_state_values(tid, TrialState.COMPLETE, [v])
+        store = self._store(study)
+        store.refresh()
+        live = storage.create_new_trial(sid)
+        storage.set_trial_intermediate_value(live, 1, 9.0)
+        fetched = []
+        orig = storage.get_all_trials
+
+        def spy(study_id, deepcopy=True, states=None, since=None):
+            fetched.append(since)
+            return orig(study_id, deepcopy=deepcopy, states=states, since=since)
+
+        storage.get_all_trials = spy
+        store.refresh()
+        assert fetched == [2]  # only the unfinished suffix is re-read
+        assert store.matrix[2, 0] == 9.0
+
+    def test_study_accessor_and_version(self):
+        study = hpo.create_study(pruner=hpo.MedianPruner())
+        store = study.intermediate_values()
+        assert store is study.intermediate_values()  # one instance per study
+        v0 = store.version
+        t = study.ask()
+        t.report(1.0, 1)
+        study.intermediate_values()
+        assert store.version > v0
+
+
+class TestVectorizedIntersectionSpace:
+    def test_matches_scalar_function(self):
+        from repro.core.distributions import FloatDistribution, IntDistribution
+        from repro.core.search_space import (
+            IntersectionSearchSpace,
+            intersection_search_space,
+        )
+
+        study = hpo.create_study()
+        storage, sid = study._storage, study._study_id
+
+        def add(params, state=TrialState.COMPLETE):
+            tid = storage.create_new_trial(sid)
+            for name, (v, dist) in params.items():
+                storage.set_trial_param(tid, name, v, dist)
+            storage.set_trial_state_values(
+                tid, state, [0.0] if state == TrialState.COMPLETE else None
+            )
+
+        f, i = FloatDistribution(-1, 1), IntDistribution(1, 10)
+        add({"a": (0.5, f), "b": (3.0, i)})
+        add({"a": (0.2, f), "b": (4.0, i), "c": (0.1, f)})     # c not in trial 1
+        add({"a": (0.9, f), "b": (0.3, FloatDistribution(0, 1))},  # b type flips
+            state=TrialState.PRUNED)
+
+        trials = study.get_trials(deepcopy=False)
+        for include_pruned in (False, True):
+            want = intersection_search_space(trials, include_pruned=include_pruned)
+            got = IntersectionSearchSpace(include_pruned).calculate(study)
+            assert got == want
+        # COMPLETE-only keeps a and b; with the PRUNED type-flip only a survives
+        assert set(IntersectionSearchSpace(False).calculate(study)) == {"a", "b"}
+        assert set(IntersectionSearchSpace(True).calculate(study)) == {"a"}
+
+    def test_latest_distribution_wins(self):
+        from repro.core.distributions import FloatDistribution
+        from repro.core.search_space import IntersectionSearchSpace
+
+        study = hpo.create_study()
+        storage, sid = study._storage, study._study_id
+        for low, high in ((-1.0, 1.0), (-2.0, 2.0)):
+            tid = storage.create_new_trial(sid)
+            storage.set_trial_param(tid, "x", 0.0, FloatDistribution(low, high))
+            storage.set_trial_state_values(tid, TrialState.COMPLETE, [0.0])
+        space = IntersectionSearchSpace().calculate(study)
+        assert space["x"].low == -2.0 and space["x"].high == 2.0

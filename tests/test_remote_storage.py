@@ -375,3 +375,91 @@ class TestBatchedCreateOverRemote:
         r0 = remote.get_trials_revision(sid)
         remote.create_new_trial(sid)
         assert remote.get_trials_revision(sid) > r0
+
+
+class TestFusedReportPrune:
+    """The fused report_and_prune storage op: one wire frame per
+    report+should_prune, with the prune decision computed server-side."""
+
+    def _count_frames(self, remote):
+        counter = {"n": 0}
+        orig = remote._roundtrip
+
+        def counting(payload):
+            counter["n"] += 1
+            return orig(payload)
+
+        remote._roundtrip = counting
+        return counter
+
+    def test_report_plus_should_prune_is_one_round_trip(self, server):
+        remote = RemoteStorage(server.url)
+        counter = self._count_frames(remote)
+        storage = CachedStorage(remote)
+        study = hpo.create_study(
+            study_name="fused", storage=storage,
+            sampler=hpo.RandomSampler(seed=0),
+            pruner=hpo.MedianPruner(n_startup_trials=1),
+        )
+        # two finished peers so the pruner has a cutoff
+        for v in (1.0, 2.0):
+            t = study.ask()
+            t.suggest_float("x", 0, 1)
+            t.report(v, 1)
+            study.tell(t, v)
+        trial = study.ask()
+        trial.suggest_float("x", 0, 1)
+        counter["n"] = 0
+        trial.report(100.0, 1)       # fused frame: write + decision
+        assert trial.should_prune()  # answered from the cached decision
+        assert counter["n"] == 1
+
+    def test_fused_decision_uses_server_side_peers(self, server):
+        """A second worker's reports are visible to the first worker's fused
+        decision without any client-side peer fetch."""
+        worker1 = hpo.create_study(
+            study_name="peers", storage=RemoteStorage(server.url),
+            pruner=hpo.SuccessiveHalvingPruner(1, 2, 0),
+        )
+        worker2 = hpo.Study(
+            "peers", RemoteStorage(server.url),
+            pruner=hpo.SuccessiveHalvingPruner(1, 2, 0),
+        )
+        peers = [worker2.ask() for _ in range(4)]
+        for p in peers:
+            p.report(0.0, 1)
+        mine = worker1.ask()
+        mine.report(9.0, 1)          # worst of 5 at the rung -> pruned
+        assert mine.should_prune()
+        best = worker1.ask()
+        best.report(-1.0, 1)         # best of 6 -> promoted
+        assert not best.should_prune()
+
+    def test_fused_matches_unfused_decision(self, server):
+        remote = RemoteStorage(server.url)
+        study = hpo.create_study(
+            study_name="match", storage=remote,
+            pruner=hpo.MedianPruner(n_startup_trials=1),
+        )
+        for v in (1.0, 2.0, 3.0):
+            t = study.ask()
+            t.report(v, 1)
+            study.tell(t, v)
+        t = study.ask()
+        t.report(10.0, 1)
+        fused = t.should_prune()
+        # client-side evaluation on the same history must agree
+        frozen = remote.get_trial(t._trial_id)
+        assert fused == study.pruner.prune(study, frozen) is True
+
+    def test_nop_pruner_fuses_without_decision_cost(self, server):
+        remote = RemoteStorage(server.url)
+        counter = self._count_frames(remote)
+        study = hpo.create_study(study_name="nop", storage=remote)
+        trial = study.ask()
+        counter["n"] = 0
+        trial.report(1.0, 1)
+        assert not trial.should_prune()
+        assert counter["n"] == 1
+        # the value still landed
+        assert remote.get_trial(trial._trial_id).intermediate_values == {1: 1.0}

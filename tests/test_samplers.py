@@ -135,3 +135,26 @@ class TestSearchSpaceInference:
         assert abs(ft.suggest_float("x", 0, 1) - 0.5) < 1e-12
         with pytest.raises(ValueError):
             ft.suggest_float("missing", 0, 1)
+
+
+class TestJitScoringRetraces:
+    def test_trace_count_bounded_by_pow2_buckets(self):
+        """jit_scoring pads Parzen component arrays to power-of-two buckets,
+        so XLA retraces O(log n_observations) times, not once per ask."""
+        pytest.importorskip("jax")
+        import repro.core.samplers.tpe as tpe_mod
+
+        tpe_mod._jax_score = None  # fresh jit cache for a clean count
+        tpe_mod._jax_trace_count = 0
+        sampler = hpo.TPESampler(seed=3, n_startup_trials=5, jit_scoring=True)
+        study = hpo.create_study(sampler=sampler)
+        n_asks = 40
+
+        def objective(trial):
+            return trial.suggest_float("x", -3, 3) ** 2
+
+        study.optimize(objective, n_trials=n_asks)
+        # observation counts sweep 5..39 -> component sizes cross at most a
+        # few power-of-two boundaries per estimator side
+        assert 0 < tpe_mod._jax_trace_count <= 8, tpe_mod._jax_trace_count
+        assert tpe_mod._jax_trace_count < n_asks - sampler._n_startup
