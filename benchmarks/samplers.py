@@ -23,7 +23,10 @@ from repro.core.distributions import FloatDistribution
 from repro.core.frozen import TrialState
 from .testbed import CASES
 
-__all__ = ["run", "mann_whitney_u", "ask_throughput", "main"]
+__all__ = [
+    "run", "mann_whitney_u", "ask_throughput", "joint_ask_throughput",
+    "joint_quality", "main",
+]
 
 
 def mann_whitney_u(a, b) -> float:
@@ -203,6 +206,109 @@ def ask_throughput(
     return out
 
 
+# -- joint (multivariate) TPE: block sampling vs per-trial suggest ---------------
+
+
+def joint_ask_throughput(
+    n_trials: int = 2000,
+    n_params: int = 16,
+    batch: int = 16,
+    n_waves: int = 5,
+    seed: int = 0,
+    verbose: bool = True,
+) -> dict:
+    """Joint ``ask(n)`` (one ``sample_joint`` block per group, multivariate
+    TPE) vs per-trial univariate suggest, same seeded history and the same
+    ``batch`` trials per wave.  Acceptance bar: >= 2x per-trial ask cost at
+    2000 trials x 16 params."""
+
+    def suggest_all(trial):
+        for j in range(n_params):
+            if j % 2 == 0:
+                trial.suggest_float(f"p{j}", -5, 5)
+            else:
+                trial.suggest_float(f"p{j}", 1e-6, 1.0, log=True)
+
+    def bench(multivariate: bool) -> float:
+        study = hpo.create_study(
+            sampler=hpo.TPESampler(seed=1, multivariate=multivariate)
+        )
+        _seed_history(study, n_trials, n_params, seed)
+        wave = study.ask(batch)  # warm store + caches outside the clock
+        for t in wave:
+            suggest_all(t)
+        times = []
+        for _ in range(n_waves):
+            t0 = time.perf_counter()
+            wave = study.ask(batch)
+            for t in wave:
+                suggest_all(t)
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times) * 1e3 / batch)
+
+    joint_ms = bench(True)
+    univariate_ms = bench(False)
+    out = {
+        "n_trials": n_trials,
+        "n_params": n_params,
+        "batch": batch,
+        "joint_ms_per_trial": joint_ms,
+        "univariate_ms_per_trial": univariate_ms,
+        "speedup": univariate_ms / max(joint_ms, 1e-9),
+    }
+    if verbose:
+        print(
+            f"[samplers] joint ask throughput @ {n_trials} trials x {n_params} params "
+            f"(waves of {batch}): joint {joint_ms:.2f} ms/trial, "
+            f"univariate {univariate_ms:.2f} ms/trial -> {out['speedup']:.1f}x",
+            flush=True,
+        )
+    return out
+
+
+def joint_quality(
+    n_trials: int = 200,
+    batch: int = 16,
+    seeds: tuple = (0, 1, 2),
+    verbose: bool = True,
+) -> dict:
+    """Best value on a correlated 2-param objective (narrow valley along
+    ``x = y``) at ``n_trials``: multivariate TPE models the correlation,
+    univariate marginals cannot."""
+
+    def objective(trial):
+        x = trial.suggest_float("x", -5, 5)
+        y = trial.suggest_float("y", -5, 5)
+        return (x - y) ** 2 + 0.1 * (x + y - 2) ** 2
+
+    def best(multivariate: bool, seed: int) -> float:
+        study = hpo.create_study(
+            sampler=hpo.TPESampler(seed=seed, n_startup_trials=10, multivariate=multivariate)
+        )
+        done = 0
+        while done < n_trials:
+            k = min(batch, n_trials - done)
+            wave = study.ask(k)
+            study.tell_batch([(t, objective(t)) for t in wave])
+            done += k
+        return float(study.best_value)
+
+    rows = []
+    wins = 0
+    for seed in seeds:
+        mv, uv = best(True, seed), best(False, seed)
+        wins += mv < uv
+        rows.append({"seed": seed, "multivariate_best": mv, "univariate_best": uv})
+        if verbose:
+            print(
+                f"[samplers] correlated objective seed={seed}: "
+                f"multivariate={mv:.5f} univariate={uv:.5f}",
+                flush=True,
+            )
+    return {"objective": "(x-y)^2 + 0.1(x+y-2)^2", "n_trials": n_trials,
+            "rows": rows, "multivariate_wins": wins, "n_seeds": len(seeds)}
+
+
 def write_bench_json(payload: dict, path: str = "BENCH_samplers.json") -> None:
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
@@ -212,19 +318,31 @@ def write_bench_json(payload: dict, path: str = "BENCH_samplers.json") -> None:
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description="sampler benchmarks")
     ap.add_argument("--ask-bench", action="store_true",
-                    help="run only the ask-throughput comparison")
+                    help="run the ask-throughput comparison (skips the full "
+                         "sampler comparison unless other benches request it)")
+    ap.add_argument("--joint-bench", action="store_true",
+                    help="run the joint-vs-univariate block-sampling rows "
+                         "(ask throughput in waves + correlated-objective quality)")
     ap.add_argument("--trials", type=int, default=2000)
     ap.add_argument("--params", type=int, default=16)
     ap.add_argument("--asks", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--full", action="store_true", help="paper-scale comparison budgets")
     ap.add_argument("--out", default="BENCH_samplers.json")
     args = ap.parse_args(argv)
 
+    bench_only = args.ask_bench or args.joint_bench
     payload: dict = {}
-    payload["ask_throughput"] = ask_throughput(
-        n_trials=args.trials, n_params=args.params, n_asks=args.asks
-    )
-    if not args.ask_bench:
+    if args.ask_bench or not bench_only:
+        payload["ask_throughput"] = ask_throughput(
+            n_trials=args.trials, n_params=args.params, n_asks=args.asks
+        )
+    if args.joint_bench or not bench_only:
+        payload["joint_ask_throughput"] = joint_ask_throughput(
+            n_trials=args.trials, n_params=args.params, batch=args.batch
+        )
+        payload["joint_quality"] = joint_quality()
+    if not bench_only:
         budget = (
             dict(n_cases=56, n_trials=80, repeats=30) if args.full
             else dict(n_cases=8, n_trials=30, repeats=3)

@@ -298,6 +298,53 @@ class ObservationStore:
                     out[name] = max(cands, key=lambda e: e[0])[1]
             return dict(sorted(out.items()))
 
+    def co_occurrence(
+        self, names: "list[str] | None" = None, include_pruned: bool = True
+    ) -> tuple[list[str], np.ndarray]:
+        """``(names, mask)`` where ``mask[i, j]`` is True iff parameters
+        ``names[i]`` and ``names[j]`` were both suggested by at least one
+        observed trial — the relation whose connected components are the
+        joint-sampling groups (see ``search_space.observed_groups``).
+
+        Computed as one boolean matmul over the store's dist-type rows
+        (presence = type code >= 0), restricted to COMPLETE (and by default
+        PRUNED) trials so the grouping matches the observations samplers
+        actually model."""
+        with self._lock:
+            self._materialize()
+            names = self.param_names() if names is None else list(names)
+            if not names or self._n == 0:
+                return names, np.zeros((len(names), len(names)), dtype=bool)
+            states = self._view_states
+            mask = states == int(TrialState.COMPLETE)
+            if include_pruned:
+                mask = mask | (states == int(TrialState.PRUNED))
+            absent = np.full(self._n, -1, dtype=np.int8)
+            present = np.stack(
+                [self._view_type_rows.get(n, absent) >= 0 for n in names], axis=1
+            )
+            present = present & mask[:, None]
+            p = present.astype(np.int64)
+            return names, (p.T @ p) > 0
+
+    def snapshot(self) -> tuple:
+        """``(version, states, values, last_intermediate_values, cols)`` as
+        one **consistent** set of number-ordered read-only views, taken under
+        a single lock acquisition.  Concurrent refreshes replace the view
+        arrays and the column dict wholesale (never mutate them), so a
+        caller holding a snapshot keeps seeing one coherent history even
+        while other threads tell new trials — mixing individual property
+        reads across a refresh does not have that guarantee."""
+        with self._lock:
+            self._materialize()
+            return (
+                self.version,
+                self._view_states,
+                self._view_values,
+                self._view_last_iv,
+                self._view_cols,
+            )
+
     def param_names(self) -> list[str]:
         with self._lock:
             return sorted(self._cols)
@@ -371,7 +418,7 @@ class IntermediateValueStore:
     snapshot.
     """
 
-    def __init__(self, storage: "BaseStorage", study_id: int):
+    def __init__(self, storage: "BaseStorage", study_id: int, track_dirty: bool = False):
         self._storage = storage
         self._study_id = study_id
         self._lock = threading.RLock()
@@ -383,11 +430,26 @@ class IntermediateValueStore:
         self._matrix = np.empty((0, 0))
         self._states = np.empty(0, dtype=np.int64)
         self._trial_ids = np.empty(0, dtype=np.int64)
+        self._row_len = np.empty(0, dtype=np.int64)  # reported values per row
 
         self._watermark = 0  # every number < watermark is finished + encoded
         self._revision: int | None = None
         self._revision_supported = True
         self._bsf: dict[bool, np.ndarray] = {}  # minimize? -> prefix-best
+
+        # per-trial dirty tracking (hosted stores only): backends note every
+        # intermediate-value write via ``note_dirty``, so a refresh re-encodes
+        # only the changed RUNNING rows instead of every row past the
+        # watermark.  Rows whose state or report count changed are re-encoded
+        # even without a note (covers writers on *other* storage instances —
+        # only a same-length step overwrite from a foreign process can hide,
+        # and reports are append-per-step in practice).
+        self._track_dirty = track_dirty
+        self._dirty: set[int] = set()          # row numbers noted changed
+        self._dirty_unknown = False            # a note arrived for an unseen id
+        self._id_to_row: dict[int, int] = {}
+        #: rows (re-)encoded so far — observability hook, pinned by tests
+        self.reencode_count = 0
 
         #: bumped whenever any cell changes; decisions may key caches on it
         self.version = 0
@@ -398,16 +460,40 @@ class IntermediateValueStore:
 
     # -- maintenance -----------------------------------------------------------
 
+    def note_dirty(self, trial_id: int) -> None:
+        """Mark one trial's row as changed (called by backends on every
+        intermediate-value write).  O(1); unknown ids — a trial reported
+        before this store ever encoded it — set a conservative flag that
+        forces the next refresh to re-encode every fetched row."""
+        with self._lock:
+            row = self._id_to_row.get(trial_id)
+            if row is not None:
+                self._dirty.add(row)
+            else:
+                self._dirty_unknown = True
+
     def refresh(self) -> None:
         with self._lock:
             rev = _poll_revision(self)
-            if rev is not None and rev == self._revision:
+            if (
+                rev is not None and rev == self._revision
+                and not self._dirty and not self._dirty_unknown
+            ):
+                # a note may land *after* the write it describes was already
+                # fetched under this revision — the dirty check above keeps
+                # that row from going stale until the next unrelated mutation
                 return
             fresh = get_trials_since(
                 self._storage, self._study_id, self._watermark, deepcopy=False
             )
             if fresh:
                 self._ingest(fresh)
+            else:
+                # nothing at/after the watermark: any noted row is finished
+                # (immutable), so the dirty state carries no information —
+                # clear it or a spurious note would pin refreshes forever
+                self._dirty.clear()
+                self._dirty_unknown = False
             self._revision = rev
 
     def _ingest(self, trials) -> None:
@@ -416,34 +502,55 @@ class IntermediateValueStore:
             self._grow_rows(max(_MIN_CAPACITY, 2 * self._row_cap, top + 1))
         self._n_rows = max(self._n_rows, top + 1)
 
-        new_steps = set()
+        # deepcopy=False feeds live dict refs on in-process backends: a
+        # concurrent report can mutate mid-iteration, so snapshot with retry
+        def snapshot(t) -> list:
+            for _ in range(3):
+                try:
+                    return list(t.intermediate_values.items())
+                except RuntimeError:  # pragma: no cover - dict-resize race
+                    continue
+            return list(t.intermediate_values.items())
+
+        rows = []
+        skip_clean = self._track_dirty and not self._dirty_unknown
         for t in trials:
-            for s in t.intermediate_values:
+            row = t.number
+            if (
+                skip_clean
+                and row not in self._dirty
+                and self._states[row] == int(t.state)  # -1 (never encoded) differs
+                and self._row_len[row] == len(t.intermediate_values)
+            ):
+                continue  # clean RUNNING row: state and report count unchanged
+            rows.append((row, t, snapshot(t)))
+
+        new_steps = set()
+        for _, _, items in rows:
+            for s, _ in items:
                 if int(s) not in self._step_index:
                     new_steps.add(int(s))
         if new_steps:
             self._grow_cols(new_steps)
 
-        for t in trials:
-            row = t.number
+        for row, t, items in rows:
             self._states[row] = int(t.state)
             self._trial_ids[row] = t.trial_id
+            self._id_to_row[t.trial_id] = row
             self._matrix[row, :] = np.nan
-            # deepcopy=False feeds live dict refs on in-process backends: a
-            # concurrent report can mutate mid-iteration, so retry the row
-            for _ in range(3):
-                try:
-                    for s, v in list(t.intermediate_values.items()):
-                        self._matrix[row, self._step_index[int(s)]] = v
-                    break
-                except RuntimeError:  # pragma: no cover - dict-resize race
-                    continue
+            for s, v in items:
+                self._matrix[row, self._step_index[int(s)]] = v
+            self._row_len[row] = len(items)
+            self.reencode_count += 1
+        self._dirty.clear()
+        self._dirty_unknown = False
         while self._watermark < self._n_rows and TrialState(
             self._states[self._watermark]
         ).is_finished():
             self._watermark += 1
-        self._bsf.clear()
-        self.version += 1
+        if rows:
+            self._bsf.clear()
+            self.version += 1
 
     def _grow_rows(self, capacity: int) -> None:
         n_cols = self._matrix.shape[1]
@@ -458,6 +565,7 @@ class IntermediateValueStore:
 
         self._states = enlarge(self._states, -1)
         self._trial_ids = enlarge(self._trial_ids, -1)
+        self._row_len = enlarge(self._row_len, 0)
         self._row_cap = capacity
 
     def _grow_cols(self, new_steps: set) -> None:

@@ -7,6 +7,13 @@ The split mirrors the paper's two sampling families (§3.1):
 * ``infer_relative_search_space`` + ``sample_relative`` — relational sampling
   over the inferred concurrence relations (CMA-ES, GP), invoked once per
   trial before any suggest call resolves.
+* ``sample_joint`` — block sampling: one call covers **all pending trials**
+  of a batched ``Study.ask(n)`` for one co-observed parameter group
+  (``search_space.ParamGroup``), returning an ``(n, len(group))`` matrix of
+  model-space rows.  The define-by-run ``suggest_*`` API then *slices* the
+  precomputed block instead of sampling per (trial, parameter); trials whose
+  runtime search space diverges from the group prediction fall back to
+  scalar sampling (see ``Trial._sample``).
 """
 
 from __future__ import annotations
@@ -19,6 +26,7 @@ from ..distributions import BaseDistribution
 from ..frozen import FrozenTrial
 
 if TYPE_CHECKING:
+    from ..search_space import ParamGroup
     from ..study import Study
 
 __all__ = ["BaseSampler", "sample_uniform_internal"]
@@ -43,6 +51,39 @@ class BaseSampler:
         param_distribution: BaseDistribution,
     ) -> Any:
         raise NotImplementedError
+
+    # -- block (joint) sampling -------------------------------------------------
+
+    def joint_enabled(self) -> bool:
+        """Whether ``Study.ask(n)`` should presample joint blocks with this
+        sampler at all.  The default detects a ``sample_joint`` override, so
+        custom samplers keep the per-trial path untouched; samplers with a
+        mode switch (TPE's ``multivariate=``) override this with the flag."""
+        return type(self).sample_joint is not BaseSampler.sample_joint
+
+    def sample_joint(
+        self,
+        study: "Study",
+        group: "ParamGroup",
+        n: int,
+        trial_ids: "list[int] | None" = None,
+    ) -> "np.ndarray | None":
+        """Sample one ``(n, len(group.names))`` block of **model-space** rows
+        for ``n`` pending trials of one co-observed parameter group.
+
+        Return ``None`` to decline the whole group (no joint model yet —
+        startup, warmup, multi-objective, ...): those parameters then go
+        through the ordinary per-trial relational/independent path.  A
+        returned block may carry ``NaN`` cells to decline individual columns
+        (e.g. CMA-ES excludes categoricals); NaN cells silently fall back to
+        scalar sampling without counting as a group-prediction miss.
+
+        ``trial_ids`` are the storage ids of the pending trials, for
+        samplers whose joint draw has per-trial side effects (the grid
+        sampler claims one cell per trial).  Column order is
+        ``group.names``; row ``i`` belongs to pending trial ``i``.
+        """
+        return None
 
     def reseed_rng(self, seed: int | None = None) -> None:
         """Re-seed internal RNGs.  Workers call this with a distinct per-worker

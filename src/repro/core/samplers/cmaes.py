@@ -39,6 +39,7 @@ from .base import BaseSampler
 from .random import RandomSampler
 
 if TYPE_CHECKING:
+    from ..search_space import ParamGroup
     from ..study import Study
 
 __all__ = ["CmaEsSampler", "CMA"]
@@ -168,17 +169,18 @@ class CmaEsSampler(BaseSampler):
             out[name] = dist
         return out if len(out) >= 2 else {}
 
-    def sample_relative(
-        self, study: "Study", trial: FrozenTrial, search_space: dict[str, BaseDistribution]
-    ) -> dict[str, Any]:
-        if not search_space:
-            return {}
-        names = sorted(search_space.keys())
+    def _replayed_cma(
+        self, study: "Study", names: list[str], search_space: dict[str, BaseDistribution]
+    ) -> "tuple[CMA, int] | None":
+        """Deterministically replay the completed-trial history into a CMA
+        state (see the module docstring), or None while still in warmup.
+        Returns ``(cma, n_observations)``; the observation count keys the
+        joint path's per-wave RNG."""
         # the design matrix comes straight from the columnar observation
         # store (model space, trial-number order) — no FrozenTrial re-walk
         Xi, y0 = study.observations().design_matrix(names)
         if len(Xi) < self._warmup:
-            return {}
+            return None
 
         sign = 1.0 if study.direction == StudyDirection.MINIMIZE else -1.0
         U = np.empty_like(Xi)
@@ -186,8 +188,8 @@ class CmaEsSampler(BaseSampler):
             U[:, j] = search_space[n].internal_to_unit(Xi[:, j])
         losses = sign * y0
 
-        # deterministic replay: feed completed post-warmup trials to CMA in
-        # generation batches of popsize, in trial-number order
+        # feed completed post-warmup trials to CMA in generation batches of
+        # popsize, in trial-number order
         cma = CMA(
             mean=np.full(len(names), 0.5),
             sigma=self._sigma0,
@@ -200,12 +202,59 @@ class CmaEsSampler(BaseSampler):
             if len(batch) == cma.popsize:
                 cma.tell(batch)
                 batch = []
+        return cma, len(U)
 
+    def sample_relative(
+        self, study: "Study", trial: FrozenTrial, search_space: dict[str, BaseDistribution]
+    ) -> dict[str, Any]:
+        if not search_space:
+            return {}
+        names = sorted(search_space.keys())
+        replayed = self._replayed_cma(study, names, search_space)
+        if replayed is None:
+            return {}
+        cma, _ = replayed
         rng = np.random.RandomState(
             None if self._seed is None else (self._seed + 7919 * trial.number)
         )
         x = cma.ask(rng)
         return {n: _from_unit(search_space[n], float(v)) for n, v in zip(names, x)}
+
+    def sample_joint(
+        self, study: "Study", group: "ParamGroup", n: int,
+        trial_ids: "list[int] | None" = None,
+    ) -> "np.ndarray | None":
+        """One history replay per wave (instead of per trial), then ``n``
+        population draws.  Columns outside the CMA space — categoricals,
+        single-point domains, conditional params — stay NaN and fall back to
+        per-trial independent sampling, mirroring the scalar path."""
+        space = {
+            name: dist
+            for name, dist in self._space_calc.calculate(study).items()
+            if not isinstance(dist, CategoricalDistribution) and not dist.single()
+        }
+        if len(space) < 2 or not set(space) <= set(group.names):
+            return None
+        names = sorted(space.keys())
+        replayed = self._replayed_cma(study, names, space)
+        if replayed is None:
+            return None
+        cma, n_obs = replayed
+        # wave-deterministic stream: keyed on the history length, so reruns
+        # with identical storage contents reproduce (trial numbers are not
+        # known client-side without a refetch)
+        rng = np.random.RandomState(
+            None if self._seed is None else (self._seed + 7919 * n_obs)
+        )
+        cols = {name: j for j, name in enumerate(group.names)}
+        block = np.full((n, len(group.names)), np.nan)
+        for i in range(n):
+            x = cma.ask(rng)
+            for name, u in zip(names, x):
+                dist = space[name]
+                ext = _from_unit(dist, float(u))
+                block[i, cols[name]] = float(dist.to_internal([ext])[0])
+        return block
 
     def sample_independent(
         self, study: "Study", trial: FrozenTrial, param_name: str,

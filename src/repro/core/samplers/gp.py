@@ -22,6 +22,7 @@ from .cmaes import _from_unit
 from .random import RandomSampler
 
 if TYPE_CHECKING:
+    from ..search_space import ParamGroup
     from ..study import Study
 
 __all__ = ["GPSampler"]
@@ -62,18 +63,17 @@ class GPSampler(BaseSampler):
             if not isinstance(d, CategoricalDistribution) and not d.single()
         }
 
-    def sample_relative(
-        self, study: "Study", trial: FrozenTrial, search_space: dict[str, BaseDistribution]
-    ) -> dict[str, Any]:
-        if not search_space:
-            return {}
-        names = sorted(search_space)
+    def _ei_candidates(
+        self, study: "Study", names: list[str], search_space: dict[str, BaseDistribution]
+    ) -> "tuple[np.ndarray, np.ndarray] | None":
+        """Fit the GP once and return ``(candidates, ei)`` over the random
+        candidate set in [0,1]^d, or None while still in startup."""
         sign = 1.0 if study.direction == StudyDirection.MINIMIZE else -1.0
         # design matrix straight from the columnar observation store: model
         # space -> [0,1] via the vectorized per-distribution codec
         Xi, y0 = study.observations().design_matrix(names)
         if len(Xi) < self._n_startup:
-            return {}
+            return None
         X = np.empty_like(Xi)
         for j, n in enumerate(names):
             X[:, j] = search_space[n].internal_to_unit(Xi[:, j])
@@ -109,8 +109,52 @@ class GPSampler(BaseSampler):
         best = yz.min()
         z = (best - mean) / sd
         ei = sd * (z * _ncdf(z) + _npdf(z))
+        return C, ei
+
+    def sample_relative(
+        self, study: "Study", trial: FrozenTrial, search_space: dict[str, BaseDistribution]
+    ) -> dict[str, Any]:
+        if not search_space:
+            return {}
+        names = sorted(search_space)
+        fitted = self._ei_candidates(study, names, search_space)
+        if fitted is None:
+            return {}
+        C, ei = fitted
         x = C[int(np.argmax(ei))]
         return {n: _from_unit(search_space[n], float(u)) for n, u in zip(names, x)}
+
+    def sample_joint(
+        self, study: "Study", group: "ParamGroup", n: int,
+        trial_ids: "list[int] | None" = None,
+    ) -> "np.ndarray | None":
+        """One GP fit per wave; the ``n`` pending trials take the top-n EI
+        candidates (distinct acquisition optima) instead of re-fitting the
+        posterior per trial.  Columns outside the GP space stay NaN."""
+        space = {
+            name: dist
+            for name, dist in self._space_calc.calculate(study).items()
+            if not isinstance(dist, CategoricalDistribution) and not dist.single()
+        }
+        if not space or not set(space) <= set(group.names):
+            return None
+        names = sorted(space)
+        fitted = self._ei_candidates(study, names, space)
+        if fitted is None:
+            return None
+        C, ei = fitted
+        top = np.argsort(ei, kind="stable")[::-1][:n]
+        cols = {name: j for j, name in enumerate(group.names)}
+        block = np.full((n, len(group.names)), np.nan)
+        for i, c in enumerate(top):
+            for name, u in zip(names, C[c]):
+                dist = space[name]
+                ext = _from_unit(dist, float(u))
+                block[i, cols[name]] = float(dist.to_internal([ext])[0])
+        # fewer candidates than pending trials: recycle the best row
+        for i in range(len(top), n):
+            block[i] = block[i % max(len(top), 1)]
+        return block
 
     def sample_independent(
         self, study: "Study", trial: FrozenTrial, param_name: str,

@@ -19,6 +19,7 @@ from ..records import _GRID_ATTR as _GRID_KEY  # one key, shared with the store
 from .base import BaseSampler, sample_uniform_internal
 
 if TYPE_CHECKING:
+    from ..search_space import ParamGroup
     from ..study import Study
 
 __all__ = ["GridSampler"]
@@ -52,6 +53,45 @@ class GridSampler(BaseSampler):
             if gid is not None:
                 taken.add(int(gid))
         return taken
+
+    def sample_joint(
+        self, study: "Study", group: "ParamGroup", n: int,
+        trial_ids: "list[int] | None" = None,
+    ) -> "np.ndarray | None":
+        """Claim ``n`` distinct free cells with **one** ``_taken`` scan and
+        one batched attr write, instead of n independent scan+claim rounds.
+        Only the grid's own parameters are filled; co-observed off-grid
+        columns stay NaN (scalar uniform fallback, matching
+        ``sample_independent``)."""
+        gnames = list(self._space.keys())
+        cols = {name: j for j, name in enumerate(group.names)}
+        if trial_ids is None or not all(name in cols for name in gnames):
+            # the grid is claimed all-or-nothing: a group covering only part
+            # of it (can't happen for self-consistent objectives) or a caller
+            # without trial ids falls back to the per-trial claim path
+            return None
+        taken = self._taken(study)
+        free = [i for i in range(len(self._grid)) if i not in taken]
+        gids = free[:n]
+        while len(gids) < n:  # exhausted: re-visit at random (keeps totals)
+            gids.append(int(self._rng.randint(len(self._grid))))
+        storage = study._storage
+        call_batch = getattr(storage, "call_batch", None)
+        claims = [
+            ("set_trial_system_attr", (tid, _GRID_KEY, gid))
+            for tid, gid in zip(trial_ids, gids)
+        ]
+        if call_batch is not None and len(claims) > 1:
+            call_batch(claims)  # one frame claims the whole wave
+        else:
+            for method, params in claims:
+                getattr(storage, method)(*params)
+        block = np.full((n, len(group.names)), np.nan)
+        for k, name in enumerate(gnames):
+            dist = group.dists[name]
+            values = [self._grid[gid][k] for gid in gids]
+            block[:, cols[name]] = dist.to_internal(values)
+        return block
 
     def sample_relative(
         self, study: "Study", trial: FrozenTrial, search_space: dict[str, BaseDistribution]

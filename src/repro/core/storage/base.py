@@ -162,15 +162,43 @@ class BaseStorage:
 
     def _intermediate_store(self, study_id: int):
         """The per-study intermediate-value store hosted on this backend,
-        created lazily (kept warm across fused calls)."""
+        created lazily (kept warm across fused calls).  Hosted stores track a
+        per-trial dirty set — every ``set_trial_intermediate_value`` on this
+        backend notes the written trial via :meth:`_note_iv_dirty`, so a
+        refresh re-encodes only the changed RUNNING rows, O(changed trials)
+        instead of O(rows past the watermark)."""
         from ..records import IntermediateValueStore
 
         with BaseStorage._iv_stores_lock:
             stores = self.__dict__.setdefault("_iv_stores", {})
             store = stores.get(study_id)
             if store is None:
-                stores[study_id] = store = IntermediateValueStore(self, study_id)
+                stores[study_id] = store = IntermediateValueStore(
+                    self, study_id, track_dirty=True
+                )
             return store
+
+    def _note_iv_dirty(self, trial_id: int, study_id: "int | None" = None) -> None:
+        """Tell the hosted intermediate-value store one trial's reports
+        changed.  ``study_id`` scopes the note to the owning study's store
+        (every backend can resolve it cheaply); a foreign-study note would
+        otherwise poison that store's dirty tracking with an unknown id and
+        degrade its refresh back to full re-encodes.  Backends call this from
+        ``set_trial_intermediate_value`` **after releasing their own lock**
+        (a hosted store's refresh takes the store lock first, then reads
+        through the backend — noting under the backend lock would invert
+        that order and deadlock)."""
+        with BaseStorage._iv_stores_lock:
+            stores = self.__dict__.get("_iv_stores")
+            if not stores:
+                return
+            if study_id is not None:
+                store = stores.get(study_id)
+                targets = [store] if store is not None else []
+            else:
+                targets = list(stores.values())
+        for store in targets:
+            store.note_dirty(trial_id)
 
     def _drop_intermediate_store(self, study_id: int) -> None:
         """Evict a deleted study's store — backends call this from

@@ -160,6 +160,10 @@ class RemoteStorage(BaseStorage):
             except OSError:
                 pass
             self._local.sock = None
+            # the server's per-connection spec cache died with the socket;
+            # dropping here (never at connect time) keeps a def registered at
+            # encode time valid for the send that follows on a fresh dial
+            self._local.spec_ids = {}
 
     def _req_id(self) -> int:
         with self._id_lock:
@@ -213,23 +217,90 @@ class RemoteStorage(BaseStorage):
                     time.sleep(0.05 * (attempt + 1))
         raise RetryableStorageError(f"cannot reach storage server {self._url}: {last}") from last
 
+    # -- pruner-spec interning ---------------------------------------------------
+
+    _SPEC_DEF = "__spec_def__"
+    _SPEC_REF = "__spec_ref__"
+
+    def _spec_wire(self, study_id: int, spec: dict) -> dict:
+        """Intern a pruner spec per (connection, study): the full spec
+        travels once as ``{__spec_def__: {id, spec}}``, every later fused
+        report of the same study sends the ~20-byte ``{__spec_ref__: id}``
+        instead.  The server's cache is per-connection, so a re-dialed
+        socket starts clean on both sides (see ``_sock``/``_drop_sock``)."""
+        ids = getattr(self._local, "spec_ids", None)
+        if ids is None:
+            ids = self._local.spec_ids = {}
+        key = (study_id, json.dumps(spec, sort_keys=True))
+        ref = ids.get(key)
+        if ref is not None:
+            return {self._SPEC_REF: ref}
+        ref = len(ids)
+        ids[key] = ref
+        return {self._SPEC_DEF: {"id": ref, "spec": spec}}
+
+    def _encode_params(self, method: str, params: list) -> list:
+        if (
+            method == "report_and_prune"
+            and len(params) >= 6
+            and isinstance(params[4], dict)
+            and self._SPEC_DEF not in params[4]
+            and self._SPEC_REF not in params[4]
+        ):
+            params = list(params)
+            params[4] = self._spec_wire(params[0], params[4])
+        return params
+
+    @staticmethod
+    def _is_spec_ref_miss(e: Exception) -> bool:
+        return isinstance(e, ValueError) and "pruner spec ref" in str(e)
+
     def _call(self, method: str, *params: Any) -> Any:
-        request = {"id": self._req_id(), "method": method, "params": pack(list(params))}
-        response = self._call_raw(request, idempotent=method not in _NON_IDEMPOTENT)
-        return self._unwrap(response)
+        for attempt in (0, 1):
+            encoded = self._encode_params(method, list(params))
+            request = {"id": self._req_id(), "method": method, "params": pack(encoded)}
+            try:
+                return self._unwrap(
+                    self._call_raw(request, idempotent=method not in _NON_IDEMPOTENT)
+                )
+            except ValueError as e:
+                # a spec ref can outlive its server-side cache when the
+                # connection is torn between encode and send: resend once
+                # with the cache cleared (the full spec travels again)
+                if attempt == 0 and self._is_spec_ref_miss(e):
+                    self._local.spec_ids = {}
+                    continue
+                raise
+        raise AssertionError("unreachable")  # pragma: no cover
 
     def call_batch(self, calls: list[tuple[str, tuple]]) -> list[Any]:
         """Execute many calls in one round trip (server-side request batching).
 
         Used by :class:`CachedStorage` to flush buffered writes.  The batch is
-        idempotent-retried only if *every* call in it is idempotent.
+        idempotent-retried only if *every* call in it is idempotent; a
+        spec-ref cache miss (see ``_spec_wire``) likewise resends the whole
+        batch once — every op in a spec-carrying batch is an overwrite, so
+        the replay is safe.
         """
-        request = [
-            {"id": self._req_id(), "method": m, "params": pack(list(p))} for m, p in calls
-        ]
         idempotent = all(m not in _NON_IDEMPOTENT for m, _ in calls)
-        responses = self._call_raw(request, idempotent=idempotent)
-        return [self._unwrap(r) for r in responses]
+        for attempt in (0, 1):
+            request = [
+                {
+                    "id": self._req_id(),
+                    "method": m,
+                    "params": pack(self._encode_params(m, list(p))),
+                }
+                for m, p in calls
+            ]
+            responses = self._call_raw(request, idempotent=idempotent)
+            try:
+                return [self._unwrap(r) for r in responses]
+            except ValueError as e:
+                if attempt == 0 and self._is_spec_ref_miss(e):
+                    self._local.spec_ids = {}
+                    continue
+                raise
+        raise AssertionError("unreachable")  # pragma: no cover
 
     @staticmethod
     def _unwrap(response: dict) -> Any:
@@ -310,7 +381,8 @@ class RemoteStorage(BaseStorage):
         """Fused report→prune in one frame: the server writes the value and
         evaluates the pruner spec against its own warm peer store.  Safe to
         retry on a torn connection (the write is an overwrite, the decision
-        a pure read)."""
+        a pure read).  The spec itself is interned per (connection, study)
+        — sent once in full, then as a short ref (see ``_spec_wire``)."""
         return bool(
             self._call(
                 "report_and_prune", study_id, trial_id, int(step), float(value),

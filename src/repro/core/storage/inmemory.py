@@ -180,6 +180,9 @@ class InMemoryStorage(BaseStorage):
             self._check_not_finished(t)
             t.intermediate_values[int(step)] = float(intermediate_value)
             self._bump_revision(trial_id)
+            sid, _ = self._trial_index[trial_id]
+        # outside the backend lock: hosted IV stores lock store-first
+        self._note_iv_dirty(trial_id, sid)
 
     def set_trial_user_attr(self, trial_id: int, key: str, value: Any) -> None:
         with self._lock:

@@ -410,6 +410,9 @@ class JournalStorage(BaseStorage):
             "op": _SET_IV, "trial_id": trial_id, "step": int(step),
             "value": float(intermediate_value),
         })
+        with self._mem_lock:
+            sid = self._replay.trial_study.get(trial_id)
+        self._note_iv_dirty(trial_id, sid)  # after append: stores lock store-first
 
     def set_trial_user_attr(self, trial_id: int, key: str, value: Any) -> None:
         self._append({"op": _SET_TATTR, "trial_id": trial_id, "sys": 0, "key": key, "value": value})

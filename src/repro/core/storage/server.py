@@ -130,6 +130,9 @@ class _Handler(socketserver.BaseRequestHandler):
         sock.settimeout(0.5)  # so the loop notices server shutdown promptly
         server: "_RPCServer" = self.server  # type: ignore[assignment]
         authed = server.auth_token is None
+        # per-connection interned pruner specs (client sends each spec once
+        # as __spec_def__, then short __spec_ref__ frames; see client.py)
+        conn_specs: dict[int, dict] = {}
         while not server.stopping.is_set():
             try:
                 payload = recv_frame(sock)
@@ -167,7 +170,10 @@ class _Handler(socketserver.BaseRequestHandler):
                     drop_after_reply = True
             else:
                 batch = isinstance(request, list)
-                responses = [server.dispatch(r) for r in (request if batch else [request])]
+                responses = [
+                    server.dispatch(r, conn_specs)
+                    for r in (request if batch else [request])
+                ]
             out = json.dumps(responses if batch else responses[0]).encode()
             try:
                 sock.settimeout(30.0)
@@ -177,6 +183,33 @@ class _Handler(socketserver.BaseRequestHandler):
                 return
             if drop_after_reply:
                 return
+
+
+def _resolve_spec(params: list, conn_specs: "dict[int, dict] | None") -> list:
+    """Resolve the pruner-spec param of a fused report: a ``__spec_def__``
+    envelope registers the full spec in this connection's cache, a
+    ``__spec_ref__`` looks one up, and a raw spec dict (older clients, or
+    in-process dispatch without connection state) passes through untouched."""
+    if len(params) < 5 or not isinstance(params[4], dict):
+        return params
+    spec = params[4]
+    if "__spec_def__" in spec:
+        ent = spec["__spec_def__"]
+        params = list(params)
+        params[4] = ent["spec"]
+        if conn_specs is not None:
+            conn_specs[int(ent["id"])] = ent["spec"]
+        return params
+    if "__spec_ref__" in spec:
+        ref = int(spec["__spec_ref__"])
+        if conn_specs is None or ref not in conn_specs:
+            raise ValueError(
+                f"unknown pruner spec ref {ref} (connection lost its spec cache)"
+            )
+        params = list(params)
+        params[4] = conn_specs[ref]
+        return params
+    return params
 
 
 def _auth_ok(request: Any, token: str) -> bool:
@@ -198,7 +231,7 @@ class _RPCServer(socketserver.ThreadingTCPServer):
         self.auth_token = auth_token
         self.stopping = threading.Event()
 
-    def dispatch(self, request: dict) -> dict:
+    def dispatch(self, request: dict, conn_specs: "dict[int, dict] | None" = None) -> dict:
         req_id = request.get("id")
         method = request.get("method")
         try:
@@ -211,6 +244,8 @@ class _RPCServer(socketserver.ThreadingTCPServer):
             if method not in _METHODS:
                 raise ValueError(f"unknown storage method {method!r}")
             params = unpack(request.get("params") or [])
+            if method == "report_and_prune":
+                params = _resolve_spec(params, conn_specs)
             result = self._invoke(method, params)
             response = {"id": req_id, "ok": True, "result": pack(result)}
             # an unserializable result must become a typed error frame, not a

@@ -375,6 +375,10 @@ class SQLiteStorage(BaseStorage):
                 (trial_id, int(step), float(intermediate_value)),
             )
             self._bump_revision_for_trial(cur, trial_id)
+            cur.execute("SELECT study_id FROM trials WHERE trial_id=?", (trial_id,))
+            row = cur.fetchone()
+        # after commit: stores lock store-first
+        self._note_iv_dirty(trial_id, row[0] if row is not None else None)
 
     def _set_trial_attr(self, trial_id: int, key: str, value: Any, is_system: int) -> None:
         with self._tx() as cur:

@@ -10,23 +10,29 @@ coordinator.  ``ask``/``tell`` expose the trial lifecycle for custom loops
 from __future__ import annotations
 
 import datetime
+import logging
 import math
 import threading
 import time
 import warnings
 from typing import Any, Callable, Iterable, Sequence
 
+import numpy as np
+
 from .exceptions import DuplicatedStudyError, TrialPruned
 from .frozen import FrozenTrial, StudyDirection, TrialState
 from .pruners import BasePruner, NopPruner
 from .records import IntermediateValueStore, ObservationStore
 from .samplers import BaseSampler, TPESampler
+from .search_space import observed_groups
 from .storage import BaseStorage, get_storage
 from .trial import Trial
 
 __all__ = ["Study", "create_study", "load_study", "delete_study"]
 
 ObjectiveFunc = Callable[[Trial], float]
+
+_log = logging.getLogger(__name__)
 
 
 class Study:
@@ -45,6 +51,10 @@ class Study:
         self._stop_requested = False
         self._records: ObservationStore | None = None
         self._ivs: IntermediateValueStore | None = None
+        # joint-sampling state: group decomposition memoized per store
+        # version; the miss log fires once per study, not per trial
+        self._groups_cache: "tuple[int, list] | None" = None
+        self._joint_miss_logged = False
         # directions are immutable after creation: fetch once here so the
         # fused report path never pays an extra storage call for them
         self._directions: list[StudyDirection] = (
@@ -183,14 +193,97 @@ class Study:
         if n < 0:
             raise ValueError(f"ask(n) needs n >= 0, got {n}")
         trials: list[Trial] = []
+        fixed: set[int] = set()  # claimed enqueued trials with fixed params
         for t in self.get_trials(deepcopy=False, states=(TrialState.WAITING,)):
             if len(trials) == n:
                 break
             if self._storage.set_trial_state_values(t.trial_id, TrialState.RUNNING):
                 trials.append(Trial(self, t.trial_id))
+                if t.system_attrs.get("fixed_params"):
+                    fixed.add(t.trial_id)
         for trial_id in self._storage.create_new_trials(self._study_id, n - len(trials)):
             trials.append(Trial(self, trial_id))
+        # enqueued configurations replay their fixed params, never the block:
+        # presampling them would waste draws and, worse, consume stateful
+        # joint side effects (a grid cell claimed for a trial that will not
+        # evaluate it) — they keep the scalar path exactly as ask() would
+        sampled = [t for t in trials if t._trial_id not in fixed]
+        if sampled:
+            self._presample_joint(sampled)
         return trials
+
+    # -- joint (block) sampling -----------------------------------------------
+
+    def observed_param_groups(self) -> list:
+        """Group decomposition of the observed search space (connected
+        components of co-observed parameters), memoized per observation-store
+        version — see ``search_space.observed_groups``."""
+        store = self.observations()
+        cached = self._groups_cache
+        if cached is not None and cached[0] == store.version:
+            return cached[1]
+        groups = observed_groups(store)
+        self._groups_cache = (store.version, groups)
+        return groups
+
+    def _presample_joint(self, trials: "list[Trial]") -> None:
+        """One ``sample_joint`` call per observed parameter group covers the
+        whole wave: each pending trial gets its slice of the returned
+        ``(n, n_params)`` block attached, and its ``suggest_*`` calls resolve
+        from the slice with no further sampler work (see ``Trial._sample``).
+        Samplers without a joint model (or with ``multivariate=False``)
+        decline and the per-trial define-by-run path runs untouched."""
+        sampler = self.sampler
+        if not sampler.joint_enabled():
+            return
+        groups = self.observed_param_groups()
+        if not groups:
+            return
+        n = len(trials)
+        trial_ids = [t._trial_id for t in trials]
+        rows: list[dict[str, float]] = [{} for _ in trials]
+        dists: dict[str, Any] = {}
+        any_block = False
+        for group in groups:
+            block = sampler.sample_joint(self, group, n, trial_ids=trial_ids)
+            if block is None:
+                # declined whole group (startup/warmup): record NaN cells so
+                # the shim falls back silently — only parameters *no* group
+                # predicted (dynamic branches) count as misses worth logging
+                for name in group.names:
+                    dists[name] = group.dists[name]
+                    for row in rows:
+                        row[name] = float("nan")
+                continue
+            block = np.asarray(block, dtype=float)
+            if block.shape != (n, len(group.names)):
+                raise ValueError(
+                    f"sample_joint returned shape {block.shape}, expected "
+                    f"{(n, len(group.names))} for group {group.names}"
+                )
+            any_block = True
+            for j, name in enumerate(group.names):
+                dists[name] = group.dists[name]
+                for i in range(n):
+                    rows[i][name] = float(block[i, j])
+        if any_block:
+            for trial, row in zip(trials, rows):
+                trial._joint = row
+                trial._joint_dists = dists
+
+    def _note_joint_miss(self, name: str, reason: str) -> None:
+        """Joint-block prediction miss (dynamic branch / drifted domain):
+        log once per study — a per-trial warning would fire on every wave of
+        a branching objective and drown real signal."""
+        if self._joint_miss_logged:
+            return
+        self._joint_miss_logged = True
+        _log.info(
+            "study %r: joint block missed parameter %r (%s); falling back to "
+            "per-trial scalar sampling for divergent parameters "
+            "(logged once per study)",
+            self.study_name, name, reason,
+        )
 
     def tell(
         self,

@@ -15,6 +15,7 @@ deployment (paper §2.2).
 from __future__ import annotations
 
 import datetime
+import math
 from typing import TYPE_CHECKING, Any, Sequence
 
 from .distributions import (
@@ -92,6 +93,12 @@ class Trial(BaseTrial):
         self._cached: FrozenTrial | None = None
         # relative (relational) sampling happens once, lazily, at first suggest
         self._relative_params: dict[str, Any] | None = None
+        # joint block slice: {name: model-space value} presampled by a batched
+        # ``Study.ask(n)`` (see Study._presample_joint); None on the scalar
+        # path.  When set, suggest calls slice it instead of sampling, and
+        # the per-trial relational stage is skipped (the block replaced it).
+        self._joint: "dict[str, float] | None" = None
+        self._joint_dists: "dict[str, BaseDistribution]" = {}
         # fused report→prune: decision for the last reported step, if any
         self._prune_decision: "tuple[int, bool] | None" = None
         self._last_report: "tuple[int, float] | None" = None
@@ -155,18 +162,64 @@ class Trial(BaseTrial):
 
     def _sample(self, name: str, distribution: BaseDistribution, frozen: FrozenTrial) -> float:
         sampler = self.study.sampler
-        if self._relative_params is None:
+        if self._relative_params is None and self._joint is None:
             # infer the concurrence relations once per trial (paper §3.1) and
-            # run the relational sampler over them
+            # run the relational sampler over them.  Joint-presampled trials
+            # skip this stage entirely: the block already played the
+            # relational role for the whole wave (re-running it would e.g.
+            # claim a second grid cell).
             space = sampler.infer_relative_search_space(self.study, frozen)
             self._relative_params = sampler.sample_relative(self.study, frozen, space)
-        if name in self._relative_params:
+        if self._relative_params and name in self._relative_params:
             ext = self._relative_params[name]
             if distribution._contains(distribution.to_internal_repr(ext)):
                 return distribution.to_internal_repr(ext)
+        joint = self._joint_value(name, distribution)
+        if joint is not None:
+            return joint
         return distribution.to_internal_repr(
             sampler.sample_independent(self.study, frozen, name, distribution)
         )
+
+    def _joint_value(self, name: str, distribution: BaseDistribution) -> "float | None":
+        """Slice the presampled joint block for one suggest call.
+
+        Returns the internal-repr value when the block covers ``name`` and
+        the runtime distribution still matches the group prediction;
+        otherwise None, falling back to scalar sampling.  Divergences
+        (dynamic search-space branches, drifted bounds, changed types) are
+        reported once per study — not per trial — via
+        ``Study._note_joint_miss``."""
+        if self._joint is None:
+            return None
+        model = self._joint.get(name)
+        if model is None:
+            # the group prediction never saw this parameter: a dynamic
+            # define-by-run branch the history did not cover
+            self.study._note_joint_miss(name, "not in any observed group")
+            return None
+        if math.isnan(model):
+            return None  # sampler declined this column by design; silent
+        predicted = self._joint_dists.get(name)
+        if predicted is None or type(predicted) is not type(distribution) or (
+            isinstance(distribution, CategoricalDistribution) and predicted != distribution
+        ):
+            self.study._note_joint_miss(name, "distribution type changed")
+            return None
+        if getattr(predicted, "log", False) != getattr(distribution, "log", False):
+            # same type but a different coordinate system: the block value is
+            # a log-space (resp. linear) number the runtime codec would
+            # silently misread as linear (resp. log)
+            self.study._note_joint_miss(name, "log flag changed")
+            return None
+        # containment must be checked in *model space* against the runtime
+        # domain: from_internal clips into bounds, so a post-clip _contains
+        # test could never detect a drifted domain
+        low, high = distribution.internal_bounds(expand_int=True)
+        if not (low <= model <= high):
+            self.study._note_joint_miss(name, "bounds drifted past the block")
+            return None
+        return float(distribution.from_internal([model])[0])
 
     # -- pruning interface (paper Fig. 5) ---------------------------------------
 

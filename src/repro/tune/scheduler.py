@@ -27,10 +27,20 @@ class TrialSliceScheduler:
         study: hpo.Study,
         meshes: list,
         run_trial: Callable,  # (trial, mesh) -> float  (raises TrialPruned)
+        backfill_batch: int = 1,
     ):
+        """``backfill_batch > 1`` claims replacement trials in waves of that
+        size through ``study.ask(n)`` instead of one scalar ask per freed
+        slice: each wave is one storage round trip *and* one joint-sampling
+        block per parameter group (``BaseSampler.sample_joint``), so a
+        multivariate sampler fits its Parzen/posterior once per wave rather
+        than once per backfill.  The default of 1 keeps the fully elastic
+        per-slice behavior."""
         self.study = study
         self.meshes = meshes
         self.run_trial = run_trial
+        self.backfill_batch = max(1, int(backfill_batch))
+        self._prefetched: list = []
         self._events: list = []
         self._lock = threading.Lock()
 
@@ -66,6 +76,13 @@ class TrialSliceScheduler:
             with lock:
                 if seeded:
                     return seeded.pop(0)
+                if self._prefetched:
+                    return self._prefetched.pop(0)
+                if self.backfill_batch > 1:
+                    # claim a whole backfill wave in one round trip; peers
+                    # freed while this ask is in flight drain the surplus
+                    self._prefetched.extend(self.study.ask(self.backfill_batch))
+                    return self._prefetched.pop(0)
             return self.study.ask()
 
         def slice_worker(slice_id: int, mesh) -> None:
@@ -100,3 +117,9 @@ class TrialSliceScheduler:
             t.start()
         for t in threads:
             t.join()
+        # return unevaluated claims (seed leftovers on early stop, surplus
+        # from the last backfill wave) to the WAITING queue
+        leftovers = seeded + self._prefetched
+        self._prefetched = []
+        if leftovers:
+            self.study._release_unrun(leftovers)

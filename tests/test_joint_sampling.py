@@ -1,0 +1,525 @@
+"""Joint (block) sampling across the sampler stack: group decomposition of
+the observed search space, one ``sample_joint`` call per group per batched
+``ask(n)``, the define-by-run shim that slices precomputed blocks, and the
+multivariate TPE quality/throughput acceptance bars."""
+
+import logging
+
+import numpy as np
+import pytest
+
+import repro.core as hpo
+from repro.core.distributions import (
+    CategoricalDistribution,
+    FloatDistribution,
+    IntDistribution,
+)
+from repro.core.frozen import TrialState
+from repro.core.search_space import ParamGroup, observed_groups
+
+
+# -- helpers ---------------------------------------------------------------------
+
+
+def seed_trials(study, rows, value=1.0):
+    """Write finished trials straight to storage; ``rows`` is a list of
+    {name: (internal_value, distribution)} dicts."""
+    storage, sid = study._storage, study._study_id
+    for i, row in enumerate(rows):
+        tid = storage.create_new_trial(sid)
+        for name, (internal, dist) in row.items():
+            storage.set_trial_param(tid, name, internal, dist)
+        storage.set_trial_state_values(tid, TrialState.COMPLETE, [value + 0.1 * i])
+
+
+def f(lo=0.0, hi=1.0, **kw):
+    return FloatDistribution(lo, hi, **kw)
+
+
+def brute_force_groups(trials):
+    """Union-find reference implementation over FrozenTrial lists."""
+    parent: dict = {}
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    def union(a, b):
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[rb] = ra
+
+    seen = set()
+    for t in trials:
+        if t.state not in (TrialState.COMPLETE, TrialState.PRUNED):
+            continue
+        names = sorted(t.distributions)
+        for n in names:
+            parent.setdefault(n, n)
+            seen.add(n)
+        for a, b in zip(names, names[1:]):
+            union(a, b)
+    comps: dict = {}
+    for n in seen:
+        comps.setdefault(find(n), []).append(n)
+    return sorted(tuple(sorted(c)) for c in comps.values())
+
+
+# -- group decomposition ----------------------------------------------------------
+
+
+class TestGroupDecomposition:
+    def groups_of(self, study):
+        return [g.names for g in observed_groups(study.observations())]
+
+    def test_disjoint_groups(self):
+        s = hpo.create_study()
+        seed_trials(s, [
+            {"a": (0.1, f()), "b": (0.2, f())},
+            {"c": (0.3, f()), "d": (0.4, f())},
+            {"a": (0.5, f()), "b": (0.6, f())},
+        ])
+        assert self.groups_of(s) == [("a", "b"), ("c", "d")]
+
+    def test_chained_overlap_merges(self):
+        s = hpo.create_study()
+        seed_trials(s, [
+            {"a": (0.1, f()), "b": (0.2, f())},
+            {"b": (0.3, f()), "c": (0.4, f())},
+            {"c": (0.5, f()), "d": (0.6, f())},
+        ])
+        assert self.groups_of(s) == [("a", "b", "c", "d")]
+
+    def test_singleton_params(self):
+        s = hpo.create_study()
+        seed_trials(s, [{"a": (0.1, f())}, {"b": (0.2, f())}])
+        assert self.groups_of(s) == [("a",), ("b",)]
+
+    def test_all_joint(self):
+        s = hpo.create_study()
+        seed_trials(s, [
+            {"a": (0.1, f()), "b": (0.2, f()), "c": (0.3, f())},
+            {"a": (0.4, f()), "b": (0.5, f()), "c": (0.6, f())},
+        ])
+        assert self.groups_of(s) == [("a", "b", "c")]
+
+    def test_running_trials_do_not_group(self):
+        s = hpo.create_study()
+        seed_trials(s, [{"a": (0.1, f())}])
+        t = s.ask()
+        t.suggest_float("a", 0, 1)
+        t.suggest_float("zz", 0, 1)  # RUNNING co-occurrence must not count
+        assert self.groups_of(s) == [("a",)]
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5, 6, 7])
+    def test_randomized_against_union_find_reference(self, seed):
+        rng = np.random.RandomState(seed)
+        names = [f"p{i}" for i in range(rng.randint(2, 10))]
+        rows = []
+        for _ in range(rng.randint(1, 12)):
+            k = rng.randint(1, len(names) + 1)
+            subset = rng.choice(names, size=k, replace=False)
+            rows.append({n: (float(rng.uniform()), f()) for n in subset})
+        s = hpo.create_study()
+        seed_trials(s, rows)
+        got = [g.names for g in observed_groups(s.observations())]
+        assert got == brute_force_groups(s.trials)
+
+    def test_group_dists_are_latest(self):
+        s = hpo.create_study()
+        seed_trials(s, [
+            {"a": (0.1, f(0, 1)), "b": (0.2, f())},
+            {"a": (1.5, f(0, 2)), "b": (0.2, f())},  # bounds drifted
+        ])
+        (group,) = observed_groups(s.observations())
+        assert group.dists["a"].high == 2.0
+
+    def test_groups_memoized_per_store_version(self):
+        s = hpo.create_study()
+        seed_trials(s, [{"a": (0.1, f())}])
+        g1 = s.observed_param_groups()
+        assert s.observed_param_groups() is g1  # same store version -> cached
+        seed_trials(s, [{"b": (0.2, f())}])
+        assert len(s.observed_param_groups()) == 2
+
+
+# -- the ask(n) presample contract -------------------------------------------------
+
+
+class _CountingTPE(hpo.TPESampler):
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.joint_calls = []
+
+    def sample_joint(self, study, group, n, trial_ids=None):
+        self.joint_calls.append((group.names, n))
+        return super().sample_joint(study, group, n, trial_ids=trial_ids)
+
+
+class TestJointAsk:
+    def test_one_sample_joint_call_per_group(self):
+        sampler = _CountingTPE(seed=0, n_startup_trials=2, multivariate=True)
+        study = hpo.create_study(sampler=sampler)
+        seed_trials(study, [
+            {"a": (0.1, f()), "b": (0.2, f())},
+            {"c": (0.3, f()), "d": (0.4, f())},
+            {"a": (0.5, f()), "b": (0.6, f())},
+            {"c": (0.7, f()), "d": (0.8, f())},
+        ])
+        trials = study.ask(16)
+        assert len(trials) == 16
+        # exactly one joint call per group for the whole 16-trial wave
+        assert sorted(sampler.joint_calls) == [(("a", "b"), 16), (("c", "d"), 16)]
+        for t in trials:
+            assert 0 <= t.suggest_float("a", 0, 1) <= 1
+            assert 0 <= t.suggest_float("b", 0, 1) <= 1
+        assert sorted(sampler.joint_calls) == [(("a", "b"), 16), (("c", "d"), 16)]
+        study.tell_batch([(t, 1.0) for t in trials])
+
+    def test_scalar_ask_never_presamples(self):
+        sampler = _CountingTPE(seed=0, n_startup_trials=2, multivariate=True)
+        study = hpo.create_study(sampler=sampler)
+        seed_trials(study, [{"a": (0.1, f())}, {"a": (0.2, f())}])
+        t = study.ask()
+        t.suggest_float("a", 0, 1)
+        assert sampler.joint_calls == []
+
+    def test_multivariate_false_never_presamples(self):
+        sampler = hpo.TPESampler(seed=0, multivariate=False)
+        study = hpo.create_study(sampler=sampler)
+        seed_trials(study, [{"a": (0.1, f())}] * 12)
+        trials = study.ask(4)
+        assert all(t._joint is None for t in trials)
+
+    def test_joint_values_respect_bounds_and_types(self):
+        sampler = hpo.TPESampler(seed=3, n_startup_trials=4, multivariate=True)
+        study = hpo.create_study(sampler=sampler)
+        cat = CategoricalDistribution(["u", "v", "w"])
+        rows = []
+        rng = np.random.RandomState(0)
+        for _ in range(12):
+            rows.append({
+                "x": (float(rng.uniform(-2, 2)), f(-2, 2)),
+                "lr": (float(np.exp(rng.uniform(np.log(1e-4), 0))), f(1e-4, 1.0, log=True)),
+                "n": (float(rng.randint(1, 9)), IntDistribution(1, 8)),
+                "k": (float(rng.randint(3)), cat),
+            })
+        study.seeded = seed_trials(study, rows)
+        trials = study.ask(8)
+        for t in trials:
+            assert -2 <= t.suggest_float("x", -2, 2) <= 2
+            assert 1e-4 <= t.suggest_float("lr", 1e-4, 1.0, log=True) <= 1.0
+            assert t.suggest_int("n", 1, 8) in range(1, 9)
+            assert t.suggest_categorical("k", ["u", "v", "w"]) in ("u", "v", "w")
+        study.tell_batch([(t, 0.5) for t in trials])
+
+    def test_fixed_params_win_over_joint_block(self):
+        sampler = hpo.TPESampler(seed=1, n_startup_trials=2, multivariate=True)
+        study = hpo.create_study(sampler=sampler)
+        seed_trials(study, [{"a": (0.1, f())}, {"a": (0.2, f())}])
+        study.enqueue_trial({"a": 0.77})
+        study.optimize(lambda t: t.suggest_float("a", 0, 1), n_trials=2, ask_batch=2)
+        assert any(t.params.get("a") == 0.77 for t in study.trials)
+
+
+# -- divergence fallback (dynamic define-by-run branches) ---------------------------
+
+
+class TestJointFallback:
+    def test_unpredicted_param_logged_once_per_study(self, caplog):
+        sampler = hpo.TPESampler(seed=0, n_startup_trials=2, multivariate=True)
+        study = hpo.create_study(sampler=sampler)
+        seed_trials(study, [{"a": (0.3, f())}, {"a": (0.4, f())}, {"a": (0.5, f())}])
+        with caplog.at_level(logging.INFO, logger="repro.core.study"):
+            for _ in range(2):  # two waves, every trial misses on "fresh"
+                wave = study.ask(4)
+                results = []
+                for t in wave:
+                    v = t.suggest_float("a", 0, 1) + t.suggest_float("fresh", 0, 1)
+                    results.append((t, v))
+                study.tell_batch(results)
+        misses = [r for r in caplog.records if "joint block missed" in r.message]
+        assert len(misses) == 1  # once per study, not per trial or per wave
+        for t in study.trials:
+            if "fresh" in t.params:
+                assert 0 <= t.params["fresh"] <= 1
+
+    def test_branching_objective_conditional_suggest_int(self, caplog):
+        """Define-by-run branch: a conditional suggest_int inside an
+        ``if suggest_categorical(...)`` that history never observed."""
+        sampler = hpo.TPESampler(seed=5, n_startup_trials=2, multivariate=True)
+        study = hpo.create_study(sampler=sampler)
+        cat = CategoricalDistribution([0, 1])
+        # history only ever saw the k=0 branch
+        seed_trials(study, [
+            {"k": (0.0, cat), "lo_n": (float(i % 8 + 1), IntDistribution(1, 8))}
+            for i in range(6)
+        ])
+
+        def objective(trial):
+            if trial.suggest_categorical("k", [0, 1]) == 0:
+                return trial.suggest_int("lo_n", 1, 8) * 0.1
+            return trial.suggest_int("hi_n", 1, 8) * 0.2  # unpredicted branch
+
+        with caplog.at_level(logging.INFO, logger="repro.core.study"):
+            study.optimize(objective, n_trials=24, ask_batch=8)
+        misses = [r for r in caplog.records if "joint block missed" in r.message]
+        assert len(misses) <= 1
+        hi = [t for t in study.trials if "hi_n" in t.params]
+        assert hi, "seed must exercise the unobserved branch"
+        assert len(misses) == 1
+        for t in hi:
+            assert t.params["hi_n"] in range(1, 9)
+            assert t.state == TrialState.COMPLETE
+
+    def test_drifted_bounds_fall_back_to_scalar(self, caplog):
+        sampler = hpo.TPESampler(seed=2, n_startup_trials=2, multivariate=True)
+        study = hpo.create_study(sampler=sampler)
+        seed_trials(study, [{"a": (5.0, f(0, 10))}, {"a": (6.0, f(0, 10))}])
+        with caplog.at_level(logging.INFO, logger="repro.core.study"):
+            wave = study.ask(4)
+            for t in wave:
+                v = t.suggest_float("a", 100, 101)  # domain moved entirely
+                assert 100 <= v <= 101
+        # the block value (model space ~[0, 10]) must be REJECTED, not
+        # clipped into the new domain: exactly one miss log proves it
+        assert sum("bounds drifted" in r.message for r in caplog.records) == 1
+        study.tell_batch([(t, 1.0) for t in wave])
+
+    def test_log_flag_change_falls_back_to_scalar(self, caplog):
+        """Same type, different coordinate system: a log=True history must
+        not feed ln-space block values into a linear runtime domain."""
+        sampler = hpo.TPESampler(seed=2, n_startup_trials=2, multivariate=True)
+        study = hpo.create_study(sampler=sampler)
+        log_dist = f(1e-6, 1.0, log=True)
+        seed_trials(study, [
+            {"lr": (1e-3, log_dist)}, {"lr": (1e-4, log_dist)}, {"lr": (1e-2, log_dist)},
+        ])
+        with caplog.at_level(logging.INFO, logger="repro.core.study"):
+            wave = study.ask(4)
+            values = [t.suggest_float("lr", 1e-6, 1.0) for t in wave]  # log dropped
+        assert sum("log flag changed" in r.message for r in caplog.records) == 1
+        assert all(1e-6 <= v <= 1.0 for v in values)
+        study.tell_batch([(t, 1.0) for t in wave])
+
+    def test_changed_type_falls_back_to_scalar(self):
+        sampler = hpo.TPESampler(seed=2, n_startup_trials=2, multivariate=True)
+        study = hpo.create_study(sampler=sampler)
+        seed_trials(study, [{"a": (0.2, f())}, {"a": (0.4, f())}])
+        wave = study.ask(3)
+        for t in wave:
+            assert t.suggest_categorical("a2", ["p", "q"]) in ("p", "q")
+            assert 0 <= t.suggest_float("a", 0, 1) <= 1
+        study.tell_batch([(t, 1.0) for t in wave])
+
+
+# -- native joint blocks of the other samplers --------------------------------------
+
+
+class TestSamplerBlocks:
+    def _group(self, study):
+        (group,) = observed_groups(study.observations())
+        return group
+
+    def test_random_block_shape_and_bounds(self):
+        sampler = hpo.RandomSampler(seed=0)
+        study = hpo.create_study(sampler=sampler)
+        seed_trials(study, [{
+            "x": (0.5, f(-1, 1)),
+            "lr": (0.01, f(1e-4, 1.0, log=True)),
+            "k": (1.0, CategoricalDistribution(["a", "b", "c"])),
+        }])
+        group = self._group(study)
+        block = sampler.sample_joint(study, group, 7)
+        assert block.shape == (7, 3)
+        names = list(group.names)
+        lr_col = block[:, names.index("lr")]
+        assert np.all(lr_col <= 0.0)  # model space: log(lr) <= log(1.0)
+        k_col = block[:, names.index("k")]
+        assert set(np.unique(k_col)) <= {0.0, 1.0, 2.0}
+
+    def test_random_ask_wave_end_to_end(self):
+        study = hpo.create_study(sampler=hpo.RandomSampler(seed=4))
+
+        def objective(t):
+            return t.suggest_float("x", -1, 1) ** 2 + t.suggest_int("n", 1, 4)
+
+        study.optimize(objective, n_trials=4)  # history -> one group
+        wave = study.ask(6)
+        study.tell_batch([(t, objective(t)) for t in wave])
+        assert sum(t.state == TrialState.COMPLETE for t in study.trials) == 10
+
+    def test_grid_block_claims_distinct_cells(self):
+        grid = {"a": [1, 2, 3], "b": [10.0, 20.0]}
+        sampler = hpo.GridSampler(grid, seed=0)
+        study = hpo.create_study(sampler=sampler)
+
+        def objective(t):
+            return t.suggest_int("a", 1, 3) * t.suggest_float("b", 10.0, 20.0)
+
+        study.optimize(objective, n_trials=2)  # seed co-occurrence
+        wave = study.ask(4)
+        study.tell_batch([(t, objective(t)) for t in wave])
+        gids = [
+            t.system_attrs["grid_sampler:grid_id"]
+            for t in study.trials if t.state == TrialState.COMPLETE
+        ]
+        assert len(gids) == 6 and len(set(gids)) == 6  # grid fully covered, no dup
+
+    def test_cmaes_block_covers_numeric_space(self):
+        sampler = hpo.CmaEsSampler(warmup_trials=5, seed=7)
+        study = hpo.create_study(sampler=sampler)
+
+        def objective(t):
+            return (t.suggest_float("x", -2, 2) - 1) ** 2 + t.suggest_float("y", -2, 2) ** 2
+
+        study.optimize(objective, n_trials=8)
+        group = self._group(study)
+        block = sampler.sample_joint(study, group, 5)
+        assert block is not None and block.shape == (5, 2)
+        assert np.isfinite(block).all()
+        assert np.all((block >= -2) & (block <= 2))
+
+    def test_gp_block_takes_distinct_top_ei_rows(self):
+        sampler = hpo.GPSampler(seed=3, n_startup_trials=4, n_candidates=64)
+        study = hpo.create_study(sampler=sampler)
+
+        def objective(t):
+            return t.suggest_float("x", 0, 1) ** 2 + t.suggest_float("y", 0, 1)
+
+        study.optimize(objective, n_trials=6)
+        group = self._group(study)
+        block = sampler.sample_joint(study, group, 4)
+        assert block is not None and block.shape == (4, 2)
+        assert len({tuple(row) for row in np.round(block, 12)}) == 4
+
+    def test_grid_enqueued_trials_never_claim_cells(self):
+        """An enqueued fixed-params trial must not consume a grid cell at
+        ask(n) time — its fixed params win over any block, so a claimed cell
+        would be marked taken yet never evaluated."""
+        grid = {"a": [1, 2], "b": [10.0, 20.0]}
+        sampler = hpo.GridSampler(grid, seed=0)
+        study = hpo.create_study(sampler=sampler)
+
+        def objective(t):
+            return t.suggest_int("a", 1, 2) * t.suggest_float("b", 10.0, 20.0)
+
+        study.optimize(objective, n_trials=1)  # seed co-occurrence
+        study.enqueue_trial({"a": 2, "b": 20.0})
+        study.optimize(objective, n_trials=4, ask_batch=4)
+        enqueued = [t for t in study.trials if t.system_attrs.get("fixed_params")]
+        assert len(enqueued) == 1
+        assert "grid_sampler:grid_id" not in enqueued[0].system_attrs
+        # the sweep still covers all 4 distinct cells via non-enqueued trials
+        gids = {
+            t.system_attrs.get("grid_sampler:grid_id")
+            for t in study.trials if not t.system_attrs.get("fixed_params")
+        }
+        assert len(gids - {None}) == 4
+
+    def test_cmaes_declines_during_warmup(self):
+        sampler = hpo.CmaEsSampler(warmup_trials=50, seed=7)
+        study = hpo.create_study(sampler=sampler)
+        seed_trials(study, [{"x": (0.1, f()), "y": (0.2, f())}] * 3)
+        group = self._group(study)
+        assert sampler.sample_joint(study, group, 4) is None
+
+
+# -- multivariate TPE quality + smoke ----------------------------------------------
+
+
+def correlated_objective(trial):
+    x = trial.suggest_float("x", -5, 5)
+    y = trial.suggest_float("y", -5, 5)
+    # narrow valley along x = y: structure univariate marginals cannot see
+    return (x - y) ** 2 + 0.1 * (x + y - 2) ** 2
+
+
+class TestMultivariateQuality:
+    def _best(self, multivariate, seed, n=200, batch=16):
+        study = hpo.create_study(
+            sampler=hpo.TPESampler(seed=seed, n_startup_trials=10, multivariate=multivariate)
+        )
+        done = 0
+        while done < n:
+            k = min(batch, n - done)
+            wave = study.ask(k)
+            study.tell_batch([(t, correlated_objective(t)) for t in wave])
+            done += k
+        return study.best_value
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_multivariate_beats_univariate_on_correlated_objective(self, seed):
+        assert self._best(True, seed) < self._best(False, seed)
+
+    def test_multivariate_smoke_50_trials_inmemory(self):
+        """Tier-1 smoke: a 50-trial multivariate study end-to-end on the
+        in-memory backend — batched waves, pruning, mixed param types."""
+        study = hpo.create_study(
+            sampler=hpo.TPESampler(seed=0, n_startup_trials=8, multivariate=True),
+            pruner=hpo.MedianPruner(n_startup_trials=4),
+        )
+
+        def objective(trial):
+            x = trial.suggest_float("x", -3, 3)
+            lr = trial.suggest_float("lr", 1e-4, 1.0, log=True)
+            n = trial.suggest_int("n", 1, 16)
+            k = trial.suggest_categorical("k", ["a", "b"])
+            loss = x * x + abs(np.log10(lr) + 2) + 0.01 * n + (0.5 if k == "b" else 0.0)
+            for step in range(3):
+                trial.report(loss * (3 - step), step)
+                if trial.should_prune():
+                    raise hpo.TrialPruned()
+            return loss
+
+        study.optimize(objective, n_trials=50, ask_batch=8)
+        states = [t.state for t in study.trials]
+        assert len(states) == 50
+        assert all(s in (TrialState.COMPLETE, TrialState.PRUNED) for s in states)
+        assert study.best_value < 10.0
+        assert any(g.names == ("k", "lr", "n", "x") for g in study.observed_param_groups())
+
+    def test_jit_scoring_joint_samples_in_bounds(self):
+        jax = pytest.importorskip("jax")  # noqa: F841
+        sampler = hpo.TPESampler(
+            seed=0, n_startup_trials=6, multivariate=True, jit_scoring=True
+        )
+        study = hpo.create_study(sampler=sampler)
+
+        def objective(trial):
+            return trial.suggest_float("x", -2, 2) ** 2 + trial.suggest_float("y", -2, 2) ** 2
+
+        study.optimize(objective, n_trials=8)
+        wave = study.ask(8)
+        results = []
+        for t in wave:
+            x, y = t.suggest_float("x", -2, 2), t.suggest_float("y", -2, 2)
+            assert -2 <= x <= 2 and -2 <= y <= 2
+            results.append((t, x * x + y * y))
+        study.tell_batch(results)
+
+
+# -- scheduler backfill waves ------------------------------------------------------
+
+
+class TestSchedulerBackfill:
+    def test_backfill_batch_completes_all_trials(self):
+        from repro.tune.scheduler import TrialSliceScheduler
+
+        study = hpo.create_study(
+            sampler=hpo.TPESampler(seed=0, n_startup_trials=4, multivariate=True)
+        )
+
+        def run_trial(trial, mesh):
+            return trial.suggest_float("x", 0, 1) + trial.suggest_float("y", 0, 1)
+
+        sched = TrialSliceScheduler(study, meshes=[0, 1], run_trial=run_trial,
+                                    backfill_batch=3)
+        sched.run(n_trials=11)
+        done = [t for t in study.trials if t.state == TrialState.COMPLETE]
+        assert len(done) == 11
+        # surplus prefetched claims were released back to the queue, not leaked
+        running = [t for t in study.trials if t.state == TrialState.RUNNING]
+        assert not running

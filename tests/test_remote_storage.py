@@ -463,3 +463,97 @@ class TestFusedReportPrune:
         assert counter["n"] == 1
         # the value still landed
         assert remote.get_trial(trial._trial_id).intermediate_values == {1: 1.0}
+
+
+class TestPrunerSpecCache:
+    """The fused report's pruner spec is interned per (connection, study):
+    full spec once (__spec_def__), then a short __spec_ref__ — shaving the
+    spec bytes off every subsequent report frame."""
+
+    def _record_frames(self, remote):
+        frames = []
+        orig = remote._roundtrip
+
+        def recording(payload):
+            frames.append(payload)
+            return orig(payload)
+
+        remote._roundtrip = recording
+        return frames
+
+    def _fused_study(self, server, name):
+        remote = RemoteStorage(server.url)
+        study = hpo.create_study(
+            study_name=name, storage=remote,
+            sampler=hpo.RandomSampler(seed=0),
+            pruner=hpo.MedianPruner(n_startup_trials=1),
+        )
+        for v in (1.0, 2.0):
+            t = study.ask()
+            t.report(v, 1)
+            study.tell(t, v)
+        return remote, study
+
+    def test_second_report_frame_is_smaller(self, server):
+        remote, study = self._fused_study(server, "bytes")
+        trial = study.ask()
+        remote.close()  # fresh connection: the seeding reports interned already
+        frames = self._record_frames(remote)
+        trial.report(5.0, 1)
+        trial.report(5.0, 2)
+        assert len(frames) == 2
+        first, second = (len(f) for f in frames)
+        # the ref frame drops the whole spec payload: it must be strictly
+        # smaller, by at least the size of the serialized MedianPruner spec
+        assert second < first - 20, (first, second)
+        assert b"__spec_def__" in frames[0] and b"__spec_ref__" not in frames[0]
+        assert b"__spec_ref__" in frames[1] and b"median" not in frames[1]
+
+    def test_spec_sent_once_per_connection_and_study(self, server):
+        remote, study = self._fused_study(server, "once")
+        trials = [study.ask() for _ in range(3)]
+        remote.close()  # fresh connection so the def frame is observable
+        frames = self._record_frames(remote)
+        for step in (1, 2, 3):
+            for t in trials:
+                t.report(float(step), step)
+        defs = [f for f in frames if b"__spec_def__" in f]
+        refs = [f for f in frames if b"__spec_ref__" in f]
+        assert len(defs) == 1 and len(refs) == len(frames) - 1
+
+    def test_decisions_identical_through_spec_cache(self, server):
+        remote, study = self._fused_study(server, "same")
+        bad = study.ask()
+        bad.report(100.0, 1)   # def frame
+        assert bad.should_prune()
+        worse = study.ask()
+        worse.report(200.0, 1)  # ref frame: same pruner, same peers
+        assert worse.should_prune()
+        good = study.ask()
+        good.report(-1.0, 1)    # ref frame, best value -> promoted
+        assert not good.should_prune()
+
+    def test_reconnect_resends_spec_def(self, server):
+        remote, study = self._fused_study(server, "reconnect")
+        trial = study.ask()
+        trial.report(1.5, 1)  # populate the per-connection cache
+        remote.close()        # drop socket: both caches die with it
+        frames = self._record_frames(remote)
+        trial.report(1.5, 2)
+        assert any(b"__spec_def__" in f for f in frames)
+        assert remote.get_trial(trial._trial_id).intermediate_values[2] == 1.5
+
+    def test_stale_ref_is_resent_as_def(self, server):
+        """A ref whose server-side cache entry is gone (torn between encode
+        and send) is retried once with the full spec."""
+        remote, study = self._fused_study(server, "stale")
+        trial = study.ask()
+        trial.report(1.0, 1)
+        # poison: pretend the spec is cached although this is a new socket
+        remote.close()
+        remote._local.spec_ids = {
+            (study._study_id, '{"n_min_trials": 1, "n_startup_trials": 1, '
+             '"n_warmup_steps": 0, "name": "median"}'): 7
+        }
+        trial.report(2.0, 2)  # ref -> server miss -> auto def resend
+        assert remote.get_trial(trial._trial_id).intermediate_values[2] == 2.0

@@ -147,3 +147,29 @@ def test_tpe_jit_scoring_samples_in_bounds():
     for t in study.trials:
         assert -3 <= t.params["x"] <= 3
         assert 1e-4 <= t.params["lr"] <= 1.0
+
+
+def test_tpe_multivariate_false_matches_legacy():
+    """The univariate path is frozen behind multivariate=False: explicit
+    flag, bit-identical to the pre-refactor scalar sampler."""
+    new = trace(
+        hpo.TPESampler(seed=13, n_startup_trials=8, multivariate=False),
+        mixed_objective, 40,
+    )
+    old = trace(legacy.LegacyTPESampler(seed=13, n_startup_trials=8), mixed_objective, 40)
+    assert new == old
+
+
+def test_tpe_multivariate_false_batched_ask_stream_unchanged():
+    """With multivariate=False a batched ask(n) only batches trial creation:
+    no joint presample runs, so the sampling RNG stream — and therefore every
+    suggested value — is identical to the scalar one-ask-at-a-time loop."""
+
+    def run(ask_batch):
+        study = hpo.create_study(
+            sampler=hpo.TPESampler(seed=3, n_startup_trials=8, multivariate=False)
+        )
+        study.optimize(mixed_objective, n_trials=30, ask_batch=ask_batch)
+        return [(t.params, t.values, t.state) for t in study.trials]
+
+    assert run(1) == run(5)
