@@ -21,7 +21,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    sections = ["samplers", "pruning", "distributed", "storage", "kernels", "roofline"]
+    sections = ["samplers", "pruning", "moo", "distributed", "storage", "kernels", "roofline"]
     if args.only:
         sections = [s for s in sections if s == args.only]
 
@@ -89,15 +89,44 @@ def main() -> None:
                  f"speedup={r['trials_per_sec']/base:.2f}x;best={r['best']:.4f}")
             )
 
+    if "moo" in sections:
+        from . import moo as moo_bench
+
+        print("\n=== multi-objective engine (dominance sort + ZDT quality) ===", flush=True)
+        dom = moo_bench.dominance_speedup()
+        csv_rows.append(
+            ("moo_dominance_sort", f"{dom['engine_s']*1e6:.0f}",
+             f"speedup={dom['speedup']:.1f}x;front={dom['front_size']}")
+        )
+        quality = moo_bench.quality_curves(
+            n_trials=200 if args.full else 60, cases=("zdt1",)
+        )
+        for name, per_seed in quality["cases"]["zdt1"].items():
+            if not isinstance(per_seed, list):
+                continue
+            finals = [r["final"] for r in per_seed]
+            csv_rows.append(
+                (f"moo_zdt1_{name}", "0",
+                 f"final_hv_median={sorted(finals)[len(finals)//2]:.4f}")
+            )
+
     if "storage" in sections:
         from . import storage_bench
 
         print("\n=== storage backends (Table 2 'lightweight' made quantitative) ===", flush=True)
         rows = storage_bench.run()
         for name, r in rows.items():
+            if "write_per_sec" not in r:  # ask_latency / moo_worker_storm rows
+                continue
             csv_rows.append(
                 (f"storage_{name}", f"{1e6/max(r['write_per_sec'],1e-9):.1f}",
                  f"create={r['create_per_sec']:.0f}/s;read={r['full_read_per_sec']:.1f}/s")
+            )
+        storm = rows.get("moo_worker_storm")
+        if storm:
+            csv_rows.append(
+                ("storage_moo_storm", f"{storm['tell_batch_mean_ms']*1e3:.0f}",
+                 f"workers={storm['n_workers']};trials_per_sec={storm['trials_per_sec']:.0f}")
             )
 
     if "kernels" in sections:

@@ -1,17 +1,20 @@
 """Storage backend throughput (beyond-paper; Table-2 'lightweight' claim made
 quantitative): ops/sec per backend for the three dominant operations, plus a
 remote-vs-sqlite-vs-cached comparison of the ``get_all_trials``-dominated
-``ask`` path (the per-suggest full-history read every sampler performs)."""
+``ask`` path (the per-suggest full-history read every sampler performs), plus
+the 100+-concurrent-worker multi-objective storm pinning the ``tell_batch``
+vector-values frame cost on the ``StorageServer`` (ROADMAP PR-1 follow-up)."""
 
 from __future__ import annotations
 
+import threading
 import time
 
 import repro.core as hpo
 from repro.core.distributions import FloatDistribution
 from repro.core.frozen import StudyDirection, TrialState
 
-__all__ = ["run", "ask_latency"]
+__all__ = ["run", "ask_latency", "moo_worker_storm"]
 
 
 def _bench(storage, n_trials: int = 200, study_name: str = "bench"):
@@ -90,6 +93,95 @@ def ask_latency(n_trials: int = 1000, n_asks: int = 50, tmpdir: str = "/tmp/repr
     return row
 
 
+def moo_worker_storm(
+    n_workers: int = 100,
+    waves_per_worker: int = 3,
+    wave: int = 4,
+    n_objectives: int = 3,
+    verbose: bool = True,
+) -> dict:
+    """100+ concurrent workers hammering one :class:`StorageServer` with the
+    batched multi-objective lifecycle: each worker loops ``ask(wave)`` →
+    ``tell_batch`` with **vector** final values, every worker on its own
+    connection (thread-per-connection on the server, matching a real fleet).
+
+    Measures aggregate trial throughput and the mean ``tell_batch`` frame
+    latency — the cost of shipping ``wave`` state transitions each carrying
+    an ``n_objectives``-wide values vector in one frame — to pin whether the
+    vector payload moves the server off its single-objective numbers.
+    """
+    server = hpo.StorageServer(hpo.InMemoryStorage()).start()
+    try:
+        seed = hpo.RemoteStorage(server.url)
+        seed.create_new_study([StudyDirection.MINIMIZE] * n_objectives, "storm")
+        tell_ns: list[int] = []
+        tell_lock = threading.Lock()
+        errors: list[BaseException] = []
+        start_barrier = threading.Barrier(n_workers)
+
+        def worker(widx: int) -> None:
+            try:
+                study = hpo.Study("storm", hpo.RemoteStorage(server.url))
+                start_barrier.wait(timeout=60)
+                for _ in range(waves_per_worker):
+                    trials = study.ask(wave)
+                    results = [
+                        (t, [float((widx + j) % 7)] * n_objectives)
+                        for j, t in enumerate(trials)
+                    ]
+                    t0 = time.perf_counter_ns()
+                    study.tell_batch(results)
+                    dt = time.perf_counter_ns() - t0
+                    with tell_lock:
+                        tell_ns.append(dt)
+            except BaseException as e:  # pragma: no cover - surfaced below
+                errors.append(e)
+                # a worker dying before its barrier wait would strand the
+                # other n-1 parties forever: break the barrier so they fail
+                # fast (BrokenBarrierError) instead of hanging the bench job
+                start_barrier.abort()
+
+        threads = [
+            threading.Thread(target=worker, args=(i,), daemon=True)
+            for i in range(n_workers)
+        ]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        if errors:
+            raise errors[0]
+        n_total = n_workers * waves_per_worker * wave
+        done = seed.get_n_trials(
+            seed.get_study_id_from_name("storm"), states=(TrialState.COMPLETE,)
+        )
+        assert done == n_total, (done, n_total)
+        tell_ms = sorted(ns / 1e6 for ns in tell_ns)
+        row = {
+            "n_workers": n_workers,
+            "n_objectives": n_objectives,
+            "wave": wave,
+            "trials_total": n_total,
+            "wall_s": wall,
+            "trials_per_sec": n_total / max(wall, 1e-9),
+            "tell_batch_mean_ms": sum(tell_ms) / len(tell_ms),
+            "tell_batch_p95_ms": tell_ms[int(0.95 * (len(tell_ms) - 1))],
+        }
+        if verbose:
+            print(
+                f"[storm] {n_workers} workers x {n_objectives} objectives: "
+                f"{row['trials_per_sec']:8.0f} trials/s, tell_batch "
+                f"mean={row['tell_batch_mean_ms']:6.2f}ms "
+                f"p95={row['tell_batch_p95_ms']:6.2f}ms",
+                flush=True,
+            )
+        return row
+    finally:
+        server.stop()
+
+
 def run(tmpdir: str = "/tmp/repro_storage_bench", n_trials: int = 200, verbose: bool = True):
     import os
     import shutil
@@ -121,4 +213,5 @@ def run(tmpdir: str = "/tmp/repro_storage_bench", n_trials: int = 200, verbose: 
         server.stop()
 
     rows["ask_latency"] = ask_latency(verbose=verbose)
+    rows["moo_worker_storm"] = moo_worker_storm(verbose=verbose)
     return rows

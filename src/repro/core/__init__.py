@@ -29,12 +29,14 @@ from .distributions import (
 from .exceptions import DuplicatedStudyError, StorageInternalError, TrialPruned
 from .frozen import FrozenTrial, StudyDirection, TrialState
 from .importance import param_importances, spearman_importances
+from . import moo
 from .records import ObservationStore
 from .pruners import (
     BasePruner,
     HyperbandPruner,
     MedianPruner,
     NopPruner,
+    ParetoPruner,
     PatientPruner,
     PercentilePruner,
     SuccessiveHalvingPruner,
@@ -47,6 +49,7 @@ from .samplers import (
     CmaEsSampler,
     GPSampler,
     GridSampler,
+    NSGAIISampler,
     RandomSampler,
     TPESampler,
     make_sampler,
@@ -73,10 +76,13 @@ __all__ = [
     "BaseDistribution", "FloatDistribution", "IntDistribution", "CategoricalDistribution",
     # samplers
     "BaseSampler", "RandomSampler", "GridSampler", "TPESampler", "CmaEsSampler",
-    "CMA", "GPSampler", "make_sampler",
+    "CMA", "GPSampler", "NSGAIISampler", "make_sampler",
     # pruners
     "BasePruner", "NopPruner", "SuccessiveHalvingPruner", "MedianPruner",
-    "PercentilePruner", "HyperbandPruner", "ThresholdPruner", "PatientPruner", "make_pruner",
+    "PercentilePruner", "HyperbandPruner", "ThresholdPruner", "PatientPruner",
+    "ParetoPruner", "make_pruner",
+    # multi-objective engine
+    "moo",
     # storage
     "BaseStorage", "InMemoryStorage", "SQLiteStorage", "JournalStorage",
     "RemoteStorage", "CachedStorage", "StorageServer", "get_storage",

@@ -72,9 +72,9 @@ def _history_svg(study: "Study") -> str:
     pts = "".join(
         f'<circle cx="{x:.1f}" cy="{y:.1f}" r="2.5" fill="#3b6fb6"/>' for x, y in zip(sx, sy)
     )
-    # best-so-far line
+    # best-so-far line (first objective on multi-objective studies)
     best, bests = None, []
-    minimize = study.direction == StudyDirection.MINIMIZE
+    minimize = study.directions[0] == StudyDirection.MINIMIZE
     for y in ys:
         best = y if best is None else (min(best, y) if minimize else max(best, y))
         bests.append(best)
@@ -153,9 +153,9 @@ def _parallel_svg(study: "Study") -> str:
             pts.append((xs[i], y))
         y = _scale([v], vlo, vhi, H - 25, 15)[0]
         pts.append((xs[-1], y))
-        # color by objective: blue (good) to red (bad)
+        # color by objective (first one on MO studies): blue (good) to red (bad)
         q = 0.0 if vhi <= vlo else (v - vlo) / (vhi - vlo)
-        if study.direction == StudyDirection.MAXIMIZE:
+        if study.directions[0] == StudyDirection.MAXIMIZE:
             q = 1 - q
         color = f"rgb({int(60+180*q)},{int(110-60*q)},{int(200-160*q)})"
         body.append(_poly(pts, color, 1.0, 0.55))
@@ -196,21 +196,60 @@ def _table(study: "Study", limit: int = 100) -> str:
     )
 
 
+def _pareto_svg(study: "Study") -> str:
+    """Objective-space scatter for 2-objective studies: completed trials in
+    grey, the engine's Pareto front (``Study.pareto_front``) highlighted."""
+    values, numbers = study.pareto_front()
+    trials = [
+        t for t in study.get_trials(deepcopy=False, states=(TrialState.COMPLETE,))
+        if t.values and len(t.values) == 2 and all(math.isfinite(v) for v in t.values)
+    ]
+    if not trials:
+        return _svg('<text x="20" y="40">no completed trials</text>')
+    xs = [t.values[0] for t in trials]
+    ys = [t.values[1] for t in trials]
+    sx = _scale(xs, min(xs), max(xs), PAD, W - 10)
+    sy = _scale(ys, min(ys), max(ys), H - PAD, 10)
+    front = set(numbers.tolist())
+    pts = "".join(
+        f'<circle cx="{x:.1f}" cy="{y:.1f}" r="{3.5 if t.number in front else 2.0}" '
+        f'fill="{"#c0392b" if t.number in front else "#b8c4d0"}"/>'
+        for t, x, y in zip(trials, sx, sy)
+    )
+    labels = (
+        f'<text x="{PAD}" y="{H-10}" font-size="11">objective 0</text>'
+        f'<text x="5" y="20" font-size="11">objective 1</text>'
+        f'<text x="{W-180}" y="20" font-size="11" fill="#c0392b">'
+        f"Pareto front ({len(front)} trials)</text>"
+    )
+    return _svg(_axis_frame() + pts + labels)
+
+
 def render_dashboard(study: "Study") -> str:
     n_by_state = {}
     for t in study.get_trials(deepcopy=False):
         n_by_state[t.state.name] = n_by_state.get(t.state.name, 0) + 1
-    try:
-        best = f"{study.best_value:.6g} (trial {study.best_trial.number})"
-    except ValueError:
-        best = "n/a"
+    directions = study.directions
+    if len(directions) == 1:
+        try:
+            best = f"{study.best_value:.6g} (trial {study.best_trial.number})"
+        except ValueError:
+            best = "n/a"
+    else:
+        best = f"{len(study.pareto_front()[1])} Pareto-optimal trials"
     summary = ", ".join(f"{k}: {v}" for k, v in sorted(n_by_state.items()))
+    dir_str = ", ".join(d.name.lower() for d in directions)
+    pareto_section = (
+        f"<h2>Pareto front (objective space)</h2>{_pareto_svg(study)}"
+        if len(directions) == 2 else ""
+    )
     return f"""<!doctype html>
 <html><head><meta charset="utf-8"><title>{html.escape(study.study_name)}</title>
 <style>body{{font-family:sans-serif;margin:20px}} h2{{margin-top:28px}}</style></head>
 <body>
 <h1>Study: {html.escape(study.study_name)}</h1>
-<p>direction: {study.direction.name.lower()} &middot; trials: {summary} &middot; best: {best}</p>
+<p>direction: {dir_str} &middot; trials: {summary} &middot; best: {best}</p>
+{pareto_section}
 <h2>Optimization history</h2>{_history_svg(study)}
 <h2>Learning curves (intermediate values)</h2>{_curves_svg(study)}
 <h2>Parallel coordinates</h2>{_parallel_svg(study)}

@@ -1,0 +1,404 @@
+"""Multi-objective engine — columnar Pareto/dominance primitives.
+
+Everything multi-objective in the stack funnels through this module:
+``Study.best_trials`` / ``Study.pareto_front``, the NSGA-II sampler's
+rank+crowding selection, and MOTPE's nondomination split all operate on the
+observation store's ``(n_trials, n_objectives)`` values matrix with the
+vectorized primitives below, instead of the historical pure-Python pairwise
+dominance loop (O(n² · m) interpreter work per call).
+
+Conventions
+-----------
+* All functions take **loss-oriented** values: every objective is minimized.
+  Callers convert maximize objectives by sign (see :func:`loss_matrix`).
+* Rows containing NaN follow IEEE comparison semantics: a NaN coordinate is
+  neither better nor worse than anything, so it simply contributes no
+  evidence either way — exactly what the frozen pairwise loop in ``Study``
+  did (its ``dominates`` is ``not any(a > b) and any(a < b)``, and NaN
+  comparisons are all False).  Callers that want NaN rows excluded entirely
+  mask them out first.
+
+Dominance as a sign-matrix reduction
+------------------------------------
+``i`` dominates ``j`` iff ``not any(V[i] > V[j])`` and ``any(V[i] < V[j])``
+(for NaN-free rows this is the familiar ``all(<=) and any(<)``).
+:func:`dominance_matrix` evaluates both reductions for **all** (i, j) pairs
+in one broadcasted ``(n, n, m)`` comparison — the multi-objective analogue of
+the TPE scorer's one-matrix-op design — with an optional jax path (same
+lazy-jit + trace-count policy as the TPE gemm scorer) for the reduction.
+Front ranks then fall out of iterated masking over the boolean matrix: peel
+the non-dominated rows, drop their domination edges, repeat.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Sequence
+
+import numpy as np
+
+if TYPE_CHECKING:
+    from .frozen import StudyDirection
+
+__all__ = [
+    "loss_matrix",
+    "dominance_matrix",
+    "nondomination_ranks",
+    "pareto_front_mask",
+    "crowding_distance",
+    "hypervolume",
+    "hypervolume_contributions",
+    "solve_hssp",
+]
+
+#: rank assigned to rows excluded from the sort (masked out by the caller)
+EXCLUDED = -1
+
+_DOM_CHUNK = 256  # rows per broadcasted block: caps the (chunk, n, m) temporary
+
+
+def loss_matrix(values: np.ndarray, directions: "Sequence[StudyDirection | int]") -> np.ndarray:
+    """Orient a raw ``(n, m)`` values matrix so every column is minimized:
+    maximize columns are sign-flipped.  Returns a fresh array."""
+    V = np.array(values, dtype=float, copy=True)
+    if V.ndim != 2 or V.shape[1] != len(directions):
+        raise ValueError(
+            f"values matrix shape {V.shape} does not match {len(directions)} directions"
+        )
+    for j, d in enumerate(directions):
+        if int(d) == 1:  # StudyDirection.MAXIMIZE
+            V[:, j] = -V[:, j]
+    return V
+
+
+# -- dominance ------------------------------------------------------------------
+
+_jax_dominance = None
+#: XLA traces taken by the jax dominance kernel (tests pin it bounded)
+_jax_trace_count = 0
+
+
+def _get_jax_dominance():
+    """Jitted dominance reduction, built lazily — mirrors the TPE scorer's
+    policy: inputs arrive padded to power-of-two row counts so the set of
+    shapes XLA ever sees stays logarithmic in the trial count."""
+    global _jax_dominance
+    if _jax_dominance is None:
+        import jax
+        import jax.numpy as jnp
+
+        def dom(V):
+            global _jax_trace_count
+            _jax_trace_count += 1  # body runs once per trace, not per call
+            # not-any(>) rather than all(<=): identical on NaN-free rows,
+            # and matches the pairwise reference's NaN semantics otherwise
+            no_worse = ~jnp.any(V[:, None, :] > V[None, :, :], axis=2)
+            better = jnp.any(V[:, None, :] < V[None, :, :], axis=2)
+            return no_worse & better
+
+        _jax_dominance = jax.jit(dom)
+    return _jax_dominance
+
+
+def _pad_pow2_len(n: int) -> int:
+    size = 8
+    while size < n:
+        size *= 2
+    return size
+
+
+def dominance_matrix(V: np.ndarray, jit: bool = False) -> np.ndarray:
+    """Boolean ``(n, n)`` matrix with ``out[i, j]`` True iff row ``i``
+    dominates row ``j`` (loss orientation).  The diagonal is always False
+    (a row never strictly improves on itself).
+
+    The numpy path evaluates the two sign-matrix reductions in row chunks so
+    the broadcasted ``(chunk, n, m)`` temporaries stay cache-sized; the jax
+    path (``jit=True``) runs the whole reduction as one jitted kernel with
+    power-of-two padding (padding rows are +inf: they dominate nothing and
+    are sliced off before return).
+    """
+    V = np.asarray(V, dtype=float)
+    n = len(V)
+    if n == 0:
+        return np.zeros((0, 0), dtype=bool)
+    if jit:
+        try:
+            size = _pad_pow2_len(n)
+            if size != n:
+                P = np.full((size, V.shape[1]), np.inf)
+                P[:n] = V
+            else:
+                P = V
+            return np.asarray(_get_jax_dominance()(P))[:n, :n]
+        except ImportError:
+            pass
+    out = np.empty((n, n), dtype=bool)
+    m = V.shape[1]
+    with np.errstate(invalid="ignore"):
+        for start in range(0, n, _DOM_CHUNK):
+            stop = min(start + _DOM_CHUNK, n)
+            # unrolled over objectives (m is tiny): each pass is one full-speed
+            # contiguous (chunk, n) comparison — an order of magnitude faster
+            # than broadcasting a (chunk, n, m) cube and reducing its last axis
+            any_gt = np.zeros((stop - start, n), dtype=bool)
+            any_lt = np.zeros((stop - start, n), dtype=bool)
+            scratch = np.empty((stop - start, n), dtype=bool)
+            for k in range(m):
+                b = V[start:stop, k][:, None]
+                c = V[:, k][None, :]
+                np.greater(b, c, out=scratch)
+                np.logical_or(any_gt, scratch, out=any_gt)
+                np.less(b, c, out=scratch)
+                np.logical_or(any_lt, scratch, out=any_lt)
+            np.logical_not(any_gt, out=any_gt)
+            np.logical_and(any_gt, any_lt, out=out[start:stop])
+    return out
+
+
+def nondomination_ranks(
+    V: np.ndarray, mask: "np.ndarray | None" = None, jit: bool = False
+) -> np.ndarray:
+    """Front rank per row (0 = Pareto front) via iterated masking over the
+    dominance matrix: rows not dominated by any active row form the current
+    front, are assigned the rank, and drop out of the active set.
+
+    ``mask`` (optional) excludes rows from the sort entirely — they get rank
+    :data:`EXCLUDED` and constrain nothing.  NaN rows that *are* included end
+    up on front 0 (IEEE semantics, matching the pairwise reference)."""
+    V = np.asarray(V, dtype=float)
+    n = len(V)
+    ranks = np.full(n, EXCLUDED, dtype=np.int64)
+    active = np.ones(n, dtype=bool) if mask is None else np.asarray(mask, dtype=bool).copy()
+    if not active.any():
+        return ranks
+    idx = np.flatnonzero(active)
+    dom = dominance_matrix(V[idx], jit=jit)
+    # dominated_by[j] = number of active rows dominating j; peel fronts by
+    # subtracting the peeled rows' edges instead of re-reducing the matrix
+    dominated_by = dom.sum(axis=0).astype(np.int64)
+    remaining = np.ones(len(idx), dtype=bool)
+    rank = 0
+    while remaining.any():
+        front = remaining & (dominated_by == 0)
+        if not front.any():  # pragma: no cover - cycles are impossible
+            front = remaining
+        ranks[idx[front]] = rank
+        remaining &= ~front
+        dominated_by -= dom[front].sum(axis=0)
+        rank += 1
+    return ranks
+
+
+_PREFILTER_MIN = 512   # below this a single dominance reduction is cheaper
+_PREFILTER_PICKS = 64  # strong-dominator candidates used to thin the field
+
+
+def _dominated_by_any(V: np.ndarray, D: np.ndarray) -> np.ndarray:
+    """``out[i]`` True iff some row of ``D`` dominates ``V[i]`` — evaluated
+    per objective like :func:`dominance_matrix`, (n, len(D)) at a time."""
+    n, m = V.shape
+    any_gt = np.zeros((n, len(D)), dtype=bool)
+    any_lt = np.zeros((n, len(D)), dtype=bool)
+    scratch = np.empty((n, len(D)), dtype=bool)
+    for k in range(m):
+        v = V[:, k][:, None]
+        d = D[:, k][None, :]
+        np.less(d, v, out=scratch)      # dominator strictly better somewhere
+        np.logical_or(any_lt, scratch, out=any_lt)
+        np.greater(d, v, out=scratch)   # dominator worse somewhere -> no dom
+        np.logical_or(any_gt, scratch, out=any_gt)
+    return (~any_gt & any_lt).any(axis=1)
+
+
+def pareto_front_mask(
+    V: np.ndarray, mask: "np.ndarray | None" = None, jit: bool = False
+) -> np.ndarray:
+    """Boolean mask of the non-dominated rows (front 0), without peeling the
+    remaining fronts.
+
+    NaN-free inputs above :data:`_PREFILTER_MIN` rows take a two-stage path:
+    a handful of strong dominators (smallest objective sums) eliminate the
+    bulk of the field in O(n · picks · m), and the full dominance reduction
+    runs only on the survivors.  This is exact because NaN-free dominance is
+    transitive — a row dominated by an eliminated row is also dominated by
+    whatever eliminated it, so survivors-vs-survivors decides the front.
+    NaN rows break transitivity (a NaN coordinate is incomparable either
+    way), so any NaN input falls back to the single full reduction, keeping
+    bit-parity with the pairwise reference."""
+    V = np.asarray(V, dtype=float)
+    n = len(V)
+    out = np.zeros(n, dtype=bool)
+    active = np.ones(n, dtype=bool) if mask is None else np.asarray(mask, dtype=bool)
+    idx = np.flatnonzero(active)
+    if len(idx) == 0:
+        return out
+    A = V[idx]
+    if len(idx) >= _PREFILTER_MIN and not np.isnan(A).any():
+        finite = np.where(np.isfinite(A), A, np.inf)
+        # normalize per objective so no single scale dominates the pick
+        lo = finite.min(axis=0)
+        span = np.where(finite.max(axis=0) > lo, finite.max(axis=0) - lo, 1.0)
+        with np.errstate(invalid="ignore"):
+            score = ((finite - lo) / span).sum(axis=1)
+        picks = A[np.argsort(score, kind="stable")[:_PREFILTER_PICKS]]
+        survivors = np.flatnonzero(~_dominated_by_any(A, picks))
+        S = A[survivors]
+        dom = dominance_matrix(S, jit=jit)
+        out[idx[survivors]] = ~dom.any(axis=0)
+        return out
+    dom = dominance_matrix(A, jit=jit)
+    out[idx] = ~dom.any(axis=0)
+    return out
+
+
+# -- crowding distance ----------------------------------------------------------
+
+def crowding_distance(V: np.ndarray) -> np.ndarray:
+    """NSGA-II crowding distance of each row *within the given set* (callers
+    pass one front at a time).  Boundary rows per objective get +inf;
+    interior rows sum their normalized neighbour gaps.  Vectorized: one
+    argsort per objective, no Python loop over rows."""
+    V = np.asarray(V, dtype=float)
+    n, m = V.shape
+    if n <= 2:
+        return np.full(n, np.inf)
+    dist = np.zeros(n)
+    for j in range(m):
+        col = V[:, j]
+        order = np.argsort(col, kind="stable")
+        sorted_col = col[order]
+        span = sorted_col[-1] - sorted_col[0]
+        gaps = np.empty(n)
+        gaps[0] = gaps[-1] = np.inf
+        if span > 0 and np.isfinite(span):
+            gaps[1:-1] = (sorted_col[2:] - sorted_col[:-2]) / span
+        else:
+            gaps[1:-1] = 0.0
+        dist[order] += gaps
+    return dist
+
+
+# -- hypervolume ----------------------------------------------------------------
+
+def hypervolume(points: np.ndarray, reference: np.ndarray) -> float:
+    """Exact hypervolume dominated by ``points`` w.r.t. ``reference`` (loss
+    orientation: a point counts iff it is <= the reference in every
+    objective).  2-D uses a sorted sweep; higher dimensions run the WFG
+    exclusive-volume recursion (While et al., 2012) over the non-dominated
+    set — exact for any m, intended for m <= 4 where front sizes keep the
+    recursion shallow."""
+    points = np.asarray(points, dtype=float)
+    reference = np.asarray(reference, dtype=float)
+    if points.ndim != 2 or points.shape[1] != len(reference):
+        raise ValueError(f"points shape {points.shape} vs reference {reference.shape}")
+    # clip to the reference box: points outside contribute only their inside part
+    keep = (points <= reference).all(axis=1)
+    points = points[keep]
+    if len(points) == 0:
+        return 0.0
+    points = points[pareto_front_mask(points)]
+    return float(_wfg(points, reference))
+
+
+def _wfg(points: np.ndarray, ref: np.ndarray) -> float:
+    m = points.shape[1]
+    if m == 1:
+        return float(ref[0] - points.min())
+    if m == 2:
+        return _hv2d(points, ref)
+    # WFG: sort (heuristically, by first objective) and sum exclusive volumes
+    order = np.argsort(points[:, 0], kind="stable")
+    points = points[order]
+    total = 0.0
+    for i in range(len(points)):
+        p = points[i]
+        rest = points[i + 1:]
+        incl = float(np.prod(ref - p))
+        if len(rest) == 0:
+            total += incl
+            continue
+        limited = np.maximum(rest, p)            # limit set w.r.t. p
+        limited = limited[pareto_front_mask(limited)]
+        total += incl - _wfg(limited, ref)
+    return total
+
+
+def _hv2d(points: np.ndarray, ref: np.ndarray) -> float:
+    """2-D hypervolume by a single sweep over the front sorted by the first
+    objective (the front is already mutually non-dominated, so the second
+    objective is strictly decreasing along the sweep)."""
+    order = np.lexsort((points[:, 1], points[:, 0]))
+    pts = points[order]
+    total = 0.0
+    prev_y = ref[1]
+    for x, y in pts:
+        if y < prev_y:
+            total += (ref[0] - x) * (prev_y - y)
+            prev_y = y
+    return float(total)
+
+
+def hypervolume_contributions(points: np.ndarray, reference: np.ndarray) -> np.ndarray:
+    """Per-point exclusive hypervolume: ``hv(all) - hv(all minus point)``.
+    The MOTPE below-set weights (Ozaki et al., 2020) are these contributions
+    normalized to [0, 1]."""
+    points = np.asarray(points, dtype=float)
+    n = len(points)
+    if n == 0:
+        return np.zeros(0)
+    if n == 1:
+        return np.asarray([hypervolume(points, reference)])
+    total = hypervolume(points, reference)
+    out = np.empty(n)
+    keep = np.ones(n, dtype=bool)
+    for i in range(n):
+        keep[i] = False
+        out[i] = total - hypervolume(points[keep], reference)
+        keep[i] = True
+    return out
+
+
+def solve_hssp(
+    points: np.ndarray, k: int, reference: np.ndarray
+) -> np.ndarray:
+    """Greedy hypervolume subset selection: pick ``k`` of ``points``
+    approximately maximizing the joint hypervolume (the 1-1/e greedy of
+    Guerreiro et al.).  Returns the selected row indices in pick order.
+    MOTPE uses it to break ties on the boundary nondomination rank."""
+    points = np.asarray(points, dtype=float)
+    n = len(points)
+    k = min(int(k), n)
+    if k <= 0:
+        return np.zeros(0, dtype=np.int64)
+    contrib = np.asarray([hypervolume(points[i:i + 1], reference) for i in range(n)])
+    selected: list[int] = []
+    selected_rows: list[np.ndarray] = []
+    hv_selected = 0.0
+    picked = np.zeros(n, dtype=bool)
+    while len(selected) < k:
+        i = int(np.argmax(np.where(picked, -np.inf, contrib)))
+        picked[i] = True
+        selected.append(i)
+        if len(selected) == k:
+            break
+        # discount every remaining candidate by the volume it shares with the
+        # newly picked point, relative to the set selected *before* the pick
+        for j in range(n):
+            if picked[j]:
+                continue
+            joined = np.maximum(points[j], points[i])
+            contrib[j] -= hypervolume(
+                np.asarray(selected_rows + [joined]), reference
+            ) - hv_selected
+        selected_rows.append(points[i])
+        hv_selected = hypervolume(np.asarray(selected_rows), reference)
+    return np.asarray(selected, dtype=np.int64)
+
+
+def default_reference_point(points: np.ndarray) -> np.ndarray:
+    """MOTPE's reference-point heuristic: 1.1x the worst observed value per
+    objective (0.9x for negative coordinates, epsilon for exact zeros)."""
+    worst = np.max(points, axis=0)
+    ref = np.maximum(1.1 * worst, 0.9 * worst)
+    ref[ref == 0] = 1e-12
+    return ref

@@ -101,6 +101,14 @@ class ObservationStore:
         self._numbers = np.empty(0, dtype=np.int64)
         self._states = np.empty(0, dtype=np.int64)
         self._values = np.empty(0)
+        # multi-objective values: (capacity, n_objectives) NaN-padded matrix
+        # plus a per-row arity column (len(trial.values); 0 when absent) so
+        # the Pareto engine can exclude wrong-arity rows exactly like the
+        # frozen pairwise loop did.  n_objectives comes from the study's
+        # directions, fetched once on first refresh.
+        self._n_objectives: "int | None" = None
+        self._values_mat = np.empty((0, 0))
+        self._values_len = np.empty(0, dtype=np.int64)
         self._last_iv = np.empty(0)
         self._grid_ids = np.empty(0, dtype=np.int64)
         self._cols: dict[str, np.ndarray] = {}
@@ -121,6 +129,8 @@ class ObservationStore:
         self._view_numbers = self._numbers
         self._view_states = self._states
         self._view_values = self._values
+        self._view_values_mat = self._values_mat
+        self._view_values_len = self._values_len
         self._view_last_iv = self._last_iv
         self._view_grid_ids = self._grid_ids
         self._view_cols: dict[str, np.ndarray] = {}
@@ -138,6 +148,14 @@ class ObservationStore:
             rev = _poll_revision(self)
             if rev is not None and rev == self._revision:
                 return
+            if self._n_objectives is None:
+                # directions are immutable after study creation: one fetch
+                # sizes the values matrix for the store's whole lifetime
+                self._n_objectives = len(
+                    self._storage.get_study_directions(self._study_id)
+                )
+                self._values_mat = np.full((self._capacity, self._n_objectives), np.nan)
+                self._view_values_mat = self._values_mat[:0]
             fresh = get_trials_since(
                 self._storage, self._study_id, self._watermark, deepcopy=False
             )
@@ -157,6 +175,13 @@ class ObservationStore:
         self._numbers[row] = trial.number
         self._states[row] = int(trial.state)
         self._values[row] = trial.values[0] if trial.values else np.nan
+        vals = trial.values or []
+        self._values_len[row] = len(vals)
+        m = self._values_mat.shape[1]
+        if len(vals) == m:
+            self._values_mat[row, :] = vals
+        # wrong-arity rows stay NaN: the Pareto engine excludes them via the
+        # arity column, matching the frozen pairwise loop's length filter
         last = trial.last_step
         self._last_iv[row] = (
             trial.intermediate_values[last] if last is not None else np.nan
@@ -195,6 +220,11 @@ class ObservationStore:
         self._numbers = enlarge(self._numbers, 0)
         self._states = enlarge(self._states, 0)
         self._values = enlarge(self._values, np.nan)
+        self._values_len = enlarge(self._values_len, 0)
+        m = self._values_mat.shape[1]
+        vmat = np.full((capacity, m), np.nan)
+        vmat[: self._n] = self._values_mat[: self._n]
+        self._values_mat = vmat
         self._last_iv = enlarge(self._last_iv, np.nan)
         self._grid_ids = enlarge(self._grid_ids, -1)
         for name in self._cols:
@@ -217,6 +247,8 @@ class ObservationStore:
         self._view_numbers = view(self._numbers)
         self._view_states = view(self._states)
         self._view_values = view(self._values)
+        self._view_values_mat = view(self._values_mat)
+        self._view_values_len = view(self._values_len)
         self._view_last_iv = view(self._last_iv)
         self._view_grid_ids = view(self._grid_ids)
         self._view_cols = {name: view(col) for name, col in self._cols.items()}
@@ -250,6 +282,31 @@ class ObservationStore:
         with self._lock:
             self._materialize()
             return self._view_values
+
+    @property
+    def n_objectives(self) -> "int | None":
+        """Number of study objectives (None until the first refresh)."""
+        with self._lock:
+            return self._n_objectives
+
+    @property
+    def values_matrix(self) -> np.ndarray:
+        """``(n_trials, n_objectives)`` matrix of final objective vectors,
+        number-ordered.  Rows are NaN where the trial carried no values or a
+        wrong-arity vector (see :attr:`values_arity`) — the substrate of the
+        multi-objective engine (``core/moo.py``)."""
+        with self._lock:
+            self._materialize()
+            return self._view_values_mat
+
+    @property
+    def values_arity(self) -> np.ndarray:
+        """``len(trial.values)`` per finished trial (0 when absent).  The
+        Pareto engine masks on ``values_arity == n_objectives`` to reproduce
+        the frozen pairwise loop's length filter exactly."""
+        with self._lock:
+            self._materialize()
+            return self._view_values_len
 
     @property
     def last_intermediate_values(self) -> np.ndarray:
@@ -342,6 +399,23 @@ class ObservationStore:
                 self._view_states,
                 self._view_values,
                 self._view_last_iv,
+                self._view_cols,
+            )
+
+    def snapshot_mo(self) -> tuple:
+        """Multi-objective sibling of :meth:`snapshot`: ``(version, states,
+        values_matrix, values_arity, numbers, cols)`` as one consistent set
+        of number-ordered read-only views under a single lock acquisition —
+        mixing individual property reads across a concurrent refresh could
+        pair a stale mask with a re-sorted matrix."""
+        with self._lock:
+            self._materialize()
+            return (
+                self.version,
+                self._view_states,
+                self._view_values_mat,
+                self._view_values_len,
+                self._view_numbers,
                 self._view_cols,
             )
 

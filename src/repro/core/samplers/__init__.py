@@ -4,6 +4,7 @@ from .base import BaseSampler
 from .cmaes import CMA, CmaEsSampler
 from .gp import GPSampler
 from .grid import GridSampler
+from .nsga2 import NSGAIISampler
 from .random import RandomSampler
 from .tpe import TPESampler
 
@@ -15,6 +16,7 @@ __all__ = [
     "CmaEsSampler",
     "CMA",
     "GPSampler",
+    "NSGAIISampler",
     "make_sampler",
 ]
 
@@ -43,6 +45,12 @@ def make_sampler(
         )
     if name == "gp":
         return GPSampler(seed=seed)
+    if name == "nsga2":
+        return NSGAIISampler(seed=seed)
+    if name == "motpe":
+        # MOTPE rides the multivariate joint path so batched waves get the
+        # one-fit-per-group treatment on multi-objective studies too
+        return TPESampler(seed=seed, multi_objective=True, multivariate=True)
     if name == "grid":
         if search_space is None:
             raise ValueError(

@@ -67,23 +67,39 @@ class BaseSampler:
         group: "ParamGroup",
         n: int,
         trial_ids: "list[int] | None" = None,
+        first_number: "int | None" = None,
     ) -> "np.ndarray | None":
         """Sample one ``(n, len(group.names))`` block of **model-space** rows
         for ``n`` pending trials of one co-observed parameter group.
 
         Return ``None`` to decline the whole group (no joint model yet —
-        startup, warmup, multi-objective, ...): those parameters then go
-        through the ordinary per-trial relational/independent path.  A
-        returned block may carry ``NaN`` cells to decline individual columns
-        (e.g. CMA-ES excludes categoricals); NaN cells silently fall back to
-        scalar sampling without counting as a group-prediction miss.
+        startup, warmup, ...): those parameters then go through the ordinary
+        per-trial relational/independent path.  A returned block may carry
+        ``NaN`` cells to decline individual columns (e.g. CMA-ES excludes
+        categoricals); NaN cells silently fall back to scalar sampling
+        without counting as a group-prediction miss.
 
         ``trial_ids`` are the storage ids of the pending trials, for
         samplers whose joint draw has per-trial side effects (the grid
-        sampler claims one cell per trial).  Column order is
-        ``group.names``; row ``i`` belongs to pending trial ``i``.
+        sampler claims one cell per trial).  ``first_number`` is the first
+        pending trial's storage-assigned number — the wave's RNG key for
+        samplers that derive per-wave streams deterministically (CMA-ES):
+        concurrent workers hold disjoint numbers, so identical histories no
+        longer yield identical blocks.  Column order is ``group.names``;
+        row ``i`` belongs to pending trial ``i``.
         """
         return None
+
+    def joint_wave_size(self, study: "Study", requested: int) -> int:
+        """Preferred ``ask(n)`` wave size, given the caller wants up to
+        ``requested`` trials.  Generation-based samplers (CMA-ES, NSGA-II)
+        cap this at their population size so every wave maps onto exactly one
+        generation — asking past it would draw from a stale replayed state
+        that a between-wave refit will contradict.  Batched drivers
+        (``Study.optimize(ask_batch=)``, the tune scheduler's backfill waves)
+        consult this before each ``ask(n)``; plain callers of ``ask(n)``
+        are unaffected."""
+        return requested
 
     def reseed_rng(self, seed: int | None = None) -> None:
         """Re-seed internal RNGs.  Workers call this with a distinct per-worker

@@ -220,19 +220,37 @@ class CmaEsSampler(BaseSampler):
         x = cma.ask(rng)
         return {n: _from_unit(search_space[n], float(v)) for n, v in zip(names, x)}
 
+    def _cma_space(self, study: "Study") -> dict[str, BaseDistribution]:
+        return {
+            name: dist
+            for name, dist in self._space_calc.calculate(study).items()
+            if not isinstance(dist, CategoricalDistribution) and not dist.single()
+        }
+
+    def joint_wave_size(self, study: "Study", requested: int) -> int:
+        """Cap batched waves at the CMA population size so each ``ask(n)``
+        block is one generation: a wave larger than popsize would draw its
+        surplus rows from the same replayed state, even though the first
+        popsize results will move the mean/covariance before those rows
+        could have been sampled in sequential CMA-ES (ROADMAP PR-4
+        follow-up).  The popsize formula needs only the space dimension, so
+        no history replay happens here."""
+        d = len(self._cma_space(study))
+        if d < 2:
+            return requested  # CMA not engaged: no generation structure
+        popsize = 4 + int(3 * math.log(d))
+        return min(requested, popsize)
+
     def sample_joint(
         self, study: "Study", group: "ParamGroup", n: int,
         trial_ids: "list[int] | None" = None,
+        first_number: "int | None" = None,
     ) -> "np.ndarray | None":
         """One history replay per wave (instead of per trial), then ``n``
         population draws.  Columns outside the CMA space — categoricals,
         single-point domains, conditional params — stay NaN and fall back to
         per-trial independent sampling, mirroring the scalar path."""
-        space = {
-            name: dist
-            for name, dist in self._space_calc.calculate(study).items()
-            if not isinstance(dist, CategoricalDistribution) and not dist.single()
-        }
+        space = self._cma_space(study)
         if len(space) < 2 or not set(space) <= set(group.names):
             return None
         names = sorted(space.keys())
@@ -240,11 +258,14 @@ class CmaEsSampler(BaseSampler):
         if replayed is None:
             return None
         cma, n_obs = replayed
-        # wave-deterministic stream: keyed on the history length, so reruns
-        # with identical storage contents reproduce (trial numbers are not
-        # known client-side without a refetch)
+        # wave-deterministic stream keyed on the first pending trial's number
+        # (the same 7919 multiplier the scalar path applies per trial):
+        # concurrent workers claim disjoint numbers, so identical histories
+        # no longer collapse into identical blocks.  History length remains
+        # the fallback for callers that invoke the block contract directly.
+        key = first_number if first_number is not None else n_obs
         rng = np.random.RandomState(
-            None if self._seed is None else (self._seed + 7919 * n_obs)
+            None if self._seed is None else (self._seed + 7919 * key)
         )
         cols = {name: j for j, name in enumerate(group.names)}
         block = np.full((n, len(group.names)), np.nan)

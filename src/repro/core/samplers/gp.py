@@ -127,6 +127,7 @@ class GPSampler(BaseSampler):
     def sample_joint(
         self, study: "Study", group: "ParamGroup", n: int,
         trial_ids: "list[int] | None" = None,
+        first_number: "int | None" = None,
     ) -> "np.ndarray | None":
         """One GP fit per wave; the ``n`` pending trials take the top-n EI
         candidates (distinct acquisition optima) instead of re-fitting the

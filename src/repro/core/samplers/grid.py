@@ -57,6 +57,7 @@ class GridSampler(BaseSampler):
     def sample_joint(
         self, study: "Study", group: "ParamGroup", n: int,
         trial_ids: "list[int] | None" = None,
+        first_number: "int | None" = None,
     ) -> "np.ndarray | None":
         """Claim ``n`` distinct free cells with **one** ``_taken`` scan and
         one batched attr write, instead of n independent scan+claim rounds.

@@ -27,6 +27,7 @@ class RandomSampler(BaseSampler):
     def sample_joint(
         self, study: "Study", group: "ParamGroup", n: int,
         trial_ids: "list[int] | None" = None,
+        first_number: "int | None" = None,
     ) -> np.ndarray:
         """Uniform block: one vectorized ``sample_uniform`` draw per column
         instead of n x p scalar RNG calls."""

@@ -135,28 +135,39 @@ class Study:
 
     @property
     def best_trials(self) -> list[FrozenTrial]:
-        """Pareto-optimal completed trials (multi-objective support)."""
+        """Pareto-optimal completed trials, computed on the multi-objective
+        engine: one vectorized dominance reduction over the observation
+        store's values matrix (``core/moo.py``) instead of the historical
+        O(n²·m) pure-Python pairwise loop (kept as
+        :func:`_pairwise_best_trials` and pinned bit-identical by
+        ``tests/test_moo.py``)."""
+        front_numbers = set(self.pareto_front()[1].tolist())
         directions = self.directions
-        completed = [
-            t for t in self.get_trials(deepcopy=False, states=(TrialState.COMPLETE,))
-            if t.values is not None and len(t.values) == len(directions)
-        ]
+        out = []
+        for t in self.get_trials(deepcopy=False, states=(TrialState.COMPLETE,)):
+            if t.values is None or len(t.values) != len(directions):
+                continue
+            if t.number in front_numbers:
+                out.append(t.copy())
+        return out
 
-        def dominates(a: FrozenTrial, b: FrozenTrial) -> bool:
-            better = False
-            for av, bv, d in zip(a.values, b.values, directions):
-                sa = av if d == StudyDirection.MINIMIZE else -av
-                sb = bv if d == StudyDirection.MINIMIZE else -bv
-                if sa > sb:
-                    return False
-                if sa < sb:
-                    better = True
-            return better
+    def pareto_front(self) -> "tuple[np.ndarray, np.ndarray]":
+        """``(values, numbers)`` of the non-dominated COMPLETE trials, as
+        arrays straight off the columnar engine: ``values`` is the
+        ``(n_front, n_objectives)`` slice of the observation store's values
+        matrix (raw study orientation, number-ordered), ``numbers`` the
+        matching trial numbers.  No ``FrozenTrial`` materialization — this is
+        the fast path dashboards, samplers and benchmarks read."""
+        from . import moo
 
-        front = [
-            t for t in completed if not any(dominates(o, t) for o in completed if o is not t)
-        ]
-        return [t.copy() for t in front]
+        store = self.observations()
+        directions = self.directions
+        # one consistent snapshot: a concurrent refresh from another worker
+        # thread must not pair this mask with a re-sorted values matrix
+        _, states, V, arity, numbers, _ = store.snapshot_mo()
+        mask = (states == int(TrialState.COMPLETE)) & (arity == len(directions))
+        front = moo.pareto_front_mask(moo.loss_matrix(V, directions), mask=mask)
+        return V[front], numbers[front]
 
     # -- attrs -------------------------------------------------------------------------
 
@@ -241,11 +252,23 @@ class Study:
             return
         n = len(trials)
         trial_ids = [t._trial_id for t in trials]
+        # the wave's RNG key: the first pending trial's storage-assigned
+        # number (one cached get_trial at most).  Concurrent workers claim
+        # disjoint numbers, so their joint blocks draw from distinct streams
+        # even with identical histories — keying on history length could not
+        # distinguish them (ROADMAP PR-4 follow-up).
+        try:
+            first_number = trials[0].number
+        except Exception:  # pragma: no cover - racing delete
+            first_number = None
         rows: list[dict[str, float]] = [{} for _ in trials]
         dists: dict[str, Any] = {}
         any_block = False
+        kwargs: dict[str, Any] = {"trial_ids": trial_ids}
+        if self._sampler_takes_first_number(sampler):
+            kwargs["first_number"] = first_number
         for group in groups:
-            block = sampler.sample_joint(self, group, n, trial_ids=trial_ids)
+            block = sampler.sample_joint(self, group, n, **kwargs)
             if block is None:
                 # declined whole group (startup/warmup): record NaN cells so
                 # the shim falls back silently — only parameters *no* group
@@ -270,6 +293,24 @@ class Study:
             for trial, row in zip(trials, rows):
                 trial._joint = row
                 trial._joint_dists = dists
+
+    def _sampler_takes_first_number(self, sampler: BaseSampler) -> bool:
+        """Custom samplers may predate the ``first_number`` kwarg of the
+        block contract: probe the signature once per study (not
+        TypeError-catch per call, which would swallow genuine errors inside
+        the sampler)."""
+        cached = self.__dict__.get("_joint_sig_ok")
+        if cached is not None and cached[0] is type(sampler):
+            return cached[1]
+        import inspect
+
+        ok = False
+        try:
+            ok = "first_number" in inspect.signature(sampler.sample_joint).parameters
+        except (TypeError, ValueError):  # pragma: no cover - exotic callables
+            pass
+        self.__dict__["_joint_sig_ok"] = (type(sampler), ok)
+        return ok
 
     def _note_joint_miss(self, name: str, reason: str) -> None:
         """Joint-block prediction miss (dynamic branch / drifted domain):
@@ -393,10 +434,12 @@ class Study:
             while not self._stop_requested:
                 if deadline is not None and time.time() > deadline:
                     break
-                # grab up to ask_batch budget slots, claim them in one round
-                # trip, evaluate sequentially
+                # grab up to ask_batch budget slots (capped to the sampler's
+                # generation size), claim them in one round trip, evaluate
+                # sequentially
+                eff = max(1, min(ask_batch, self.sampler.joint_wave_size(self, ask_batch)))
                 slots = 0
-                while slots < max(1, ask_batch) and take():
+                while slots < eff and take():
                     slots += 1
                 if slots == 0:
                     break
@@ -428,6 +471,10 @@ class Study:
                     break
                 if ask_batch > 1 and not pending:
                     want = ask_batch if n_trials is None else min(ask_batch, n_trials - i)
+                    # popsize-aware waves: a generation-based sampler (CMA-ES,
+                    # NSGA-II) caps the wave so each ask(n) block aligns with
+                    # one generation instead of replaying a stale state past it
+                    want = max(1, min(want, self.sampler.joint_wave_size(self, want)))
                     pending = self.ask(want)
                 trial = pending.pop(0) if pending else None
                 self._run_one(func, catch, callbacks, trial=trial)
@@ -550,12 +597,43 @@ class Study:
                 "datetime_start": t.datetime_start.isoformat() if t.datetime_start else None,
                 "datetime_complete": t.datetime_complete.isoformat() if t.datetime_complete else None,
             }
+            if t.values is not None and len(t.values) > 1:
+                for k, v in enumerate(t.values):
+                    row[f"values_{k}"] = v
             for k, v in t.params.items():
                 row[f"params_{k}"] = v
             for k, v in t.user_attrs.items():
                 row[f"user_attrs_{k}"] = v
             rows.append(row)
         return rows
+
+
+def _pairwise_best_trials(
+    completed: "list[FrozenTrial]", directions: "list[StudyDirection]"
+) -> list[FrozenTrial]:
+    """The frozen pre-engine Pareto front: the pure-Python pairwise dominance
+    loop ``Study.best_trials`` shipped before the columnar multi-objective
+    engine existed.  Kept verbatim as the parity reference —
+    ``tests/test_moo.py`` pins the engine bit-identical to this."""
+    completed = [
+        t for t in completed
+        if t.values is not None and len(t.values) == len(directions)
+    ]
+
+    def dominates(a: FrozenTrial, b: FrozenTrial) -> bool:
+        better = False
+        for av, bv, d in zip(a.values, b.values, directions):
+            sa = av if d == StudyDirection.MINIMIZE else -av
+            sb = bv if d == StudyDirection.MINIMIZE else -bv
+            if sa > sb:
+                return False
+            if sa < sb:
+                better = True
+        return better
+
+    return [
+        t for t in completed if not any(dominates(o, t) for o in completed if o is not t)
+    ]
 
 
 def create_study(

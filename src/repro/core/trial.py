@@ -25,7 +25,7 @@ from .distributions import (
     IntDistribution,
 )
 from .exceptions import TrialPruned
-from .frozen import FrozenTrial, TrialState
+from .frozen import FrozenTrial, StudyDirection, TrialState
 
 if TYPE_CHECKING:
     from .study import Study
@@ -223,7 +223,7 @@ class Trial(BaseTrial):
 
     # -- pruning interface (paper Fig. 5) ---------------------------------------
 
-    def report(self, value: float, step: int) -> None:
+    def report(self, value: "float | Sequence[float]", step: int) -> None:
         """Report an intermediate objective value at ``step`` ('report API').
 
         When the study's pruner ships a wire spec (every built-in does), the
@@ -231,16 +231,48 @@ class Trial(BaseTrial):
         persisted *and* the prune decision comes back on the same round trip
         — server-side peer data over ``remote://`` — so the following
         ``should_prune()`` answers from the cached decision with zero extra
-        storage calls."""
-        step, value = int(step), float(value)
+        storage calls.
+
+        On multi-objective studies ``value`` may be a **vector** (one entry
+        per study direction).  A Pareto-aware pruner
+        (:class:`~repro.core.pruners.ParetoPruner`) scalarizes it client-side
+        into a minimize-oriented loss, which then rides the *same* fused
+        path — one round trip per report, identical wire format.  Vector
+        reports without a scalarizing pruner raise (storing only one
+        objective silently would corrupt pruning decisions)."""
+        step = int(step)
         study = self.study
+        directions = study.directions
+        direction = directions[0] if len(directions) == 1 else StudyDirection.MINIMIZE
+        scalarize = getattr(study.pruner, "scalarize", None)
+        if isinstance(value, (list, tuple)) or (
+            hasattr(value, "__len__") and not isinstance(value, str)
+        ):
+            if not callable(scalarize):
+                raise ValueError(
+                    "vector report needs a Pareto-aware pruner that can "
+                    "scalarize it (e.g. ParetoPruner); got "
+                    f"{type(study.pruner).__name__}"
+                )
+            value = float(scalarize([float(v) for v in value], directions))
+        elif len(directions) > 1 and callable(scalarize):
+            # a raw scalar would enter the scalarized-loss stream unoriented
+            # and unscaled — judged as MINIMIZE next to augmented-Chebyshev
+            # losses, silently corrupting every peer's prune decision
+            raise ValueError(
+                f"multi-objective study with {type(study.pruner).__name__}: "
+                f"report all {len(directions)} objectives as a vector, not a scalar"
+            )
+        else:
+            value = float(value)
         spec = None
         spec_fn = getattr(study.pruner, "spec", None)
         if callable(spec_fn):
             spec = spec_fn()
-        if spec is not None and len(study.directions) == 1:
+        scalarizing = callable(getattr(study.pruner, "scalarize", None))
+        if spec is not None and (len(directions) == 1 or scalarizing):
             decision = study._storage.report_and_prune(
-                study._study_id, self._trial_id, step, value, spec, study.direction
+                study._study_id, self._trial_id, step, value, spec, direction
             )
             self._prune_decision = (step, bool(decision))
         else:

@@ -63,7 +63,14 @@ class TrialSliceScheduler:
         budget = [n_trials]
         lock = threading.Lock()
 
-        seeded: list = list(self.study.ask(min(n_trials, len(self.meshes))))
+        seed_want = min(n_trials, len(self.meshes))
+        if seed_want > 0:
+            # the seed wave honors generation alignment too: on a warm study
+            # a popsize-aware sampler must not draw one oversized block
+            seed_want = max(1, min(
+                seed_want, self.study.sampler.joint_wave_size(self.study, seed_want)
+            ))
+        seeded: list = list(self.study.ask(seed_want))
 
         def take() -> bool:
             with lock:
@@ -80,8 +87,15 @@ class TrialSliceScheduler:
                     return self._prefetched.pop(0)
                 if self.backfill_batch > 1:
                     # claim a whole backfill wave in one round trip; peers
-                    # freed while this ask is in flight drain the surplus
-                    self._prefetched.extend(self.study.ask(self.backfill_batch))
+                    # freed while this ask is in flight drain the surplus.
+                    # Generation-based samplers (CMA-ES, NSGA-II) cap the
+                    # wave at their population size so each block aligns
+                    # with exactly one generation.
+                    want = max(1, min(
+                        self.backfill_batch,
+                        self.study.sampler.joint_wave_size(self.study, self.backfill_batch),
+                    ))
+                    self._prefetched.extend(self.study.ask(want))
                     return self._prefetched.pop(0)
             return self.study.ask()
 

@@ -1,0 +1,373 @@
+"""Multi-objective engine: vectorized dominance/rank/crowding/hypervolume
+pinned against brute-force pairwise references (randomized: both directions,
+duplicates, NaN rows), and the engine-backed ``Study.best_trials`` pinned
+bit-identical to the frozen pure-Python pairwise loop."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+import repro.core as hpo
+from repro.core import moo
+from repro.core.frozen import StudyDirection, TrialState
+from repro.core.study import _pairwise_best_trials
+
+
+# -- brute-force references -------------------------------------------------------
+
+
+def dominates(a, b) -> bool:
+    """Scalar pairwise dominance (loss orientation), NaN-safe per IEEE."""
+    better = False
+    for av, bv in zip(a, b):
+        if av > bv:
+            return False
+        if av < bv:
+            better = True
+    return better
+
+
+def brute_ranks(V) -> np.ndarray:
+    n = len(V)
+    ranks = np.full(n, -1)
+    remaining = set(range(n))
+    rank = 0
+    while remaining:
+        front = [
+            i for i in remaining
+            if not any(dominates(V[j], V[i]) for j in remaining if j != i)
+        ]
+        for i in front:
+            ranks[i] = rank
+            remaining.discard(i)
+        rank += 1
+    return ranks
+
+
+def brute_hypervolume(points, ref, samples=200_000, seed=0) -> float:
+    """Monte-Carlo hypervolume (used only to sanity-check exact values)."""
+    rng = np.random.RandomState(seed)
+    points = np.asarray(points, float)
+    lo = points.min(axis=0)
+    box = np.prod(ref - lo)
+    u = lo + rng.uniform(size=(samples, len(ref))) * (ref - lo)
+    hit = (u[:, None, :] >= points[None, :, :]).all(axis=2).any(axis=1)
+    return float(box * hit.mean())
+
+
+def grid_hypervolume(points, ref) -> float:
+    """Exact hypervolume for integer-coordinate points by unit-cell counting."""
+    points = np.asarray(points, float)
+    lo = points.min(axis=0).astype(int)
+    axes = [range(int(l), int(r)) for l, r in zip(lo, ref)]
+    count = 0
+    for cell in itertools.product(*axes):
+        c = np.asarray(cell, float)
+        if ((points <= c).all(axis=1)).any():
+            count += 1
+    return float(count)
+
+
+def random_values(rng, n, m, duplicates=True, nan_rows=False):
+    if duplicates:
+        V = rng.randint(0, 4, size=(n, m)).astype(float)
+    else:
+        V = rng.uniform(-5, 5, size=(n, m))
+    if nan_rows and n > 2:
+        V[rng.choice(n, size=max(1, n // 8), replace=False), rng.randint(m)] = np.nan
+    return V
+
+
+# -- dominance / ranks --------------------------------------------------------------
+
+
+class TestDominance:
+    @pytest.mark.parametrize("seed", range(5))
+    @pytest.mark.parametrize("m", [2, 3, 4])
+    def test_ranks_match_brute_force(self, seed, m):
+        rng = np.random.RandomState(seed)
+        V = random_values(rng, 40, m, duplicates=seed % 2 == 0)
+        assert np.array_equal(moo.nondomination_ranks(V), brute_ranks(V))
+
+    def test_ranks_with_nan_rows(self):
+        rng = np.random.RandomState(7)
+        V = random_values(rng, 30, 3, nan_rows=True)
+        assert np.array_equal(moo.nondomination_ranks(V), brute_ranks(V))
+
+    def test_ranks_with_mask(self):
+        rng = np.random.RandomState(3)
+        V = random_values(rng, 25, 2)
+        mask = rng.uniform(size=25) < 0.6
+        ranks = moo.nondomination_ranks(V, mask=mask)
+        assert (ranks[~mask] == moo.EXCLUDED).all()
+        # included rows rank exactly as if the excluded rows never existed
+        sub = brute_ranks(V[mask])
+        assert np.array_equal(ranks[mask], sub)
+
+    def test_front_mask_is_rank_zero(self):
+        rng = np.random.RandomState(11)
+        V = random_values(rng, 50, 3)
+        assert np.array_equal(moo.pareto_front_mask(V), moo.nondomination_ranks(V) == 0)
+
+    def test_duplicates_share_the_front(self):
+        V = np.asarray([[1.0, 2.0], [1.0, 2.0], [0.5, 3.0]])
+        assert moo.pareto_front_mask(V).all()
+
+    def test_single_objective_ranks_are_sorted_order(self):
+        V = np.asarray([[3.0], [1.0], [2.0], [1.0]])
+        assert np.array_equal(moo.nondomination_ranks(V), [2, 0, 1, 0])
+
+    def test_chunked_path_matches_small(self):
+        # force multiple chunks through the chunked numpy reduction
+        old = moo._DOM_CHUNK
+        moo._DOM_CHUNK = 7
+        try:
+            rng = np.random.RandomState(5)
+            V = random_values(rng, 40, 2)
+            assert np.array_equal(moo.nondomination_ranks(V), brute_ranks(V))
+        finally:
+            moo._DOM_CHUNK = old
+
+    def test_prefilter_path_matches_full_reduction(self):
+        # above _PREFILTER_MIN rows the NaN-free path thins the field with
+        # strong dominators first; the front must be exactly the full one
+        rng = np.random.RandomState(21)
+        for m in (2, 3):
+            V = rng.uniform(size=(moo._PREFILTER_MIN + 100, m))
+            V[:5] = V[5:10]  # duplicated rows survive together
+            fast = moo.pareto_front_mask(V)
+            old = moo._PREFILTER_MIN
+            moo._PREFILTER_MIN = 10**9
+            try:
+                full = moo.pareto_front_mask(V)
+            finally:
+                moo._PREFILTER_MIN = old
+            assert np.array_equal(fast, full)
+
+    def test_jax_path_matches_numpy(self):
+        pytest.importorskip("jax")
+        rng = np.random.RandomState(13)
+        V = random_values(rng, 33, 3)
+        assert np.array_equal(
+            moo.dominance_matrix(V, jit=True), moo.dominance_matrix(V)
+        )
+
+    def test_jax_trace_count_stays_bounded(self):
+        pytest.importorskip("jax")
+        before = moo._jax_trace_count
+        for n in range(20, 30):  # all pad to the same pow2 bucket
+            V = np.random.RandomState(n).uniform(size=(n, 2))
+            moo.dominance_matrix(V, jit=True)
+        assert moo._jax_trace_count - before <= 1
+
+
+class TestLossMatrix:
+    def test_sign_flip_on_maximize(self):
+        V = np.asarray([[1.0, 2.0], [3.0, 4.0]])
+        L = moo.loss_matrix(V, [StudyDirection.MINIMIZE, StudyDirection.MAXIMIZE])
+        assert np.array_equal(L, [[1.0, -2.0], [3.0, -4.0]])
+        assert np.array_equal(V, [[1.0, 2.0], [3.0, 4.0]])  # input untouched
+
+    def test_arity_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            moo.loss_matrix(np.zeros((3, 2)), [StudyDirection.MINIMIZE])
+
+
+# -- crowding -----------------------------------------------------------------------
+
+
+class TestCrowding:
+    def test_boundary_points_are_infinite(self):
+        V = np.asarray([[0.0, 3.0], [1.0, 2.0], [2.0, 1.0], [3.0, 0.0]])
+        d = moo.crowding_distance(V)
+        assert np.isinf(d[0]) and np.isinf(d[3])
+        assert np.isfinite(d[1]) and np.isfinite(d[2])
+
+    def test_matches_reference_implementation(self):
+        def brute_crowding(V):
+            n, m = V.shape
+            if n <= 2:
+                return np.full(n, np.inf)
+            out = np.zeros(n)
+            for j in range(m):
+                order = np.argsort(V[:, j], kind="stable")
+                span = V[order[-1], j] - V[order[0], j]
+                out[order[0]] = out[order[-1]] = np.inf
+                for k in range(1, n - 1):
+                    if span > 0:
+                        out[order[k]] += (V[order[k + 1], j] - V[order[k - 1], j]) / span
+            return out
+
+        rng = np.random.RandomState(2)
+        V = rng.uniform(size=(20, 3))
+        assert np.allclose(moo.crowding_distance(V), brute_crowding(V))
+
+    def test_constant_objective_contributes_nothing(self):
+        V = np.asarray([[1.0, 0.0], [1.0, 0.5], [1.0, 1.0]])
+        d = moo.crowding_distance(V)
+        assert np.isinf(d[0]) and np.isinf(d[2]) and d[1] == 1.0
+
+
+# -- hypervolume --------------------------------------------------------------------
+
+
+class TestHypervolume:
+    def test_2d_staircase_closed_form(self):
+        # the WFG reference staircase: hv == n^2 - n(n-1)/2
+        for n in (2, 5, 17):
+            ref = n * np.ones(2)
+            pts = np.asarray([[n - 1 - i, i] for i in range(n)], dtype=float)
+            assert moo.hypervolume(pts, ref) == n * n - n * (n - 1) // 2
+
+    @pytest.mark.parametrize("m", [2, 3, 4])
+    def test_unit_corners_closed_form(self, m):
+        # unit vectors against ref=2: hv == 2^m - 1
+        pts = np.eye(m)
+        assert moo.hypervolume(pts, 2.0 * np.ones(m)) == 2**m - 1
+
+    @pytest.mark.parametrize("seed", range(4))
+    @pytest.mark.parametrize("m", [2, 3])
+    def test_matches_grid_counting(self, seed, m):
+        rng = np.random.RandomState(seed)
+        pts = rng.randint(0, 5, size=(8, m)).astype(float)
+        ref = 6 * np.ones(m)
+        assert moo.hypervolume(pts, ref) == pytest.approx(grid_hypervolume(pts, ref))
+
+    def test_dominated_and_outside_points_are_free(self):
+        ref = np.asarray([4.0, 4.0])
+        base = np.asarray([[1.0, 1.0]])
+        noisy = np.asarray([[1.0, 1.0], [2.0, 2.0], [5.0, 0.0], [1.0, 1.0]])
+        assert moo.hypervolume(base, ref) == moo.hypervolume(noisy, ref)
+
+    def test_empty_and_outside_only(self):
+        ref = np.asarray([1.0, 1.0])
+        assert moo.hypervolume(np.empty((0, 2)), ref) == 0.0
+        assert moo.hypervolume(np.asarray([[2.0, 2.0]]), ref) == 0.0
+
+    def test_monte_carlo_agreement_4d(self):
+        rng = np.random.RandomState(9)
+        pts = rng.uniform(0, 1, size=(10, 4))
+        ref = np.ones(4) * 1.2
+        exact = moo.hypervolume(pts, ref)
+        mc = brute_hypervolume(pts, ref, samples=400_000)
+        assert exact == pytest.approx(mc, rel=0.05)
+
+
+class TestHSSP:
+    def test_selects_all_when_k_is_n(self):
+        pts = np.asarray([[0.0, 2.0], [1.0, 1.0], [2.0, 0.0]])
+        sel = moo.solve_hssp(pts, 3, np.asarray([3.0, 3.0]))
+        assert sorted(sel.tolist()) == [0, 1, 2]
+
+    def test_greedy_picks_largest_contributor_first(self):
+        pts = np.asarray([[0.0, 2.9], [1.0, 1.0], [2.9, 0.0]])
+        sel = moo.solve_hssp(pts, 1, np.asarray([3.0, 3.0]))
+        assert sel.tolist() == [1]  # the knee dominates the most volume
+
+    def test_subset_hv_close_to_best_pair(self):
+        rng = np.random.RandomState(4)
+        pts = rng.uniform(size=(7, 2))
+        ref = np.ones(2) * 1.1
+        sel = moo.solve_hssp(pts, 2, ref)
+        got = moo.hypervolume(pts[sel], ref)
+        best = max(
+            moo.hypervolume(pts[list(pair)], ref)
+            for pair in itertools.combinations(range(7), 2)
+        )
+        assert got >= 0.6 * best  # greedy 1-1/e guarantee with headroom
+
+
+# -- store + study integration ------------------------------------------------------
+
+
+def _mo_study(directions, values_list, storage=None):
+    study = hpo.create_study(
+        directions=directions, sampler=hpo.RandomSampler(seed=0), storage=storage
+    )
+    for vals in values_list:
+        t = study.ask()
+        t.suggest_float("x", 0, 1)
+        study.tell(t, vals)
+    return study
+
+
+class TestValuesMatrix:
+    def test_matrix_and_arity(self):
+        study = _mo_study(["minimize", "maximize"], [[1.0, 2.0], [3.0, 4.0]])
+        store = study.observations()
+        assert store.n_objectives == 2
+        assert np.array_equal(store.values_matrix, [[1.0, 2.0], [3.0, 4.0]])
+        assert np.array_equal(store.values_arity, [2, 2])
+
+    def test_wrong_arity_row_is_nan(self):
+        study = _mo_study(["minimize", "maximize"], [[1.0, 2.0]])
+        t = study.ask()
+        t.suggest_float("x", 0, 1)
+        # storage-level write bypasses Study.tell's normalization
+        study._storage.set_trial_state_values(
+            t._trial_id, TrialState.COMPLETE, [5.0]
+        )
+        store = study.observations()
+        assert np.array_equal(store.values_arity, [2, 1])
+        assert np.isnan(store.values_matrix[1]).all()
+
+    def test_failed_trials_carry_no_values(self):
+        study = _mo_study(["minimize", "minimize"], [[1.0, 2.0]])
+        t = study.ask()
+        t.suggest_float("x", 0, 1)
+        study.tell(t, state=TrialState.FAIL)
+        store = study.observations()
+        assert np.array_equal(store.values_arity, [2, 0])
+
+    def test_single_objective_matrix_matches_values(self):
+        study = _mo_study(["minimize"], [[3.0], [1.0], [2.0]])
+        store = study.observations()
+        assert store.values_matrix.shape == (3, 1)
+        assert np.array_equal(store.values_matrix[:, 0], store.values)
+
+
+class TestBestTrialsParity:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_engine_bit_identical_to_pairwise_loop(self, seed):
+        rng = np.random.RandomState(seed)
+        m = 2 + seed % 3
+        dirs = [
+            "minimize" if rng.uniform() < 0.5 else "maximize" for _ in range(m)
+        ]
+        values = rng.randint(0, 4, size=(30, m)).astype(float).tolist()
+        study = _mo_study(dirs, values)
+        # sprinkle pruned/failed trials: they must not affect the front
+        for _ in range(3):
+            t = study.ask()
+            t.suggest_float("x", 0, 1)
+            study.tell(t, state=TrialState.PRUNED)
+        engine = study.best_trials
+        completed = study.get_trials(deepcopy=False, states=(TrialState.COMPLETE,))
+        reference = _pairwise_best_trials(completed, study.directions)
+        assert [t.number for t in engine] == [t.number for t in reference]
+        assert [t.values for t in engine] == [t.values for t in reference]
+
+    def test_infinite_values_match_pairwise_loop(self):
+        study = _mo_study(
+            ["minimize", "minimize"],
+            [[np.inf, 0.0], [0.0, np.inf], [1.0, 1.0], [np.inf, np.inf]],
+        )
+        engine = [t.number for t in study.best_trials]
+        completed = study.get_trials(deepcopy=False, states=(TrialState.COMPLETE,))
+        reference = [t.number for t in _pairwise_best_trials(completed, study.directions)]
+        assert engine == reference
+
+    def test_pareto_front_arrays_match_best_trials(self):
+        study = _mo_study(
+            ["minimize", "maximize"],
+            [[1.0, 1.0], [2.0, 2.0], [0.5, 0.5], [1.0, 3.0]],
+        )
+        vals, nums = study.pareto_front()
+        assert nums.tolist() == [t.number for t in study.best_trials]
+        assert vals.tolist() == [t.values for t in study.best_trials]
+
+    def test_single_objective_front_is_best_trial(self):
+        study = _mo_study(["minimize"], [[3.0], [1.0], [2.0]])
+        assert [t.number for t in study.best_trials] == [1]
+        assert study.best_trial.number == 1

@@ -1,0 +1,367 @@
+"""Multi-objective samplers + Pareto-aware pruning: NSGA-II block contract,
+MOTPE split semantics, scalarized fused pruning, and the PR-4 follow-up
+satellites (popsize-aware CMA waves, first-trial-number RNG keying)."""
+
+import numpy as np
+import pytest
+
+import repro.core as hpo
+from repro.core import moo
+from repro.core.frozen import StudyDirection, TrialState
+from repro.core.samplers.tpe import _motpe_split
+from repro.core.search_space import observed_groups
+
+
+def zdt1(trial, d=8):
+    x = [trial.suggest_float(f"x{i}", 0, 1) for i in range(d)]
+    f1 = x[0]
+    g = 1.0 + 9.0 * sum(x[1:]) / (d - 1)
+    f2 = g * (1.0 - np.sqrt(f1 / g))
+    return [f1, f2]
+
+
+def final_hypervolume(study, ref=(1.1, 11.0)):
+    V, _ = study.pareto_front()
+    return moo.hypervolume(np.asarray(V), np.asarray(ref))
+
+
+def run_sampler(sampler, n_trials=80, seed_obj=zdt1, ask_batch=1):
+    study = hpo.create_study(directions=["minimize", "minimize"], sampler=sampler)
+    study.optimize(seed_obj, n_trials=n_trials, ask_batch=ask_batch)
+    return study
+
+
+class TestNSGAII:
+    def test_parameter_validation(self):
+        with pytest.raises(ValueError):
+            hpo.NSGAIISampler(population_size=1)
+        with pytest.raises(ValueError):
+            hpo.NSGAIISampler(crossover_prob=1.5)
+        with pytest.raises(ValueError):
+            hpo.NSGAIISampler(mutation_prob=-0.1)
+        with pytest.raises(ValueError):
+            hpo.NSGAIISampler(swapping_prob=2.0)
+
+    def test_block_shape_and_bounds(self):
+        sampler = hpo.NSGAIISampler(population_size=6, seed=0)
+        study = run_sampler(sampler, n_trials=12, seed_obj=lambda t: zdt1(t, d=3))
+        (group,) = observed_groups(study.observations())
+        block = sampler.sample_joint(study, group, 9)
+        assert block is not None and block.shape == (9, 3)
+        assert np.isfinite(block).all()
+        assert ((block >= 0.0) & (block <= 1.0)).all()
+
+    def test_declines_before_population_seeded(self):
+        sampler = hpo.NSGAIISampler(population_size=10, seed=0)
+        study = run_sampler(sampler, n_trials=4, seed_obj=lambda t: zdt1(t, d=3))
+        (group,) = observed_groups(study.observations())
+        assert sampler.sample_joint(study, group, 3) is None
+
+    def test_one_generation_per_wave(self):
+        calls = []
+
+        class Recording(hpo.NSGAIISampler):
+            def sample_joint(self, study, group, n, trial_ids=None, first_number=None):
+                calls.append(n)
+                return super().sample_joint(
+                    study, group, n, trial_ids=trial_ids, first_number=first_number
+                )
+
+        sampler = Recording(population_size=6, seed=0)
+        study = run_sampler(sampler, n_trials=12, seed_obj=lambda t: zdt1(t, d=3))
+        calls.clear()
+        wave = study.ask(6)
+        assert calls == [6]  # one block covers the whole generation
+        study.tell_batch([(t, zdt1(t, d=3)) for t in wave])
+
+    def test_wave_size_capped_at_population(self):
+        sampler = hpo.NSGAIISampler(population_size=5, seed=0)
+        study = hpo.create_study(directions=["minimize", "minimize"], sampler=sampler)
+        assert sampler.joint_wave_size(study, 32) == 5
+        assert sampler.joint_wave_size(study, 3) == 3
+
+    def test_categorical_and_int_offspring_stay_in_domain(self):
+        def obj(t):
+            a = t.suggest_categorical("a", ["p", "q", "r"])
+            b = t.suggest_int("b", 1, 5)
+            x = t.suggest_float("x", 0, 1)
+            return [x + b, (3 - b) ** 2 + (0 if a == "p" else 1) + (1 - x)]
+
+        sampler = hpo.NSGAIISampler(population_size=6, seed=3)
+        study = hpo.create_study(directions=["minimize", "minimize"], sampler=sampler)
+        study.optimize(obj, n_trials=30)
+        for t in study.get_trials(deepcopy=False, states=(TrialState.COMPLETE,)):
+            assert t.params["a"] in ("p", "q", "r")
+            assert 1 <= t.params["b"] <= 5
+            assert 0.0 <= t.params["x"] <= 1.0
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_dominates_random_on_zdt1(self, seed):
+        n = 80
+        nsga = run_sampler(hpo.NSGAIISampler(population_size=10, seed=seed), n)
+        rand = run_sampler(hpo.RandomSampler(seed=seed), n)
+        assert final_hypervolume(nsga) > final_hypervolume(rand)
+
+
+class TestMOTPE:
+    def test_split_prefers_lower_ranks(self):
+        # 3 clear fronts of 3 points each; n_below=3 must take front 0 whole
+        L = np.asarray(
+            [[0.0, 2.0], [1.0, 1.0], [2.0, 0.0],
+             [2.0, 4.0], [3.0, 3.0], [4.0, 2.0],
+             [4.0, 6.0], [5.0, 5.0], [6.0, 4.0]]
+        )
+        below, above, w = _motpe_split(L, 3)
+        assert sorted(below.tolist()) == [0, 1, 2]
+        assert len(above) == 6 and len(w) == 3
+        assert (w > 0).all() and (w <= 1.0).all()
+
+    def test_split_breaks_boundary_rank_by_hypervolume(self):
+        # front 0 has 4 points but n_below=2: HSSP picks a max-volume subset
+        L = np.asarray([[0.0, 3.0], [1.0, 1.0], [1.1, 0.9], [3.0, 0.0]])
+        below, above, _ = _motpe_split(L, 2)
+        assert len(below) == 2 and len(above) == 2
+        assert set(below.tolist()) < {0, 1, 2, 3}
+
+    def test_split_is_chronologically_sorted(self):
+        rng = np.random.RandomState(0)
+        L = rng.uniform(size=(20, 2))
+        below, above, _ = _motpe_split(L, 5)
+        assert np.array_equal(below, np.sort(below))
+        assert np.array_equal(above, np.sort(above))
+        assert len(np.intersect1d(below, above)) == 0
+        assert len(below) + len(above) == 20
+
+    def test_scalar_path_runs_and_improves_front(self):
+        sampler = hpo.TPESampler(seed=1, n_startup_trials=10, multi_objective=True)
+        study = run_sampler(sampler, n_trials=40, seed_obj=lambda t: zdt1(t, d=4))
+        assert len(study.best_trials) >= 1
+
+    def test_joint_waves_run(self):
+        sampler = hpo.TPESampler(
+            seed=1, n_startup_trials=10, multi_objective=True, multivariate=True
+        )
+        study = run_sampler(
+            sampler, n_trials=40, seed_obj=lambda t: zdt1(t, d=4), ask_batch=8
+        )
+        assert len(study.best_trials) >= 1
+
+    def test_without_flag_multi_objective_stays_uniform(self):
+        # the historical fallback: no MOTPE machinery engaged, no crash
+        sampler = hpo.TPESampler(seed=1)
+        study = run_sampler(sampler, n_trials=15, seed_obj=lambda t: zdt1(t, d=3))
+        assert len(study.trials) == 15
+        assert sampler._mo_fit is None
+
+    def test_consider_pruned_admits_full_vector_pruned_rows(self):
+        sampler = hpo.TPESampler(
+            seed=0, n_startup_trials=4, multi_objective=True,
+            consider_pruned_trials=True,
+        )
+        study = hpo.create_study(
+            directions=["minimize", "minimize"], sampler=sampler
+        )
+        for i in range(4):
+            t = study.ask()
+            t.suggest_float("x", 0, 1)
+            study.tell(t, [float(i), float(4 - i)])
+        # full-vector pruned rows count as evidence with the flag on;
+        # a pruned trial without a full vector stays excluded
+        t = study.ask()
+        t.suggest_float("x", 0, 1)
+        study.tell(t, [0.5, 0.5], state=TrialState.PRUNED)
+        t = study.ask()
+        t.suggest_float("x", 0, 1)
+        study.tell(t, state=TrialState.PRUNED)
+        fit = sampler._mo_trial_fit(study)
+        assert len(fit.below_rows) + len(fit.above_rows) == 5
+        sampler_off = hpo.TPESampler(
+            seed=0, n_startup_trials=4, multi_objective=True
+        )
+        fit_off = sampler_off._mo_trial_fit(study)
+        assert len(fit_off.below_rows) + len(fit_off.above_rows) == 4
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_dominates_random_on_zdt1(self, seed):
+        n = 80
+        motpe = run_sampler(
+            hpo.TPESampler(seed=seed, n_startup_trials=16, multi_objective=True), n
+        )
+        rand = run_sampler(hpo.RandomSampler(seed=seed), n)
+        assert final_hypervolume(motpe) > final_hypervolume(rand)
+
+
+class TestParetoPruner:
+    def _directions(self):
+        return [StudyDirection.MINIMIZE, StudyDirection.MAXIMIZE]
+
+    def test_scalarization_preserves_dominance(self):
+        pruner = hpo.ParetoPruner(hpo.MedianPruner())
+        dirs = self._directions()
+        rng = np.random.RandomState(0)
+        for _ in range(200):
+            a = rng.uniform(-2, 2, size=2)
+            b = a + rng.uniform(0, 1, size=2) * [1, -1]  # b worse in both
+            if np.allclose(a, b):
+                continue
+            assert pruner.scalarize(a.tolist(), dirs) < pruner.scalarize(b.tolist(), dirs)
+
+    def test_arity_mismatch_raises(self):
+        pruner = hpo.ParetoPruner(hpo.MedianPruner())
+        with pytest.raises(ValueError):
+            pruner.scalarize([1.0], self._directions())
+
+    def test_spec_round_trip(self):
+        from repro.core.pruners import pruner_from_spec
+
+        pruner = hpo.ParetoPruner(
+            hpo.MedianPruner(n_startup_trials=2), reference_point=[0.0, 1.0], rho=0.1
+        )
+        spec = pruner.spec()
+        rebuilt = pruner_from_spec(spec)
+        assert isinstance(rebuilt, hpo.ParetoPruner)
+        vals, dirs = [0.3, 0.7], self._directions()
+        assert rebuilt.scalarize(vals, dirs) == pruner.scalarize(vals, dirs)
+
+    def test_vector_report_without_scalarizer_raises(self):
+        study = hpo.create_study(
+            directions=["minimize", "minimize"], sampler=hpo.RandomSampler(seed=0)
+        )
+        t = study.ask()
+        with pytest.raises(ValueError):
+            t.report([1.0, 2.0], 1)
+
+    def test_scalar_report_with_scalarizer_raises_on_mo_study(self):
+        # a raw scalar would enter the scalarized stream unoriented and
+        # corrupt every peer's prune decision — must be rejected
+        study = hpo.create_study(
+            directions=["maximize", "maximize"],
+            sampler=hpo.RandomSampler(seed=0),
+            pruner=hpo.ParetoPruner(hpo.MedianPruner(n_startup_trials=1)),
+        )
+        t = study.ask()
+        with pytest.raises(ValueError):
+            t.report(0.9, 1)
+
+    def test_fused_decision_on_scalarized_stream(self):
+        study = hpo.create_study(
+            directions=["minimize", "maximize"],
+            sampler=hpo.RandomSampler(seed=0),
+            pruner=hpo.ParetoPruner(hpo.MedianPruner(n_startup_trials=1)),
+        )
+        for vals in ([1.0, 5.0], [2.0, 4.0], [1.5, 4.5]):
+            t = study.ask()
+            t.suggest_float("x", 0, 1)
+            t.report(vals, 1)
+            study.tell(t, vals)
+        bad = study.ask()
+        bad.suggest_float("x", 0, 1)
+        bad.report([50.0, -50.0], 1)  # dominated by everything
+        assert bad.should_prune()
+        good = study.ask()
+        good.suggest_float("x", 0, 1)
+        good.report([0.0, 100.0], 1)  # dominates everything
+        assert not good.should_prune()
+
+    def test_stored_stream_is_scalarized_and_consistent(self):
+        pruner = hpo.ParetoPruner(hpo.MedianPruner(n_startup_trials=1))
+        study = hpo.create_study(
+            directions=["minimize", "maximize"],
+            sampler=hpo.RandomSampler(seed=0),
+            pruner=pruner,
+        )
+        t = study.ask()
+        t.suggest_float("x", 0, 1)
+        vals = [2.0, 3.0]
+        t.report(vals, 1)
+        frozen = study._storage.get_trial(t._trial_id)
+        expected = pruner.scalarize(vals, study.directions)
+        assert frozen.intermediate_values == {1: expected}
+
+    def test_prune_via_optimize_loop(self):
+        def obj(trial):
+            x = trial.suggest_float("x", 0, 1)
+            for step in range(5):
+                trial.report([x + step * x, 1.0 - x], step)
+                if trial.should_prune():
+                    raise hpo.TrialPruned()
+            return [x, 1.0 - x]
+
+        study = hpo.create_study(
+            directions=["minimize", "maximize"],
+            sampler=hpo.RandomSampler(seed=5),
+            pruner=hpo.ParetoPruner(hpo.MedianPruner(n_startup_trials=4, n_warmup_steps=1)),
+        )
+        study.optimize(obj, n_trials=25)
+        states = {t.state for t in study.trials}
+        assert TrialState.COMPLETE in states and TrialState.PRUNED in states
+
+
+class TestCmaEsWaveSatellites:
+    def _seeded_study(self, sampler, n=12):
+        study = hpo.create_study(sampler=sampler)
+
+        def obj(t):
+            return (t.suggest_float("x", -2, 2) - 1) ** 2 + t.suggest_float("y", -2, 2) ** 2
+
+        study.optimize(obj, n_trials=n)
+        return study
+
+    def test_wave_size_is_popsize_aware(self):
+        sampler = hpo.CmaEsSampler(warmup_trials=5, seed=0)
+        study = self._seeded_study(sampler)
+        d = 2
+        popsize = 4 + int(3 * np.log(d))
+        assert sampler.joint_wave_size(study, 64) == popsize
+        assert sampler.joint_wave_size(study, 3) == 3
+
+    def test_wave_size_passthrough_without_cma_space(self):
+        sampler = hpo.CmaEsSampler(warmup_trials=5, seed=0)
+        study = hpo.create_study(sampler=sampler)  # no history -> no space
+        assert sampler.joint_wave_size(study, 64) == 64
+
+    def test_first_number_keys_the_wave_rng(self):
+        sampler = hpo.CmaEsSampler(warmup_trials=5, seed=7)
+        study = self._seeded_study(sampler)
+        (group,) = observed_groups(study.observations())
+        a = sampler.sample_joint(study, group, 4, first_number=12)
+        b = sampler.sample_joint(study, group, 4, first_number=13)
+        c = sampler.sample_joint(study, group, 4, first_number=12)
+        assert not np.allclose(a, b)  # disjoint claims -> disjoint draws
+        assert np.allclose(a, c)      # same claim -> deterministic replay
+
+    def test_ask_wave_passes_first_pending_number(self):
+        seen = []
+
+        class Recording(hpo.CmaEsSampler):
+            def sample_joint(self, study, group, n, trial_ids=None, first_number=None):
+                seen.append(first_number)
+                return super().sample_joint(
+                    study, group, n, trial_ids=trial_ids, first_number=first_number
+                )
+
+        sampler = Recording(warmup_trials=5, seed=7)
+        study = self._seeded_study(sampler, n=12)
+        wave = study.ask(3)
+        assert seen and seen[-1] == wave[0].number
+        study._release_unrun(wave)
+
+    def test_legacy_sample_joint_signature_still_served(self):
+        """Custom samplers without the first_number kwarg keep working
+        through Study.ask(n) (the signature is probed, not assumed)."""
+        seen = []
+
+        class Legacy(hpo.RandomSampler):
+            def sample_joint(self, study, group, n, trial_ids=None):
+                seen.append(n)
+                return super().sample_joint(study, group, n, trial_ids=trial_ids)
+
+        study = hpo.create_study(sampler=Legacy(seed=0))
+
+        def obj(t):
+            return t.suggest_float("x", 0, 1) ** 2
+
+        study.optimize(obj, n_trials=2)
+        wave = study.ask(3)
+        assert seen == [3]
+        study._release_unrun(wave)

@@ -464,6 +464,36 @@ class TestFusedReportPrune:
         # the value still landed
         assert remote.get_trial(trial._trial_id).intermediate_values == {1: 1.0}
 
+    def test_multi_objective_report_is_one_round_trip(self, server):
+        """A multi-objective vector report through the Pareto-aware pruner
+        rides the same fused frame: scalarize client-side, one
+        report_and_prune RPC, decision cached for should_prune."""
+        remote = RemoteStorage(server.url)
+        counter = self._count_frames(remote)
+        study = hpo.create_study(
+            study_name="mo-fused", storage=remote,
+            directions=["minimize", "maximize"],
+            sampler=hpo.RandomSampler(seed=0),
+            pruner=hpo.ParetoPruner(hpo.MedianPruner(n_startup_trials=1)),
+        )
+        for vals in ([1.0, 5.0], [2.0, 4.0]):
+            t = study.ask()
+            t.suggest_float("x", 0, 1)
+            t.report(vals, 1)
+            study.tell(t, vals)
+        bad = study.ask()
+        bad.suggest_float("x", 0, 1)
+        counter["n"] = 0
+        bad.report([100.0, -100.0], 1)   # fused frame: scalarized write + decision
+        assert bad.should_prune()        # answered from the cached decision
+        assert counter["n"] == 1
+        good = study.ask()
+        good.suggest_float("x", 0, 1)
+        counter["n"] = 0
+        good.report([0.0, 100.0], 1)
+        assert not good.should_prune()
+        assert counter["n"] == 1
+
 
 class TestPrunerSpecCache:
     """The fused report's pruner spec is interned per (connection, study):
