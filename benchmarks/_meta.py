@@ -1,0 +1,48 @@
+"""Shared run metadata for every ``BENCH_*.json`` emitter.
+
+A benchmark row without provenance is unreproducible noise: when CI uploads
+the artifact, the consumer needs to know *which* commit, interpreter, and
+numpy produced the numbers before comparing runs.  Each emitter attaches
+``bench_metadata()`` under a ``"meta"`` key.
+"""
+
+from __future__ import annotations
+
+import platform
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+__all__ = ["bench_metadata"]
+
+
+def _git_rev() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        )
+        if out.returncode == 0:
+            rev = out.stdout.strip()
+            dirty = subprocess.run(
+                ["git", "status", "--porcelain"],
+                capture_output=True, text=True, timeout=10,
+            )
+            if dirty.returncode == 0 and dirty.stdout.strip():
+                rev += "-dirty"
+            return rev
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def bench_metadata() -> dict:
+    return {
+        "git_rev": _git_rev(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "python": sys.version.split()[0],
+        "numpy": np.__version__,
+        "platform": platform.platform(),
+    }

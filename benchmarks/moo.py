@@ -198,8 +198,13 @@ def main(argv=None) -> None:
     ap.add_argument("--out", default="BENCH_moo.json")
     args = ap.parse_args(argv)
 
+    try:
+        from ._meta import bench_metadata
+    except ImportError:  # run as a standalone script, not -m benchmarks.moo
+        from _meta import bench_metadata
+
     n_trials = args.trials if args.trials is not None else (200 if args.full else 60)
-    payload = {"dominance": dominance_speedup()}
+    payload = {"dominance": dominance_speedup(), "meta": bench_metadata()}
     if n_trials > 0:
         payload["quality"] = quality_curves(n_trials=n_trials)
     with open(args.out, "w") as f:

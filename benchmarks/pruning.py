@@ -318,6 +318,11 @@ def report_path_round_trips(n_steps: int = 16, n_peers: int = 8, verbose: bool =
 
 
 def write_bench_json(payload: dict, path: str = "BENCH_pruning.json") -> None:
+    try:
+        from ._meta import bench_metadata
+    except ImportError:  # run as a standalone script, not -m benchmarks.pruning
+        from _meta import bench_metadata
+    payload.setdefault("meta", bench_metadata())
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"[pruning] wrote {path}", flush=True)

@@ -310,6 +310,11 @@ def joint_quality(
 
 
 def write_bench_json(payload: dict, path: str = "BENCH_samplers.json") -> None:
+    try:
+        from ._meta import bench_metadata
+    except ImportError:  # run as a standalone script, not -m benchmarks.samplers
+        from _meta import bench_metadata
+    payload.setdefault("meta", bench_metadata())
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"[samplers] wrote {path}", flush=True)

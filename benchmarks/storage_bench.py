@@ -11,10 +11,21 @@ import threading
 import time
 
 import repro.core as hpo
+from repro.core import telemetry
 from repro.core.distributions import FloatDistribution
 from repro.core.frozen import StudyDirection, TrialState
 
-__all__ = ["run", "ask_latency", "moo_worker_storm"]
+__all__ = ["run", "ask_latency", "moo_worker_storm", "telemetry_overhead", "main"]
+
+
+def _percentiles(xs: "list[float]") -> dict:
+    """Nearest-rank p50/p95/p99 over a non-empty sample list."""
+    s = sorted(xs)
+
+    def q(p: float) -> float:
+        return s[min(len(s) - 1, int(round(p * (len(s) - 1))))]
+
+    return {"p50": q(0.50), "p95": q(0.95), "p99": q(0.99)}
 
 
 def _bench(storage, n_trials: int = 200, study_name: str = "bench"):
@@ -66,17 +77,21 @@ def ask_latency(n_trials: int = 1000, n_asks: int = 50, tmpdir: str = "/tmp/repr
             seed.set_trial_param(tid, "x", (i % 97) / 97.0, FloatDistribution(0, 1))
             seed.set_trial_state_values(tid, TrialState.COMPLETE, [float(i % 13)])
 
-        def time_asks(storage) -> float:
+        def time_asks(storage) -> "list[float]":
             storage.get_all_trials(sid, deepcopy=False)  # warm up / fill cache
-            t0 = time.time()
+            per_ask = []
             for _ in range(n_asks):
+                t0 = time.perf_counter()
                 trials = storage.get_all_trials(sid, deepcopy=False)
+                per_ask.append(time.perf_counter() - t0)
             assert len(trials) == n_trials
-            return (time.time() - t0) / n_asks
+            return per_ask
 
-        remote_s = time_asks(hpo.RemoteStorage(server.url))
-        cached_s = time_asks(hpo.CachedStorage(hpo.RemoteStorage(server.url)))
+        remote_ts = time_asks(hpo.RemoteStorage(server.url))
+        cached_ts = time_asks(hpo.CachedStorage(hpo.RemoteStorage(server.url)))
 
+    remote_s = sum(remote_ts) / len(remote_ts)
+    cached_s = sum(cached_ts) / len(cached_ts)
     speedup = remote_s / max(cached_s, 1e-9)
     row = {
         "n_trials": n_trials,
@@ -84,6 +99,8 @@ def ask_latency(n_trials: int = 1000, n_asks: int = 50, tmpdir: str = "/tmp/repr
         "cached_ask_ms": cached_s * 1e3,
         "cached_speedup": speedup,
     }
+    row.update({f"remote_ask_{k}_ms": v * 1e3 for k, v in _percentiles(remote_ts).items()})
+    row.update({f"cached_ask_{k}_ms": v * 1e3 for k, v in _percentiles(cached_ts).items()})
     if verbose:
         print(
             f"[ask@{n_trials}] remote={row['remote_ask_ms']:8.2f}ms "
@@ -159,6 +176,7 @@ def moo_worker_storm(
         )
         assert done == n_total, (done, n_total)
         tell_ms = sorted(ns / 1e6 for ns in tell_ns)
+        pcts = _percentiles(tell_ms)
         row = {
             "n_workers": n_workers,
             "n_objectives": n_objectives,
@@ -167,7 +185,12 @@ def moo_worker_storm(
             "wall_s": wall,
             "trials_per_sec": n_total / max(wall, 1e-9),
             "tell_batch_mean_ms": sum(tell_ms) / len(tell_ms),
-            "tell_batch_p95_ms": tell_ms[int(0.95 * (len(tell_ms) - 1))],
+            "tell_batch_p50_ms": pcts["p50"],
+            "tell_batch_p95_ms": pcts["p95"],
+            "tell_batch_p99_ms": pcts["p99"],
+            # server-side view of the same storm: per-RPC counts, latency
+            # percentiles and bytes shipped, straight from the metrics RPC
+            "server_metrics": server.get_server_metrics(),
         }
         if verbose:
             print(
@@ -182,7 +205,8 @@ def moo_worker_storm(
         server.stop()
 
 
-def run(tmpdir: str = "/tmp/repro_storage_bench", n_trials: int = 200, verbose: bool = True):
+def run(tmpdir: str = "/tmp/repro_storage_bench", n_trials: int = 200, verbose: bool = True,
+        storm_workers: int = 100):
     import os
     import shutil
 
@@ -213,5 +237,118 @@ def run(tmpdir: str = "/tmp/repro_storage_bench", n_trials: int = 200, verbose: 
         server.stop()
 
     rows["ask_latency"] = ask_latency(verbose=verbose)
-    rows["moo_worker_storm"] = moo_worker_storm(verbose=verbose)
+    rows["moo_worker_storm"] = moo_worker_storm(n_workers=storm_workers, verbose=verbose)
     return rows
+
+
+def telemetry_overhead(n_trials: int = 300, reps: int = 5, verbose: bool = True) -> dict:
+    """Pin the cost of the telemetry backbone on the hot path.
+
+    Runs the same in-memory ask/report/prune workload with the global
+    registry disabled (the production default) and enabled, and micro-times
+    a bare ``span()`` in both modes.  Acceptance: disabled overhead < 2%,
+    enabled < 5% of end-to-end optimize wall time.
+    """
+    def timed_run() -> float:
+        study = hpo.create_study(
+            sampler=hpo.RandomSampler(seed=0), pruner=hpo.MedianPruner(n_warmup_steps=0)
+        )
+
+        def obj(trial):
+            x = trial.suggest_float("x", 0, 1)
+            for step in range(3):
+                trial.report(x + 0.1 * step, step)
+                if trial.should_prune():
+                    raise hpo.TrialPruned()
+            return x
+
+        t0 = time.perf_counter()
+        study.optimize(obj, n_trials=n_trials)
+        return time.perf_counter() - t0
+
+    def span_ns(n: int = 100_000) -> float:
+        t0 = time.perf_counter_ns()
+        for _ in range(n):
+            with telemetry.span("bench.noop"):
+                pass
+        return (time.perf_counter_ns() - t0) / n
+
+    was_enabled = telemetry.enabled()
+    telemetry.disable()
+    try:
+        timed_run()  # warm caches / JIT-free but import-heavy first run
+        disabled_s = min(timed_run() for _ in range(reps))
+        disabled_span_ns = span_ns()
+        telemetry.enable()
+        enabled_s = min(timed_run() for _ in range(reps))
+        enabled_span_ns = span_ns()
+    finally:
+        telemetry.disable()
+        telemetry.reset()
+        if was_enabled:
+            telemetry.enable()
+    overhead_pct = (enabled_s - disabled_s) / max(disabled_s, 1e-9) * 100.0
+    row = {
+        "n_trials": n_trials,
+        "disabled_s": disabled_s,
+        "enabled_s": enabled_s,
+        "enabled_overhead_pct": overhead_pct,
+        "disabled_span_ns": disabled_span_ns,
+        "enabled_span_ns": enabled_span_ns,
+    }
+    if verbose:
+        print(
+            f"[telemetry] optimize({n_trials}) disabled={disabled_s*1e3:7.1f}ms "
+            f"enabled={enabled_s*1e3:7.1f}ms overhead={overhead_pct:+5.1f}% "
+            f"span={disabled_span_ns:.0f}ns off / {enabled_span_ns:.0f}ns on",
+            flush=True,
+        )
+    return row
+
+
+def main(argv=None) -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description="storage backend benchmarks")
+    ap.add_argument("--out", default="BENCH_storage.json")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="also dump the client-side telemetry.snapshot() "
+                         "accumulated across the benchmark run")
+    ap.add_argument("--trials", type=int, default=200,
+                    help="trials per backend in the ops/sec comparison")
+    ap.add_argument("--workers", type=int, default=100,
+                    help="concurrent workers in the multi-objective storm")
+    args = ap.parse_args(argv)
+
+    try:
+        from ._meta import bench_metadata
+    except ImportError:  # run as a standalone script, not -m benchmarks.storage_bench
+        from _meta import bench_metadata
+
+    # overhead row first: it needs exclusive control of the global registry
+    payload: dict = {"telemetry_overhead": telemetry_overhead()}
+
+    # the rest runs with telemetry on so --metrics-json captures the
+    # client-side view (per-RPC latency histograms, frame/byte counters)
+    telemetry.enable()
+    try:
+        rows = run(n_trials=args.trials, verbose=True, storm_workers=args.workers)
+        payload.update(rows)
+        snapshot = telemetry.snapshot()
+    finally:
+        telemetry.disable()
+        telemetry.reset()
+    payload["meta"] = bench_metadata()
+
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"[storage] wrote {args.out}", flush=True)
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(snapshot, f, indent=2, sort_keys=True)
+        print(f"[storage] wrote {args.metrics_json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

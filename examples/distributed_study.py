@@ -83,6 +83,15 @@ def main():
     print(f"total trials in study: {len(study.trials)}; best: {study.best_value:.5f} "
           f"at {study.best_params}")
     if server is not None:
+        # live telemetry surface: any RemoteStorage client (a dashboard, a
+        # fleet health check) can pull the same payload over the wire with
+        # RemoteStorage(url).get_server_metrics()
+        m = server.get_server_metrics()
+        print(f"server: {m['frames_in']} frames / {m['bytes_in']} bytes in, "
+              f"{m['bytes_out']} bytes out over {m['uptime_s']:.1f}s")
+        for name, row in sorted(m["methods"].items(), key=lambda kv: -kv[1]["calls"])[:5]:
+            print(f"  {name:28s} x{row['calls']:<5d} p50={row['p50']*1e3:.2f}ms "
+                  f"p99={row['p99']*1e3:.2f}ms")
         server.stop()
 
 

@@ -30,6 +30,7 @@ from .exceptions import DuplicatedStudyError, StorageInternalError, TrialPruned
 from .frozen import FrozenTrial, StudyDirection, TrialState
 from .importance import param_importances, spearman_importances
 from . import moo
+from . import telemetry
 from .records import ObservationStore
 from .pruners import (
     BasePruner,
@@ -83,6 +84,8 @@ __all__ = [
     "ParetoPruner", "make_pruner",
     # multi-objective engine
     "moo",
+    # observability
+    "telemetry",
     # storage
     "BaseStorage", "InMemoryStorage", "SQLiteStorage", "JournalStorage",
     "RemoteStorage", "CachedStorage", "StorageServer", "get_storage",

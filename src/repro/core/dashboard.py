@@ -225,7 +225,76 @@ def _pareto_svg(study: "Study") -> str:
     return _svg(_axis_frame() + pts + labels)
 
 
-def render_dashboard(study: "Study") -> str:
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024.0 or unit == "GiB":
+            return f"{n:.1f} {unit}" if unit != "B" else f"{int(n)} B"
+        n /= 1024.0
+    return f"{n:.1f} GiB"
+
+
+def _throughput_svg(samples: "list[float]", w: int = 320, h: int = 80) -> str:
+    """Sparkline of trial throughput (finished trials/s per poll tick)."""
+    if not samples:
+        return _svg('<text x="10" y="20" font-size="10">no samples yet</text>', w, h)
+    hi = max(max(samples), 1e-9)
+    sx = _scale(list(range(len(samples))), 0, max(len(samples) - 1, 1), 5, w - 5)
+    sy = _scale(samples, 0.0, hi, h - 15, 5)
+    line = _poly(list(zip(sx, sy)), "#2b8a3e", 1.5)
+    area = ""
+    if len(samples) >= 2:
+        pts = " ".join(f"{x:.1f},{y:.1f}" for x, y in zip(sx, sy))
+        area = (
+            f'<polygon fill="#2b8a3e" opacity="0.15" points="'
+            f'{sx[0]:.1f},{h-15} {pts} {sx[-1]:.1f},{h-15}"/>'
+        )
+    label = (
+        f'<text x="5" y="{h-4}" font-size="9">trials/s &middot; '
+        f"now {samples[-1]:.2f} &middot; peak {hi:.2f}</text>"
+    )
+    return _svg(area + line + label, w, h)
+
+
+def _metrics_panel_html(metrics: "dict | None") -> str:
+    """Server-side telemetry panel from a ``get_server_metrics`` payload."""
+    if not metrics:
+        return "<p>server metrics unavailable (storage has no metrics RPC)</p>"
+    up = metrics.get("uptime_s", 0.0)
+    summary = (
+        f"uptime {up:.0f}s &middot; "
+        f"connections {metrics.get('active_connections', 0)} active &middot; "
+        f"frames {metrics.get('frames_in', 0)} in / {metrics.get('frames_out', 0)} out &middot; "
+        f"{_fmt_bytes(metrics.get('bytes_in', 0))} in / {_fmt_bytes(metrics.get('bytes_out', 0))} out &middot; "
+        f"spec cache {metrics.get('spec_cache_hits', 0)} hits"
+    )
+    methods = metrics.get("methods", {})
+    if not methods:
+        return f"<p>{summary}</p><p>no RPCs served yet</p>"
+    head = (
+        "<tr><th>method</th><th>calls</th><th>errors</th><th>bytes out</th>"
+        "<th>p50 ms</th><th>p95 ms</th><th>p99 ms</th><th>max ms</th></tr>"
+    )
+    rows = []
+    for name in sorted(methods, key=lambda m: -methods[m].get("calls", 0)):
+        m = methods[name]
+        rows.append(
+            f"<tr><td>{html.escape(str(name))}</td><td>{m.get('calls', 0)}</td>"
+            f"<td>{m.get('errors', 0)}</td><td>{_fmt_bytes(m.get('bytes_out', 0))}</td>"
+            f"<td>{m.get('p50', 0.0) * 1e3:.2f}</td><td>{m.get('p95', 0.0) * 1e3:.2f}</td>"
+            f"<td>{m.get('p99', 0.0) * 1e3:.2f}</td><td>{m.get('max', 0.0) * 1e3:.2f}</td></tr>"
+        )
+    return (
+        f"<p>{summary}</p>"
+        '<table border="1" cellspacing="0" cellpadding="3" style="font-size:11px">'
+        f"{head}{''.join(rows)}</table>"
+    )
+
+
+def render_dashboard(
+    study: "Study",
+    server_metrics: "dict | None" = None,
+    throughput: "list[float] | None" = None,
+) -> str:
     n_by_state = {}
     for t in study.get_trials(deepcopy=False):
         n_by_state[t.state.name] = n_by_state.get(t.state.name, 0) + 1
@@ -243,12 +312,20 @@ def render_dashboard(study: "Study") -> str:
         f"<h2>Pareto front (objective space)</h2>{_pareto_svg(study)}"
         if len(directions) == 2 else ""
     )
+    live_section = ""
+    if server_metrics is not None or throughput is not None:
+        spark = _throughput_svg(throughput or [])
+        live_section = (
+            f"<h2>Live server metrics</h2>{spark}"
+            f"{_metrics_panel_html(server_metrics)}"
+        )
     return f"""<!doctype html>
 <html><head><meta charset="utf-8"><title>{html.escape(study.study_name)}</title>
 <style>body{{font-family:sans-serif;margin:20px}} h2{{margin-top:28px}}</style></head>
 <body>
 <h1>Study: {html.escape(study.study_name)}</h1>
 <p>direction: {dir_str} &middot; trials: {summary} &middot; best: {best}</p>
+{live_section}
 {pareto_section}
 <h2>Optimization history</h2>{_history_svg(study)}
 <h2>Learning curves (intermediate values)</h2>{_curves_svg(study)}
@@ -283,16 +360,61 @@ def main(argv: "list[str] | None" = None) -> None:
     ap.add_argument("out", help="output HTML path")
     ap.add_argument("--watch", type=float, default=0.0, metavar="SECONDS",
                     help="re-render every N seconds (0 = render once)")
+    ap.add_argument("--live", action="store_true",
+                    help="add the live panel: server metrics (when the storage"
+                         " exposes get_server_metrics) + throughput sparkline;"
+                         " polling is revision-gated, so idle ticks cost one"
+                         " counter RPC and skip the re-render")
+    ap.add_argument("--ticks", type=int, default=0, metavar="N",
+                    help="with --watch: stop after N polls (0 = forever);"
+                         " used by headless smoke tests")
     args = ap.parse_args(argv)
 
     # cache=True: render_dashboard reads the trial list several times per
     # tick, and --watch re-renders forever — fetch each finished trial once
-    study = load_study(args.study_name, get_storage(args.storage, cache=True))
+    storage = get_storage(args.storage, cache=True)
+    study = load_study(args.study_name, storage)
+    sid = study._study_id
+
+    def server_metrics():
+        fn = getattr(storage, "get_server_metrics", None)
+        if fn is None:
+            return None
+        try:
+            return fn()
+        except Exception:
+            return None
+
+    def n_finished():
+        return sum(
+            t.state.is_finished() for t in study.get_trials(deepcopy=False)
+        )
+
+    throughput: list[float] = []
+    last_rev, last_n, last_t = -1, n_finished(), time.monotonic()
+    tick = 0
     while True:
-        save_dashboard(study, args.out)
-        n = len(study.get_trials(deepcopy=False))  # cache-local, no extra RPC
-        print(f"rendered {n} trials -> {args.out}", flush=True)
-        if args.watch <= 0:
+        tick += 1
+        rev = storage.get_trials_revision(sid)
+        if args.live:
+            now = time.monotonic()
+            n = n_finished() if rev != last_rev else last_n
+            dt = max(now - last_t, 1e-9)
+            throughput.append((n - last_n) / dt if tick > 1 else 0.0)
+            throughput = throughput[-120:]
+            last_n, last_t = n, now
+        if rev != last_rev or tick == 1:
+            last_rev = rev
+            htm = render_dashboard(
+                study,
+                server_metrics=server_metrics() if args.live else None,
+                throughput=throughput if args.live else None,
+            )
+            with open(args.out, "w") as f:
+                f.write(htm)
+            n = len(study.get_trials(deepcopy=False))  # cache-local, no extra RPC
+            print(f"rendered {n} trials -> {args.out}", flush=True)
+        if args.watch <= 0 or (args.ticks and tick >= args.ticks):
             break
         time.sleep(args.watch)
 

@@ -27,18 +27,31 @@ __all__ = ["param_importances", "spearman_importances"]
 
 
 def _collect(study: "Study"):
+    # Importance is defined for single-objective studies only: with multiple
+    # objectives there is no scalar target to attribute variance to, so the
+    # evaluators degrade to an empty result instead of silently ranking
+    # against the first objective (or raising on trials with empty values).
+    if len(study.directions) != 1:
+        return [], []
     trials = [
         t
         for t in study.get_trials(deepcopy=False, states=(TrialState.COMPLETE,))
-        if t.values is not None and np.isfinite(t.values[0])
+        if t.values is not None and len(t.values) >= 1 and np.isfinite(t.values[0])
     ]
     names = sorted({n for t in trials for n in t.params})
     return trials, names
 
 
 def param_importances(study: "Study", n_bins: int = 8) -> dict[str, float]:
-    """Main-effect variance ratio per parameter (one-way fANOVA on bins)."""
+    """Main-effect variance ratio per parameter (one-way fANOVA on bins).
+
+    Degrades gracefully: multi-objective studies and studies with fewer than
+    two usable COMPLETE trials yield ``{}`` (nothing to attribute) rather
+    than raising.
+    """
     trials, names = _collect(study)
+    if len(trials) < 2:
+        return {}
     if len(trials) < 4:
         return {n: 0.0 for n in names}
     y = np.array([t.values[0] for t in trials], dtype=float)
@@ -87,7 +100,11 @@ def param_importances(study: "Study", n_bins: int = 8) -> dict[str, float]:
 
 
 def spearman_importances(study: "Study") -> dict[str, float]:
+    """|Spearman rank correlation| per parameter; same degradation rules as
+    :func:`param_importances` (``{}`` on multi-objective / <2 trials)."""
     trials, names = _collect(study)
+    if len(trials) < 2:
+        return {}
     if len(trials) < 4:
         return {n: 0.0 for n in names}
     y = np.array([t.values[0] for t in trials], dtype=float)

@@ -51,6 +51,7 @@ from typing import TYPE_CHECKING
 
 import numpy as np
 
+from . import telemetry
 from .frozen import TrialState
 from .storage.base import get_trials_since
 
@@ -147,7 +148,9 @@ class ObservationStore:
         with self._lock:
             rev = _poll_revision(self)
             if rev is not None and rev == self._revision:
+                telemetry.inc("records.obs.refresh.noop")
                 return
+            telemetry.inc("records.obs.refresh.fetch")
             if self._n_objectives is None:
                 # directions are immutable after study creation: one fetch
                 # sizes the values matrix for the store's whole lifetime
@@ -556,7 +559,9 @@ class IntermediateValueStore:
                 # a note may land *after* the write it describes was already
                 # fetched under this revision — the dirty check above keeps
                 # that row from going stale until the next unrelated mutation
+                telemetry.inc("records.iv.refresh.noop")
                 return
+            telemetry.inc("records.iv.refresh.fetch")
             fresh = get_trials_since(
                 self._storage, self._study_id, self._watermark, deepcopy=False
             )
@@ -618,6 +623,8 @@ class IntermediateValueStore:
             self.reencode_count += 1
         self._dirty.clear()
         self._dirty_unknown = False
+        if rows:
+            telemetry.inc("records.iv.rows_reencoded", len(rows))
         while self._watermark < self._n_rows and TrialState(
             self._states[self._watermark]
         ).is_finished():

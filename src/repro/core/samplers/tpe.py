@@ -34,6 +34,7 @@ from typing import TYPE_CHECKING, Any, Callable
 
 import numpy as np
 
+from .. import telemetry
 from ..distributions import BaseDistribution, CategoricalDistribution
 from ..frozen import FrozenTrial, StudyDirection, TrialState
 from .base import BaseSampler, sample_uniform_internal
@@ -698,16 +699,17 @@ class TPESampler(BaseSampler):
         cached = self._fit
         if cached is not None and cached[0] == key:
             return cached[1]
-        sign = 1.0 if study.direction == StudyDirection.MINIMIZE else -1.0
-        complete = states == int(TrialState.COMPLETE)
-        with np.errstate(invalid="ignore"):
-            valid = complete & np.isfinite(values)
-            loss = sign * values
-            if self._consider_pruned:
-                pruned = (states == int(TrialState.PRUNED)) & np.isfinite(last_iv)
-                valid = valid | pruned
-                loss = np.where(complete, loss, sign * last_iv)
-        fit = _TrialFit(version, cols, valid, loss, self._gamma, self._weights)
+        with telemetry.span("tpe.fit"):
+            sign = 1.0 if study.direction == StudyDirection.MINIMIZE else -1.0
+            complete = states == int(TrialState.COMPLETE)
+            with np.errstate(invalid="ignore"):
+                valid = complete & np.isfinite(values)
+                loss = sign * values
+                if self._consider_pruned:
+                    pruned = (states == int(TrialState.PRUNED)) & np.isfinite(last_iv)
+                    valid = valid | pruned
+                    loss = np.where(complete, loss, sign * last_iv)
+            fit = _TrialFit(version, cols, valid, loss, self._gamma, self._weights)
         self._fit = (key, fit)
         return fit
 
@@ -778,6 +780,10 @@ class TPESampler(BaseSampler):
         return version, n_obs, Mi[below_pos], Mi[above_pos], w_below, w_above
 
     def _joint_score(self, l_est: _GroupParzen, g_est: _GroupParzen, cands: np.ndarray) -> np.ndarray:
+        with telemetry.span("tpe.score"):
+            return self._joint_score_inner(l_est, g_est, cands)
+
+    def _joint_score_inner(self, l_est: _GroupParzen, g_est: _GroupParzen, cands: np.ndarray) -> np.ndarray:
         if self._jit_scoring and not l_est.cat_dims:
             try:
                 return np.asarray(
@@ -813,6 +819,12 @@ class TPESampler(BaseSampler):
             return None
         if len(study.directions) > 1 and not self._multi_objective:
             return None
+        with telemetry.span("tpe.sample_joint"):
+            return self._sample_joint_inner(study, group, n)
+
+    def _sample_joint_inner(
+        self, study: "Study", group: "ParamGroup", n: int
+    ) -> "np.ndarray | None":
         names = list(group.names)
         # cache lookup first: back-to-back waves on one store version reuse
         # the fitted estimators without re-running the split at all
@@ -931,6 +943,10 @@ class TPESampler(BaseSampler):
         return param_distribution.to_external_repr(internal)
 
     def _score(self, l_est: _ParzenEstimator, g_est: _ParzenEstimator, cands: np.ndarray) -> np.ndarray:
+        with telemetry.span("tpe.score"):
+            return self._score_inner(l_est, g_est, cands)
+
+    def _score_inner(self, l_est: _ParzenEstimator, g_est: _ParzenEstimator, cands: np.ndarray) -> np.ndarray:
         if self._jit_scoring:
             try:
                 return np.asarray(

@@ -21,10 +21,20 @@ import datetime
 import threading
 from typing import Any, Iterable
 
+from .. import telemetry
 from ..distributions import BaseDistribution
 from ..frozen import FrozenTrial, StudyDirection, TrialState
 
 __all__ = ["BaseStorage", "StudySummary", "get_trials_since"]
+
+# TrialState -> lifecycle event kind for successful set_trial_state_values
+# transitions (WAITING releases are bookkeeping, not lifecycle — no event)
+_STATE_EVENTS = {
+    int(TrialState.RUNNING): telemetry.EV_CLAIMED,
+    int(TrialState.COMPLETE): telemetry.EV_COMPLETED,
+    int(TrialState.PRUNED): telemetry.EV_PRUNED,
+    int(TrialState.FAIL): telemetry.EV_FAILED,
+}
 
 
 class StudySummary:
@@ -149,16 +159,17 @@ class BaseStorage:
         one RPC and :class:`CachedStorage` batches it with any buffered
         write-behind ops.
         """
-        self.set_trial_intermediate_value(trial_id, int(step), float(value))
-        if pruner_spec.get("name") in ("nop", "none"):
-            return False  # nothing to rank: skip the store refresh entirely
-        from ..pruners import pruner_from_spec
+        with telemetry.span("storage.report_and_prune"):
+            self.set_trial_intermediate_value(trial_id, int(step), float(value))
+            if pruner_spec.get("name") in ("nop", "none"):
+                return False  # nothing to rank: skip the store refresh entirely
+            from ..pruners import pruner_from_spec
 
-        pruner = pruner_from_spec(pruner_spec)
-        store = self._intermediate_store(study_id)
-        store.refresh()
-        trial = self.get_trial(trial_id)
-        return bool(pruner.decide(StudyDirection(direction), store, trial))
+            pruner = pruner_from_spec(pruner_spec)
+            store = self._intermediate_store(study_id)
+            store.refresh()
+            trial = self.get_trial(trial_id)
+            return bool(pruner.decide(StudyDirection(direction), store, trial))
 
     def _intermediate_store(self, study_id: int):
         """The per-study intermediate-value store hosted on this backend,
@@ -208,6 +219,53 @@ class BaseStorage:
             stores = self.__dict__.get("_iv_stores")
             if stores is not None:
                 stores.pop(study_id, None)
+
+    # -- trial lifecycle event trace -------------------------------------------
+
+    # class-level: guards lazy creation of per-instance event-log dicts
+    # (same hosting pattern as the intermediate-value stores above)
+    _event_logs_lock = threading.Lock()
+
+    def _event_log(self, study_id: int) -> "telemetry.TrialEventLog":
+        with BaseStorage._event_logs_lock:
+            logs = self.__dict__.setdefault("_event_logs", {})
+            log = logs.get(study_id)
+            if log is None:
+                logs[study_id] = log = telemetry.TrialEventLog()
+            return log
+
+    def _record_event(
+        self, study_id: int, kind: int, number: int, step: int = -1
+    ) -> None:
+        """Append one lifecycle event to the study's hosted trace.  Backends
+        call this from their mutation methods **after releasing their own
+        lock** (the log takes its own leaf lock; keeping the orders disjoint
+        mirrors the ``_note_iv_dirty`` rule)."""
+        self._event_log(study_id).append(kind, number, step=step)
+
+    def _record_state_event(
+        self, study_id: int, state: TrialState, number: int
+    ) -> None:
+        """Event for a *successful* ``set_trial_state_values`` transition:
+        RUNNING means the trial was claimed, finished states map directly;
+        a WAITING (re-)release is queue bookkeeping and records nothing."""
+        kind = _STATE_EVENTS.get(int(state))
+        if kind is not None:
+            self._record_event(study_id, kind, number)
+
+    def get_trial_events(self, study_id: int, since: int = 0) -> dict[str, Any]:
+        """Columnar trial-lifecycle trace of a study, from event ``since`` on
+        (:meth:`telemetry.TrialEventLog.snapshot` wire format: parallel JSON
+        lists + interned worker table).  The trace lives on the backend that
+        executed the mutations, so over ``remote://`` one RPC returns the
+        server-side fleet-wide sequence."""
+        return self._event_log(study_id).snapshot(since)
+
+    def _drop_event_log(self, study_id: int) -> None:
+        with BaseStorage._event_logs_lock:
+            logs = self.__dict__.get("_event_logs")
+            if logs is not None:
+                logs.pop(study_id, None)
 
     def set_trial_user_attr(self, trial_id: int, key: str, value: Any) -> None:
         raise NotImplementedError

@@ -28,6 +28,7 @@ import copy
 import threading
 from typing import Any, Iterable
 
+from .. import telemetry
 from ..distributions import BaseDistribution, check_distribution_compatibility
 from ..frozen import FrozenTrial, StudyDirection, TrialState
 from .base import BaseStorage, StudySummary, get_trials_since
@@ -257,13 +258,16 @@ class CachedStorage(BaseStorage):
         with self._lock:
             t = self._own.get(trial_id)
             if t is not None:
+                telemetry.inc("cached.get_trial.hit_own")
                 return copy.deepcopy(t)
             loc = self._index.get(trial_id)
             if loc is not None:
                 sid, number = loc
                 cache = self._studies.get(sid)
                 if cache is not None and number < cache.watermark:
+                    telemetry.inc("cached.get_trial.hit_finished")
                     return copy.deepcopy(cache.trials[number])  # finished, immutable
+        telemetry.inc("cached.get_trial.miss")
         return self._backend.get_trial(trial_id)
 
     def get_all_trials(
@@ -297,9 +301,11 @@ class CachedStorage(BaseStorage):
             except NotImplementedError:
                 self._revision_supported = False
         if rev is not None and rev == cache.revision:
+            telemetry.inc("cached.refresh.noop")  # revision-gated skip
             return cache
         # read the revision before the data: writes landing between the two
         # reads show up as a fresh revision on the next refresh
+        telemetry.inc("cached.refresh.fetch")
         fresh = get_trials_since(self._backend, study_id, cache.watermark, deepcopy=False)
         for t in fresh:
             if t.trial_id in self._own:
@@ -347,6 +353,16 @@ class CachedStorage(BaseStorage):
 
     def fail_stale_trials(self, study_id: int, grace_seconds: float) -> list[int]:
         return self._backend.fail_stale_trials(study_id, grace_seconds)
+
+    def get_trial_events(self, study_id: int, since: int = 0) -> dict[str, Any]:
+        """Lifecycle events live where the mutations execute — the backend."""
+        return self._backend.get_trial_events(study_id, since)
+
+    def get_server_metrics(self) -> dict[str, Any]:
+        fn = getattr(self._backend, "get_server_metrics", None)
+        if fn is None:
+            raise NotImplementedError("backend has no server metrics surface")
+        return fn()
 
     def close(self) -> None:
         self.flush()

@@ -29,6 +29,7 @@ import threading
 import time
 from typing import Any, Iterable
 
+from .. import telemetry
 from ..exceptions import (
     DuplicatedStudyError,
     RetryableStorageError,
@@ -125,6 +126,10 @@ class RemoteStorage(BaseStorage):
         if sock is None:
             sock = socket.create_connection((self._host, self._port), timeout=self._timeout)
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            telemetry.inc("client.connects")
+            if getattr(self._local, "ever_connected", False):
+                telemetry.inc("client.reconnects")  # re-dial after a torn socket
+            self._local.ever_connected = True
             self._local.sock = sock
             if self._auth_token is not None:
                 self._authenticate(sock)
@@ -185,6 +190,8 @@ class RemoteStorage(BaseStorage):
         try:
             send_frame(sock, payload)
             sent = True
+            telemetry.inc("client.frames_out")
+            telemetry.inc("client.bytes_out", len(payload))
             body = recv_frame(sock)
         except (OSError, ConnectionError) as e:
             self._drop_sock()
@@ -195,6 +202,8 @@ class RemoteStorage(BaseStorage):
             e = ConnectionError("server closed the connection")
             e._rpc_sent = True  # type: ignore[attr-defined]
             raise e
+        telemetry.inc("client.frames_in")
+        telemetry.inc("client.bytes_in", len(body))
         return json.loads(body)
 
     def _call_raw(self, request: Any, *, idempotent: bool) -> Any:
@@ -214,6 +223,7 @@ class RemoteStorage(BaseStorage):
                         f"request was sent; cannot safely retry: {e}"
                     ) from e
                 if attempt < self._retries - 1:
+                    telemetry.inc("client.retries")
                     time.sleep(0.05 * (attempt + 1))
         raise RetryableStorageError(f"cannot reach storage server {self._url}: {last}") from last
 
@@ -256,6 +266,16 @@ class RemoteStorage(BaseStorage):
         return isinstance(e, ValueError) and "pruner spec ref" in str(e)
 
     def _call(self, method: str, *params: Any) -> Any:
+        # per-method RPC latency: measured around the full retry loop, so a
+        # re-dialed call's percentiles include what the worker actually waited
+        t0 = time.perf_counter() if telemetry.enabled() else 0.0
+        try:
+            return self._call_timed(method, params)
+        finally:
+            if telemetry.enabled():
+                telemetry.observe(f"client.rpc.{method}", time.perf_counter() - t0)
+
+    def _call_timed(self, method: str, params: tuple) -> Any:
         for attempt in (0, 1):
             encoded = self._encode_params(method, list(params))
             request = {"id": self._req_id(), "method": method, "params": pack(encoded)}
@@ -283,6 +303,11 @@ class RemoteStorage(BaseStorage):
         the replay is safe.
         """
         idempotent = all(m not in _NON_IDEMPOTENT for m, _ in calls)
+        telemetry.inc("client.batched_ops", len(calls))
+        with telemetry.span("client.rpc.call_batch"):
+            return self._call_batch_inner(calls, idempotent)
+
+    def _call_batch_inner(self, calls: list[tuple[str, tuple]], idempotent: bool) -> list[Any]:
         for attempt in (0, 1):
             request = [
                 {
@@ -427,6 +452,19 @@ class RemoteStorage(BaseStorage):
 
     def fail_stale_trials(self, study_id: int, grace_seconds: float) -> list[int]:
         return self._call("fail_stale_trials", study_id, float(grace_seconds))
+
+    # -- telemetry ---------------------------------------------------------------
+
+    def get_trial_events(self, study_id: int, since: int = 0) -> dict[str, Any]:
+        """The server-side trial-lifecycle trace (columnar wire dict): events
+        from every worker of the fleet, in server execution order."""
+        return self._call("get_trial_events", study_id, int(since))
+
+    def get_server_metrics(self) -> dict[str, Any]:
+        """The server's always-on metrics surface (see
+        ``_RPCServer.server_metrics``): per-method call counts / latency
+        percentiles / bytes, active connections, auth failures, cache hits."""
+        return self._call("get_server_metrics")
 
     # -- misc ---------------------------------------------------------------------
 

@@ -12,6 +12,7 @@ import threading
 import time
 from typing import Any, Iterable
 
+from .. import telemetry as _telemetry
 from ..distributions import BaseDistribution, check_distribution_compatibility
 from ..exceptions import DuplicatedStudyError, StudyNotFoundError, TrialNotFoundError
 from ..frozen import FrozenTrial, StudyDirection, TrialState
@@ -59,6 +60,7 @@ class InMemoryStorage(BaseStorage):
             del self._study_name_to_id[rec.name]
             del self._studies[study_id]
         self._drop_intermediate_store(study_id)
+        self._drop_event_log(study_id)
 
     def get_study_id_from_name(self, study_name: str) -> int:
         with self._lock:
@@ -124,7 +126,9 @@ class InMemoryStorage(BaseStorage):
             rec.trials.append(t)
             self._trial_index[tid] = (study_id, number)
             rec.revision += 1
-            return tid
+        # outside the backend lock: the event log takes its own leaf lock
+        self._record_event(study_id, _telemetry.EV_CREATED, number)
+        return tid
 
     def _get_study(self, study_id: int) -> _StudyRecord:
         if study_id not in self._studies:
@@ -172,7 +176,9 @@ class InMemoryStorage(BaseStorage):
                 t.datetime_complete = self._now()
                 self._heartbeats.pop(trial_id, None)
             self._bump_revision(trial_id)
-            return True
+            sid, number = self._trial_index[trial_id]
+        self._record_state_event(sid, state, number)
+        return True
 
     def set_trial_intermediate_value(self, trial_id: int, step: int, intermediate_value: float) -> None:
         with self._lock:
@@ -180,9 +186,10 @@ class InMemoryStorage(BaseStorage):
             self._check_not_finished(t)
             t.intermediate_values[int(step)] = float(intermediate_value)
             self._bump_revision(trial_id)
-            sid, _ = self._trial_index[trial_id]
+            sid, number = self._trial_index[trial_id]
         # outside the backend lock: hosted IV stores lock store-first
         self._note_iv_dirty(trial_id, sid)
+        self._record_event(sid, _telemetry.EV_REPORTED, number, step=int(step))
 
     def set_trial_user_attr(self, trial_id: int, key: str, value: Any) -> None:
         with self._lock:

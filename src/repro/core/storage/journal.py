@@ -21,6 +21,7 @@ import time
 import uuid
 from typing import Any, Iterable
 
+from .. import telemetry as _telemetry
 from ..distributions import (
     BaseDistribution,
     check_distribution_compatibility,
@@ -288,6 +289,7 @@ class JournalStorage(BaseStorage):
     def delete_study(self, study_id: int) -> None:
         self._append({"op": _DELETE_STUDY, "study_id": study_id})
         self._drop_intermediate_store(study_id)
+        self._drop_event_log(study_id)
 
     def get_study_id_from_name(self, study_name: str) -> int:
         self._sync()
@@ -366,7 +368,11 @@ class JournalStorage(BaseStorage):
                 body["system_attrs"] = template_trial.system_attrs
             return body, tid
 
-        return self._append_with(op)
+        tid = self._append_with(op)
+        with self._mem_lock:
+            number = self._replay.trials[tid].number
+        self._record_event(study_id, _telemetry.EV_CREATED, number)
+        return tid
 
     def set_trial_param(
         self, trial_id: int, param_name: str, param_value_internal: float,
@@ -399,7 +405,14 @@ class JournalStorage(BaseStorage):
             }
             return body, ok
 
-        return self._append_with(op)
+        ok = self._append_with(op)
+        if ok:
+            with self._mem_lock:
+                sid = self._replay.trial_study.get(trial_id)
+                number = self._replay.trials[trial_id].number
+            if sid is not None:
+                self._record_state_event(sid, state, number)
+        return ok
 
     def set_trial_intermediate_value(self, trial_id: int, step: int, intermediate_value: float) -> None:
         with self._mem_lock:
@@ -412,7 +425,10 @@ class JournalStorage(BaseStorage):
         })
         with self._mem_lock:
             sid = self._replay.trial_study.get(trial_id)
+            number = self._replay.trials[trial_id].number
         self._note_iv_dirty(trial_id, sid)  # after append: stores lock store-first
+        if sid is not None:
+            self._record_event(sid, _telemetry.EV_REPORTED, number, step=int(step))
 
     def set_trial_user_attr(self, trial_id: int, key: str, value: Any) -> None:
         self._append({"op": _SET_TATTR, "trial_id": trial_id, "sys": 0, "key": key, "value": value})

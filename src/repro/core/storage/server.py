@@ -33,6 +33,7 @@ import threading
 import time
 from typing import Any
 
+from .. import telemetry
 from .base import BaseStorage, get_trials_since
 from .serde import pack, unpack
 
@@ -69,6 +70,7 @@ _METHODS = frozenset(
         "get_stale_trial_ids",
         "fail_stale_trials",
         "get_trials_revision",
+        "get_trial_events",
     }
 )
 
@@ -126,9 +128,21 @@ def _recv_exact(sock: socket.socket, n: int, allow_idle_timeout: bool) -> bytes 
 
 class _Handler(socketserver.BaseRequestHandler):
     def handle(self) -> None:
+        server: "_RPCServer" = self.server  # type: ignore[assignment]
+        metrics = server.metrics
+        metrics.gauge("server.active_connections").add(1)
+        # events the wrapped backend records on this thread carry the *client*
+        # identity, so a fleet-wide trace attributes work to its worker
+        telemetry.set_worker_context("%s:%s" % self.client_address[:2])
+        try:
+            self._serve(server, metrics)
+        finally:
+            telemetry.set_worker_context(None)
+            metrics.gauge("server.active_connections").add(-1)
+
+    def _serve(self, server: "_RPCServer", metrics: telemetry.MetricsRegistry) -> None:
         sock: socket.socket = self.request
         sock.settimeout(0.5)  # so the loop notices server shutdown promptly
-        server: "_RPCServer" = self.server  # type: ignore[assignment]
         authed = server.auth_token is None
         # per-connection interned pruner specs (client sends each spec once
         # as __spec_def__, then short __spec_ref__ frames; see client.py)
@@ -142,6 +156,8 @@ class _Handler(socketserver.BaseRequestHandler):
                 return
             if payload is None:
                 return
+            metrics.counter("server.frames_in").inc()
+            metrics.counter("server.bytes_in").inc(len(payload))
             try:
                 request = json.loads(payload)
             except json.JSONDecodeError:
@@ -156,6 +172,7 @@ class _Handler(socketserver.BaseRequestHandler):
                     responses = [{"id": request.get("id"), "ok": True, "result": "ok"}]
                     batch = False
                 else:
+                    metrics.counter("server.auth_failures").inc()
                     responses = [
                         {
                             "id": request.get("id") if isinstance(request, dict) else None,
@@ -170,11 +187,20 @@ class _Handler(socketserver.BaseRequestHandler):
                     drop_after_reply = True
             else:
                 batch = isinstance(request, list)
+                t0 = time.perf_counter()
                 responses = [
                     server.dispatch(r, conn_specs)
                     for r in (request if batch else [request])
                 ]
             out = json.dumps(responses if batch else responses[0]).encode()
+            if batch:
+                # the whole-frame view of a batched flush (tell_batch, the
+                # write-behind drain): per-op latencies are recorded by
+                # dispatch; this row pins the envelope cost clients feel
+                server._note_rpc("batch", t0, len(out))
+                metrics.counter("server.batched_ops").inc(len(responses))
+            metrics.counter("server.frames_out").inc()
+            metrics.counter("server.bytes_out").inc(len(out))
             try:
                 sock.settimeout(30.0)
                 send_frame(sock, out)
@@ -230,10 +256,15 @@ class _RPCServer(socketserver.ThreadingTCPServer):
         self.storage = storage
         self.auth_token = auth_token
         self.stopping = threading.Event()
+        # always-on, server-owned registry: get_server_metrics must work
+        # without globally enabling client-side telemetry in this process
+        self.metrics = telemetry.MetricsRegistry(enabled=True)
+        self.started_at = time.time()
 
     def dispatch(self, request: dict, conn_specs: "dict[int, dict] | None" = None) -> dict:
         req_id = request.get("id")
         method = request.get("method")
+        t0 = time.perf_counter()
         try:
             if method == "ping":
                 return {"id": req_id, "ok": True, "result": "pong"}
@@ -241,23 +272,72 @@ class _RPCServer(socketserver.ThreadingTCPServer):
                 # reaching dispatch means no token is required (or the
                 # connection already authenticated); accept idempotently
                 return {"id": req_id, "ok": True, "result": "ok"}
+            if method == "get_server_metrics":
+                return {"id": req_id, "ok": True, "result": self.server_metrics()}
             if method not in _METHODS:
                 raise ValueError(f"unknown storage method {method!r}")
             params = unpack(request.get("params") or [])
             if method == "report_and_prune":
+                spec = params[4] if len(params) > 4 and isinstance(params[4], dict) else None
+                if spec is not None and "__spec_ref__" in spec:
+                    self.metrics.counter("server.spec_cache.hits").inc()
+                elif spec is not None and "__spec_def__" in spec:
+                    self.metrics.counter("server.spec_cache.defs").inc()
                 params = _resolve_spec(params, conn_specs)
             result = self._invoke(method, params)
             response = {"id": req_id, "ok": True, "result": pack(result)}
             # an unserializable result must become a typed error frame, not a
             # dropped connection (the client would silently retry + misreport)
-            json.dumps(response)
+            # — the dump doubles as the per-method response-size sample
+            blob = json.dumps(response)
+            self._note_rpc(method, t0, len(blob))
             return response
         except Exception as e:  # every failure maps to a typed client-side raise
+            self._note_rpc(method, t0, 0, error=True)
             return {
                 "id": req_id,
                 "ok": False,
                 "error": {"type": type(e).__name__, "message": str(e)},
             }
+
+    def _note_rpc(self, method: Any, t0: float, nbytes: int, error: bool = False) -> None:
+        name = method if isinstance(method, str) else "invalid"
+        self.metrics.counter(f"server.rpc.{name}.calls").inc()
+        self.metrics.histogram(f"server.rpc.{name}").observe(time.perf_counter() - t0)
+        if nbytes:
+            self.metrics.counter(f"server.rpc.{name}.bytes_out").inc(nbytes)
+        if error:
+            self.metrics.counter(f"server.rpc.{name}.errors").inc()
+
+    def server_metrics(self) -> dict[str, Any]:
+        """JSON-safe metrics surface: per-method call counts / latency
+        percentiles / bytes plus connection- and cache-level counters."""
+        snap = self.metrics.snapshot()
+        counters = snap["counters"]
+        methods: dict[str, Any] = {}
+        for name, h in snap["histograms"].items():
+            if not name.startswith("server.rpc."):
+                continue
+            m = name[len("server.rpc."):]
+            methods[m] = {
+                "calls": counters.get(f"server.rpc.{m}.calls", 0),
+                "errors": counters.get(f"server.rpc.{m}.errors", 0),
+                "bytes_out": counters.get(f"server.rpc.{m}.bytes_out", 0),
+                **{k: h[k] for k in ("count", "mean", "p50", "p95", "p99", "max")},
+            }
+        return {
+            "uptime_s": time.time() - self.started_at,
+            "active_connections": snap["gauges"].get("server.active_connections", 0),
+            "auth_failures": counters.get("server.auth_failures", 0),
+            "frames_in": counters.get("server.frames_in", 0),
+            "frames_out": counters.get("server.frames_out", 0),
+            "bytes_in": counters.get("server.bytes_in", 0),
+            "bytes_out": counters.get("server.bytes_out", 0),
+            "spec_cache_hits": counters.get("server.spec_cache.hits", 0),
+            "spec_cache_defs": counters.get("server.spec_cache.defs", 0),
+            "batched_ops": counters.get("server.batched_ops", 0),
+            "methods": methods,
+        }
 
     def _invoke(self, method: str, params: list[Any]) -> Any:
         if method in ("get_all_trials", "get_n_trials"):
@@ -332,6 +412,13 @@ class StorageServer:
     @property
     def url(self) -> str:
         return f"remote://{self.host}:{self.port}"
+
+    def get_server_metrics(self) -> dict[str, Any]:
+        """The live metrics surface (same payload the ``get_server_metrics``
+        RPC returns to :class:`RemoteStorage` clients)."""
+        if self._server is None:
+            raise RuntimeError("server not started")
+        return self._server.server_metrics()
 
     def stop(self) -> None:
         if self._server is None:

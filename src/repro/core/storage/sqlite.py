@@ -24,6 +24,7 @@ import threading
 import time
 from typing import Any, Iterable
 
+from .. import telemetry as _telemetry
 from ..distributions import (
     BaseDistribution,
     check_distribution_compatibility,
@@ -191,6 +192,7 @@ class SQLiteStorage(BaseStorage):
             cur.execute("DELETE FROM study_revisions WHERE study_id=?", (study_id,))
             cur.execute("DELETE FROM studies WHERE study_id=?", (study_id,))
         self._drop_intermediate_store(study_id)
+        self._drop_event_log(study_id)
 
     @_retry
     def get_study_id_from_name(self, study_name: str) -> int:
@@ -300,7 +302,9 @@ class SQLiteStorage(BaseStorage):
                 for k, v in t.system_attrs.items():
                     cur.execute("INSERT INTO trial_attrs VALUES (?, 1, ?, ?)", (tid, k, json.dumps(v)))
             self._bump_revision(cur, study_id)
-            return tid
+        # after commit: the event log takes its own leaf lock
+        self._record_event(study_id, _telemetry.EV_CREATED, number)
+        return tid
 
     @staticmethod
     def _bump_revision(cur: sqlite3.Cursor, study_id: int) -> None:
@@ -363,7 +367,13 @@ class SQLiteStorage(BaseStorage):
             if state.is_finished():
                 cur.execute("DELETE FROM trial_heartbeats WHERE trial_id=?", (trial_id,))
             self._bump_revision_for_trial(cur, trial_id)
-            return True
+            cur.execute(
+                "SELECT study_id, number FROM trials WHERE trial_id=?", (trial_id,)
+            )
+            row = cur.fetchone()
+        if row is not None:
+            self._record_state_event(row[0], state, row[1])
+        return True
 
     @_retry
     def set_trial_intermediate_value(self, trial_id: int, step: int, intermediate_value: float) -> None:
@@ -375,10 +385,14 @@ class SQLiteStorage(BaseStorage):
                 (trial_id, int(step), float(intermediate_value)),
             )
             self._bump_revision_for_trial(cur, trial_id)
-            cur.execute("SELECT study_id FROM trials WHERE trial_id=?", (trial_id,))
+            cur.execute(
+                "SELECT study_id, number FROM trials WHERE trial_id=?", (trial_id,)
+            )
             row = cur.fetchone()
         # after commit: stores lock store-first
         self._note_iv_dirty(trial_id, row[0] if row is not None else None)
+        if row is not None:
+            self._record_event(row[0], _telemetry.EV_REPORTED, row[1], step=int(step))
 
     def _set_trial_attr(self, trial_id: int, key: str, value: Any, is_system: int) -> None:
         with self._tx() as cur:

@@ -19,8 +19,10 @@ from typing import Any, Callable, Iterable, Sequence
 
 import numpy as np
 
+from . import telemetry
 from .exceptions import DuplicatedStudyError, TrialPruned
 from .frozen import FrozenTrial, StudyDirection, TrialState
+from .log import get_logger, log_once
 from .pruners import BasePruner, NopPruner
 from .records import IntermediateValueStore, ObservationStore
 from .samplers import BaseSampler, TPESampler
@@ -32,7 +34,7 @@ __all__ = ["Study", "create_study", "load_study", "delete_study"]
 
 ObjectiveFunc = Callable[[Trial], float]
 
-_log = logging.getLogger(__name__)
+_log = get_logger(__name__)
 
 
 class Study:
@@ -195,33 +197,34 @@ class Study:
         (``create_new_trials`` batches over ``remote://``), and returns a
         list of ``n`` trials.  Distributed workers and the tune scheduler use
         it to seed a whole wave of trials per round trip."""
-        if n is None:
+        with telemetry.span("study.ask"):
+            if n is None:
+                for t in self.get_trials(deepcopy=False, states=(TrialState.WAITING,)):
+                    if self._storage.set_trial_state_values(t.trial_id, TrialState.RUNNING):
+                        return Trial(self, t.trial_id)
+                trial_id = self._storage.create_new_trial(self._study_id)
+                return Trial(self, trial_id)
+            if n < 0:
+                raise ValueError(f"ask(n) needs n >= 0, got {n}")
+            trials: list[Trial] = []
+            fixed: set[int] = set()  # claimed enqueued trials with fixed params
             for t in self.get_trials(deepcopy=False, states=(TrialState.WAITING,)):
+                if len(trials) == n:
+                    break
                 if self._storage.set_trial_state_values(t.trial_id, TrialState.RUNNING):
-                    return Trial(self, t.trial_id)
-            trial_id = self._storage.create_new_trial(self._study_id)
-            return Trial(self, trial_id)
-        if n < 0:
-            raise ValueError(f"ask(n) needs n >= 0, got {n}")
-        trials: list[Trial] = []
-        fixed: set[int] = set()  # claimed enqueued trials with fixed params
-        for t in self.get_trials(deepcopy=False, states=(TrialState.WAITING,)):
-            if len(trials) == n:
-                break
-            if self._storage.set_trial_state_values(t.trial_id, TrialState.RUNNING):
-                trials.append(Trial(self, t.trial_id))
-                if t.system_attrs.get("fixed_params"):
-                    fixed.add(t.trial_id)
-        for trial_id in self._storage.create_new_trials(self._study_id, n - len(trials)):
-            trials.append(Trial(self, trial_id))
-        # enqueued configurations replay their fixed params, never the block:
-        # presampling them would waste draws and, worse, consume stateful
-        # joint side effects (a grid cell claimed for a trial that will not
-        # evaluate it) — they keep the scalar path exactly as ask() would
-        sampled = [t for t in trials if t._trial_id not in fixed]
-        if sampled:
-            self._presample_joint(sampled)
-        return trials
+                    trials.append(Trial(self, t.trial_id))
+                    if t.system_attrs.get("fixed_params"):
+                        fixed.add(t.trial_id)
+            for trial_id in self._storage.create_new_trials(self._study_id, n - len(trials)):
+                trials.append(Trial(self, trial_id))
+            # enqueued configurations replay their fixed params, never the block:
+            # presampling them would waste draws and, worse, consume stateful
+            # joint side effects (a grid cell claimed for a trial that will not
+            # evaluate it) — they keep the scalar path exactly as ask() would
+            sampled = [t for t in trials if t._trial_id not in fixed]
+            if sampled:
+                self._presample_joint(sampled)
+            return trials
 
     # -- joint (block) sampling -----------------------------------------------
 
@@ -247,6 +250,10 @@ class Study:
         sampler = self.sampler
         if not sampler.joint_enabled():
             return
+        with telemetry.span("study.presample_joint"):
+            self._presample_joint_inner(trials, sampler)
+
+    def _presample_joint_inner(self, trials: "list[Trial]", sampler: BaseSampler) -> None:
         groups = self.observed_param_groups()
         if not groups:
             return
@@ -319,11 +326,13 @@ class Study:
         if self._joint_miss_logged:
             return
         self._joint_miss_logged = True
-        _log.info(
-            "study %r: joint block missed parameter %r (%s); falling back to "
-            "per-trial scalar sampling for divergent parameters "
-            "(logged once per study)",
-            self.study_name, name, reason,
+        telemetry.inc("study.joint_miss")
+        log_once(
+            _log, ("joint_miss", id(self)), logging.INFO,
+            "study %r [worker %s]: joint block missed parameter %r (%s); "
+            "falling back to per-trial scalar sampling for divergent "
+            "parameters (logged once per study)",
+            self.study_name, telemetry.worker_id(), name, reason,
         )
 
     def tell(
@@ -332,12 +341,13 @@ class Study:
         values: "float | Sequence[float] | None" = None,
         state: TrialState = TrialState.COMPLETE,
     ) -> None:
-        trial_id, state, values = self._normalize_tell(trial, values, state)
-        self._storage.set_trial_state_values(trial_id, state, values)
-        frozen = self._storage.get_trial(trial_id)
-        self.sampler.after_trial(self, frozen, state, values)
-        if self._records is not None:
-            self._records.refresh()  # ingest the finished trial incrementally
+        with telemetry.span("study.tell"):
+            trial_id, state, values = self._normalize_tell(trial, values, state)
+            self._storage.set_trial_state_values(trial_id, state, values)
+            frozen = self._storage.get_trial(trial_id)
+            self.sampler.after_trial(self, frozen, state, values)
+            if self._records is not None:
+                self._records.refresh()  # ingest the finished trial incrementally
 
     def tell_batch(
         self,
@@ -347,25 +357,26 @@ class Study:
         """Report many finished trials at once.  Each item is ``(trial,
         values)`` or ``(trial, values, state)``.  Over a batching backend
         (``remote://``) all state transitions travel in one frame."""
-        normalized = []
-        for item in results:
-            trial, values = item[0], item[1]
-            st = item[2] if len(item) > 2 else state
-            normalized.append(self._normalize_tell(trial, values, st))
-        call_batch = getattr(self._storage, "call_batch", None)
-        if call_batch is not None and len(normalized) > 1:
-            call_batch(
-                [("set_trial_state_values", (tid, st, vs)) for tid, st, vs in normalized]
-            )
-            frozens = call_batch([("get_trial", (tid,)) for tid, _, _ in normalized])
-        else:
-            for tid, st, vs in normalized:
-                self._storage.set_trial_state_values(tid, st, vs)
-            frozens = [self._storage.get_trial(tid) for tid, _, _ in normalized]
-        for frozen, (tid, st, vs) in zip(frozens, normalized):
-            self.sampler.after_trial(self, frozen, st, vs)
-        if self._records is not None:
-            self._records.refresh()
+        with telemetry.span("study.tell_batch"):
+            normalized = []
+            for item in results:
+                trial, values = item[0], item[1]
+                st = item[2] if len(item) > 2 else state
+                normalized.append(self._normalize_tell(trial, values, st))
+            call_batch = getattr(self._storage, "call_batch", None)
+            if call_batch is not None and len(normalized) > 1:
+                call_batch(
+                    [("set_trial_state_values", (tid, st, vs)) for tid, st, vs in normalized]
+                )
+                frozens = call_batch([("get_trial", (tid,)) for tid, _, _ in normalized])
+            else:
+                for tid, st, vs in normalized:
+                    self._storage.set_trial_state_values(tid, st, vs)
+                frozens = [self._storage.get_trial(tid) for tid, _, _ in normalized]
+            for frozen, (tid, st, vs) in zip(frozens, normalized):
+                self.sampler.after_trial(self, frozen, st, vs)
+            if self._records is not None:
+                self._records.refresh()
 
     @staticmethod
     def _normalize_tell(trial, values, state) -> tuple[int, TrialState, "list[float] | None"]:

@@ -270,6 +270,8 @@ class Trial(BaseTrial):
         if callable(spec_fn):
             spec = spec_fn()
         scalarizing = callable(getattr(study.pruner, "scalarize", None))
+        # no span of its own: storage.report_and_prune / the client RPC span
+        # directly below covers the whole storage round trip already
         if spec is not None and (len(directions) == 1 or scalarizing):
             decision = study._storage.report_and_prune(
                 study._study_id, self._trial_id, step, value, spec, direction

@@ -16,6 +16,7 @@ import threading
 from typing import Callable
 
 import repro.core as hpo
+from repro.core import telemetry
 from repro.core.frozen import TrialState
 
 __all__ = ["TrialSliceScheduler"]
@@ -47,6 +48,8 @@ class TrialSliceScheduler:
     def _log(self, kind: str, slice_id: int, trial_number: int) -> None:
         with self._lock:
             self._events.append((kind, slice_id, trial_number))
+        if telemetry.enabled():  # start/done/pruned/failed per-slice throughput
+            telemetry.inc(f"scheduler.{kind}")
 
     @property
     def events(self) -> list:

@@ -1,0 +1,176 @@
+"""Dashboard SVG golden-shape tests + live metrics panel (ISSUE 6 satellite).
+
+"Golden shape" = assert on the structural skeleton of the generated SVG
+(element counts, axis labels, highlighted-point counts) for seeded studies,
+not on brittle pixel coordinates.
+"""
+
+import re
+
+import pytest
+
+import repro.core as hpo
+from repro.core.dashboard import (
+    _history_svg,
+    _importance_svg,
+    _metrics_panel_html,
+    _pareto_svg,
+    _throughput_svg,
+    render_dashboard,
+)
+
+
+def _seeded_study(n_trials=20):
+    s = hpo.create_study(sampler=hpo.RandomSampler(seed=11))
+
+    def obj(t):
+        x = t.suggest_float("x", 0, 1)
+        y = t.suggest_float("y", 0, 1)
+        return 5 * x + 0.1 * y
+
+    s.optimize(obj, n_trials=n_trials)
+    return s
+
+
+def _seeded_moo_study(n_trials=20):
+    s = hpo.create_study(
+        directions=["minimize", "minimize"], sampler=hpo.RandomSampler(seed=11)
+    )
+
+    def obj(t):
+        x = t.suggest_float("x", 0, 1)
+        return x, 1 - x
+
+    s.optimize(obj, n_trials=n_trials)
+    return s
+
+
+class TestHistorySvg:
+    def test_shape(self):
+        svg = _history_svg(_seeded_study(20))
+        assert svg.startswith("<svg")
+        # one dot per completed trial + the best-so-far polyline + axis frame
+        assert svg.count("<circle") == 20
+        assert svg.count("<polyline") == 1
+        assert svg.count("<line") == 2
+        assert "trial #" in svg
+
+    def test_empty_study(self):
+        s = hpo.create_study()
+        assert "no completed trials" in _history_svg(s)
+
+
+class TestParetoSvg:
+    def test_shape(self):
+        s = _seeded_moo_study(20)
+        svg = _pareto_svg(s)
+        assert svg.count("<circle") == 20
+        n_front = len(s.pareto_front()[1])
+        assert f"Pareto front ({n_front} trials)" in svg
+        # front points are the big red ones
+        assert svg.count('r="3.5"') == n_front
+        assert svg.count('fill="#c0392b"') == n_front + 1  # circles + legend text
+
+    def test_empty(self):
+        s = hpo.create_study(directions=["minimize", "minimize"])
+        assert "no completed trials" in _pareto_svg(s)
+
+
+class TestImportanceSvg:
+    def test_shape(self):
+        svg = _importance_svg(_seeded_study(30))
+        # one bar + name label + value label per parameter
+        assert svg.count("<rect") == 2
+        assert ">x<" in svg and ">y<" in svg
+        vals = [float(v) for v in re.findall(r'font-size="10">([0-9.]+)</text>', svg)]
+        assert len(vals) == 2 and abs(sum(vals) - 1.0) < 0.02
+
+    def test_unavailable(self):
+        # MO studies have no scalar importances -> the placeholder text
+        svg = _importance_svg(_seeded_moo_study(10))
+        assert "importances unavailable" in svg
+
+
+class TestLivePanel:
+    def test_throughput_sparkline(self):
+        svg = _throughput_svg([0.0, 1.0, 4.0, 2.0])
+        assert svg.count("<polyline") == 1
+        assert svg.count("<polygon") == 1  # the filled area
+        assert "now 2.00" in svg and "peak 4.00" in svg
+        assert "no samples yet" in _throughput_svg([])
+
+    def test_metrics_panel(self):
+        metrics = {
+            "uptime_s": 12.0,
+            "active_connections": 3,
+            "frames_in": 10,
+            "frames_out": 10,
+            "bytes_in": 2048,
+            "bytes_out": 4096,
+            "spec_cache_hits": 1,
+            "methods": {
+                "get_trial": {
+                    "calls": 7, "errors": 0, "bytes_out": 700,
+                    "p50": 0.001, "p95": 0.002, "p99": 0.003, "max": 0.004,
+                },
+            },
+        }
+        htm = _metrics_panel_html(metrics)
+        assert "3 active" in htm
+        assert "2.0 KiB in / 4.0 KiB out" in htm
+        assert "<td>get_trial</td><td>7</td>" in htm
+        assert "<td>1.00</td><td>2.00</td><td>3.00</td>" in htm  # ms columns
+        assert "unavailable" in _metrics_panel_html(None)
+
+    def test_render_dashboard_live_section(self):
+        s = _seeded_study(5)
+        plain = render_dashboard(s)
+        assert "Live server metrics" not in plain
+        live = render_dashboard(s, server_metrics={}, throughput=[1.0, 2.0])
+        assert "Live server metrics" in live
+        assert "trials/s" in live
+
+    def test_live_panel_from_real_server(self):
+        backend = hpo.InMemoryStorage()
+        with hpo.StorageServer(backend) as server:
+            remote = hpo.RemoteStorage(server.url)
+            s = hpo.create_study(
+                study_name="live", storage=remote, sampler=hpo.RandomSampler(seed=0)
+            )
+            s.optimize(lambda t: t.suggest_float("x", 0, 1), n_trials=5)
+            html = render_dashboard(s, server_metrics=remote.get_server_metrics())
+        assert "Live server metrics" in html
+        assert "<td>create_new_trial</td><td>5</td>" in html
+
+
+class TestImportanceEdgeCases:
+    """Pins the ISSUE-6 fix: degrade to {} instead of raising / misranking."""
+
+    def test_multi_objective_returns_empty(self):
+        s = _seeded_moo_study(20)
+        assert hpo.param_importances(s) == {}
+        assert hpo.spearman_importances(s) == {}
+
+    def test_fewer_than_two_complete_trials(self):
+        s = hpo.create_study(sampler=hpo.RandomSampler(seed=0))
+        assert hpo.param_importances(s) == {}
+        assert hpo.spearman_importances(s) == {}
+        s.optimize(lambda t: t.suggest_float("x", 0, 1), n_trials=1)
+        assert hpo.param_importances(s) == {}
+        assert hpo.spearman_importances(s) == {}
+
+    def test_two_and_three_trials_zero_scores(self):
+        s = hpo.create_study(sampler=hpo.RandomSampler(seed=0))
+        s.optimize(lambda t: t.suggest_float("x", 0, 1), n_trials=3)
+        assert hpo.param_importances(s) == {"x": 0.0}
+        assert hpo.spearman_importances(s) == {"x": 0.0}
+
+    def test_failed_trials_only(self):
+        s = hpo.create_study()
+
+        def boom(t):
+            t.suggest_float("x", 0, 1)
+            raise ValueError("nope")
+
+        s.optimize(boom, n_trials=3, catch=(ValueError,))
+        assert hpo.param_importances(s) == {}
