@@ -115,19 +115,22 @@ def moo_worker_storm(
     waves_per_worker: int = 3,
     wave: int = 4,
     n_objectives: int = 3,
+    protocol: int = 2,
     verbose: bool = True,
 ) -> dict:
     """100+ concurrent workers hammering one :class:`StorageServer` with the
     batched multi-objective lifecycle: each worker loops ``ask(wave)`` →
     ``tell_batch`` with **vector** final values, every worker on its own
-    connection (thread-per-connection on the server, matching a real fleet).
+    connection (the server multiplexes them all on one reactor thread,
+    matching a real fleet).
 
     Measures aggregate trial throughput and the mean ``tell_batch`` frame
     latency — the cost of shipping ``wave`` state transitions each carrying
-    an ``n_objectives``-wide values vector in one frame — to pin whether the
-    vector payload moves the server off its single-objective numbers.
+    an ``n_objectives``-wide values vector in one frame.  ``protocol`` pins
+    the wire format: 1 forces legacy JSON frames (the pre-v2 baseline), 2
+    negotiates the binary columnar encoding.
     """
-    server = hpo.StorageServer(hpo.InMemoryStorage()).start()
+    server = hpo.StorageServer(hpo.InMemoryStorage(), max_protocol=protocol).start()
     try:
         seed = hpo.RemoteStorage(server.url)
         seed.create_new_study([StudyDirection.MINIMIZE] * n_objectives, "storm")
@@ -180,6 +183,7 @@ def moo_worker_storm(
         row = {
             "n_workers": n_workers,
             "n_objectives": n_objectives,
+            "protocol": protocol,
             "wave": wave,
             "trials_total": n_total,
             "wall_s": wall,
@@ -194,7 +198,8 @@ def moo_worker_storm(
         }
         if verbose:
             print(
-                f"[storm] {n_workers} workers x {n_objectives} objectives: "
+                f"[storm] {n_workers} workers x {n_objectives} objectives "
+                f"(wire v{protocol}): "
                 f"{row['trials_per_sec']:8.0f} trials/s, tell_batch "
                 f"mean={row['tell_batch_mean_ms']:6.2f}ms "
                 f"p95={row['tell_batch_p95_ms']:6.2f}ms",
@@ -237,7 +242,14 @@ def run(tmpdir: str = "/tmp/repro_storage_bench", n_trials: int = 200, verbose: 
         server.stop()
 
     rows["ask_latency"] = ask_latency(verbose=verbose)
-    rows["moo_worker_storm"] = moo_worker_storm(n_workers=storm_workers, verbose=verbose)
+    # v1-vs-v2 storm at the same worker count: the legacy-JSON baseline row
+    # next to the binary wire row pins the protocol's contribution
+    rows["moo_worker_storm_v1"] = moo_worker_storm(
+        n_workers=storm_workers, protocol=1, verbose=verbose
+    )
+    rows["moo_worker_storm"] = moo_worker_storm(
+        n_workers=storm_workers, protocol=2, verbose=verbose
+    )
     return rows
 
 
@@ -319,6 +331,9 @@ def main(argv=None) -> None:
                     help="trials per backend in the ops/sec comparison")
     ap.add_argument("--workers", type=int, default=100,
                     help="concurrent workers in the multi-objective storm")
+    ap.add_argument("--storm-1k", action="store_true",
+                    help="also run the 1000-concurrent-worker storm row "
+                         "(slow; CI passes this, optional locally)")
     args = ap.parse_args(argv)
 
     try:
@@ -335,6 +350,10 @@ def main(argv=None) -> None:
     try:
         rows = run(n_trials=args.trials, verbose=True, storm_workers=args.workers)
         payload.update(rows)
+        if args.storm_1k:
+            payload["moo_worker_storm_1k"] = moo_worker_storm(
+                n_workers=1000, protocol=2, verbose=True
+            )
         snapshot = telemetry.snapshot()
     finally:
         telemetry.disable()

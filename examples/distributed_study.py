@@ -16,6 +16,18 @@ workers on other machines at an already-running server:
     PYTHONPATH=src python examples/distributed_study.py --storage remote://hostA:9000
     # or all-in-one on a single box:
     PYTHONPATH=src python examples/distributed_study.py --workers 4 --serve
+
+Wire protocol v2 migration: nothing to do.  New clients probe the server
+with a `hello` handshake on connect — against a v2 server the connection
+switches to binary columnar frames (numpy buffers cross the wire raw, cache
+refreshes arrive as contiguous column blocks); against an older JSON-only
+server they fall back to v1 silently.  Old JSON clients never send the
+probe, so they keep working unchanged against a new server.  To pin the old
+wire for debugging: `RemoteStorage(url, protocol=1)` client-side or
+`StorageServer(..., max_protocol=1)` / `--max-protocol 1` server-side.
+For encrypted transport, serve with `--tls-cert/--tls-key`, dial
+`remote+tls://host:port`, and give clients the CA via
+`RemoteStorage(tls_ca=...)` or `$REPRO_STORAGE_TLS_CA`.
 """
 
 import argparse

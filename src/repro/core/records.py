@@ -125,6 +125,9 @@ class ObservationStore:
         self._finished: set[int] = set()  # ingested numbers >= watermark
         self._revision: int | None = None
         self._revision_supported = True
+        # columnar block fetch (wire protocol v2): downgraded permanently on
+        # the first NotImplementedError, exactly like the revision probe
+        self._block_supported = True
 
         self._dirty = False
         self._view_numbers = self._numbers
@@ -159,6 +162,23 @@ class ObservationStore:
                 )
                 self._values_mat = np.full((self._capacity, self._n_objectives), np.nan)
                 self._view_values_mat = self._values_mat[:0]
+            if self._block_supported and getattr(
+                self._storage, "supports_block_fetch", False
+            ):
+                try:
+                    block = self._storage.get_observation_block(
+                        self._study_id, self._watermark
+                    )
+                except NotImplementedError:
+                    self._block_supported = False
+                else:
+                    telemetry.inc("records.obs.refresh.block")
+                    self._ingest_block(block)
+                    while self._watermark in self._finished:
+                        self._finished.discard(self._watermark)
+                        self._watermark += 1
+                    self._revision = rev
+                    return
             fresh = get_trials_since(
                 self._storage, self._study_id, self._watermark, deepcopy=False
             )
@@ -170,6 +190,72 @@ class ObservationStore:
                 self._finished.discard(self._watermark)
                 self._watermark += 1
             self._revision = rev
+
+    def _ingest_block(self, block: dict) -> None:
+        """Ingest a ``get_observation_block`` payload — the same per-row
+        writes :meth:`_append` performs, but fed from contiguous wire arrays
+        (model-space internals computed server-side) instead of FrozenTrial
+        objects, so a remote refresh decodes no JSON trial dicts at all."""
+        n = int(block["n"])
+        if n == 0:
+            return
+        from .distributions import json_to_distribution
+
+        numbers, states = block["numbers"], block["states"]
+        values, values_len = block["values"], block["values_len"]
+        values_mat, last_iv = block["values_mat"], block["last_iv"]
+        grid_ids = block["grid_ids"]
+        m = self._values_mat.shape[1]
+        mat_ok = values_mat.ndim == 2 and values_mat.shape[1] == m
+        # interned distributions decode once per block, not once per row
+        params = [
+            (name, ent["internal"], ent["dist_idx"],
+             [json_to_distribution(s) for s in ent["dists"]])
+            for name, ent in block["params"].items()
+        ]
+        complete, pruned = int(TrialState.COMPLETE), int(TrialState.PRUNED)
+        for i in range(n):
+            num = int(numbers[i])
+            if num in self._finished:
+                continue
+            if self._n == self._capacity:
+                self._grow(max(_MIN_CAPACITY, 2 * self._capacity))
+            row = self._n
+            self._numbers[row] = num
+            st = int(states[i])
+            self._states[row] = st
+            self._values[row] = values[i]
+            self._values_len[row] = int(values_len[i])
+            if mat_ok and int(values_len[i]) == m:
+                self._values_mat[row, :] = values_mat[i]
+            self._last_iv[row] = last_iv[i]
+            self._grid_ids[row] = int(grid_ids[i])
+            for name, internal, dist_idx, dists in params:
+                di = int(dist_idx[i])
+                if di < 0:
+                    continue
+                dist = dists[di]
+                col = self._cols.get(name)
+                if col is None:
+                    col = np.full(self._capacity, np.nan)
+                    self._cols[name] = col
+                col[row] = internal[i]
+                self._dists[name] = dist
+                code = self._type_codes.setdefault(type(dist), len(self._type_codes))
+                trow = self._type_rows.get(name)
+                if trow is None:
+                    trow = np.full(self._capacity, -1, dtype=np.int8)
+                    self._type_rows[name] = trow
+                trow[row] = code
+                if st in (complete, pruned):
+                    key = (name, code, st)
+                    prev = self._latest_dist.get(key)
+                    if prev is None or num > prev[0]:
+                        self._latest_dist[key] = (num, dist)
+            self._n += 1
+            self._finished.add(num)
+            self._dirty = True
+            self.version += 1
 
     def _append(self, trial) -> None:
         if self._n == self._capacity:
@@ -512,6 +598,7 @@ class IntermediateValueStore:
         self._watermark = 0  # every number < watermark is finished + encoded
         self._revision: int | None = None
         self._revision_supported = True
+        self._block_supported = True  # see ObservationStore._block_supported
         self._bsf: dict[bool, np.ndarray] = {}  # minimize? -> prefix-best
 
         # per-trial dirty tracking (hosted stores only): backends note every
@@ -562,6 +649,18 @@ class IntermediateValueStore:
                 telemetry.inc("records.iv.refresh.noop")
                 return
             telemetry.inc("records.iv.refresh.fetch")
+            if self._block_supported and getattr(
+                self._storage, "supports_block_fetch", False
+            ):
+                try:
+                    block = self._storage.get_iv_block(self._study_id, self._watermark)
+                except NotImplementedError:
+                    self._block_supported = False
+                else:
+                    telemetry.inc("records.iv.refresh.block")
+                    self._ingest_block(block)
+                    self._revision = rev
+                    return
             fresh = get_trials_since(
                 self._storage, self._study_id, self._watermark, deepcopy=False
             )
@@ -574,6 +673,70 @@ class IntermediateValueStore:
                 self._dirty.clear()
                 self._dirty_unknown = False
             self._revision = rev
+
+    def _ingest_block(self, block: dict) -> None:
+        """Ingest a ``get_iv_block`` CSR payload — the same row writes
+        :meth:`_ingest` performs, but cell placement is one vectorized
+        ``searchsorted`` scatter per row instead of a Python dict walk."""
+        n = int(block["n"])
+        if n == 0:
+            self._dirty.clear()
+            self._dirty_unknown = False
+            return
+        numbers, states = block["numbers"], block["states"]
+        trial_ids, rowptr = block["trial_ids"], block["rowptr"]
+        steps, vals = block["steps"], block["vals"]
+        top = int(numbers.max())
+        if top >= self._row_cap:
+            self._grow_rows(max(_MIN_CAPACITY, 2 * self._row_cap, top + 1))
+        self._n_rows = max(self._n_rows, top + 1)
+
+        skip_clean = self._track_dirty and not self._dirty_unknown
+        sel = []
+        for i in range(n):
+            row = int(numbers[i])
+            cnt = int(rowptr[i + 1] - rowptr[i])
+            if (
+                skip_clean
+                and row not in self._dirty
+                and self._states[row] == int(states[i])
+                and self._row_len[row] == cnt
+            ):
+                continue  # clean RUNNING row: state and report count unchanged
+            sel.append(i)
+
+        new_steps = {
+            int(s)
+            for i in sel
+            for s in steps[int(rowptr[i]) : int(rowptr[i + 1])]
+            if int(s) not in self._step_index
+        }
+        if new_steps:
+            self._grow_cols(new_steps)
+
+        for i in sel:
+            row = int(numbers[i])
+            tid = int(trial_ids[i])
+            self._states[row] = int(states[i])
+            self._trial_ids[row] = tid
+            self._id_to_row[tid] = row
+            self._matrix[row, :] = np.nan
+            lo, hi = int(rowptr[i]), int(rowptr[i + 1])
+            if hi > lo:
+                self._matrix[row, np.searchsorted(self._steps, steps[lo:hi])] = vals[lo:hi]
+            self._row_len[row] = hi - lo
+            self.reencode_count += 1
+        self._dirty.clear()
+        self._dirty_unknown = False
+        if sel:
+            telemetry.inc("records.iv.rows_reencoded", len(sel))
+        while self._watermark < self._n_rows and TrialState(
+            self._states[self._watermark]
+        ).is_finished():
+            self._watermark += 1
+        if sel:
+            self._bsf.clear()
+            self.version += 1
 
     def _ingest(self, trials) -> None:
         top = max(t.number for t in trials)

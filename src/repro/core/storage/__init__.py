@@ -57,7 +57,7 @@ def _resolve(storage: "str | BaseStorage | None") -> BaseStorage:
         return SQLiteStorage(storage)
     if storage.startswith("journal://"):
         return JournalStorage(storage)
-    if storage.startswith("remote://"):
+    if storage.startswith(("remote://", "remote+tls://")):
         return RemoteStorage(storage)
     if storage.endswith((".db", ".sqlite", ".sqlite3")):
         return SQLiteStorage(storage)

@@ -315,6 +315,32 @@ class BaseStorage:
         to always refetching."""
         raise NotImplementedError
 
+    # -- columnar block fetch ---------------------------------------------------
+
+    supports_block_fetch = False
+    """Whether the block RPCs below are worth attempting over this backend.
+    In-process backends keep it False (``ObservationStore`` ingests their
+    trial objects directly, there is nothing to save); ``RemoteStorage``
+    flips it on when wire protocol v2 is negotiated."""
+
+    def get_observation_block(self, study_id: int, since: int = 0) -> dict[str, Any]:
+        """Observations of *finished* trials with ``number >= since``, as a
+        dict of contiguous numpy columns (see
+        :func:`.serde.build_observation_block` for the exact layout).  Over
+        wire protocol v2 this is the near-memcpy refresh path of
+        :class:`~repro.core.records.ObservationStore`."""
+        from .serde import build_observation_block
+
+        trials = get_trials_since(self, study_id, since, deepcopy=False)
+        return build_observation_block(trials, len(self.get_study_directions(study_id)))
+
+    def get_iv_block(self, study_id: int, since: int = 0) -> dict[str, Any]:
+        """Intermediate-value curves of trials with ``number >= since`` in
+        CSR layout (see :func:`.serde.build_iv_block`)."""
+        from .serde import build_iv_block
+
+        return build_iv_block(get_trials_since(self, study_id, since, deepcopy=False))
+
     # -- heartbeat / fault tolerance ------------------------------------------
 
     def record_heartbeat(self, trial_id: int) -> None:

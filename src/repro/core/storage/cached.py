@@ -358,6 +358,20 @@ class CachedStorage(BaseStorage):
         """Lifecycle events live where the mutations execute — the backend."""
         return self._backend.get_trial_events(study_id, since)
 
+    @property
+    def supports_block_fetch(self) -> bool:
+        return getattr(self._backend, "supports_block_fetch", False)
+
+    def get_observation_block(self, study_id: int, since: int = 0) -> dict[str, Any]:
+        # drain write-behind buffers first so the backend snapshot is at
+        # least as fresh as what this process has already observed locally
+        self.flush()
+        return self._backend.get_observation_block(study_id, since)
+
+    def get_iv_block(self, study_id: int, since: int = 0) -> dict[str, Any]:
+        self.flush()
+        return self._backend.get_iv_block(study_id, since)
+
     def get_server_metrics(self) -> dict[str, Any]:
         fn = getattr(self._backend, "get_server_metrics", None)
         if fn is None:

@@ -25,6 +25,7 @@ from __future__ import annotations
 import json
 import os
 import socket
+import ssl
 import threading
 import time
 from typing import Any, Iterable
@@ -39,8 +40,10 @@ from ..exceptions import (
 )
 from ..frozen import FrozenTrial, StudyDirection, TrialState
 from .base import BaseStorage, StudySummary
-from .serde import pack, unpack
+from .serde import BINARY_MAGIC, bdumps, bloads, pack, unpack
 from .server import recv_frame, send_frame
+
+_MAGIC = bytes([BINARY_MAGIC])
 
 __all__ = ["RemoteStorage", "parse_remote_url"]
 
@@ -62,20 +65,26 @@ _ERROR_TYPES: dict[str, type[Exception]] = {
 # Calls that may NOT be blindly re-sent after a torn connection: re-executing
 # them would create a second trial/study or turn a won claim into a lost one.
 _NON_IDEMPOTENT = frozenset(
-    {"create_new_study", "create_new_trial", "set_trial_state_values"}
+    {"create_new_study", "create_new_trial", "create_new_trials", "set_trial_state_values"}
 )
 
 
 def parse_remote_url(url: str) -> tuple[str, int]:
-    host, port, _ = parse_remote_url_auth(url)
+    host, port, _, _ = parse_remote_url_auth(url)
     return host, port
 
 
-def parse_remote_url_auth(url: str) -> tuple[str, int, "str | None"]:
-    """Parse ``remote://[token@]host:port`` into (host, port, token)."""
-    if not url.startswith("remote://"):
+def parse_remote_url_auth(url: str) -> tuple[str, int, "str | None", bool]:
+    """Parse ``remote[+tls]://[token@]host:port`` into
+    (host, port, token, tls)."""
+    tls = False
+    if url.startswith("remote+tls://"):
+        tls = True
+        hostport = url[len("remote+tls://"):].rstrip("/")
+    elif url.startswith("remote://"):
+        hostport = url[len("remote://"):].rstrip("/")
+    else:
         raise ValueError(f"not a remote:// URL: {url!r}")
-    hostport = url[len("remote://"):].rstrip("/")
     token: str | None = None
     if "@" in hostport:
         token, _, hostport = hostport.rpartition("@")
@@ -83,33 +92,51 @@ def parse_remote_url_auth(url: str) -> tuple[str, int, "str | None"]:
     host, sep, port = hostport.rpartition(":")
     if not sep or not port.isdigit():
         raise ValueError(f"remote:// URL needs host:port, got {url!r}")
-    return host, int(port), token
+    return host, int(port), token, tls
 
 
 class RemoteStorage(BaseStorage):
-    """Storage proxy speaking the length-prefixed JSON-RPC protocol.
+    """Storage proxy speaking the length-prefixed remote protocol.
 
     Args:
-        url: ``remote://host:port`` of a running :class:`StorageServer`.
-            A shared-secret token may be embedded as
-            ``remote://token@host:port``.
+        url: ``remote://host:port`` (or ``remote+tls://host:port``) of a
+            running :class:`StorageServer`.  A shared-secret token may be
+            embedded as ``remote://token@host:port``.
         timeout: per-call socket timeout in seconds.
         retries: reconnect attempts per call before giving up.
         auth_token: shared secret for servers started with one.  Falls back
             to the URL userinfo, then the ``REPRO_STORAGE_TOKEN`` env var.
             Sent once per connection as an ``auth`` handshake frame; the
             server drops unauthenticated connections when configured.
+        protocol: highest wire protocol to negotiate.  ``2`` (default) sends
+            a ``hello`` after auth and switches the connection to binary
+            frames when the server agrees; a JSON-only server answers with
+            an unknown-method error and the client silently stays on v1.
+            ``1`` pins the client to legacy JSON frames.
+        tls_ca: PEM bundle to verify the server certificate against for
+            ``remote+tls://`` URLs (falls back to ``$REPRO_STORAGE_TLS_CA``,
+            then the system trust store).
     """
 
     def __init__(
         self, url: str, timeout: float = 30.0, retries: int = 3,
-        auth_token: "str | None" = None,
+        auth_token: "str | None" = None, protocol: int = 2,
+        tls_ca: "str | None" = None,
     ):
-        self._host, self._port, url_token = parse_remote_url_auth(url)
+        self._host, self._port, url_token, self._tls = parse_remote_url_auth(url)
         self._auth_token = auth_token or url_token or os.environ.get("REPRO_STORAGE_TOKEN")
-        self._url = f"remote://{self._host}:{self._port}"  # token never echoed
+        scheme = "remote+tls" if self._tls else "remote"
+        self._url = f"{scheme}://{self._host}:{self._port}"  # token never echoed
         self._timeout = timeout
         self._retries = max(1, retries)
+        self._protocol = protocol
+        self._ssl_context: ssl.SSLContext | None = None
+        if self._tls:
+            cafile = tls_ca or os.environ.get("REPRO_STORAGE_TLS_CA")
+            self._ssl_context = ssl.create_default_context(cafile=cafile)
+        # set once the server answers hello with an unknown-method error:
+        # later connections (and re-dials) skip the doomed negotiation
+        self._server_is_v1 = False
         self._local = threading.local()
         self._id_lock = threading.Lock()
         self._next_id = 0
@@ -119,21 +146,75 @@ class RemoteStorage(BaseStorage):
     def url(self) -> str:
         return self._url
 
+    @property
+    def protocol(self) -> int:
+        """The wire protocol negotiated on this thread's connection (dials
+        one if the thread has never talked to the server)."""
+        if getattr(self._local, "sock", None) is None:
+            self._call("ping")
+        return getattr(self._local, "proto", 1)
+
+    @property
+    def supports_block_fetch(self) -> bool:
+        """Whether the columnar block RPCs are worth attempting (callers
+        still handle ``NotImplementedError`` — negotiation is per-thread)."""
+        if self._protocol < 2 or self._server_is_v1:
+            return False
+        return True
+
     # -- transport -------------------------------------------------------------
 
     def _sock(self) -> socket.socket:
         sock = getattr(self._local, "sock", None)
         if sock is None:
             sock = socket.create_connection((self._host, self._port), timeout=self._timeout)
-            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            try:
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                if self._ssl_context is not None:
+                    sock = self._ssl_context.wrap_socket(
+                        sock, server_hostname=self._host
+                    )
+            except BaseException:
+                sock.close()
+                raise
             telemetry.inc("client.connects")
             if getattr(self._local, "ever_connected", False):
                 telemetry.inc("client.reconnects")  # re-dial after a torn socket
             self._local.ever_connected = True
             self._local.sock = sock
+            self._local.proto = 1
             if self._auth_token is not None:
                 self._authenticate(sock)
+            if self._protocol >= 2 and not self._server_is_v1:
+                self._negotiate(sock)
         return sock
+
+    def _negotiate(self, sock: socket.socket) -> None:
+        """Offer wire protocol v2 via a JSON ``hello``; on agreement the
+        connection switches to binary frames for everything that follows."""
+        request = {
+            "id": self._req_id(), "method": "hello",
+            "params": [{"protocol": min(self._protocol, 2)}],
+        }
+        try:
+            send_frame(sock, json.dumps(request).encode())
+            body = recv_frame(sock)
+        except (OSError, ConnectionError):
+            self._drop_sock()
+            raise
+        if body is None:
+            self._drop_sock()
+            raise ConnectionError("server closed the connection during hello")
+        response = json.loads(body)
+        if response.get("ok"):
+            if int(response["result"].get("protocol", 1)) >= 2:
+                self._local.proto = 2
+                telemetry.inc("client.protocol_v2_connects")
+        else:
+            # pre-v2 server: "unknown storage method 'hello'" — remember and
+            # stay on JSON so re-dials skip the wasted round trip
+            self._server_is_v1 = True
+            telemetry.inc("client.protocol_fallbacks")
 
     def _authenticate(self, sock: socket.socket) -> None:
         """Per-connection handshake: the first frame carries the shared
@@ -165,6 +246,7 @@ class RemoteStorage(BaseStorage):
             except OSError:
                 pass
             self._local.sock = None
+            self._local.proto = 1  # the next dial renegotiates
             # the server's per-connection spec cache died with the socket;
             # dropping here (never at connect time) keeps a def registered at
             # encode time valid for the send that follows on a fresh dial
@@ -175,9 +257,21 @@ class RemoteStorage(BaseStorage):
             self._next_id += 1
             return self._next_id
 
-    def _roundtrip(self, payload: bytes) -> Any:
-        """Send one frame, read one frame.  Raises (OSError-family, bool sent)
-        wrapped in a tuple-carrying exception via attributes."""
+    def _encode_payload(self, request: Any, proto: int) -> bytes:
+        if proto == 2:
+            # binary frames carry rich params natively — no pack() pass
+            return _MAGIC + bdumps(request)
+        if isinstance(request, list):
+            wire = [{**r, "params": pack(r["params"])} for r in request]
+        else:
+            wire = {**request, "params": pack(request["params"])}
+        return json.dumps(wire).encode()
+
+    def _roundtrip(self, request: Any, payloads: dict[int, bytes]) -> Any:
+        """Send one frame, read one frame.  ``payloads`` caches the encoded
+        request per protocol, so the bytes survive the retry loop (a re-dial
+        that renegotiates the same protocol re-sends without re-encoding).
+        Transport failures carry a ``_rpc_sent`` attribute."""
         try:
             sock = self._sock()
         except PermissionError:
@@ -186,6 +280,10 @@ class RemoteStorage(BaseStorage):
             # connect/auth-transport failure: the request never hit the wire
             e._rpc_sent = False  # type: ignore[attr-defined]
             raise
+        proto = getattr(self._local, "proto", 1)
+        payload = payloads.get(proto)
+        if payload is None:
+            payload = payloads[proto] = self._encode_payload(request, proto)
         sent = False
         try:
             send_frame(sock, payload)
@@ -204,14 +302,23 @@ class RemoteStorage(BaseStorage):
             raise e
         telemetry.inc("client.frames_in")
         telemetry.inc("client.bytes_in", len(body))
-        return json.loads(body)
+        if proto == 2:
+            if not body or body[0] != BINARY_MAGIC:
+                self._drop_sock()
+                e = ConnectionError("malformed binary frame from server")
+                e._rpc_sent = True  # type: ignore[attr-defined]
+                raise e
+            return bloads(memoryview(body)[1:]), True
+        return json.loads(body), False
 
-    def _call_raw(self, request: Any, *, idempotent: bool) -> Any:
-        payload = json.dumps(request).encode()
+    def _call_raw(self, request: Any, *, idempotent: bool) -> tuple[Any, bool]:
+        """Returns ``(decoded_response, rich)`` — ``rich`` meaning the
+        response came over v2 and needs no serde unpack."""
+        payloads: dict[int, bytes] = {}
         last: Exception | None = None
         for attempt in range(self._retries):
             try:
-                return self._roundtrip(payload)
+                return self._roundtrip(request, payloads)
             except PermissionError:
                 raise  # auth rejection is terminal (PermissionError < OSError)
             except (OSError, ConnectionError) as e:
@@ -278,11 +385,12 @@ class RemoteStorage(BaseStorage):
     def _call_timed(self, method: str, params: tuple) -> Any:
         for attempt in (0, 1):
             encoded = self._encode_params(method, list(params))
-            request = {"id": self._req_id(), "method": method, "params": pack(encoded)}
+            request = {"id": self._req_id(), "method": method, "params": encoded}
             try:
-                return self._unwrap(
-                    self._call_raw(request, idempotent=method not in _NON_IDEMPOTENT)
+                response, rich = self._call_raw(
+                    request, idempotent=method not in _NON_IDEMPOTENT
                 )
+                return self._unwrap(response, rich)
             except ValueError as e:
                 # a spec ref can outlive its server-side cache when the
                 # connection is torn between encode and send: resend once
@@ -313,13 +421,13 @@ class RemoteStorage(BaseStorage):
                 {
                     "id": self._req_id(),
                     "method": m,
-                    "params": pack(self._encode_params(m, list(p))),
+                    "params": self._encode_params(m, list(p)),
                 }
                 for m, p in calls
             ]
-            responses = self._call_raw(request, idempotent=idempotent)
+            responses, rich = self._call_raw(request, idempotent=idempotent)
             try:
-                return [self._unwrap(r) for r in responses]
+                return [self._unwrap(r, rich) for r in responses]
             except ValueError as e:
                 if attempt == 0 and self._is_spec_ref_miss(e):
                     self._local.spec_ids = {}
@@ -328,9 +436,12 @@ class RemoteStorage(BaseStorage):
         raise AssertionError("unreachable")  # pragma: no cover
 
     @staticmethod
-    def _unwrap(response: dict) -> Any:
+    def _unwrap(response: dict, rich: bool = False) -> Any:
         if response.get("ok"):
-            return unpack(response.get("result"))
+            result = response.get("result")
+            # v2 responses decode straight to rich objects; v1 JSON results
+            # carry serde tags that unpack() resolves
+            return result if rich else unpack(result)
         err = response.get("error") or {}
         cls = _ERROR_TYPES.get(err.get("type", ""), StorageInternalError)
         raise cls(err.get("message", "remote storage error"))
@@ -379,8 +490,9 @@ class RemoteStorage(BaseStorage):
             return []
         if n == 1:
             return [self.create_new_trial(study_id, template_trial)]
-        # one batched frame: n trials claimed per round trip
-        return self.call_batch([("create_new_trial", (study_id, template_trial))] * n)
+        # one native RPC: n trials claimed in a single dispatch (the batched
+        # per-trial fallback cost one dispatch per trial inside the frame)
+        return self._call("create_new_trials", study_id, int(n), template_trial)
 
     def set_trial_param(
         self, trial_id: int, param_name: str, param_value_internal: float,
@@ -441,6 +553,19 @@ class RemoteStorage(BaseStorage):
 
     def get_trials_revision(self, study_id: int) -> int:
         return self._call("get_trials_revision", study_id)
+
+    # -- columnar block fetch (wire protocol v2) ---------------------------------
+
+    def get_observation_block(self, study_id: int, since: int = 0) -> dict[str, Any]:
+        """Finished-trial observations since a revision as raw numpy columns
+        (one frame, near-memcpy decode).  Raises ``NotImplementedError`` on a
+        v1 connection — callers fall back to ``get_all_trials(since=)``."""
+        return self._call("get_observation_block", study_id, int(since))
+
+    def get_iv_block(self, study_id: int, since: int = 0) -> dict[str, Any]:
+        """Intermediate-value curves since a revision as CSR numpy columns.
+        Raises ``NotImplementedError`` on a v1 connection."""
+        return self._call("get_iv_block", study_id, int(since))
 
     # -- heartbeat ---------------------------------------------------------------
 

@@ -6,19 +6,43 @@ it over TCP to :class:`~repro.core.storage.client.RemoteStorage` clients.
 
 Protocol
 --------
-Length-prefixed JSON-RPC: each frame is a 4-byte big-endian payload length
-followed by UTF-8 JSON.  A request is ``{"id", "method", "params"}`` (params
-encoded with :mod:`.serde`); the response is ``{"id", "ok", "result"}`` or
-``{"id", "ok": false, "error": {"type", "message"}}``.  A frame may carry a
-*list* of requests (a batch); the server executes them in order and answers
-with a list of responses in the same frame — one round trip for a whole
-write-behind flush.
+Every frame is a 4-byte big-endian payload length followed by the payload.
+Two payload encodings share that framing, negotiated per connection:
 
-Concurrency: one daemon thread per connection; atomicity of each call (e.g.
-the WAITING->RUNNING compare-and-set in ``set_trial_state_values``) is
-delegated to the wrapped backend, which already guarantees it per the
-BaseStorage contract.  Graceful shutdown via :meth:`StorageServer.stop` —
-in-flight requests finish, then sockets close.
+* **v1 (JSON, default)** — UTF-8 JSON-RPC.  A request is ``{"id", "method",
+  "params"}`` (params encoded with :mod:`.serde`); the response is ``{"id",
+  "ok", "result"}`` or ``{"id", "ok": false, "error": {"type", "message"}}``.
+  A frame may carry a *list* of requests (a batch); the server executes them
+  in order and answers with a list of responses in the same frame — one
+  round trip for a whole write-behind flush.
+
+* **v2 (binary)** — negotiated via a ``hello`` RPC (sent as JSON; once the
+  server acknowledges ``protocol: 2`` both directions switch).  Payloads are
+  one ``0xB2`` magic byte followed by the tagged binary encoding of the same
+  request/response dicts (:func:`.serde.bdumps`), whose native ``ndarray``
+  tag lets the hot RPCs — ``get_all_trials(since=)`` deltas, batched
+  ``create_new_trials``, and the columnar ``get_observation_block`` /
+  ``get_iv_block`` snapshots — ship raw numpy buffers instead of JSON trial
+  dicts.  Legacy JSON clients never send ``hello`` and keep working
+  unchanged; a v2 client talking to a JSON-only server falls back to v1 on
+  the hello error.
+
+Concurrency: a single-threaded non-blocking event loop (``selectors``
+reactor) with per-connection read/write buffers — no thread per connection,
+so a 1k-worker storm costs the server zero GIL thrashing.  Atomicity of each
+call (e.g. the WAITING->RUNNING compare-and-set in
+``set_trial_state_values``) is delegated to the wrapped backend; since all
+dispatch happens on the reactor thread, calls are additionally serialized at
+the server.  A connection that violates the protocol (oversized length,
+garbage payload, mid-frame stall) is dropped in isolation — the loop and
+every other connection keep serving.  Graceful shutdown via
+:meth:`StorageServer.stop` — pending responses are flushed, then sockets
+close.
+
+Security: ``auth_token`` arms the shared-secret first-frame handshake;
+``auth_tokens`` adds *scoped* tokens (read-only and/or study-id allowlists)
+whose violations surface as ``PermissionError``.  ``tls_cert``/``tls_key``
+wrap the listener in TLS (clients connect via ``remote+tls://``).
 """
 
 from __future__ import annotations
@@ -26,8 +50,9 @@ from __future__ import annotations
 import hmac
 import json
 import os
+import selectors
 import socket
-import socketserver
+import ssl
 import struct
 import threading
 import time
@@ -35,7 +60,7 @@ from typing import Any
 
 from .. import telemetry
 from .base import BaseStorage, get_trials_since
-from .serde import pack, unpack
+from .serde import BINARY_MAGIC, bdumps, bjoin, bloads, pack, unpack
 
 __all__ = ["StorageServer", "send_frame", "recv_frame", "MAX_FRAME_BYTES"]
 
@@ -56,6 +81,7 @@ _METHODS = frozenset(
         "get_study_user_attrs",
         "get_study_system_attrs",
         "create_new_trial",
+        "create_new_trials",
         "set_trial_param",
         "set_trial_state_values",
         "set_trial_intermediate_value",
@@ -71,8 +97,51 @@ _METHODS = frozenset(
         "fail_stale_trials",
         "get_trials_revision",
         "get_trial_events",
+        "get_observation_block",
+        "get_iv_block",
     }
 )
+
+# scope enforcement tables: which methods mutate, and how each method names
+# the study it touches (first param is a study_id unless listed here)
+_WRITE_METHODS = frozenset(
+    {
+        "create_new_study",
+        "delete_study",
+        "set_study_user_attr",
+        "set_study_system_attr",
+        "create_new_trial",
+        "create_new_trials",
+        "set_trial_param",
+        "set_trial_state_values",
+        "set_trial_intermediate_value",
+        "report_and_prune",
+        "set_trial_user_attr",
+        "set_trial_system_attr",
+        "record_heartbeat",
+        "fail_stale_trials",
+    }
+)
+_TRIAL_SCOPED = frozenset(
+    {
+        "set_trial_param",
+        "set_trial_state_values",
+        "set_trial_intermediate_value",
+        "set_trial_user_attr",
+        "set_trial_system_attr",
+        "get_trial",
+        "record_heartbeat",
+    }
+)
+# not addressable by one study id — denied outright for study-scoped tokens
+_GLOBAL_SCOPED = frozenset({"create_new_study", "get_all_studies"})
+
+# binary-only RPCs: their responses are raw-array blocks that have no JSON
+# encoding; v1 clients get a typed NotImplementedError and fall back
+_V2_ONLY = frozenset({"get_observation_block", "get_iv_block"})
+
+
+# -- blocking frame helpers (used by the client; the server is non-blocking) --
 
 
 def send_frame(sock: socket.socket, payload: bytes) -> None:
@@ -126,157 +195,491 @@ def _recv_exact(sock: socket.socket, n: int, allow_idle_timeout: bool) -> bytes 
     return buf
 
 
-class _Handler(socketserver.BaseRequestHandler):
-    def handle(self) -> None:
-        server: "_RPCServer" = self.server  # type: ignore[assignment]
-        metrics = server.metrics
-        metrics.gauge("server.active_connections").add(1)
-        # events the wrapped backend records on this thread carry the *client*
-        # identity, so a fleet-wide trace attributes work to its worker
-        telemetry.set_worker_context("%s:%s" % self.client_address[:2])
-        try:
-            self._serve(server, metrics)
-        finally:
-            telemetry.set_worker_context(None)
-            metrics.gauge("server.active_connections").add(-1)
+# -- auth scopes --------------------------------------------------------------
 
-    def _serve(self, server: "_RPCServer", metrics: telemetry.MetricsRegistry) -> None:
-        sock: socket.socket = self.request
-        sock.settimeout(0.5)  # so the loop notices server shutdown promptly
-        authed = server.auth_token is None
+
+class _Scope:
+    """Capabilities of one auth token: ``readonly`` blocks writes,
+    ``studies`` (a frozenset of study ids, or None = all) bounds which
+    studies the token may touch."""
+
+    __slots__ = ("readonly", "studies")
+
+    def __init__(self, readonly: bool = False, studies: "frozenset[int] | None" = None):
+        self.readonly = readonly
+        self.studies = studies
+
+    @property
+    def unrestricted(self) -> bool:
+        return not self.readonly and self.studies is None
+
+
+_FULL_SCOPE = _Scope()
+
+
+def _normalize_tokens(auth_token, auth_tokens) -> list[tuple[str, _Scope]]:
+    scopes: list[tuple[str, _Scope]] = []
+    if auth_token is not None:
+        scopes.append((auth_token, _FULL_SCOPE))
+    for ent in auth_tokens or []:
+        if isinstance(ent, str):
+            scopes.append((ent, _FULL_SCOPE))
+            continue
+        studies = ent.get("studies")
+        scopes.append(
+            (
+                ent["token"],
+                _Scope(
+                    readonly=bool(ent.get("readonly", False)),
+                    studies=(
+                        frozenset(int(s) for s in studies) if studies is not None else None
+                    ),
+                ),
+            )
+        )
+    return scopes
+
+
+# -- reactor ------------------------------------------------------------------
+
+
+class _Drop(Exception):
+    """Internal: close this connection (protocol violation or dead peer)."""
+
+
+class _Conn:
+    __slots__ = (
+        "sock",
+        "peer",
+        "inbuf",
+        "outbuf",
+        "authed",
+        "scope",
+        "proto",
+        "specs",
+        "closing",
+        "handshaking",
+        "stall_deadline",
+        "mask",
+        "closed",
+    )
+
+    def __init__(self, sock, peer: str, authed: bool, handshaking: bool):
+        self.sock = sock
+        self.peer = peer
+        self.inbuf = bytearray()
+        self.outbuf = bytearray()
+        self.authed = authed
+        self.scope: "_Scope | None" = _FULL_SCOPE if authed else None
+        self.proto = 1
         # per-connection interned pruner specs (client sends each spec once
         # as __spec_def__, then short __spec_ref__ frames; see client.py)
-        conn_specs: dict[int, dict] = {}
-        while not server.stopping.is_set():
-            try:
-                payload = recv_frame(sock)
-            except socket.timeout:
-                continue
-            except (ConnectionError, OSError):
-                return
-            if payload is None:
-                return
-            metrics.counter("server.frames_in").inc()
-            metrics.counter("server.bytes_in").inc(len(payload))
-            try:
-                request = json.loads(payload)
-            except json.JSONDecodeError:
-                return  # protocol violation; drop the connection
-            drop_after_reply = False
-            if not authed:
-                # token-protected server: the first frame must be a valid auth
-                # handshake; anything else is answered with a typed error and
-                # the connection is dropped
-                if _auth_ok(request, server.auth_token):
-                    authed = True
-                    responses = [{"id": request.get("id"), "ok": True, "result": "ok"}]
-                    batch = False
-                else:
-                    metrics.counter("server.auth_failures").inc()
-                    responses = [
-                        {
-                            "id": request.get("id") if isinstance(request, dict) else None,
-                            "ok": False,
-                            "error": {
-                                "type": "PermissionError",
-                                "message": "storage server requires an auth token",
-                            },
-                        }
-                    ]
-                    batch = False
-                    drop_after_reply = True
-            else:
-                batch = isinstance(request, list)
-                t0 = time.perf_counter()
-                responses = [
-                    server.dispatch(r, conn_specs)
-                    for r in (request if batch else [request])
-                ]
-            out = json.dumps(responses if batch else responses[0]).encode()
-            if batch:
-                # the whole-frame view of a batched flush (tell_batch, the
-                # write-behind drain): per-op latencies are recorded by
-                # dispatch; this row pins the envelope cost clients feel
-                server._note_rpc("batch", t0, len(out))
-                metrics.counter("server.batched_ops").inc(len(responses))
-            metrics.counter("server.frames_out").inc()
-            metrics.counter("server.bytes_out").inc(len(out))
-            try:
-                sock.settimeout(30.0)
-                send_frame(sock, out)
-                sock.settimeout(0.5)
-            except (ConnectionError, OSError):
-                return
-            if drop_after_reply:
-                return
+        self.specs: dict[int, dict] = {}
+        self.closing = False  # reply flushed, then close (auth rejection)
+        self.handshaking = handshaking  # TLS handshake in progress
+        self.stall_deadline: "float | None" = (
+            time.monotonic() + MID_FRAME_STALL_SECONDS if handshaking else None
+        )
+        self.mask = selectors.EVENT_READ
+        self.closed = False
 
 
-def _resolve_spec(params: list, conn_specs: "dict[int, dict] | None") -> list:
-    """Resolve the pruner-spec param of a fused report: a ``__spec_def__``
-    envelope registers the full spec in this connection's cache, a
-    ``__spec_ref__`` looks one up, and a raw spec dict (older clients, or
-    in-process dispatch without connection state) passes through untouched."""
-    if len(params) < 5 or not isinstance(params[4], dict):
-        return params
-    spec = params[4]
-    if "__spec_def__" in spec:
-        ent = spec["__spec_def__"]
-        params = list(params)
-        params[4] = ent["spec"]
-        if conn_specs is not None:
-            conn_specs[int(ent["id"])] = ent["spec"]
-        return params
-    if "__spec_ref__" in spec:
-        ref = int(spec["__spec_ref__"])
-        if conn_specs is None or ref not in conn_specs:
-            raise ValueError(
-                f"unknown pruner spec ref {ref} (connection lost its spec cache)"
-            )
-        params = list(params)
-        params[4] = conn_specs[ref]
-        return params
-    return params
+class _RPCServer:
+    """The selectors-based reactor + dispatcher behind :class:`StorageServer`."""
 
-
-def _auth_ok(request: Any, token: str) -> bool:
-    if not isinstance(request, dict) or request.get("method") != "auth":
-        return False
-    params = request.get("params")
-    if not isinstance(params, list) or len(params) != 1 or not isinstance(params[0], str):
-        return False
-    return hmac.compare_digest(params[0], token)
-
-
-class _RPCServer(socketserver.ThreadingTCPServer):
-    daemon_threads = True
-    allow_reuse_address = True
-
-    def __init__(self, addr: tuple[str, int], storage: BaseStorage, auth_token: "str | None" = None):
-        super().__init__(addr, _Handler)
+    def __init__(
+        self,
+        addr: tuple[str, int],
+        storage: BaseStorage,
+        auth_token: "str | None" = None,
+        auth_tokens: "list | None" = None,
+        ssl_context: "ssl.SSLContext | None" = None,
+        max_protocol: int = 2,
+    ):
         self.storage = storage
-        self.auth_token = auth_token
+        self._scopes = _normalize_tokens(auth_token, auth_tokens)
+        self.auth_required = bool(self._scopes)
+        self.ssl_context = ssl_context
+        self.max_protocol = max_protocol
         self.stopping = threading.Event()
         # always-on, server-owned registry: get_server_metrics must work
         # without globally enabling client-side telemetry in this process
         self.metrics = telemetry.MetricsRegistry(enabled=True)
         self.started_at = time.time()
+        # trial_id -> study_id, maintained only when a study-scoped token
+        # exists (enforcement needs it; unscoped servers skip the memory)
+        self._track_trials = any(sc.studies is not None for _, sc in self._scopes)
+        self._trial_study: dict[int, int] = {}
 
-    def dispatch(self, request: dict, conn_specs: "dict[int, dict] | None" = None) -> dict:
+        listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        listener.bind(addr)
+        listener.listen(128)
+        listener.setblocking(False)
+        self._listener = listener
+        self.server_address = listener.getsockname()
+        self._sel = selectors.DefaultSelector()
+        self._conns: set[_Conn] = set()
+        self._last_sweep = time.monotonic()
+        self._closed = False
+
+    # -- event loop -----------------------------------------------------------
+
+    def serve_forever(self, poll_interval: float = 0.1) -> None:
+        self._sel.register(self._listener, selectors.EVENT_READ, None)
+        try:
+            while not self.stopping.is_set():
+                for key, mask in self._sel.select(poll_interval):
+                    if key.data is None:
+                        self._accept()
+                    else:
+                        conn: _Conn = key.data
+                        try:
+                            self._service(conn, mask)
+                        except _Drop:
+                            self._close_conn(conn)
+                        except Exception:
+                            # one connection's failure must never kill the
+                            # loop: drop it, keep serving everyone else
+                            self.metrics.counter("server.protocol_errors").inc()
+                            self._close_conn(conn)
+                now = time.monotonic()
+                if now - self._last_sweep >= 1.0:
+                    self._last_sweep = now
+                    self._sweep_stalled(now)
+        finally:
+            self.close()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for conn in list(self._conns):
+            if conn.outbuf and not conn.handshaking and not conn.closed:
+                # best-effort flush of pending responses on graceful shutdown
+                try:
+                    conn.sock.setblocking(True)
+                    conn.sock.settimeout(1.0)
+                    conn.sock.sendall(bytes(conn.outbuf))
+                except Exception:
+                    pass
+            self._close_conn(conn)
+        try:
+            self._sel.close()
+        except Exception:
+            pass
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+
+    def _accept(self) -> None:
+        while True:
+            try:
+                sock, addr = self._listener.accept()
+            except (BlockingIOError, InterruptedError):
+                return
+            except OSError:
+                return
+            sock.setblocking(False)
+            try:
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            except OSError:
+                pass
+            handshaking = False
+            if self.ssl_context is not None:
+                try:
+                    sock = self.ssl_context.wrap_socket(
+                        sock, server_side=True, do_handshake_on_connect=False
+                    )
+                except (ssl.SSLError, OSError):
+                    try:
+                        sock.close()
+                    except OSError:
+                        pass
+                    continue
+                handshaking = True
+            conn = _Conn(
+                sock, "%s:%s" % addr[:2], authed=not self.auth_required,
+                handshaking=handshaking,
+            )
+            try:
+                self._sel.register(sock, selectors.EVENT_READ, conn)
+            except (ValueError, KeyError, OSError):
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+                continue
+            self._conns.add(conn)
+            self.metrics.gauge("server.active_connections").add(1)
+
+    def _service(self, conn: _Conn, mask: int) -> None:
+        if conn.closed:
+            return
+        if conn.handshaking:
+            self._tls_handshake(conn)
+            return
+        if mask & selectors.EVENT_READ:
+            self._read(conn)
+        if not conn.closed and (mask & selectors.EVENT_WRITE):
+            self._write(conn)
+
+    def _tls_handshake(self, conn: _Conn) -> None:
+        try:
+            conn.sock.do_handshake()
+        except ssl.SSLWantReadError:
+            self._set_mask(conn, selectors.EVENT_READ)
+            return
+        except ssl.SSLWantWriteError:
+            self._set_mask(conn, selectors.EVENT_WRITE)
+            return
+        except (ssl.SSLError, OSError):
+            raise _Drop from None
+        conn.handshaking = False
+        conn.stall_deadline = None
+        self._set_mask(conn, selectors.EVENT_READ)
+        # app data may have arrived piggybacked on the final handshake flight
+        self._read(conn)
+
+    def _read(self, conn: _Conn) -> None:
+        while True:
+            try:
+                chunk = conn.sock.recv(1 << 16)
+            except (ssl.SSLWantReadError, ssl.SSLWantWriteError):
+                break
+            except (BlockingIOError, InterruptedError):
+                break
+            except (ConnectionError, OSError, ssl.SSLError):
+                raise _Drop from None
+            if not chunk:
+                raise _Drop  # EOF
+            conn.inbuf += chunk
+            conn.stall_deadline = None  # progress resets the stall clock
+            if len(conn.inbuf) > MAX_FRAME_BYTES + 4:
+                break  # let frame parsing catch up before buffering more
+        self._process_inbuf(conn)
+
+    def _process_inbuf(self, conn: _Conn) -> None:
+        inbuf = conn.inbuf
+        while not conn.closed and not conn.closing:
+            if len(inbuf) < 4:
+                break
+            length = int.from_bytes(inbuf[:4], "big")
+            if length > MAX_FRAME_BYTES:
+                # oversized length header: unrecoverable framing state
+                self.metrics.counter("server.protocol_errors").inc()
+                raise _Drop
+            if len(inbuf) < 4 + length:
+                break
+            payload = bytes(memoryview(inbuf)[4 : 4 + length])
+            del inbuf[: 4 + length]
+            self._handle_frame(conn, payload)
+        if conn.closed:
+            return
+        if inbuf and conn.stall_deadline is None:
+            # partial frame pending: the peer gets a bounded grace period
+            conn.stall_deadline = time.monotonic() + MID_FRAME_STALL_SECONDS
+
+    def _handle_frame(self, conn: _Conn, payload: bytes) -> None:
+        self.metrics.counter("server.frames_in").inc()
+        self.metrics.counter("server.bytes_in").inc(len(payload))
+        if not conn.authed:
+            self._handle_auth(conn, payload)
+            return
+        proto = conn.proto
+        if proto == 2:
+            if not payload or payload[0] != BINARY_MAGIC:
+                self.metrics.counter("server.protocol_errors").inc()
+                raise _Drop
+            try:
+                request = bloads(memoryview(payload)[1:])
+            except Exception:
+                self.metrics.counter("server.protocol_errors").inc()
+                raise _Drop from None
+        else:
+            try:
+                request = json.loads(payload)
+            except json.JSONDecodeError:
+                self.metrics.counter("server.protocol_errors").inc()
+                raise _Drop from None
+        batch = isinstance(request, list)
+        t0 = time.perf_counter()
+        # events the wrapped backend records during dispatch carry the
+        # *client* identity, so a fleet-wide trace attributes work to workers
+        telemetry.set_worker_context(conn.peer)
+        hello_proto = None
+        try:
+            encoded: list[bytes] = []
+            for r in request if batch else [request]:
+                response, blob = self.dispatch(
+                    r, conn.specs, scope=conn.scope, proto=proto
+                )
+                encoded.append(blob)
+                if (
+                    not batch
+                    and isinstance(r, dict)
+                    and r.get("method") == "hello"
+                    and response.get("ok")
+                ):
+                    hello_proto = response["result"]["protocol"]
+        finally:
+            telemetry.set_worker_context(None)
+        if batch:
+            # responses were serialized one by one (for per-method byte
+            # accounting); assemble the batch frame compositionally instead
+            # of re-serializing the whole list
+            if proto == 2:
+                body = bytes([BINARY_MAGIC]) + bjoin(encoded)
+            else:
+                body = b"[" + b",".join(encoded) + b"]"
+            # the whole-frame view of a batched flush (tell_batch, the
+            # write-behind drain): per-op latencies are recorded by dispatch;
+            # this row pins the envelope cost clients feel
+            self._note_rpc("batch", t0, len(body))
+            self.metrics.counter("server.batched_ops").inc(len(encoded))
+        else:
+            body = (bytes([BINARY_MAGIC]) + encoded[0]) if proto == 2 else encoded[0]
+        self._send(conn, body)
+        if hello_proto == 2:
+            conn.proto = 2  # every later frame on this connection is binary
+
+    def _handle_auth(self, conn: _Conn, payload: bytes) -> None:
+        # the auth handshake is always JSON, whatever gets negotiated later
+        try:
+            request = json.loads(payload)
+        except json.JSONDecodeError:
+            self.metrics.counter("server.protocol_errors").inc()
+            raise _Drop from None
+        scope = self._auth_scope(request)
+        if scope is not None:
+            conn.authed = True
+            conn.scope = scope
+            response = {"id": request.get("id"), "ok": True, "result": "ok"}
+        else:
+            self.metrics.counter("server.auth_failures").inc()
+            self.metrics.counter("server.auth_failures.bad_token").inc()
+            response = {
+                "id": request.get("id") if isinstance(request, dict) else None,
+                "ok": False,
+                "error": {
+                    "type": "PermissionError",
+                    "message": "storage server requires an auth token",
+                },
+            }
+            conn.closing = True  # reply, flush, drop
+        self._send(conn, json.dumps(response).encode())
+
+    def _auth_scope(self, request: Any) -> "_Scope | None":
+        if not isinstance(request, dict) or request.get("method") != "auth":
+            return None
+        params = request.get("params")
+        if not isinstance(params, list) or len(params) != 1 or not isinstance(params[0], str):
+            return None
+        for token, scope in self._scopes:
+            if hmac.compare_digest(params[0], token):
+                return scope
+        return None
+
+    def _send(self, conn: _Conn, body: bytes) -> None:
+        self.metrics.counter("server.frames_out").inc()
+        self.metrics.counter("server.bytes_out").inc(len(body))
+        conn.outbuf += struct.pack(">I", len(body))
+        conn.outbuf += body
+        self._write(conn)
+
+    def _write(self, conn: _Conn) -> None:
+        while conn.outbuf:
+            try:
+                n = conn.sock.send(memoryview(conn.outbuf))
+            except (ssl.SSLWantWriteError, ssl.SSLWantReadError):
+                break
+            except (BlockingIOError, InterruptedError):
+                break
+            except (ConnectionError, OSError, ssl.SSLError):
+                raise _Drop from None
+            if n == 0:
+                break
+            del conn.outbuf[:n]
+        if conn.outbuf:
+            self._set_mask(conn, selectors.EVENT_READ | selectors.EVENT_WRITE)
+            if conn.stall_deadline is None:
+                # a peer that never drains its responses is as dead as one
+                # that stalls mid-frame
+                conn.stall_deadline = time.monotonic() + MID_FRAME_STALL_SECONDS
+        else:
+            self._set_mask(conn, selectors.EVENT_READ)
+            if conn.closing:
+                self._close_conn(conn)
+
+    def _set_mask(self, conn: _Conn, mask: int) -> None:
+        if mask != conn.mask and not conn.closed:
+            try:
+                self._sel.modify(conn.sock, mask, conn)
+                conn.mask = mask
+            except (ValueError, KeyError, OSError):
+                raise _Drop from None
+
+    def _sweep_stalled(self, now: float) -> None:
+        for conn in list(self._conns):
+            if conn.stall_deadline is not None and now >= conn.stall_deadline:
+                self.metrics.counter("server.stalled_connections").inc()
+                self._close_conn(conn)
+
+    def _close_conn(self, conn: _Conn) -> None:
+        if conn.closed:
+            return
+        conn.closed = True
+        try:
+            self._sel.unregister(conn.sock)
+        except (ValueError, KeyError, OSError):
+            pass
+        try:
+            conn.sock.close()
+        except OSError:
+            pass
+        self._conns.discard(conn)
+        self.metrics.gauge("server.active_connections").add(-1)
+
+    # -- dispatch -------------------------------------------------------------
+
+    def dispatch(
+        self,
+        request: Any,
+        conn_specs: "dict[int, dict] | None" = None,
+        scope: "_Scope | None" = None,
+        proto: int = 1,
+    ) -> tuple[dict, bytes]:
+        """Execute one RPC; returns ``(response, encoded_response)``.
+
+        The response is serialized exactly once — the returned bytes are both
+        the wire payload and the per-method byte-accounting sample."""
+        enc = self._enc_json if proto == 1 else self._enc_bin
+        if not isinstance(request, dict):
+            request = {}
         req_id = request.get("id")
         method = request.get("method")
         t0 = time.perf_counter()
         try:
             if method == "ping":
-                return {"id": req_id, "ok": True, "result": "pong"}
+                response = {"id": req_id, "ok": True, "result": "pong"}
+                return response, enc(response)
             if method == "auth":
                 # reaching dispatch means no token is required (or the
                 # connection already authenticated); accept idempotently
-                return {"id": req_id, "ok": True, "result": "ok"}
+                response = {"id": req_id, "ok": True, "result": "ok"}
+                return response, enc(response)
+            if method == "hello" and self.max_protocol >= 2:
+                response = {"id": req_id, "ok": True, "result": self._hello(request)}
+                return response, enc(response)
             if method == "get_server_metrics":
-                return {"id": req_id, "ok": True, "result": self.server_metrics()}
+                response = {"id": req_id, "ok": True, "result": self.server_metrics()}
+                return response, enc(response)
             if method not in _METHODS:
                 raise ValueError(f"unknown storage method {method!r}")
-            params = unpack(request.get("params") or [])
+            params = request.get("params") or []
+            if proto == 1:
+                params = unpack(params)
             if method == "report_and_prune":
                 spec = params[4] if len(params) > 4 and isinstance(params[4], dict) else None
                 if spec is not None and "__spec_ref__" in spec:
@@ -284,21 +687,112 @@ class _RPCServer(socketserver.ThreadingTCPServer):
                 elif spec is not None and "__spec_def__" in spec:
                     self.metrics.counter("server.spec_cache.defs").inc()
                 params = _resolve_spec(params, conn_specs)
+            self._check_scope(method, params, scope)
+            if method in _V2_ONLY and proto == 1:
+                raise NotImplementedError(f"{method} requires wire protocol v2")
             result = self._invoke(method, params)
-            response = {"id": req_id, "ok": True, "result": pack(result)}
+            if self._track_trials:
+                self._note_trial_ids(method, params, result)
+            response = {
+                "id": req_id,
+                "ok": True,
+                "result": pack(result) if proto == 1 else result,
+            }
             # an unserializable result must become a typed error frame, not a
             # dropped connection (the client would silently retry + misreport)
-            # — the dump doubles as the per-method response-size sample
-            blob = json.dumps(response)
+            blob = enc(response)
             self._note_rpc(method, t0, len(blob))
-            return response
+            return response, blob
         except Exception as e:  # every failure maps to a typed client-side raise
             self._note_rpc(method, t0, 0, error=True)
-            return {
+            response = {
                 "id": req_id,
                 "ok": False,
                 "error": {"type": type(e).__name__, "message": str(e)},
             }
+            try:
+                return response, enc(response)
+            except Exception:  # pragma: no cover - unserializable error text
+                response = {
+                    "id": req_id,
+                    "ok": False,
+                    "error": {"type": "StorageInternalError", "message": "dispatch failed"},
+                }
+                return response, enc(response)
+
+    @staticmethod
+    def _enc_json(response: dict) -> bytes:
+        return json.dumps(response).encode()
+
+    @staticmethod
+    def _enc_bin(response: dict) -> bytes:
+        return bdumps(response)
+
+    def _hello(self, request: dict) -> dict:
+        params = request.get("params") or []
+        want = 2
+        if params and isinstance(params[0], dict):
+            want = int(params[0].get("protocol", 2))
+        return {"protocol": max(1, min(want, self.max_protocol, 2))}
+
+    def _check_scope(self, method: str, params: list, scope: "_Scope | None") -> None:
+        if scope is None or scope.unrestricted:
+            return
+        if scope.readonly and method in _WRITE_METHODS:
+            self._auth_failure("readonly")
+            raise PermissionError(f"token is read-only; {method!r} is a write")
+        studies = scope.studies
+        if studies is None:
+            return
+        if method in _GLOBAL_SCOPED:
+            self._auth_failure("study_scope")
+            raise PermissionError(
+                f"token is study-scoped; {method!r} is not study-addressable"
+            )
+        if method == "get_study_id_from_name":
+            # resolve first: the id mapping itself is what the scope protects
+            sid = self.storage.get_study_id_from_name(params[0])
+        elif method in _TRIAL_SCOPED:
+            sid = self._study_of_trial(int(params[0]), studies)
+        else:
+            sid = int(params[0])
+        if sid not in studies:
+            self._auth_failure("study_scope")
+            raise PermissionError(f"token is not scoped to study {sid}")
+
+    def _auth_failure(self, cause: str) -> None:
+        self.metrics.counter("server.auth_failures").inc()
+        self.metrics.counter(f"server.auth_failures.{cause}").inc()
+
+    def _study_of_trial(self, trial_id: int, studies: "frozenset[int]") -> int:
+        """Resolve a trial-addressed call to its study for scope checks: the
+        map fills from create dispatches; unknown ids (trials created by
+        another connection) fall back to one scan of the allowed studies."""
+        sid = self._trial_study.get(trial_id)
+        if sid is None:
+            for s in sorted(studies):
+                try:
+                    for t in self.storage.get_all_trials(s, deepcopy=False):
+                        self._trial_study.setdefault(t.trial_id, s)
+                except Exception:
+                    continue
+            sid = self._trial_study.get(trial_id)
+        if sid is None:
+            self._auth_failure("study_scope")
+            raise PermissionError(
+                f"trial {trial_id} is outside this token's study scope"
+            )
+        return sid
+
+    def _note_trial_ids(self, method: str, params: list, result: Any) -> None:
+        if method == "create_new_trial" and isinstance(result, int):
+            self._trial_study[result] = int(params[0])
+        elif method == "create_new_trials" and isinstance(result, list):
+            sid = int(params[0])
+            for tid in result:
+                self._trial_study[tid] = sid
+        elif method == "get_trial_id_from_study_and_number" and isinstance(result, int):
+            self._trial_study[result] = int(params[0])
 
     def _note_rpc(self, method: Any, t0: float, nbytes: int, error: bool = False) -> None:
         name = method if isinstance(method, str) else "invalid"
@@ -329,6 +823,13 @@ class _RPCServer(socketserver.ThreadingTCPServer):
             "uptime_s": time.time() - self.started_at,
             "active_connections": snap["gauges"].get("server.active_connections", 0),
             "auth_failures": counters.get("server.auth_failures", 0),
+            "auth_failures_by_cause": {
+                "bad_token": counters.get("server.auth_failures.bad_token", 0),
+                "readonly": counters.get("server.auth_failures.readonly", 0),
+                "study_scope": counters.get("server.auth_failures.study_scope", 0),
+            },
+            "protocol_errors": counters.get("server.protocol_errors", 0),
+            "stalled_connections": counters.get("server.stalled_connections", 0),
             "frames_in": counters.get("server.frames_in", 0),
             "frames_out": counters.get("server.frames_out", 0),
             "bytes_in": counters.get("server.bytes_in", 0),
@@ -341,7 +842,7 @@ class _RPCServer(socketserver.ThreadingTCPServer):
 
     def _invoke(self, method: str, params: list[Any]) -> Any:
         if method in ("get_all_trials", "get_n_trials"):
-            # states arrives as a JSON list; the API takes a tuple
+            # states arrives as a wire list; the API takes a tuple
             if method == "get_all_trials":
                 study_id, deepcopy, states, since = params
                 states = tuple(states) if states is not None else None
@@ -355,6 +856,33 @@ class _RPCServer(socketserver.ThreadingTCPServer):
                 states = tuple(states) if states is not None else None
                 return self.storage.get_n_trials(study_id, states=states)
         return getattr(self.storage, method)(*params)
+
+
+def _resolve_spec(params: list, conn_specs: "dict[int, dict] | None") -> list:
+    """Resolve the pruner-spec param of a fused report: a ``__spec_def__``
+    envelope registers the full spec in this connection's cache, a
+    ``__spec_ref__`` looks one up, and a raw spec dict (older clients, or
+    in-process dispatch without connection state) passes through untouched."""
+    if len(params) < 5 or not isinstance(params[4], dict):
+        return params
+    spec = params[4]
+    if "__spec_def__" in spec:
+        ent = spec["__spec_def__"]
+        params = list(params)
+        params[4] = ent["spec"]
+        if conn_specs is not None:
+            conn_specs[int(ent["id"])] = ent["spec"]
+        return params
+    if "__spec_ref__" in spec:
+        ref = int(spec["__spec_ref__"])
+        if conn_specs is None or ref not in conn_specs:
+            raise ValueError(
+                f"unknown pruner spec ref {ref} (connection lost its spec cache)"
+            )
+        params = list(params)
+        params[4] = conn_specs[ref]
+        return params
+    return params
 
 
 class StorageServer:
@@ -372,26 +900,50 @@ class StorageServer:
     present the token in its first frame (``RemoteStorage`` does this
     automatically for ``remote://token@host:port`` URLs or an explicit
     ``auth_token=``) or it is rejected with ``PermissionError`` and dropped.
-    This is authentication only — the wire stays plaintext; run inside a
-    trusted network or tunnel for confidentiality.
+    ``auth_tokens`` adds *scoped* tokens — dicts of ``{"token": str,
+    "readonly": bool, "studies": [ids] | None}`` — whose violations raise
+    ``PermissionError`` on the offending call (the connection survives).
+
+    ``tls_cert``/``tls_key`` (PEM paths) wrap every connection in TLS;
+    clients then connect via ``remote+tls://host:port`` (authentication
+    still runs inside the encrypted channel).  Without TLS the wire is
+    plaintext — run inside a trusted network or tunnel for confidentiality.
+
+    ``max_protocol=1`` pins the server to JSON frames (the ``hello``
+    negotiation is answered as an unknown method, exactly like a pre-v2
+    server), which v2 clients transparently fall back from.
     """
 
     def __init__(
         self, storage: BaseStorage, host: str = "127.0.0.1", port: int = 0,
-        auth_token: "str | None" = None,
+        auth_token: "str | None" = None, auth_tokens: "list | None" = None,
+        tls_cert: "str | None" = None, tls_key: "str | None" = None,
+        max_protocol: int = 2,
     ):
+        if (tls_cert is None) != (tls_key is None):
+            raise ValueError("tls_cert and tls_key must be given together")
         self._storage = storage
         self._host = host
         self._requested_port = port
         self._auth_token = auth_token
+        self._auth_tokens = auth_tokens
+        self._tls_cert = tls_cert
+        self._tls_key = tls_key
+        self._max_protocol = max_protocol
         self._server: _RPCServer | None = None
         self._thread: threading.Thread | None = None
 
     def start(self) -> "StorageServer":
         if self._server is not None:
             return self
+        ssl_context = None
+        if self._tls_cert is not None:
+            ssl_context = ssl.SSLContext(ssl.PROTOCOL_TLS_SERVER)
+            ssl_context.load_cert_chain(self._tls_cert, self._tls_key)
         self._server = _RPCServer(
-            (self._host, self._requested_port), self._storage, auth_token=self._auth_token
+            (self._host, self._requested_port), self._storage,
+            auth_token=self._auth_token, auth_tokens=self._auth_tokens,
+            ssl_context=ssl_context, max_protocol=self._max_protocol,
         )
         self._thread = threading.Thread(
             target=self._server.serve_forever, kwargs={"poll_interval": 0.1}, daemon=True
@@ -410,8 +962,13 @@ class StorageServer:
         return self._server.server_address[1]
 
     @property
+    def tls(self) -> bool:
+        return self._tls_cert is not None
+
+    @property
     def url(self) -> str:
-        return f"remote://{self.host}:{self.port}"
+        scheme = "remote+tls" if self.tls else "remote"
+        return f"{scheme}://{self.host}:{self.port}"
 
     def get_server_metrics(self) -> dict[str, Any]:
         """The live metrics surface (same payload the ``get_server_metrics``
@@ -424,10 +981,9 @@ class StorageServer:
         if self._server is None:
             return
         self._server.stopping.set()
-        self._server.shutdown()
-        self._server.server_close()
         if self._thread is not None:
             self._thread.join(timeout=5.0)
+        self._server.close()  # idempotent; covers a loop that died early
         self._server = None
         self._thread = None
 
@@ -455,11 +1011,27 @@ def main(argv: list[str] | None = None) -> None:
         help="shared secret; clients connect with remote://TOKEN@host:port "
         "(default: $REPRO_STORAGE_TOKEN)",
     )
+    ap.add_argument(
+        "--readonly-token",
+        default=None,
+        help="additional shared secret granting read-only access",
+    )
+    ap.add_argument("--tls-cert", default=None, help="PEM certificate; enables TLS")
+    ap.add_argument("--tls-key", default=None, help="PEM private key; enables TLS")
+    ap.add_argument(
+        "--max-protocol", type=int, default=2, choices=(1, 2),
+        help="1 pins the wire to legacy JSON frames",
+    )
     args = ap.parse_args(argv)
 
+    auth_tokens = None
+    if args.readonly_token:
+        auth_tokens = [{"token": args.readonly_token, "readonly": True}]
     server = StorageServer(
         get_storage(args.storage), host=args.host, port=args.port,
-        auth_token=args.auth_token,
+        auth_token=args.auth_token, auth_tokens=auth_tokens,
+        tls_cert=args.tls_cert, tls_key=args.tls_key,
+        max_protocol=args.max_protocol,
     ).start()
     print(f"serving {args.storage} at {server.url} (ctrl-c to stop)", flush=True)
     try:

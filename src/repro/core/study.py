@@ -22,7 +22,7 @@ import numpy as np
 from . import telemetry
 from .exceptions import DuplicatedStudyError, TrialPruned
 from .frozen import FrozenTrial, StudyDirection, TrialState
-from .log import get_logger, log_once
+from .log import get_logger
 from .pruners import BasePruner, NopPruner
 from .records import IntermediateValueStore, ObservationStore
 from .samplers import BaseSampler, TPESampler
@@ -327,8 +327,10 @@ class Study:
             return
         self._joint_miss_logged = True
         telemetry.inc("study.joint_miss")
-        log_once(
-            _log, ("joint_miss", id(self)), logging.INFO,
+        # the per-study flag above already dedupes; a global log_once keyed
+        # on id(self) would go silent when a dead study's id gets reused
+        _log.log(
+            logging.INFO,
             "study %r [worker %s]: joint block missed parameter %r (%s); "
             "falling back to per-trial scalar sampling for divergent "
             "parameters (logged once per study)",

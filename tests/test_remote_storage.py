@@ -19,9 +19,12 @@ from repro.core.storage import (
 )
 
 
-@pytest.fixture
-def server():
-    srv = StorageServer(InMemoryStorage()).start()
+# every test in this module runs against both wire protocols: v1 pins the
+# server to legacy JSON frames (clients transparently fall back), v2
+# negotiates the binary framing via hello
+@pytest.fixture(params=[1, 2], ids=["v1", "v2"])
+def server(request):
+    srv = StorageServer(InMemoryStorage(), max_protocol=request.param).start()
     yield srv
     srv.stop()
 
@@ -385,9 +388,9 @@ class TestFusedReportPrune:
         counter = {"n": 0}
         orig = remote._roundtrip
 
-        def counting(payload):
+        def counting(request, payloads):
             counter["n"] += 1
-            return orig(payload)
+            return orig(request, payloads)
 
         remote._roundtrip = counting
         return counter
@@ -504,9 +507,11 @@ class TestPrunerSpecCache:
         frames = []
         orig = remote._roundtrip
 
-        def recording(payload):
-            frames.append(payload)
-            return orig(payload)
+        def recording(request, payloads):
+            result = orig(request, payloads)
+            # the encoded wire payload is cached per protocol by the call
+            frames.append(max(payloads.values(), key=len) if payloads else b"")
+            return result
 
         remote._roundtrip = recording
         return frames

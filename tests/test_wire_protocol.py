@@ -1,0 +1,541 @@
+"""Wire protocol v2: binary codec roundtrips, hello negotiation and
+back-compat, frame fuzzing / reactor robustness, auth scopes, TLS, and the
+mini worker-storm smoke on both protocol versions."""
+
+import datetime
+import json
+import multiprocessing
+import socket
+import struct
+import subprocess
+import threading
+
+import numpy as np
+import pytest
+
+import repro.core as hpo
+from repro.core.distributions import (
+    CategoricalDistribution,
+    FloatDistribution,
+    IntDistribution,
+)
+from repro.core.frozen import FrozenTrial, StudyDirection, TrialState
+from repro.core.records import IntermediateValueStore, ObservationStore
+from repro.core.storage import (
+    InMemoryStorage,
+    RemoteStorage,
+    StorageServer,
+    get_storage,
+)
+from repro.core.storage.serde import (
+    BINARY_MAGIC,
+    bdumps,
+    bjoin,
+    bloads,
+    pack,
+    unpack,
+)
+from repro.core.storage.server import MAX_FRAME_BYTES, recv_frame, send_frame
+
+
+# -- binary codec -------------------------------------------------------------
+
+
+class TestBinaryCodec:
+    def test_scalar_roundtrip(self):
+        for v in (None, True, False, 0, -1, 2**40, -(2**40), 1.5, float("inf"),
+                  "", "héllo", b"raw\x00bytes", 2**100, -(2**100)):
+            got = bloads(bdumps(v))
+            assert got == v and type(got) is type(v), v
+
+    def test_nan_roundtrip(self):
+        got = bloads(bdumps(float("nan")))
+        assert isinstance(got, float) and got != got
+
+    def test_containers_match_json_codec(self):
+        # dict int keys are stringified exactly like the JSON path
+        obj = {"a": [1, 2.5, None, {"n": [True]}], 3: "three", "t": (1, 2)}
+        binary = bloads(bdumps(obj))
+        jsonic = unpack(json.loads(json.dumps(pack(obj))))
+        assert binary == jsonic
+        assert binary["3"] == "three" and binary["t"] == [1, 2]
+
+    def test_ndarray_roundtrip(self):
+        for arr in (
+            np.arange(6, dtype=np.int64),
+            np.arange(6, dtype=np.float64).reshape(2, 3),
+            np.array([], dtype=np.float32),
+            np.array([[True, False]]),
+            np.arange(8, dtype=np.int8)[::2],  # non-contiguous input
+        ):
+            got = bloads(bdumps(arr))
+            assert isinstance(got, np.ndarray)
+            assert got.dtype == arr.dtype and got.shape == arr.shape
+            assert np.array_equal(got, arr)
+
+    def test_object_array_rejected(self):
+        with pytest.raises(TypeError):
+            bdumps(np.array([object()]))
+
+    def test_frozen_trial_roundtrip_matches_json_codec(self):
+        t = FrozenTrial(
+            number=3,
+            state=TrialState.PRUNED,
+            values=[1.5, -2.0],
+            params={"x": 0.25, "c": None},
+            distributions={
+                "x": FloatDistribution(0, 1, log=False),
+                "c": CategoricalDistribution([None, "b", 4]),
+            },
+            intermediate_values={0: 1.0, 7: float("nan")},
+            user_attrs={"k": [1, {"deep": "v"}]},
+            system_attrs={"fixed_params": {"x": 0.25}},
+            trial_id=17,
+            datetime_start=datetime.datetime(2026, 8, 8, 12, 0, 1, 5),
+            datetime_complete=datetime.datetime(2026, 8, 8, 12, 0, 2),
+        )
+        for got in (bloads(bdumps(t)), unpack(json.loads(json.dumps(pack(t))))):
+            assert got.number == 3 and got.state is TrialState.PRUNED
+            assert got.values == [1.5, -2.0]
+            assert got.params == t.params
+            assert isinstance(got.distributions["x"], FloatDistribution)
+            assert sorted(got.intermediate_values) == [0, 7]
+            assert got.intermediate_values[7] != got.intermediate_values[7]
+            assert got.user_attrs == t.user_attrs
+            assert got.trial_id == 17
+            assert got.datetime_start == t.datetime_start
+            assert got.datetime_complete == t.datetime_complete
+
+    def test_enum_types_preserved(self):
+        got = bloads(bdumps([TrialState.COMPLETE, StudyDirection.MAXIMIZE]))
+        assert got[0] is TrialState.COMPLETE
+        assert got[1] is StudyDirection.MAXIMIZE
+
+    def test_bjoin_decodes_as_list(self):
+        blobs = [bdumps(i) for i in range(5)]
+        assert bloads(bjoin(blobs)) == [0, 1, 2, 3, 4]
+
+    @pytest.mark.parametrize(
+        "payload",
+        [
+            b"",                              # empty
+            bytes([0xEE]),                    # unknown tag
+            bytes([0x05]) + b"\x00\x00\x01",  # truncated str length
+            bytes([0x05]) + struct.pack(">I", 100) + b"short",  # str overruns
+            bytes([0x07]) + struct.pack(">I", 3) + bdumps(1),   # list underruns
+            bytes([0x09]) + b"\x03<f8",       # truncated ndarray header
+            bdumps(1) + b"tail",              # trailing bytes
+        ],
+    )
+    def test_malformed_input_raises_cleanly(self, payload):
+        with pytest.raises((ValueError, struct.error)):
+            bloads(payload)
+
+
+# -- hello negotiation / back-compat -----------------------------------------
+
+
+class TestNegotiation:
+    def test_v2_negotiated_by_default(self):
+        with StorageServer(InMemoryStorage()) as srv:
+            r = RemoteStorage(srv.url)
+            assert r.protocol == 2
+            assert r.supports_block_fetch
+
+    def test_v2_client_falls_back_to_json_only_server(self):
+        with StorageServer(InMemoryStorage(), max_protocol=1) as srv:
+            r = RemoteStorage(srv.url)  # hello answered as unknown method
+            assert r.protocol == 1
+            assert not r.supports_block_fetch
+            sid = r.create_new_study([StudyDirection.MINIMIZE], "s")
+            assert r.get_study_name_from_id(sid) == "s"
+
+    def test_client_pinned_to_v1(self):
+        with StorageServer(InMemoryStorage()) as srv:
+            r = RemoteStorage(srv.url, protocol=1)
+            assert r.protocol == 1
+            sid = r.create_new_study([StudyDirection.MINIMIZE], "s")
+            assert r.get_study_name_from_id(sid) == "s"
+
+    def test_block_rpcs_require_v2(self):
+        with StorageServer(InMemoryStorage()) as srv:
+            r = RemoteStorage(srv.url)
+            sid = r.create_new_study([StudyDirection.MINIMIZE], "s")
+            assert r.get_observation_block(sid)["n"] == 0
+            r1 = RemoteStorage(srv.url, protocol=1)
+            with pytest.raises(NotImplementedError):
+                r1.get_observation_block(sid)
+            with pytest.raises(NotImplementedError):
+                r1.get_iv_block(sid)
+
+    def test_store_falls_back_permanently_on_not_implemented(self):
+        class Flaky(InMemoryStorage):
+            supports_block_fetch = True
+
+            def get_observation_block(self, study_id, since=0):
+                raise NotImplementedError
+
+            def get_iv_block(self, study_id, since=0):
+                raise NotImplementedError
+
+        storage = Flaky()
+        sid = storage.create_new_study([StudyDirection.MINIMIZE], "s")
+        tid = storage.create_new_trial(sid)
+        storage.set_trial_state_values(tid, TrialState.COMPLETE, [1.0])
+        obs = ObservationStore(storage, sid)
+        obs.refresh()
+        assert not obs._block_supported  # downgraded, data still ingested
+        assert obs.n_observations == 1
+        iv = IntermediateValueStore(storage, sid)
+        iv.refresh()
+        assert not iv._block_supported
+        assert iv.n_rows == 1
+
+
+def _phase_worker(url, protocol, seed, n_trials, out_q):
+    try:
+        storage = RemoteStorage(url, protocol=protocol)
+        study = hpo.load_study(
+            study_name="compat", storage=storage, sampler=hpo.TPESampler(seed=seed),
+            pruner=hpo.MedianPruner(n_startup_trials=2),
+        )
+        study.optimize(_compat_objective, n_trials=n_trials)
+        out_q.put("ok")
+    except BaseException as e:  # pragma: no cover - surfaced by the test
+        out_q.put(f"worker failed: {e!r}")
+
+
+def _compat_objective(trial):
+    x = trial.suggest_float("x", -5, 5)
+    k = trial.suggest_int("k", 1, 4)
+    for step in range(3):
+        trial.report(x * x + step, step)
+        if trial.should_prune():
+            raise hpo.TrialPruned()
+    return x * x + k * 0.1
+
+
+def _trial_fingerprint(storage, study_id):
+    return [
+        (t.number, t.state, tuple(t.values) if t.values else None,
+         sorted(t.params.items()), sorted(t.intermediate_values.items()))
+        for t in storage.get_all_trials(study_id)
+    ]
+
+
+class TestBackCompatSeededStudy:
+    """A seeded 2-process study completes bit-identically to inmemory under
+    every protocol pairing: legacy JSON client against the v2 server, and a
+    v2 client against a JSON-only server."""
+
+    PHASES = ((7, 10), (23, 10))  # (sampler seed, n_trials) per process
+
+    def _reference(self):
+        storage = InMemoryStorage()
+        sid = hpo.create_study(study_name="compat", storage=storage)._study_id
+        for seed, n in self.PHASES:
+            study = hpo.load_study(
+                study_name="compat", storage=storage,
+                sampler=hpo.TPESampler(seed=seed),
+                pruner=hpo.MedianPruner(n_startup_trials=2),
+            )
+            study.optimize(_compat_objective, n_trials=n)
+        return _trial_fingerprint(storage, sid)
+
+    @pytest.mark.parametrize(
+        "client_proto,server_max",
+        [(1, 2), (2, 1), (2, 2)],
+        ids=["json-client-v2-server", "v2-client-json-server", "v2-both"],
+    )
+    def test_two_process_study_bit_identical(self, client_proto, server_max):
+        reference = self._reference()
+        with StorageServer(InMemoryStorage(), max_protocol=server_max) as srv:
+            admin = RemoteStorage(srv.url, protocol=client_proto)
+            sid = hpo.create_study(study_name="compat", storage=admin)._study_id
+            # two worker processes run sequentially (deterministic handoff:
+            # phase 2 sees exactly phase 1's history, like the reference)
+            for seed, n in self.PHASES:
+                q = multiprocessing.Queue()
+                p = multiprocessing.Process(
+                    target=_phase_worker, args=(srv.url, client_proto, seed, n, q)
+                )
+                p.start()
+                result = q.get(timeout=120)
+                p.join(timeout=30)
+                assert result == "ok", result
+            assert _trial_fingerprint(admin, sid) == reference
+
+
+# -- frame fuzzing / reactor robustness ---------------------------------------
+
+
+@pytest.fixture(params=[1, 2], ids=["v1", "v2"])
+def fuzz_server(request):
+    srv = StorageServer(InMemoryStorage(), max_protocol=request.param).start()
+    yield srv
+    srv.stop()
+
+
+def _raw_conn(srv):
+    sock = socket.create_connection((srv.host, srv.port), timeout=5.0)
+    sock.settimeout(5.0)
+    return sock
+
+
+def _server_alive(srv):
+    """A fresh client round-trips fine — the loop is still serving."""
+    r = RemoteStorage(srv.url)
+    sid = r.create_new_study([StudyDirection.MINIMIZE], f"alive-{r._req_id()}")
+    assert r.get_study_name_from_id(sid).startswith("alive-")
+    r.close()
+
+
+class TestFrameFuzzing:
+    def test_oversized_length_header_drops_connection(self, fuzz_server):
+        good = RemoteStorage(fuzz_server.url)  # victim that must survive
+        sock = _raw_conn(fuzz_server)
+        sock.sendall(struct.pack(">I", MAX_FRAME_BYTES + 1))
+        assert sock.recv(1) == b""  # dropped without a byte in response
+        assert good.get_all_studies() == []  # other connection unharmed
+        _server_alive(fuzz_server)
+
+    def test_garbage_payload_drops_connection(self, fuzz_server):
+        sock = _raw_conn(fuzz_server)
+        send_frame(sock, b"\x00\xffnot a request under either protocol")
+        assert sock.recv(1) == b""
+        _server_alive(fuzz_server)
+
+    def test_mid_frame_disconnect_is_isolated(self, fuzz_server):
+        for _ in range(3):
+            sock = _raw_conn(fuzz_server)
+            sock.sendall(struct.pack(">I", 512) + b"x" * 100)  # torn frame
+            sock.close()
+        _server_alive(fuzz_server)
+
+    def test_partial_frame_completes_after_delay(self, fuzz_server):
+        sock = _raw_conn(fuzz_server)
+        payload = json.dumps({"id": 1, "method": "ping", "params": []}).encode()
+        frame = struct.pack(">I", len(payload)) + payload
+        sock.sendall(frame[:3])
+        _server_alive(fuzz_server)  # other clients progress meanwhile
+        sock.sendall(frame[3:])
+        body = recv_frame(sock)
+        assert json.loads(body)["result"] == "pong"
+
+    def test_garbage_binary_after_hello_drops_connection(self):
+        with StorageServer(InMemoryStorage()) as srv:
+            sock = _raw_conn(srv)
+            hello = json.dumps(
+                {"id": 1, "method": "hello", "params": [{"protocol": 2}]}
+            ).encode()
+            send_frame(sock, hello)
+            assert json.loads(recv_frame(sock))["result"]["protocol"] == 2
+            # now binary framing is required: garbage must kill only this conn
+            send_frame(sock, bytes([BINARY_MAGIC]) + b"\xee\xee\xee")
+            assert sock.recv(1) == b""
+            _server_alive(srv)
+
+    def test_unknown_method_is_typed_error_not_drop(self, fuzz_server):
+        sock = _raw_conn(fuzz_server)
+        send_frame(sock, json.dumps({"id": 5, "method": "no_such", "params": []}).encode())
+        resp = json.loads(recv_frame(sock))
+        assert resp["ok"] is False and "unknown storage method" in resp["error"]["message"]
+        # the connection survives a typed error
+        send_frame(sock, json.dumps({"id": 6, "method": "ping", "params": []}).encode())
+        assert json.loads(recv_frame(sock))["result"] == "pong"
+
+    def test_protocol_errors_counted(self, fuzz_server):
+        before = fuzz_server.get_server_metrics()["protocol_errors"]
+        sock = _raw_conn(fuzz_server)
+        send_frame(sock, b"{truncated json")
+        assert sock.recv(1) == b""
+        metrics = fuzz_server.get_server_metrics()
+        assert metrics["protocol_errors"] >= before + 1
+
+
+# -- auth scopes ---------------------------------------------------------------
+
+
+class TestAuthScopes:
+    @pytest.fixture
+    def scoped(self):
+        backend = InMemoryStorage()
+        sid_a = backend.create_new_study([StudyDirection.MINIMIZE], "a")
+        sid_b = backend.create_new_study([StudyDirection.MINIMIZE], "b")
+        srv = StorageServer(
+            backend,
+            auth_token="admin",
+            auth_tokens=[
+                {"token": "viewer", "readonly": True},
+                {"token": "team-a", "studies": [sid_a]},
+            ],
+        ).start()
+        yield srv, sid_a, sid_b
+        srv.stop()
+
+    def test_readonly_token_blocks_writes(self, scoped):
+        srv, sid_a, _ = scoped
+        viewer = RemoteStorage(srv.url, auth_token="viewer")
+        assert viewer.get_study_name_from_id(sid_a) == "a"  # reads fine
+        with pytest.raises(PermissionError):
+            viewer.create_new_study([StudyDirection.MINIMIZE], "nope")
+        with pytest.raises(PermissionError):
+            viewer.create_new_trial(sid_a)
+        by_cause = srv.get_server_metrics()["auth_failures_by_cause"]
+        assert by_cause["readonly"] == 2  # terminal: one count per violation
+
+    def test_study_scoped_token_allowlist(self, scoped):
+        srv, sid_a, sid_b = scoped
+        team = RemoteStorage(srv.url, auth_token="team-a")
+        tid = team.create_new_trial(sid_a)  # in scope: full access
+        team.set_trial_user_attr(tid, "k", 1)
+        assert team.get_trial(tid).user_attrs == {"k": 1}
+        with pytest.raises(PermissionError):
+            team.get_all_trials(sid_b)
+        with pytest.raises(PermissionError):
+            team.create_new_trial(sid_b)
+        with pytest.raises(PermissionError):
+            team.get_all_studies()  # not study-addressable
+        with pytest.raises(PermissionError):
+            team.create_new_study([StudyDirection.MINIMIZE], "c")
+        assert srv.get_server_metrics()["auth_failures_by_cause"]["study_scope"] == 4
+
+    def test_trial_addressed_calls_resolve_to_study(self, scoped):
+        srv, sid_a, sid_b = scoped
+        admin = RemoteStorage(srv.url, auth_token="admin")
+        tid_a = admin.create_new_trial(sid_a)
+        tid_b = admin.create_new_trial(sid_b)
+        team = RemoteStorage(srv.url, auth_token="team-a")
+        # a trial the scoped connection never created still resolves (lazy
+        # scan of the allowed studies)
+        team.set_trial_user_attr(tid_a, "mine", True)
+        assert admin.get_trial(tid_a).user_attrs == {"mine": True}
+        with pytest.raises(PermissionError):
+            team.set_trial_user_attr(tid_b, "theirs", True)
+        with pytest.raises(PermissionError):
+            team.get_trial(tid_b)
+
+    def test_name_resolution_is_scope_checked(self, scoped):
+        srv, sid_a, sid_b = scoped
+        team = RemoteStorage(srv.url, auth_token="team-a")
+        assert team.get_study_id_from_name("a") == sid_a
+        with pytest.raises(PermissionError):
+            team.get_study_id_from_name("b")
+
+    def test_bad_token_counted_separately(self, scoped):
+        srv, _, _ = scoped
+        with pytest.raises(PermissionError):
+            RemoteStorage(srv.url, auth_token="wrong")
+        metrics = srv.get_server_metrics()
+        assert metrics["auth_failures_by_cause"]["bad_token"] >= 1
+        assert metrics["auth_failures"] >= 1  # aggregate keeps counting too
+
+    def test_scoped_study_runs_end_to_end(self, scoped):
+        srv, sid_a, _ = scoped
+        team = RemoteStorage(srv.url, auth_token="team-a")
+        study = hpo.load_study(
+            study_name="a", storage=team, sampler=hpo.RandomSampler(seed=1)
+        )
+        study.optimize(lambda t: t.suggest_float("x", 0, 1) ** 2, n_trials=5)
+        assert len(study.get_trials(states=(TrialState.COMPLETE,))) == 5
+
+
+# -- TLS -----------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tls_cert(tmp_path_factory):
+    d = tmp_path_factory.mktemp("tls")
+    cert, key = str(d / "cert.pem"), str(d / "key.pem")
+    proc = subprocess.run(
+        [
+            "openssl", "req", "-x509", "-newkey", "rsa:2048", "-nodes",
+            "-keyout", key, "-out", cert, "-days", "1",
+            "-subj", "/CN=127.0.0.1",
+            "-addext", "subjectAltName=IP:127.0.0.1",
+        ],
+        capture_output=True,
+    )
+    if proc.returncode != 0:
+        pytest.skip(f"openssl unavailable: {proc.stderr.decode()[:200]}")
+    return cert, key
+
+
+class TestTLS:
+    def test_tls_study_end_to_end(self, tls_cert):
+        cert, key = tls_cert
+        with StorageServer(InMemoryStorage(), tls_cert=cert, tls_key=key) as srv:
+            assert srv.url.startswith("remote+tls://")
+            r = RemoteStorage(srv.url, tls_ca=cert)
+            assert r.protocol == 2  # negotiation runs inside the TLS channel
+            study = hpo.create_study(study_name="tls", storage=r)
+            study.optimize(lambda t: t.suggest_float("x", -1, 1) ** 2, n_trials=8)
+            assert len(study.get_trials(states=(TrialState.COMPLETE,))) == 8
+
+    def test_tls_with_auth_token(self, tls_cert, monkeypatch):
+        cert, key = tls_cert
+        monkeypatch.setenv("REPRO_STORAGE_TLS_CA", cert)
+        with StorageServer(
+            InMemoryStorage(), tls_cert=cert, tls_key=key, auth_token="s3c"
+        ) as srv:
+            url = f"remote+tls://s3c@{srv.host}:{srv.port}"
+            client = get_storage(url)  # CA picked up from the env fallback
+            sid = client.create_new_study([StudyDirection.MINIMIZE], "t")
+            assert client.get_study_name_from_id(sid) == "t"
+            with pytest.raises(PermissionError):
+                RemoteStorage(srv.url, tls_ca=cert, auth_token="bad")
+
+    def test_plaintext_client_cannot_reach_tls_server(self, tls_cert):
+        cert, key = tls_cert
+        with StorageServer(InMemoryStorage(), tls_cert=cert, tls_key=key) as srv:
+            with pytest.raises(Exception):
+                RemoteStorage(f"remote://{srv.host}:{srv.port}", retries=1, timeout=3.0)
+
+    def test_cert_without_key_rejected(self, tls_cert):
+        cert, _ = tls_cert
+        with pytest.raises(ValueError):
+            StorageServer(InMemoryStorage(), tls_cert=cert)
+
+
+# -- mini worker storm (tier-1 smoke; the full storm lives in benchmarks) ------
+
+
+def _storm_worker(storage, sid, results, idx):
+    try:
+        for _ in range(2):
+            tid = storage.create_new_trial(sid)
+            storage.set_trial_param(tid, "x", 0.5, FloatDistribution(0, 1))
+            storage.set_trial_intermediate_value(tid, 0, float(idx))
+            assert storage.set_trial_state_values(tid, TrialState.COMPLETE, [float(idx)])
+        results[idx] = None
+    except Exception as e:  # pragma: no cover - surfaced by the assert below
+        results[idx] = e
+
+
+class TestMiniWorkerStorm:
+    @pytest.mark.parametrize("max_protocol", [1, 2], ids=["v1", "v2"])
+    def test_200_worker_storm_smoke(self, max_protocol):
+        n_workers = 200
+        with StorageServer(InMemoryStorage(), max_protocol=max_protocol) as srv:
+            storage = RemoteStorage(srv.url, timeout=60.0)
+            sid = storage.create_new_study([StudyDirection.MINIMIZE], "storm")
+            results = [RuntimeError("never ran")] * n_workers
+            threads = [
+                threading.Thread(target=_storm_worker, args=(storage, sid, results, i))
+                for i in range(n_workers)
+            ]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=120)
+            errors = [e for e in results if e is not None]
+            assert not errors, errors[:3]
+            trials = storage.get_all_trials(sid)
+            assert len(trials) == n_workers * 2
+            assert sorted(t.number for t in trials) == list(range(n_workers * 2))
+            assert all(t.state == TrialState.COMPLETE for t in trials)
+            metrics = srv.get_server_metrics()
+            assert metrics["frames_in"] > 0 and metrics["bytes_out"] > 0
+            # serialize-once accounting: per-method bytes_out measures the
+            # actual wire payloads
+            assert metrics["methods"]["create_new_trial"]["bytes_out"] > 0
