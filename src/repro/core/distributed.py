@@ -78,6 +78,8 @@ def run_workers(
     use_cache: bool = True,
     ask_batch: int = 1,
     auth_token: str | None = None,
+    reclaim_grace: float | None = None,
+    reclaim_requeue: bool = False,
 ) -> float:
     """Launch ``n_workers`` processes optimizing the same study; returns the
     wall-clock duration.  Storage must be shareable across processes
@@ -90,12 +92,18 @@ def run_workers(
     ``auth_token`` arms the server's shared-secret handshake and embeds the
     token in the workers' URL; ``ask_batch`` makes each worker claim that
     many trials per round trip.
+
+    ``reclaim_grace`` (with ``serve_storage=True``) arms the server-side
+    sweeper: RUNNING trials whose worker stopped heartbeating for that many
+    seconds are FAILed — or re-enqueued as WAITING with
+    ``reclaim_requeue=True``, so a surviving worker's ``ask()`` re-runs them.
     """
     server = None
     worker_url = storage_url
     if serve_storage:
         server = StorageServer(
-            get_storage(storage_url), host=serve_host, auth_token=auth_token
+            get_storage(storage_url), host=serve_host, auth_token=auth_token,
+            reclaim_grace=reclaim_grace, reclaim_requeue=reclaim_requeue,
         ).start()
         worker_url = (
             f"remote://{auth_token}@{server.host}:{server.port}"

@@ -35,3 +35,9 @@ class TrialNotFoundError(KeyError, ReproError):
 
 class RetryableStorageError(ReproError):
     """Transient storage failure (lock contention, torn read); safe to retry."""
+
+
+class StorageUnavailableError(RetryableStorageError):
+    """The storage node cannot serve this call *right now* — e.g. a replica
+    that has not been promoted refusing writes during a failover window.
+    Clients back off, rotate to another candidate, and retry."""

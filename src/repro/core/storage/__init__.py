@@ -8,6 +8,7 @@ from __future__ import annotations
 from .base import BaseStorage, StudySummary, get_trials_since
 from .cached import CachedStorage
 from .client import RemoteStorage
+from .cluster import ShardedStorage
 from .inmemory import InMemoryStorage
 from .journal import JournalStorage
 from .server import StorageServer
@@ -21,6 +22,7 @@ __all__ = [
     "JournalStorage",
     "RemoteStorage",
     "CachedStorage",
+    "ShardedStorage",
     "StorageServer",
     "get_storage",
     "get_trials_since",
@@ -35,6 +37,9 @@ def get_storage(storage: "str | BaseStorage | None", cache: bool = False) -> Bas
     * ``journal://path``   -> :class:`JournalStorage`
     * ``remote://host:port`` -> :class:`RemoteStorage` speaking to a
       :class:`StorageServer` (no shared filesystem needed; see DESIGN.md)
+    * ``remote://a:p1,b:p2`` (comma-sharded host list) ->
+      :class:`ShardedStorage` consistent-hashing studies across a server
+      pool; ``+`` within a shard lists failover candidates
     * ``*.db`` / ``*.sqlite`` path -> :class:`SQLiteStorage`
     * ``*.journal`` / ``*.log`` path -> :class:`JournalStorage`
 
@@ -58,6 +63,8 @@ def _resolve(storage: "str | BaseStorage | None") -> BaseStorage:
     if storage.startswith("journal://"):
         return JournalStorage(storage)
     if storage.startswith(("remote://", "remote+tls://")):
+        if "," in storage:
+            return ShardedStorage(storage)
         return RemoteStorage(storage)
     if storage.endswith((".db", ".sqlite", ".sqlite3")):
         return SQLiteStorage(storage)

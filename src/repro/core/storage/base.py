@@ -352,11 +352,25 @@ class BaseStorage:
         return []
 
     def fail_stale_trials(self, study_id: int, grace_seconds: float) -> list[int]:
-        failed = []
+        return self.reclaim_stale_trials(study_id, grace_seconds, requeue=False)
+
+    def reclaim_stale_trials(
+        self, study_id: int, grace_seconds: float, requeue: bool = False
+    ) -> list[int]:
+        """Reclaim RUNNING trials whose worker stopped heartbeating: mark them
+        FAILed, or — with ``requeue=True`` — hand them back to the WAITING
+        queue so another worker's ``ask()`` can claim and re-run them.
+        Returns the reclaimed trial ids."""
+        target = TrialState.WAITING if requeue else TrialState.FAIL
+        reclaimed = []
         for tid in self.get_stale_trial_ids(study_id, grace_seconds):
-            if self.set_trial_state_values(tid, TrialState.FAIL):
-                failed.append(tid)
-        return failed
+            if self.set_trial_state_values(tid, target):
+                if requeue:
+                    # re-arm the staleness clock: whoever claims the requeued
+                    # trial gets a full grace period before the next sweep
+                    self.record_heartbeat(tid)
+                reclaimed.append(tid)
+        return reclaimed
 
     # -- misc ------------------------------------------------------------------
 

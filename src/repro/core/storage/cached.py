@@ -30,10 +30,15 @@ from typing import Any, Iterable
 
 from .. import telemetry
 from ..distributions import BaseDistribution, check_distribution_compatibility
+from ..exceptions import RetryableStorageError
 from ..frozen import FrozenTrial, StudyDirection, TrialState
 from .base import BaseStorage, StudySummary, get_trials_since
 
 __all__ = ["CachedStorage"]
+
+# failures that mean "the backend is unreachable right now", after which the
+# write-behind buffer must survive intact for a later re-flush
+_TRANSIENT = (RetryableStorageError, ConnectionError, TimeoutError, OSError)
 
 
 class _StudyCache:
@@ -223,13 +228,22 @@ class CachedStorage(BaseStorage):
                 if t.state.is_finished():
                     raise RuntimeError(f"trial {trial_id} is already finished")
                 t.intermediate_values[step] = value
-                ops = self._pending.pop(trial_id, None) or []
+                # buffered ops stay queued until the backend confirms (an
+                # outage mid-report must not drop the write-behind buffer)
+                ops = self._pending.get(trial_id) or []
                 call_batch = getattr(self._backend, "call_batch", None)
-                if call_batch is not None and ops:
-                    return bool(call_batch(ops + [fused])[-1])
-                for method, params in ops:
-                    getattr(self._backend, method)(*params)
-                return bool(self._backend.report_and_prune(*fused[1]))
+                try:
+                    if call_batch is not None and ops:
+                        pruned = bool(call_batch(ops + [fused])[-1])
+                    else:
+                        for method, params in ops:
+                            getattr(self._backend, method)(*params)
+                        pruned = bool(self._backend.report_and_prune(*fused[1]))
+                except _TRANSIENT:
+                    telemetry.inc("cached.flush.failures")
+                    raise
+                self._pending.pop(trial_id, None)
+                return pruned
         return bool(self._backend.report_and_prune(*fused[1]))
 
     def set_trial_user_attr(self, trial_id: int, key: str, value: Any) -> None:
@@ -324,21 +338,38 @@ class CachedStorage(BaseStorage):
     # -- write-behind flushing ----------------------------------------------------
 
     def _flush_trial_locked(self, trial_id: int) -> None:
-        ops = self._pending.pop(trial_id, None)
+        """Drain one trial's write-behind buffer.  The buffer is popped only
+        AFTER the backend confirms — a flush into a dead server keeps every
+        op queued for the next attempt (every buffered op is an overwrite,
+        so a partially-applied batch replays harmlessly)."""
+        ops = self._pending.get(trial_id)
         if not ops:
             return
         call_batch = getattr(self._backend, "call_batch", None)
-        if call_batch is not None and len(ops) > 1:
-            call_batch(ops)  # one round trip for the whole buffer
-        else:
-            for method, params in ops:
-                getattr(self._backend, method)(*params)
+        try:
+            if call_batch is not None and len(ops) > 1:
+                call_batch(list(ops))  # one round trip for the whole buffer
+            else:
+                for method, params in ops:
+                    getattr(self._backend, method)(*params)
+        except _TRANSIENT:
+            telemetry.inc("cached.flush.failures")
+            raise
+        self._pending.pop(trial_id, None)
 
     def flush(self) -> None:
-        """Push all buffered writes to the backend."""
+        """Push all buffered writes to the backend.  On a transient backend
+        failure the unflushed buffers stay queued (and the error propagates);
+        calling ``flush()`` again once the backend is back re-sends them."""
         with self._lock:
             for tid in list(self._pending):
                 self._flush_trial_locked(tid)
+
+    @property
+    def pending_ops(self) -> int:
+        """Number of buffered write-behind ops not yet confirmed flushed."""
+        with self._lock:
+            return sum(len(v) for v in self._pending.values())
 
     # -- heartbeat / misc ---------------------------------------------------------
 
@@ -353,6 +384,11 @@ class CachedStorage(BaseStorage):
 
     def fail_stale_trials(self, study_id: int, grace_seconds: float) -> list[int]:
         return self._backend.fail_stale_trials(study_id, grace_seconds)
+
+    def reclaim_stale_trials(
+        self, study_id: int, grace_seconds: float, requeue: bool = False
+    ) -> list[int]:
+        return self._backend.reclaim_stale_trials(study_id, grace_seconds, requeue)
 
     def get_trial_events(self, study_id: int, since: int = 0) -> dict[str, Any]:
         """Lifecycle events live where the mutations execute — the backend."""
@@ -379,5 +415,8 @@ class CachedStorage(BaseStorage):
         return fn()
 
     def close(self) -> None:
-        self.flush()
+        try:
+            self.flush()
+        except _TRANSIENT:
+            pass  # shutting down against a dead backend: nothing left to try
         self._backend.close()

@@ -18,16 +18,25 @@ Design points:
 * **Atomic compare-and-set** — ``set_trial_state_values`` executes inside the
   single server process against the wrapped backend, so ``ask()``'s
   WAITING-claim race stays exactly-once across machines.
+* **Failover** — a URL may list ``+``-separated candidates
+  (``remote://primary:p1+replica:p2``).  The client validates role and epoch
+  at connect time (cluster extras ride the ``hello``), refuses replicas and
+  stale-epoch primaries, and rotates to the next candidate with jittered
+  exponential backoff under a per-RPC deadline.  Non-idempotent calls carry
+  an ``op`` id; against a dedup-capable server a torn-connection retransmit
+  can never double-execute, so even ``tell`` survives a mid-flight failover.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import random
 import socket
 import ssl
 import threading
 import time
+import uuid
 from typing import Any, Iterable
 
 from .. import telemetry
@@ -35,6 +44,7 @@ from ..exceptions import (
     DuplicatedStudyError,
     RetryableStorageError,
     StorageInternalError,
+    StorageUnavailableError,
     StudyNotFoundError,
     TrialNotFoundError,
 )
@@ -45,7 +55,7 @@ from .server import recv_frame, send_frame
 
 _MAGIC = bytes([BINARY_MAGIC])
 
-__all__ = ["RemoteStorage", "parse_remote_url"]
+__all__ = ["RemoteStorage", "parse_remote_url", "parse_remote_candidates"]
 
 # server-side exception type name -> client-side class to re-raise
 _ERROR_TYPES: dict[str, type[Exception]] = {
@@ -54,6 +64,7 @@ _ERROR_TYPES: dict[str, type[Exception]] = {
     "DuplicatedStudyError": DuplicatedStudyError,
     "StorageInternalError": StorageInternalError,
     "RetryableStorageError": RetryableStorageError,
+    "StorageUnavailableError": StorageUnavailableError,
     "RuntimeError": RuntimeError,
     "ValueError": ValueError,
     "TypeError": TypeError,
@@ -64,9 +75,15 @@ _ERROR_TYPES: dict[str, type[Exception]] = {
 
 # Calls that may NOT be blindly re-sent after a torn connection: re-executing
 # them would create a second trial/study or turn a won claim into a lost one.
+# (Against a dedup-capable server they travel with an ``op`` id and become
+# safely retransmittable — see ``_call_raw``.)
 _NON_IDEMPOTENT = frozenset(
     {"create_new_study", "create_new_trial", "create_new_trials", "set_trial_state_values"}
 )
+
+# methods that carry an ``op`` idempotency token (the server's dedup window
+# also caches the fused report's prune decision)
+_OP_STAMPED = _NON_IDEMPOTENT | {"report_and_prune"}
 
 
 def parse_remote_url(url: str) -> tuple[str, int]:
@@ -76,7 +93,20 @@ def parse_remote_url(url: str) -> tuple[str, int]:
 
 def parse_remote_url_auth(url: str) -> tuple[str, int, "str | None", bool]:
     """Parse ``remote[+tls]://[token@]host:port`` into
-    (host, port, token, tls)."""
+    (host, port, token, tls) — the *first* candidate of a failover list."""
+    candidates, token, tls = parse_remote_candidates(url)
+    host, port = candidates[0]
+    return host, port, token, tls
+
+
+def parse_remote_candidates(
+    url: str,
+) -> tuple[list[tuple[str, int]], "str | None", bool]:
+    """Parse ``remote[+tls]://[token@]h1:p1[+h2:p2...]`` into
+    (candidates, token, tls).  ``+``-separated host:port pairs are failover
+    candidates for the *same* logical node (primary first, then replicas);
+    sharding across *different* nodes uses commas and is handled one level
+    up by :class:`~repro.core.storage.cluster.ShardedStorage`."""
     tls = False
     if url.startswith("remote+tls://"):
         tls = True
@@ -89,10 +119,15 @@ def parse_remote_url_auth(url: str) -> tuple[str, int, "str | None", bool]:
     if "@" in hostport:
         token, _, hostport = hostport.rpartition("@")
         token = token or None
-    host, sep, port = hostport.rpartition(":")
-    if not sep or not port.isdigit():
-        raise ValueError(f"remote:// URL needs host:port, got {url!r}")
-    return host, int(port), token, tls
+    candidates: list[tuple[str, int]] = []
+    for part in hostport.split("+"):
+        host, sep, port = part.rpartition(":")
+        if not sep or not port.isdigit():
+            raise ValueError(f"remote:// URL needs host:port, got {url!r}")
+        candidates.append((host, int(port)))
+    if not candidates:
+        raise ValueError(f"remote:// URL has no candidates: {url!r}")
+    return candidates, token, tls
 
 
 class RemoteStorage(BaseStorage):
@@ -116,20 +151,37 @@ class RemoteStorage(BaseStorage):
         tls_ca: PEM bundle to verify the server certificate against for
             ``remote+tls://`` URLs (falls back to ``$REPRO_STORAGE_TLS_CA``,
             then the system trust store).
+        rpc_deadline: wall-clock budget per logical call, in seconds.  All
+            reconnects, candidate rotations, and backoff sleeps for one call
+            must fit inside it; ``None`` disables the budget (``retries``
+            still caps attempts).
+        backoff_base / backoff_cap: jittered exponential backoff between
+            reconnect attempts — sleep ``min(cap, base * 2^k) * uniform(0.5,
+            1.5)``.
+        backoff_seed: seed for the backoff/jitter RNG (deterministic chaos
+            tests); ``None`` seeds from the OS.
     """
 
     def __init__(
         self, url: str, timeout: float = 30.0, retries: int = 3,
         auth_token: "str | None" = None, protocol: int = 2,
-        tls_ca: "str | None" = None,
+        tls_ca: "str | None" = None, rpc_deadline: "float | None" = 60.0,
+        backoff_base: float = 0.05, backoff_cap: float = 2.0,
+        backoff_seed: "int | None" = None,
     ):
-        self._host, self._port, url_token, self._tls = parse_remote_url_auth(url)
+        self._candidates, url_token, self._tls = parse_remote_candidates(url)
+        self._host, self._port = self._candidates[0]
         self._auth_token = auth_token or url_token or os.environ.get("REPRO_STORAGE_TOKEN")
         scheme = "remote+tls" if self._tls else "remote"
-        self._url = f"{scheme}://{self._host}:{self._port}"  # token never echoed
+        # token never echoed
+        self._url = f"{scheme}://" + "+".join(f"{h}:{p}" for h, p in self._candidates)
         self._timeout = timeout
         self._retries = max(1, retries)
         self._protocol = protocol
+        self._rpc_deadline = rpc_deadline
+        self._backoff_base = backoff_base
+        self._backoff_cap = backoff_cap
+        self._rng = random.Random(backoff_seed)
         self._ssl_context: ssl.SSLContext | None = None
         if self._tls:
             cafile = tls_ca or os.environ.get("REPRO_STORAGE_TLS_CA")
@@ -137,6 +189,12 @@ class RemoteStorage(BaseStorage):
         # set once the server answers hello with an unknown-method error:
         # later connections (and re-dials) skip the doomed negotiation
         self._server_is_v1 = False
+        # -- failover state (shared across threads; races are benign — a
+        # stale _active just costs one extra dial) --
+        self._active = 0           # index of the candidate serving us
+        self._epoch_seen = 0       # highest primary epoch ever observed
+        self._dedup_ok = False     # server keeps an op-id dedup window
+        self._client_uid = uuid.uuid4().hex[:12]  # namespace for op ids
         self._local = threading.local()
         self._id_lock = threading.Lock()
         self._next_id = 0
@@ -166,32 +224,57 @@ class RemoteStorage(BaseStorage):
 
     def _sock(self) -> socket.socket:
         sock = getattr(self._local, "sock", None)
-        if sock is None:
-            sock = socket.create_connection((self._host, self._port), timeout=self._timeout)
+        if sock is not None:
+            return sock
+        n = len(self._candidates)
+        last: Exception | None = None
+        start = self._active
+        for k in range(n):
+            idx = (start + k) % n
+            host, port = self._candidates[idx]
             try:
-                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-                if self._ssl_context is not None:
-                    sock = self._ssl_context.wrap_socket(
-                        sock, server_hostname=self._host
-                    )
-            except BaseException:
-                sock.close()
-                raise
-            telemetry.inc("client.connects")
-            if getattr(self._local, "ever_connected", False):
-                telemetry.inc("client.reconnects")  # re-dial after a torn socket
-            self._local.ever_connected = True
-            self._local.sock = sock
-            self._local.proto = 1
-            if self._auth_token is not None:
-                self._authenticate(sock)
-            if self._protocol >= 2 and not self._server_is_v1:
-                self._negotiate(sock)
+                sock = self._dial(host, port)
+            except PermissionError:
+                raise  # bad token: the next candidate shares it, don't spin
+            except (OSError, ConnectionError) as e:
+                last = e
+                self._drop_sock()
+                continue
+            if idx != self._active:
+                self._active = idx
+                telemetry.inc("client.failovers")
+            return sock
+        assert last is not None
+        raise last
+
+    def _dial(self, host: str, port: int) -> socket.socket:
+        sock = socket.create_connection((host, port), timeout=self._timeout)
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            if self._ssl_context is not None:
+                sock = self._ssl_context.wrap_socket(sock, server_hostname=host)
+        except BaseException:
+            sock.close()
+            raise
+        telemetry.inc("client.connects")
+        if getattr(self._local, "ever_connected", False):
+            telemetry.inc("client.reconnects")  # re-dial after a torn socket
+        self._local.ever_connected = True
+        self._local.sock = sock
+        self._local.proto = 1
+        if self._auth_token is not None:
+            self._authenticate(sock)
+        hello_info: "dict | None" = None
+        if self._protocol >= 2 and not self._server_is_v1:
+            hello_info = self._negotiate(sock)
+        self._validate_cluster(sock, hello_info)
         return sock
 
-    def _negotiate(self, sock: socket.socket) -> None:
+    def _negotiate(self, sock: socket.socket) -> "dict | None":
         """Offer wire protocol v2 via a JSON ``hello``; on agreement the
-        connection switches to binary frames for everything that follows."""
+        connection switches to binary frames for everything that follows.
+        Returns the hello result (which carries the cluster extras
+        ``role``/``epoch``/``dedup`` on fault-tolerant servers)."""
         request = {
             "id": self._req_id(), "method": "hello",
             "params": [{"protocol": min(self._protocol, 2)}],
@@ -210,11 +293,63 @@ class RemoteStorage(BaseStorage):
             if int(response["result"].get("protocol", 1)) >= 2:
                 self._local.proto = 2
                 telemetry.inc("client.protocol_v2_connects")
+            return response["result"]
+        # pre-v2 server: "unknown storage method 'hello'" — remember and
+        # stay on JSON so re-dials skip the wasted round trip
+        self._server_is_v1 = True
+        telemetry.inc("client.protocol_fallbacks")
+        return None
+
+    # -- cluster awareness -----------------------------------------------------
+
+    def _validate_cluster(self, sock: socket.socket, hello_info: "dict | None") -> None:
+        """Refuse un-promoted replicas and fenced (stale-epoch) primaries at
+        connect time, so a worker never writes into a node that will lose the
+        failover.  Raises ``ConnectionError`` — ``_sock`` rotates onward."""
+        info = hello_info if hello_info and "role" in hello_info else None
+        if info is None:
+            # v1 connection (or a hello that carried no cluster extras):
+            # probe explicitly, but only when there is actually a failover
+            # list — a single legacy server shouldn't pay the round trip
+            if len(self._candidates) <= 1:
+                return
+            info = self._cluster_info_rpc(sock)
+            if info is None:
+                return  # legacy server: no cluster support, nothing to check
+        role = info.get("role", "primary")
+        epoch = int(info.get("epoch", 1))
+        if role != "primary" and len(self._candidates) > 1:
+            # an explicit single-node URL aimed at a replica stays usable for
+            # diagnostic reads (writes get StorageUnavailableError from the
+            # server); with a failover list we keep hunting for the primary
+            raise ConnectionError(
+                f"candidate is a {role} (epoch {epoch}); looking for the primary"
+            )
+        if epoch < self._epoch_seen:
+            # an old primary restarted after its replica was promoted: writing
+            # to it would fork history.  Treat it as dead until it re-syncs.
+            raise ConnectionError(
+                f"fenced primary: epoch {epoch} < highest seen {self._epoch_seen}"
+            )
+        self._epoch_seen = max(self._epoch_seen, epoch)
+        if info.get("dedup"):
+            self._dedup_ok = True
+
+    def _cluster_info_rpc(self, sock: socket.socket) -> "dict | None":
+        proto = getattr(self._local, "proto", 1)
+        request = {"id": self._req_id(), "method": "get_cluster_info", "params": []}
+        send_frame(sock, self._encode_payload(request, proto))
+        body = recv_frame(sock)
+        if body is None:
+            raise ConnectionError("server closed the connection during cluster probe")
+        if proto == 2 and body and body[0] == BINARY_MAGIC:
+            response, rich = bloads(memoryview(body)[1:]), True
         else:
-            # pre-v2 server: "unknown storage method 'hello'" — remember and
-            # stay on JSON so re-dials skip the wasted round trip
-            self._server_is_v1 = True
-            telemetry.inc("client.protocol_fallbacks")
+            response, rich = json.loads(body), False
+        try:
+            return self._unwrap(response, rich)
+        except Exception:
+            return None  # unknown-method error: a server without cluster support
 
     def _authenticate(self, sock: socket.socket) -> None:
         """Per-connection handshake: the first frame carries the shared
@@ -311,12 +446,32 @@ class RemoteStorage(BaseStorage):
             return bloads(memoryview(body)[1:]), True
         return json.loads(body), False
 
-    def _call_raw(self, request: Any, *, idempotent: bool) -> tuple[Any, bool]:
+    def _sleep_backoff(self, k: int, deadline: "float | None") -> None:
+        """Jittered exponential backoff before attempt ``k+1`` (k >= 1),
+        clamped so the sleep never overshoots the per-call deadline."""
+        d = min(self._backoff_cap, self._backoff_base * (2 ** min(k - 1, 8)))
+        d *= 0.5 + self._rng.random()
+        if deadline is not None:
+            d = min(d, max(0.0, deadline - time.monotonic()))
+        if d > 0:
+            telemetry.inc("client.backoff_ms", int(d * 1000))
+            time.sleep(d)
+
+    def _call_raw(
+        self, request: Any, *, idempotent: bool, deduped: bool = False,
+        deadline: "float | None" = None,
+    ) -> tuple[Any, bool]:
         """Returns ``(decoded_response, rich)`` — ``rich`` meaning the
-        response came over v2 and needs no serde unpack."""
+        response came over v2 and needs no serde unpack.
+
+        ``deduped`` marks a request stamped with an ``op`` id: against a
+        dedup-capable server it may be retransmitted even after it hit the
+        wire (re-execution is suppressed server-side), which closes the
+        torn-``tell`` window that plain non-idempotent calls must refuse.
+        """
         payloads: dict[int, bytes] = {}
         last: Exception | None = None
-        for attempt in range(self._retries):
+        for attempt in range(1, self._retries + 1):
             try:
                 return self._roundtrip(request, payloads)
             except PermissionError:
@@ -325,13 +480,18 @@ class RemoteStorage(BaseStorage):
                 last = e
                 sent = getattr(e, "_rpc_sent", True)
                 if sent and not idempotent:
-                    raise RetryableStorageError(
-                        f"connection to {self._url} died after a non-idempotent "
-                        f"request was sent; cannot safely retry: {e}"
-                    ) from e
-                if attempt < self._retries - 1:
-                    telemetry.inc("client.retries")
-                    time.sleep(0.05 * (attempt + 1))
+                    if not (deduped and self._dedup_ok):
+                        raise RetryableStorageError(
+                            f"connection to {self._url} died after a non-idempotent "
+                            f"request was sent; cannot safely retry: {e}"
+                        ) from e
+                    telemetry.inc("client.dedup_retransmits")
+                if attempt >= self._retries:
+                    break
+                if deadline is not None and time.monotonic() >= deadline:
+                    break
+                telemetry.inc("client.retries")
+                self._sleep_backoff(attempt, deadline)
         raise RetryableStorageError(f"cannot reach storage server {self._url}: {last}") from last
 
     # -- pruner-spec interning ---------------------------------------------------
@@ -382,24 +542,57 @@ class RemoteStorage(BaseStorage):
             if telemetry.enabled():
                 telemetry.observe(f"client.rpc.{method}", time.perf_counter() - t0)
 
+    def _deadline(self) -> "float | None":
+        if self._rpc_deadline is None:
+            return None
+        return time.monotonic() + self._rpc_deadline
+
+    def _rotate(self) -> None:
+        """Advance the shared candidate cursor past the node that just
+        refused us, so the next dial starts at its neighbour."""
+        if len(self._candidates) > 1:
+            self._active = (self._active + 1) % len(self._candidates)
+
+    def _op_id(self) -> str:
+        return f"{self._client_uid}:{self._req_id()}"
+
     def _call_timed(self, method: str, params: tuple) -> Any:
-        for attempt in (0, 1):
+        deadline = self._deadline()
+        op_id = self._op_id() if method in _OP_STAMPED else None
+        spec_retry = True
+        unavailable = 0
+        while True:
             encoded = self._encode_params(method, list(params))
             request = {"id": self._req_id(), "method": method, "params": encoded}
+            if op_id is not None:
+                request["op"] = op_id  # stable across every retransmit
             try:
                 response, rich = self._call_raw(
-                    request, idempotent=method not in _NON_IDEMPOTENT
+                    request, idempotent=method not in _NON_IDEMPOTENT,
+                    deduped=op_id is not None, deadline=deadline,
                 )
                 return self._unwrap(response, rich)
+            except StorageUnavailableError:
+                # a not-yet-promoted replica (or mid-failover node) answered:
+                # drop the socket, rotate, and retry until the deadline
+                unavailable += 1
+                self._drop_sock()
+                self._rotate()
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise
+                if len(self._candidates) <= 1 and unavailable >= self._retries:
+                    raise
+                telemetry.inc("client.unavailable_retries")
+                self._sleep_backoff(unavailable, deadline)
             except ValueError as e:
                 # a spec ref can outlive its server-side cache when the
                 # connection is torn between encode and send: resend once
                 # with the cache cleared (the full spec travels again)
-                if attempt == 0 and self._is_spec_ref_miss(e):
+                if spec_retry and self._is_spec_ref_miss(e):
+                    spec_retry = False
                     self._local.spec_ids = {}
                     continue
                 raise
-        raise AssertionError("unreachable")  # pragma: no cover
 
     def call_batch(self, calls: list[tuple[str, tuple]]) -> list[Any]:
         """Execute many calls in one round trip (server-side request batching).
@@ -416,24 +609,45 @@ class RemoteStorage(BaseStorage):
             return self._call_batch_inner(calls, idempotent)
 
     def _call_batch_inner(self, calls: list[tuple[str, tuple]], idempotent: bool) -> list[Any]:
-        for attempt in (0, 1):
-            request = [
-                {
+        deadline = self._deadline()
+        # op ids are minted ONCE and survive every resend of the batch: a
+        # replayed batch whose first half already executed turns into dedup
+        # hits instead of double-executions
+        op_ids = [self._op_id() if m in _OP_STAMPED else None for m, _ in calls]
+        spec_retry = True
+        unavailable = 0
+        while True:
+            request = []
+            for (m, p), op in zip(calls, op_ids):
+                r = {
                     "id": self._req_id(),
                     "method": m,
                     "params": self._encode_params(m, list(p)),
                 }
-                for m, p in calls
-            ]
-            responses, rich = self._call_raw(request, idempotent=idempotent)
+                if op is not None:
+                    r["op"] = op
+                request.append(r)
             try:
+                responses, rich = self._call_raw(
+                    request, idempotent=idempotent, deduped=True, deadline=deadline,
+                )
                 return [self._unwrap(r, rich) for r in responses]
+            except StorageUnavailableError:
+                unavailable += 1
+                self._drop_sock()
+                self._rotate()
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise
+                if len(self._candidates) <= 1 and unavailable >= self._retries:
+                    raise
+                telemetry.inc("client.unavailable_retries")
+                self._sleep_backoff(unavailable, deadline)
             except ValueError as e:
-                if attempt == 0 and self._is_spec_ref_miss(e):
+                if spec_retry and self._is_spec_ref_miss(e):
+                    spec_retry = False
                     self._local.spec_ids = {}
                     continue
                 raise
-        raise AssertionError("unreachable")  # pragma: no cover
 
     @staticmethod
     def _unwrap(response: dict, rich: bool = False) -> Any:
@@ -577,6 +791,13 @@ class RemoteStorage(BaseStorage):
 
     def fail_stale_trials(self, study_id: int, grace_seconds: float) -> list[int]:
         return self._call("fail_stale_trials", study_id, float(grace_seconds))
+
+    def reclaim_stale_trials(
+        self, study_id: int, grace_seconds: float, requeue: bool = False
+    ) -> list[int]:
+        return self._call(
+            "reclaim_stale_trials", study_id, float(grace_seconds), bool(requeue)
+        )
 
     # -- telemetry ---------------------------------------------------------------
 

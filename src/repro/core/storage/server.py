@@ -43,10 +43,24 @@ Security: ``auth_token`` arms the shared-secret first-frame handshake;
 ``auth_tokens`` adds *scoped* tokens (read-only and/or study-id allowlists)
 whose violations surface as ``PermissionError``.  ``tls_cert``/``tls_key``
 wrap the listener in TLS (clients connect via ``remote+tls://``).
+
+Fault tolerance (see DESIGN.md "Cluster"): ``journal=True`` keeps a
+replayable in-memory op journal of every write dispatch; a second server
+started with ``replicate_from=<url>`` subscribes to that journal over the
+ordinary wire protocol (``subscribe_ops``), replays each op into its own
+backend, and acks the applied sequence number.  With
+``sync_replication=True`` the primary *holds* a write's response until the
+replica has acked the op — so any client-visible ack implies replica
+durability, the invariant the chaos tests pin.  ``promote()`` turns a
+replica into a primary under a bumped epoch; clients validate role + epoch
+at connect time and refuse stale or unpromoted nodes.  A deterministic
+:class:`~repro.core.storage.chaos.FaultInjector` can be attached to drop /
+delay / black-hole frames or connections for chaos testing.
 """
 
 from __future__ import annotations
 
+import heapq
 import hmac
 import json
 import os
@@ -56,13 +70,22 @@ import ssl
 import struct
 import threading
 import time
+from collections import OrderedDict, deque
 from typing import Any
 
 from .. import telemetry
+from ..exceptions import StorageUnavailableError
+from ..frozen import TrialState
 from .base import BaseStorage, get_trials_since
 from .serde import BINARY_MAGIC, bdumps, bjoin, bloads, pack, unpack
 
-__all__ = ["StorageServer", "send_frame", "recv_frame", "MAX_FRAME_BYTES"]
+__all__ = [
+    "StorageServer",
+    "OpJournal",
+    "send_frame",
+    "recv_frame",
+    "MAX_FRAME_BYTES",
+]
 
 MAX_FRAME_BYTES = 64 * 1024 * 1024  # sanity cap on one frame
 MID_FRAME_STALL_SECONDS = 30.0  # max time a peer may stall between bytes of one frame
@@ -95,6 +118,7 @@ _METHODS = frozenset(
         "record_heartbeat",
         "get_stale_trial_ids",
         "fail_stale_trials",
+        "reclaim_stale_trials",
         "get_trials_revision",
         "get_trial_events",
         "get_observation_block",
@@ -120,6 +144,7 @@ _WRITE_METHODS = frozenset(
         "set_trial_system_attr",
         "record_heartbeat",
         "fail_stale_trials",
+        "reclaim_stale_trials",
     }
 )
 _TRIAL_SCOPED = frozenset(
@@ -139,6 +164,69 @@ _GLOBAL_SCOPED = frozenset({"create_new_study", "get_all_studies"})
 # binary-only RPCs: their responses are raw-array blocks that have no JSON
 # encoding; v1 clients get a typed NotImplementedError and fall back
 _V2_ONLY = frozenset({"get_observation_block", "get_iv_block"})
+
+# methods whose *retransmit* after a torn connection must not re-execute: the
+# client stamps them with an ``op`` id, the server remembers the last
+# _DEDUP_WINDOW results and answers a replayed frame from memory
+_DEDUPED = frozenset(
+    {
+        "create_new_study",
+        "create_new_trial",
+        "create_new_trials",
+        "set_trial_state_values",
+        "report_and_prune",
+    }
+)
+_DEDUP_WINDOW = 8192
+
+# replication stream: ops per frame when pushing a backlog to a new subscriber
+_OP_BACKLOG_CHUNK = 500
+
+
+class OpJournal:
+    """Replayable log of every write a server executed, in dispatch order.
+
+    Each entry is ``(seq, op_id, method, params)`` where ``seq`` is the
+    entry's index (the log sequence number — dense, starting at 0) and
+    ``op_id`` the client's idempotency token (or None).  A replica replays
+    entries in order into an empty backend of the same type; because every
+    backend assigns study/trial ids deterministically (next-id counters,
+    ``number == len(trials)``), the replica converges to bit-identical ids.
+
+    Thread-safety: appends come from the primary's reactor thread, or from a
+    replica's tail thread; reads (``since``) from the reactor — one lock.
+    """
+
+    __slots__ = ("_lock", "_ops")
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._ops: list[tuple[int, "str | None", str, list]] = []
+
+    @property
+    def end_seq(self) -> int:
+        with self._lock:
+            return len(self._ops)
+
+    def append(self, method: str, params: list, op_id: "str | None" = None) -> tuple:
+        with self._lock:
+            ent = (len(self._ops), op_id, method, params)
+            self._ops.append(ent)
+            return ent
+
+    def append_at(self, seq: int, op_id: "str | None", method: str, params: list) -> None:
+        """Replica-side append that preserves the primary's numbering.  A gap
+        means the subscription missed ops — unrecoverable, so it raises."""
+        with self._lock:
+            if seq != len(self._ops):
+                raise ValueError(
+                    f"op journal gap: expected seq {len(self._ops)}, got {seq}"
+                )
+            self._ops.append((seq, op_id, method, params))
+
+    def since(self, seq: int) -> list[tuple]:
+        with self._lock:
+            return list(self._ops[max(0, seq):])
 
 
 # -- blocking frame helpers (used by the client; the server is non-blocking) --
@@ -262,6 +350,7 @@ class _Conn:
         "stall_deadline",
         "mask",
         "closed",
+        "subscriber",
     )
 
     def __init__(self, sock, peer: str, authed: bool, handshaking: bool):
@@ -282,6 +371,7 @@ class _Conn:
         )
         self.mask = selectors.EVENT_READ
         self.closed = False
+        self.subscriber = False  # receives the replication op stream
 
 
 class _RPCServer:
@@ -295,6 +385,14 @@ class _RPCServer:
         auth_tokens: "list | None" = None,
         ssl_context: "ssl.SSLContext | None" = None,
         max_protocol: int = 2,
+        journal: "OpJournal | None" = None,
+        role: str = "primary",
+        epoch: int = 1,
+        sync_replication: bool = False,
+        fault_injector: Any = None,
+        reclaim_grace: "float | None" = None,
+        reclaim_requeue: bool = False,
+        reclaim_interval: float = 1.0,
     ):
         self.storage = storage
         self._scopes = _normalize_tokens(auth_token, auth_tokens)
@@ -302,6 +400,25 @@ class _RPCServer:
         self.ssl_context = ssl_context
         self.max_protocol = max_protocol
         self.stopping = threading.Event()
+        # -- cluster state ----------------------------------------------------
+        self._journal = journal
+        self.role = role  # "primary" accepts writes; "replica" refuses them
+        self.epoch = int(epoch)
+        self.sync_replication = sync_replication
+        self.fault_injector = fault_injector
+        self._tail_handle: Any = None  # set by StorageServer on replicas
+        self._subscribers: set[_Conn] = set()
+        self._acked_seq = 0  # highest journal seq a subscriber confirmed applied
+        self._pending_acks: "deque[tuple[int, _Conn, bytes]]" = deque()
+        self._dedup: "OrderedDict[str, Any]" = OrderedDict()
+        self._dedup_lock = threading.Lock()
+        self._delayed: list[tuple[float, int, _Conn, bytes]] = []  # fault-injected
+        self._delay_counter = 0
+        self._reclaim_grace = reclaim_grace
+        self._reclaim_requeue = reclaim_requeue
+        self._reclaim_interval = reclaim_interval
+        self._last_reclaim = time.monotonic()
+        self._kill = threading.Event()  # hard-stop: exit without flushing
         # always-on, server-owned registry: get_server_metrics must work
         # without globally enabling client-side telemetry in this process
         self.metrics = telemetry.MetricsRegistry(enabled=True)
@@ -329,6 +446,8 @@ class _RPCServer:
         self._sel.register(self._listener, selectors.EVENT_READ, None)
         try:
             while not self.stopping.is_set():
+                if self._kill.is_set():
+                    break  # simulated crash: abandon everything in-flight
                 for key, mask in self._sel.select(poll_interval):
                     if key.data is None:
                         self._accept()
@@ -344,18 +463,64 @@ class _RPCServer:
                             self.metrics.counter("server.protocol_errors").inc()
                             self._close_conn(conn)
                 now = time.monotonic()
+                if self._delayed and self._delayed[0][0] <= now:
+                    self._flush_delayed(now)
                 if now - self._last_sweep >= 1.0:
                     self._last_sweep = now
                     self._sweep_stalled(now)
+                if (
+                    self._reclaim_grace is not None
+                    and self.role == "primary"
+                    and now - self._last_reclaim >= self._reclaim_interval
+                ):
+                    self._last_reclaim = now
+                    self._run_reclaim()
         finally:
-            self.close()
+            self.close(flush=not self._kill.is_set())
 
-    def close(self) -> None:
+    def _flush_delayed(self, now: float) -> None:
+        """Release fault-injector-delayed responses whose hold expired."""
+        while self._delayed and self._delayed[0][0] <= now:
+            _, _, conn, body = heapq.heappop(self._delayed)
+            if not conn.closed:
+                try:
+                    self._send(conn, body)
+                except _Drop:
+                    self._close_conn(conn)
+
+    def _run_reclaim(self) -> None:
+        """Stale-RUNNING sweep: trials whose worker stopped heartbeating for
+        ``reclaim_grace`` seconds are FAILed (or requeued as WAITING).  Runs
+        on the reactor thread so the resulting state writes are journaled and
+        streamed to replicas like any client write."""
+        try:
+            summaries = self.storage.get_all_studies()
+        except Exception:
+            return
+        target = TrialState.WAITING if self._reclaim_requeue else TrialState.FAIL
+        for s in summaries:
+            try:
+                tids = self.storage.reclaim_stale_trials(
+                    s.study_id, self._reclaim_grace, requeue=self._reclaim_requeue
+                )
+            except Exception:
+                continue
+            if not tids:
+                continue
+            self.metrics.counter("server.reclaimed_trials").inc(len(tids))
+            if self._journal is not None:
+                ents = [
+                    self._journal.append("set_trial_state_values", [tid, target, None])
+                    for tid in tids
+                ]
+                self._stream_ops(ents)
+
+    def close(self, flush: bool = True) -> None:
         if self._closed:
             return
         self._closed = True
         for conn in list(self._conns):
-            if conn.outbuf and not conn.handshaking and not conn.closed:
+            if flush and conn.outbuf and not conn.handshaking and not conn.closed:
                 # best-effort flush of pending responses on graceful shutdown
                 try:
                     conn.sock.setblocking(True)
@@ -381,6 +546,14 @@ class _RPCServer:
                 return
             except OSError:
                 return
+            fi = self.fault_injector
+            if fi is not None and fi.on_accept():
+                self.metrics.counter("server.faults.dropped_connects").inc()
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+                continue
             sock.setblocking(False)
             try:
                 sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
@@ -503,12 +676,28 @@ class _RPCServer:
             except json.JSONDecodeError:
                 self.metrics.counter("server.protocol_errors").inc()
                 raise _Drop from None
+        if isinstance(request, dict) and "__ack_ops__" in request:
+            # one-way replication ack from a subscriber — no response frame
+            self._on_ack(int(request["__ack_ops__"]))
+            return
+        # chaos faults target *client* RPC frames only: replication-internal
+        # traffic (subscriber acks above, subscriber RPCs below) is exempt so
+        # an armed count lands on the frame the test aimed at
+        fault = None
+        fi = self.fault_injector
+        if fi is not None and not conn.subscriber:
+            fault = fi.on_frame()
+            if fault == "drop_conn":
+                self.metrics.counter("server.faults.dropped_conns").inc()
+                raise _Drop
         batch = isinstance(request, list)
+        seq0 = self._journal.end_seq if self._journal is not None else 0
         t0 = time.perf_counter()
         # events the wrapped backend records during dispatch carry the
         # *client* identity, so a fleet-wide trace attributes work to workers
         telemetry.set_worker_context(conn.peer)
         hello_proto = None
+        subscribe_since: "int | None" = None
         try:
             encoded: list[bytes] = []
             for r in request if batch else [request]:
@@ -516,13 +705,13 @@ class _RPCServer:
                     r, conn.specs, scope=conn.scope, proto=proto
                 )
                 encoded.append(blob)
-                if (
-                    not batch
-                    and isinstance(r, dict)
-                    and r.get("method") == "hello"
-                    and response.get("ok")
-                ):
-                    hello_proto = response["result"]["protocol"]
+                if not batch and isinstance(r, dict) and response.get("ok"):
+                    m = r.get("method")
+                    if m == "hello":
+                        hello_proto = response["result"]["protocol"]
+                    elif m == "subscribe_ops":
+                        p = r.get("params") or []
+                        subscribe_since = int(p[0]) if p else 0
         finally:
             telemetry.set_worker_context(None)
         if batch:
@@ -540,9 +729,25 @@ class _RPCServer:
             self.metrics.counter("server.batched_ops").inc(len(encoded))
         else:
             body = (bytes([BINARY_MAGIC]) + encoded[0]) if proto == 2 else encoded[0]
-        self._send(conn, body)
+        if fault == "blackhole":
+            # the request *executed*; the response evaporates — exactly the
+            # double-tell scenario the op-id dedup window must absorb
+            self.metrics.counter("server.faults.blackholed_frames").inc()
+        elif isinstance(fault, tuple) and fault[0] == "delay":
+            self.metrics.counter("server.faults.delayed_frames").inc()
+            self._delay_counter += 1
+            heapq.heappush(
+                self._delayed,
+                (time.monotonic() + float(fault[1]), self._delay_counter, conn, body),
+            )
+        elif self._hold_for_ack(conn, body, seq0):
+            pass  # semi-sync replication: released by the replica's ack
+        else:
+            self._send(conn, body)
         if hello_proto == 2:
             conn.proto = 2  # every later frame on this connection is binary
+        if subscribe_since is not None:
+            self._add_subscriber(conn, subscribe_since)
 
     def _handle_auth(self, conn: _Conn, payload: bytes) -> None:
         # the auth handshake is always JSON, whatever gets negotiated later
@@ -640,6 +845,150 @@ class _RPCServer:
             pass
         self._conns.discard(conn)
         self.metrics.gauge("server.active_connections").add(-1)
+        if conn.subscriber:
+            self._subscribers.discard(conn)
+            self.metrics.gauge("server.replication.subscribers").add(-1)
+            if not self._subscribers and self._pending_acks:
+                # the replica is gone: degrade to async rather than wedging
+                # every client behind acks that will never come
+                self.metrics.counter("server.replication.degraded").inc()
+                self._release_pending_acks(force=True)
+
+    # -- replication ----------------------------------------------------------
+
+    def _add_subscriber(self, conn: _Conn, since: int) -> None:
+        """Register a replica's op-stream subscription and push the backlog."""
+        conn.subscriber = True
+        self._subscribers.add(conn)
+        self.metrics.gauge("server.replication.subscribers").add(1)
+        if self._journal is None:
+            return
+        backlog = self._journal.since(since)
+        for i in range(0, len(backlog), _OP_BACKLOG_CHUNK):
+            self._push_op_frame(conn, backlog[i : i + _OP_BACKLOG_CHUNK])
+
+    def _stream_ops(self, ents: list[tuple]) -> None:
+        """Push freshly journaled ops to every live subscriber."""
+        if not self._subscribers:
+            return
+        for conn in list(self._subscribers):
+            if conn.closed:
+                continue
+            try:
+                self._push_op_frame(conn, ents)
+            except _Drop:
+                self._close_conn(conn)
+
+    def _push_op_frame(self, conn: _Conn, ents: list[tuple]) -> None:
+        if conn.proto == 2:
+            body = bytes([BINARY_MAGIC]) + bdumps(
+                {"__op_stream__": [list(e) for e in ents], "epoch": self.epoch}
+            )
+        else:
+            wire = [[seq, op_id, method, pack(params)] for seq, op_id, method, params in ents]
+            body = json.dumps({"__op_stream__": wire, "epoch": self.epoch}).encode()
+        self.metrics.counter("server.replication.streamed_ops").inc(len(ents))
+        self._send(conn, body)
+
+    def _hold_for_ack(self, conn: _Conn, body: bytes, seq0: int) -> bool:
+        """Semi-synchronous replication: when this frame journaled new ops and
+        a subscriber is attached, the response is parked until the replica
+        acks the journal suffix — a client-visible ack then implies the op
+        survives a primary crash."""
+        if not self.sync_replication or self._journal is None or conn.subscriber:
+            return False
+        if not self._subscribers:
+            return False
+        need = self._journal.end_seq
+        if need <= seq0 or need <= self._acked_seq:
+            return False
+        self._pending_acks.append((need, conn, body))
+        self.metrics.counter("server.replication.held_responses").inc()
+        return True
+
+    def _on_ack(self, seq: int) -> None:
+        if seq > self._acked_seq:
+            self._acked_seq = seq
+            self.metrics.counter("server.replication.acks").inc()
+        self._release_pending_acks()
+
+    def _release_pending_acks(self, force: bool = False) -> None:
+        while self._pending_acks and (force or self._pending_acks[0][0] <= self._acked_seq):
+            _, conn, body = self._pending_acks.popleft()
+            if conn.closed:
+                continue
+            try:
+                self._send(conn, body)
+            except _Drop:
+                self._close_conn(conn)
+
+    def _dedup_lookup(self, op_id: str) -> tuple[bool, Any]:
+        with self._dedup_lock:
+            if op_id in self._dedup:
+                return True, self._dedup[op_id]
+            return False, None
+
+    def _dedup_store(self, op_id: str, result: Any) -> None:
+        with self._dedup_lock:
+            self._dedup[op_id] = result
+            while len(self._dedup) > _DEDUP_WINDOW:
+                self._dedup.popitem(last=False)
+
+    def _journal_write(
+        self, method: str, params: list, result: Any, op_id: "str | None"
+    ) -> None:
+        """Append a successful write dispatch to the op journal in its
+        *replayable* form, and stream it to subscribers.  Fused and sweep ops
+        are decomposed into the primitive writes a replica can re-execute."""
+        entries: list[tuple["str | None", str, list]] = []
+        if method == "report_and_prune":
+            # only the value write mutates state; the prune decision is a
+            # read the replica re-derives from its own peer data
+            entries.append(
+                (op_id, "set_trial_intermediate_value",
+                 [params[1], int(params[2]), float(params[3])])
+            )
+        elif method in ("fail_stale_trials", "reclaim_stale_trials"):
+            requeue = (
+                method == "reclaim_stale_trials"
+                and len(params) > 2
+                and bool(params[2])
+            )
+            target = TrialState.WAITING if requeue else TrialState.FAIL
+            for tid in result or []:
+                entries.append((None, "set_trial_state_values", [tid, target, None]))
+        else:
+            entries.append((op_id, method, list(params)))
+        ents = [self._journal.append(m, p, oid) for oid, m, p in entries]
+        if ents:
+            self._stream_ops(ents)
+
+    def promote(self, epoch: "int | None" = None) -> dict[str, Any]:
+        """Replica → primary under a bumped epoch.  Safe to call on a node
+        that is already primary (idempotent)."""
+        if self.role != "primary":
+            tail = self._tail_handle
+            if epoch is None:
+                seen = getattr(tail, "seen_epoch", 0) if tail is not None else 0
+                epoch = max(seen, self.epoch) + 1
+            if tail is not None:
+                tail.stop(join=False)
+            self.role = "primary"
+            self.epoch = int(epoch)
+            self.metrics.counter("server.promotions").inc()
+        return {
+            "role": self.role,
+            "epoch": self.epoch,
+            "seq": self._journal.end_seq if self._journal is not None else 0,
+        }
+
+    def cluster_info(self) -> dict[str, Any]:
+        return {
+            "role": self.role,
+            "epoch": self.epoch,
+            "dedup": True,
+            "seq": self._journal.end_seq if self._journal is not None else 0,
+        }
 
     # -- dispatch -------------------------------------------------------------
 
@@ -675,6 +1024,26 @@ class _RPCServer:
             if method == "get_server_metrics":
                 response = {"id": req_id, "ok": True, "result": self.server_metrics()}
                 return response, enc(response)
+            if method == "get_cluster_info":
+                response = {"id": req_id, "ok": True, "result": self.cluster_info()}
+                return response, enc(response)
+            if method == "promote":
+                p = request.get("params") or []
+                response = {
+                    "id": req_id, "ok": True,
+                    "result": self.promote(int(p[0]) if p and p[0] is not None else None),
+                }
+                return response, enc(response)
+            if method == "subscribe_ops":
+                if self._journal is None:
+                    raise ValueError(
+                        "replication requires a server started with journal=True"
+                    )
+                response = {
+                    "id": req_id, "ok": True,
+                    "result": {"epoch": self.epoch, "end_seq": self._journal.end_seq},
+                }
+                return response, enc(response)
             if method not in _METHODS:
                 raise ValueError(f"unknown storage method {method!r}")
             params = request.get("params") or []
@@ -690,7 +1059,30 @@ class _RPCServer:
             self._check_scope(method, params, scope)
             if method in _V2_ONLY and proto == 1:
                 raise NotImplementedError(f"{method} requires wire protocol v2")
+            op_id = request.get("op")
+            if op_id is not None and method in _DEDUPED:
+                hit, cached = self._dedup_lookup(op_id)
+                if hit:
+                    # retransmitted frame: answer from the dedup window — the
+                    # original execution already happened (here, or on the
+                    # primary this node replicated before promotion)
+                    self.metrics.counter("server.dedup.hits").inc()
+                    response = {
+                        "id": req_id, "ok": True,
+                        "result": pack(cached) if proto == 1 else cached,
+                    }
+                    blob = enc(response)
+                    self._note_rpc(method, t0, len(blob))
+                    return response, blob
+            if self.role != "primary" and method in _WRITE_METHODS:
+                raise StorageUnavailableError(
+                    f"node is a replica (epoch {self.epoch}); writes need the primary"
+                )
             result = self._invoke(method, params)
+            if op_id is not None and method in _DEDUPED:
+                self._dedup_store(op_id, result)
+            if self._journal is not None and method in _WRITE_METHODS:
+                self._journal_write(method, params, result, op_id)
             if self._track_trials:
                 self._note_trial_ids(method, params, result)
             response = {
@@ -733,7 +1125,14 @@ class _RPCServer:
         want = 2
         if params and isinstance(params[0], dict):
             want = int(params[0].get("protocol", 2))
-        return {"protocol": max(1, min(want, self.max_protocol, 2))}
+        # cluster extras piggyback on the negotiation so a failover-aware
+        # client validates role/epoch without an extra round trip
+        return {
+            "protocol": max(1, min(want, self.max_protocol, 2)),
+            "role": self.role,
+            "epoch": self.epoch,
+            "dedup": True,
+        }
 
     def _check_scope(self, method: str, params: list, scope: "_Scope | None") -> None:
         if scope is None or scope.unrestricted:
@@ -837,6 +1236,27 @@ class _RPCServer:
             "spec_cache_hits": counters.get("server.spec_cache.hits", 0),
             "spec_cache_defs": counters.get("server.spec_cache.defs", 0),
             "batched_ops": counters.get("server.batched_ops", 0),
+            "reclaimed_trials": counters.get("server.reclaimed_trials", 0),
+            "dedup_hits": counters.get("server.dedup.hits", 0),
+            "faults": {
+                "dropped_connects": counters.get("server.faults.dropped_connects", 0),
+                "dropped_conns": counters.get("server.faults.dropped_conns", 0),
+                "blackholed_frames": counters.get("server.faults.blackholed_frames", 0),
+                "delayed_frames": counters.get("server.faults.delayed_frames", 0),
+            },
+            "replication": {
+                "role": self.role,
+                "epoch": self.epoch,
+                "seq": self._journal.end_seq if self._journal is not None else 0,
+                "acked_seq": self._acked_seq,
+                "subscribers": snap["gauges"].get("server.replication.subscribers", 0),
+                "streamed_ops": counters.get("server.replication.streamed_ops", 0),
+                "applied_ops": counters.get("server.replication.applied_ops", 0),
+                "held_responses": counters.get("server.replication.held_responses", 0),
+                "degraded": counters.get("server.replication.degraded", 0),
+                "promotions": counters.get("server.promotions", 0),
+                "reconnects": counters.get("server.replication.reconnects", 0),
+            },
             "methods": methods,
         }
 
@@ -885,6 +1305,167 @@ def _resolve_spec(params: list, conn_specs: "dict[int, dict] | None") -> list:
     return params
 
 
+class _ReplicaTail:
+    """Background thread on a replica: subscribes to the primary's op stream,
+    replays every op into the local backend (preserving the primary's journal
+    numbering and dedup window), and acks the applied sequence so a semi-sync
+    primary can release held client responses.  Reconnects with jittered
+    exponential backoff; ``stop()`` unblocks the socket and ends the loop."""
+
+    def __init__(
+        self,
+        server: _RPCServer,
+        host: str,
+        port: int,
+        auth_token: "str | None" = None,
+        protocol: int = 2,
+    ):
+        self._server = server
+        self._host = host
+        self._port = port
+        self._auth_token = auth_token
+        self._protocol = protocol
+        self.applied = server._journal.end_seq  # next seq we expect
+        self.seen_epoch = 0  # highest primary epoch observed on the stream
+        self._stop = threading.Event()
+        self._sock: "socket.socket | None" = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._next_id = 0
+
+    def start(self) -> "_ReplicaTail":
+        self._thread.start()
+        return self
+
+    def stop(self, join: bool = True) -> None:
+        self._stop.set()
+        sock = self._sock
+        if sock is not None:
+            try:
+                sock.close()  # unblock a recv in progress
+            except OSError:
+                pass
+        if join and self._thread.is_alive() and threading.current_thread() is not self._thread:
+            self._thread.join(timeout=5.0)
+
+    def _req_id(self) -> int:
+        self._next_id += 1
+        return self._next_id
+
+    def _run(self) -> None:
+        import random
+
+        rng = random.Random(id(self) & 0xFFFF)
+        attempt = 0
+        while not self._stop.is_set():
+            try:
+                self._connect_and_tail()
+                attempt = 0
+            except Exception:
+                if self._stop.is_set():
+                    break
+                self._server.metrics.counter("server.replication.reconnects").inc()
+                attempt += 1
+                delay = min(1.0, 0.05 * (2 ** min(attempt, 5))) * (0.5 + rng.random())
+                self._stop.wait(delay)
+
+    def _rpc(self, sock: socket.socket, proto: int, method: str, params: list) -> Any:
+        request = {"id": self._req_id(), "method": method, "params": params}
+        if proto == 2:
+            send_frame(sock, bytes([BINARY_MAGIC]) + bdumps(request))
+        else:
+            send_frame(sock, json.dumps({**request, "params": pack(params)}).encode())
+        body = self._recv(sock)
+        if body is None:
+            raise ConnectionError("primary closed during rpc")
+        response = bloads(memoryview(body)[1:]) if proto == 2 else json.loads(body)
+        if not response.get("ok"):
+            err = response.get("error") or {}
+            raise ConnectionError(f"primary rejected {method}: {err.get('message')}")
+        result = response.get("result")
+        return result if proto == 2 else unpack(result)
+
+    def _recv(self, sock: socket.socket) -> "bytes | None":
+        """recv_frame that treats idle timeouts as 'check the stop flag'."""
+        while True:
+            try:
+                return recv_frame(sock)
+            except socket.timeout:
+                if self._stop.is_set():
+                    raise ConnectionError("tail stopped") from None
+
+    def _connect_and_tail(self) -> None:
+        sock = socket.create_connection((self._host, self._port), timeout=5.0)
+        self._sock = sock
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            sock.settimeout(1.0)  # poll the stop flag while idle
+            if self._auth_token is not None:
+                request = {"id": self._req_id(), "method": "auth", "params": [self._auth_token]}
+                send_frame(sock, json.dumps(request).encode())
+                body = self._recv(sock)
+                if body is None or not json.loads(body).get("ok"):
+                    raise ConnectionError("replication auth rejected")
+            proto = 1
+            if self._protocol >= 2:
+                request = {"id": self._req_id(), "method": "hello", "params": [{"protocol": 2}]}
+                send_frame(sock, json.dumps(request).encode())
+                body = self._recv(sock)
+                if body is None:
+                    raise ConnectionError("primary closed during hello")
+                response = json.loads(body)
+                if response.get("ok") and int(response["result"].get("protocol", 1)) >= 2:
+                    proto = 2
+            sub = self._rpc(sock, proto, "subscribe_ops", [self.applied])
+            self.seen_epoch = max(self.seen_epoch, int(sub.get("epoch", 0)))
+            while not self._stop.is_set():
+                body = self._recv(sock)
+                if body is None:
+                    raise ConnectionError("primary closed the op stream")
+                if proto == 2:
+                    msg = bloads(memoryview(body)[1:])
+                else:
+                    msg = json.loads(body)
+                ops = msg.get("__op_stream__") if isinstance(msg, dict) else None
+                if ops is None:
+                    continue  # not an op frame; ignore
+                self.seen_epoch = max(self.seen_epoch, int(msg.get("epoch", 0)))
+                for seq, op_id, method, params in ops:
+                    if proto == 1:
+                        params = unpack(params)
+                    self._apply(int(seq), op_id, method, params)
+                # ack the whole frame at once: one frame back per frame in
+                ack = {"__ack_ops__": self.applied}
+                if proto == 2:
+                    send_frame(sock, bytes([BINARY_MAGIC]) + bdumps(ack))
+                else:
+                    send_frame(sock, json.dumps(ack).encode())
+        finally:
+            self._sock = None
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def _apply(self, seq: int, op_id: "str | None", method: str, params: list) -> None:
+        if seq < self.applied:
+            return  # overlap with an already-replayed backlog
+        srv = self._server
+        try:
+            result = getattr(srv.storage, method)(*params)
+        except Exception:
+            # a replayed op must never kill the tail; record and move on
+            result = None
+            srv.metrics.counter("server.replication.apply_errors").inc()
+        srv._journal.append_at(seq, op_id, method, params)
+        if op_id is not None:
+            # a retransmit that lands here after promotion answers from this
+            # window; None (e.g. a decomposed fused report) degrades to a
+            # conservative falsy result
+            srv._dedup_store(op_id, result if result is not None else False)
+        self.applied = seq + 1
+        srv.metrics.counter("server.replication.applied_ops").inc()
+
+
 class StorageServer:
     """Serve a storage backend over TCP.
 
@@ -912,6 +1493,22 @@ class StorageServer:
     ``max_protocol=1`` pins the server to JSON frames (the ``hello``
     negotiation is answered as an unknown method, exactly like a pre-v2
     server), which v2 clients transparently fall back from.
+
+    Cluster / fault-tolerance knobs (DESIGN.md "Cluster"):
+
+    * ``journal=True`` — keep a replayable op journal so replicas can
+      subscribe (implied by ``replicate_from`` / ``sync_replication``).
+    * ``replicate_from="remote://host:port"`` — start as a *replica* of that
+      primary: refuse writes, tail its op stream, replay into the local
+      backend.  :meth:`promote` flips it to primary under a bumped epoch.
+    * ``sync_replication=True`` — hold each write's client response until a
+      subscribed replica acks the op (degrades to async with no subscriber).
+    * ``fault_injector`` — a :class:`~.chaos.FaultInjector` for chaos tests.
+    * ``reclaim_grace`` — sweep interval-driven stale-RUNNING reclamation:
+      trials with no heartbeat for that many seconds are FAILed, or requeued
+      as WAITING with ``reclaim_requeue=True``.
+    * :meth:`kill` — simulated crash (no response flush); :meth:`restart`
+      re-binds the same port over the same backend object.
     """
 
     def __init__(
@@ -919,6 +1516,14 @@ class StorageServer:
         auth_token: "str | None" = None, auth_tokens: "list | None" = None,
         tls_cert: "str | None" = None, tls_key: "str | None" = None,
         max_protocol: int = 2,
+        journal: bool = False,
+        replicate_from: "str | None" = None,
+        sync_replication: bool = False,
+        epoch: int = 1,
+        fault_injector: Any = None,
+        reclaim_grace: "float | None" = None,
+        reclaim_requeue: bool = False,
+        reclaim_interval: float = 1.0,
     ):
         if (tls_cert is None) != (tls_key is None):
             raise ValueError("tls_cert and tls_key must be given together")
@@ -930,8 +1535,19 @@ class StorageServer:
         self._tls_cert = tls_cert
         self._tls_key = tls_key
         self._max_protocol = max_protocol
+        self._replicate_from = replicate_from
+        self._journal_enabled = bool(journal or replicate_from or sync_replication)
+        self._journal = OpJournal() if self._journal_enabled else None
+        self._sync_replication = sync_replication
+        self._epoch = int(epoch)
+        self._role = "replica" if replicate_from else "primary"
+        self._fault_injector = fault_injector
+        self._reclaim_grace = reclaim_grace
+        self._reclaim_requeue = reclaim_requeue
+        self._reclaim_interval = reclaim_interval
         self._server: _RPCServer | None = None
         self._thread: threading.Thread | None = None
+        self._tail: "_ReplicaTail | None" = None
 
     def start(self) -> "StorageServer":
         if self._server is not None:
@@ -944,7 +1560,27 @@ class StorageServer:
             (self._host, self._requested_port), self._storage,
             auth_token=self._auth_token, auth_tokens=self._auth_tokens,
             ssl_context=ssl_context, max_protocol=self._max_protocol,
+            journal=self._journal, role=self._role, epoch=self._epoch,
+            sync_replication=self._sync_replication,
+            fault_injector=self._fault_injector,
+            reclaim_grace=self._reclaim_grace,
+            reclaim_requeue=self._reclaim_requeue,
+            reclaim_interval=self._reclaim_interval,
         )
+        # remember the bound port so kill()/restart() resurrects the same URL
+        self._requested_port = self._server.server_address[1]
+        if self._replicate_from is not None and self._tail is None:
+            from .client import parse_remote_candidates
+
+            candidates, token, _tls = parse_remote_candidates(self._replicate_from)
+            self._tail = _ReplicaTail(
+                self._server, candidates[0][0], candidates[0][1],
+                auth_token=token or self._auth_token,  # shared-secret cluster
+                protocol=self._max_protocol,
+            ).start()
+            self._server._tail_handle = self._tail
+        elif self._tail is not None:
+            self._server._tail_handle = self._tail
         self._thread = threading.Thread(
             target=self._server.serve_forever, kwargs={"poll_interval": 0.1}, daemon=True
         )
@@ -980,12 +1616,85 @@ class StorageServer:
     def stop(self) -> None:
         if self._server is None:
             return
+        if self._tail is not None:
+            self._tail.stop()
+            self._tail = None
         self._server.stopping.set()
         if self._thread is not None:
             self._thread.join(timeout=5.0)
         self._server.close()  # idempotent; covers a loop that died early
         self._server = None
         self._thread = None
+
+    def kill(self) -> None:
+        """Simulated crash: sockets close without flushing responses, held
+        (semi-sync) responses are abandoned, the replica tail dies.  The
+        backend object survives — :meth:`restart` brings the node back on the
+        same port, like a process restart over durable storage."""
+        if self._server is None:
+            return
+        if self._tail is not None:
+            self._tail.stop()
+            self._tail = None
+        self._server._kill.set()
+        self._server.stopping.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+        self._server.close(flush=False)
+        self._server = None
+        self._thread = None
+
+    def restart(self) -> "StorageServer":
+        """Bring a stopped/killed node back on the same host:port."""
+        return self.start()
+
+    def promote(self, epoch: "int | None" = None) -> dict[str, Any]:
+        """Replica → primary: stop tailing the (dead) upstream, accept writes
+        under a bumped epoch.  Returns ``{"role", "epoch", "seq"}``."""
+        if self._server is None:
+            raise RuntimeError("server not started")
+        tail, self._tail = self._tail, None
+        if tail is not None:
+            tail.stop()  # join: every received op is applied before we flip
+        info = self._server.promote(epoch)
+        # keep wrapper state in sync so a later kill()/restart() stays primary
+        self._role = info["role"]
+        self._epoch = info["epoch"]
+        self._replicate_from = None
+        return info
+
+    @property
+    def role(self) -> str:
+        return self._server.role if self._server is not None else self._role
+
+    @property
+    def epoch(self) -> int:
+        return self._server.epoch if self._server is not None else self._epoch
+
+    @property
+    def fault_injector(self) -> Any:
+        return self._fault_injector
+
+    @property
+    def storage(self) -> BaseStorage:
+        return self._storage
+
+    @property
+    def journal(self) -> "OpJournal | None":
+        return self._journal
+
+    def replication_state(self) -> dict[str, Any]:
+        """Live replication view: journal seq, acked seq, applied seq (on a
+        replica), role and epoch — what the chaos harness polls."""
+        srv = self._server
+        tail = self._tail
+        return {
+            "role": self.role,
+            "epoch": self.epoch,
+            "seq": self._journal.end_seq if self._journal is not None else 0,
+            "acked_seq": srv._acked_seq if srv is not None else 0,
+            "applied_seq": tail.applied if tail is not None else None,
+        }
 
     def __enter__(self) -> "StorageServer":
         return self.start()
@@ -1022,6 +1731,30 @@ def main(argv: list[str] | None = None) -> None:
         "--max-protocol", type=int, default=2, choices=(1, 2),
         help="1 pins the wire to legacy JSON frames",
     )
+    ap.add_argument(
+        "--journal", action="store_true",
+        help="record executed writes in a replayable op journal (required "
+        "to serve replicas)",
+    )
+    ap.add_argument(
+        "--sync-replication", action="store_true",
+        help="hold client write responses until a connected replica acks "
+        "(implies --journal; acked writes survive primary loss)",
+    )
+    ap.add_argument(
+        "--replicate-from", default=None, metavar="URL",
+        help="start as a replica tailing this primary's op journal; promote "
+        "later with the 'promote' RPC",
+    )
+    ap.add_argument(
+        "--reclaim-grace", type=float, default=None, metavar="SECONDS",
+        help="FAIL RUNNING trials whose worker stopped heartbeating for "
+        "this many seconds (server-side sweep)",
+    )
+    ap.add_argument(
+        "--reclaim-requeue", action="store_true",
+        help="re-enqueue reclaimed trials as WAITING instead of FAILing them",
+    )
     args = ap.parse_args(argv)
 
     auth_tokens = None
@@ -1032,6 +1765,11 @@ def main(argv: list[str] | None = None) -> None:
         auth_token=args.auth_token, auth_tokens=auth_tokens,
         tls_cert=args.tls_cert, tls_key=args.tls_key,
         max_protocol=args.max_protocol,
+        journal=args.journal or args.sync_replication,
+        sync_replication=args.sync_replication,
+        replicate_from=args.replicate_from,
+        reclaim_grace=args.reclaim_grace,
+        reclaim_requeue=args.reclaim_requeue,
     ).start()
     print(f"serving {args.storage} at {server.url} (ctrl-c to stop)", flush=True)
     try:

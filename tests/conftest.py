@@ -12,6 +12,10 @@ if SRC not in sys.path:
     sys.path.insert(0, os.path.abspath(SRC))
 
 
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running chaos/storm tests")
+
+
 @pytest.fixture
 def tmp_sqlite(tmp_path):
     return f"sqlite:///{tmp_path}/study.db"

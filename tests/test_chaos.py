@@ -1,0 +1,458 @@
+"""Chaos harness + fault-tolerance tests: injector primitives, replication,
+promotion, client failover, stale-trial reclamation, journal crash recovery,
+cached-flush outage survival — and the acceptance storm: a seeded 100-worker
+run that loses a shard primary mid-flight and must converge bit-identical to
+an uninterrupted run with zero lost tells."""
+
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import telemetry
+from repro.core.distributions import FloatDistribution
+from repro.core.exceptions import RetryableStorageError, StorageUnavailableError
+from repro.core.frozen import StudyDirection, TrialState
+from repro.core.storage import (
+    CachedStorage,
+    InMemoryStorage,
+    JournalStorage,
+    RemoteStorage,
+    StorageServer,
+)
+from repro.core.storage.chaos import ChaosCluster, FaultInjector
+
+MIN = StudyDirection.MINIMIZE
+
+# a pruner spec that never prunes — exercises the fused path under chaos
+NOP_SPEC = {"name": "median", "n_startup_trials": 10_000}
+
+
+class TestFaultInjector:
+    def test_counted_rules_fire_in_order_then_disarm(self):
+        fi = FaultInjector(seed=0)
+        fi.drop_next_frames(1).blackhole_next(1).delay_next(1, 0.5)
+        assert fi.on_frame() == "drop_conn"
+        assert fi.on_frame() == "blackhole"
+        assert fi.on_frame() == ("delay", 0.5)
+        assert fi.on_frame() is None
+        assert not fi.armed
+
+    def test_accept_rule(self):
+        fi = FaultInjector(seed=0)
+        fi.drop_connects(2)
+        assert fi.on_accept() and fi.on_accept() and not fi.on_accept()
+        assert fi.stats["dropped_connects"] == 2
+
+    def test_random_drop_is_deterministic_under_seed(self):
+        a, b = FaultInjector(seed=123).random_drop(0.3), FaultInjector(seed=123).random_drop(0.3)
+        seq_a = [a.on_frame() for _ in range(50)]
+        seq_b = [b.on_frame() for _ in range(50)]
+        assert seq_a == seq_b
+        assert "drop_conn" in seq_a and None in seq_a
+
+    def test_clear_disarms_everything(self):
+        fi = FaultInjector(seed=0)
+        fi.drop_next_frames(5).blackhole_next(5).delay_next(5).drop_connects(5)
+        fi.random_drop(1.0)
+        fi.clear()
+        assert not fi.armed
+        assert fi.on_frame() is None and not fi.on_accept()
+
+    def test_counted_rules_take_precedence_over_random(self):
+        fi = FaultInjector(seed=0)
+        fi.random_drop(1.0)
+        fi.blackhole_next(1)
+        assert fi.on_frame() == "blackhole"
+        assert fi.on_frame() == "drop_conn"  # random takes over after
+
+
+class TestInjectedFaults:
+    def test_blackhole_executes_once_via_dedup(self):
+        """The nastiest failure: a tell that executed but whose response was
+        swallowed.  The retransmitted frame carries the same op id, so the
+        server answers from its dedup window — exactly one execution."""
+        fi = FaultInjector(seed=0)
+        with StorageServer(InMemoryStorage(), journal=True, fault_injector=fi) as srv:
+            st = RemoteStorage(srv.url, timeout=1.0, retries=10, rpc_deadline=15.0)
+            sid = st.create_new_study([MIN], "bh")
+            tid = st.create_new_trial(sid)
+            fi.blackhole_next(1)
+            assert st.set_trial_state_values(tid, TrialState.COMPLETE, [1.0]) is True
+            trials = srv.storage.get_all_trials(0)
+            assert len(trials) == 1 and trials[0].state == TrialState.COMPLETE
+            assert srv.get_server_metrics()["dedup_hits"] >= 1
+            # the journal recorded the op exactly once
+            ops = [m for _, _, m, _ in srv.journal.since(0)]
+            assert ops.count("set_trial_state_values") == 1
+
+    def test_drop_conn_loses_request_before_execution(self):
+        fi = FaultInjector(seed=0)
+        with StorageServer(InMemoryStorage(), fault_injector=fi) as srv:
+            st = RemoteStorage(srv.url, timeout=2.0, retries=10, rpc_deadline=15.0)
+            sid = st.create_new_study([MIN], "dc")
+            fi.drop_next_frames(1)
+            assert st.get_n_trials(sid) == 0  # idempotent read retried
+            assert fi.stats["dropped_frames"] == 1
+
+    def test_dropped_connects_then_recover(self):
+        fi = FaultInjector(seed=0)
+        with StorageServer(InMemoryStorage(), fault_injector=fi) as srv:
+            st = RemoteStorage(srv.url, timeout=2.0, retries=10, rpc_deadline=15.0)
+            st.close()  # force the next call to dial fresh
+            fi.drop_connects(2)
+            assert st._call("ping") == "pong"
+            assert fi.stats["dropped_connects"] == 2
+
+    def test_delay_holds_response(self):
+        fi = FaultInjector(seed=0)
+        with StorageServer(InMemoryStorage(), fault_injector=fi) as srv:
+            st = RemoteStorage(srv.url, timeout=5.0)
+            sid = st.create_new_study([MIN], "dl")
+            fi.delay_next(1, 0.3)
+            t0 = time.monotonic()
+            st.get_n_trials(sid)
+            assert time.monotonic() - t0 >= 0.25
+
+
+class TestReplication:
+    def test_replica_tails_and_matches_ids(self):
+        with StorageServer(InMemoryStorage(), journal=True) as prim:
+            rep = StorageServer(InMemoryStorage(), replicate_from=prim.url).start()
+            try:
+                st = RemoteStorage(prim.url)
+                sid = st.create_new_study([MIN], "rep")
+                tids = st.create_new_trials(sid, 3)
+                st.set_trial_param(tids[0], "x", 0.5, FloatDistribution(0, 1))
+                st.set_trial_state_values(tids[0], TrialState.COMPLETE, [1.0])
+                deadline = time.monotonic() + 10
+                while time.monotonic() < deadline:
+                    if rep.replication_state()["applied_seq"] >= prim.replication_state()["seq"]:
+                        break
+                    time.sleep(0.01)
+                mirror = rep.storage.get_all_trials(0)
+                original = prim.storage.get_all_trials(0)
+                assert [t.trial_id for t in mirror] == [t.trial_id for t in original]
+                assert [t.state for t in mirror] == [t.state for t in original]
+                assert mirror[0].params == original[0].params
+            finally:
+                rep.stop()
+
+    def test_replica_refuses_writes_until_promoted(self):
+        with StorageServer(InMemoryStorage(), journal=True) as prim:
+            rep = StorageServer(InMemoryStorage(), replicate_from=prim.url).start()
+            try:
+                RemoteStorage(prim.url).create_new_study([MIN], "ro")
+                # explicit single-node URL to the replica: reads fine
+                direct = RemoteStorage(
+                    rep.url, retries=2, rpc_deadline=5.0, timeout=2.0
+                )
+                deadline = time.monotonic() + 10
+                while time.monotonic() < deadline and not direct.get_all_studies():
+                    time.sleep(0.01)
+                assert [s.study_name for s in direct.get_all_studies()] == ["ro"]
+                with pytest.raises(StorageUnavailableError):
+                    direct.create_new_study([MIN], "nope")
+                rep.promote()
+                assert rep.role == "primary" and rep.epoch == 2
+                direct2 = RemoteStorage(rep.url)
+                assert direct2.create_new_study([MIN], "yes") >= 0
+            finally:
+                rep.stop()
+
+    def test_promote_is_idempotent(self):
+        with StorageServer(InMemoryStorage(), journal=True) as prim:
+            rep = StorageServer(InMemoryStorage(), replicate_from=prim.url).start()
+            try:
+                rep.promote()
+                e1 = rep.epoch
+                rep.promote()
+                assert rep.epoch == e1  # second promote is a no-op
+            finally:
+                rep.stop()
+
+    def test_client_fails_over_to_promoted_replica(self):
+        cc = ChaosCluster(n_shards=1, replicated=(0,), seed=1)
+        try:
+            st = cc.storage(timeout=2.0, retries=40, rpc_deadline=30.0, backoff_seed=3)
+            sid = st.create_new_study([MIN], "fo")
+            tid = st.create_new_trial(sid)
+            cc.wait_replicated(0)
+            cc.kill_primary(0)
+            cc.promote_replica(0)
+            assert st.set_trial_state_values(tid, TrialState.COMPLETE, [4.0])
+            trials = st.get_all_trials(sid)
+            assert len(trials) == 1 and trials[0].values == [4.0]
+        finally:
+            cc.stop()
+
+    def test_fenced_old_primary_is_refused(self):
+        cc = ChaosCluster(n_shards=1, replicated=(0,), seed=1)
+        try:
+            st = cc.storage(timeout=2.0, retries=40, rpc_deadline=30.0, backoff_seed=3)
+            sid = st.create_new_study([MIN], "fence")
+            cc.wait_replicated(0)
+            cc.kill_primary(0)
+            cc.promote_replica(0)
+            assert st.get_n_trials(sid) == 0  # failed over
+            # the dead primary restarts with its stale epoch: cluster-aware
+            # clients must keep talking to the promoted replica
+            cc.restart_primary(0)
+            tid = st.create_new_trial(sid)
+            assert st.set_trial_state_values(tid, TrialState.COMPLETE, [1.0])
+            # the write landed on the promoted node, not the stale restart
+            assert len(cc.replicas[0].storage.get_all_trials(0)) == 1
+            assert len(cc.primaries[0].storage.get_all_trials(0)) == 0
+        finally:
+            cc.stop()
+
+
+class TestReclaim:
+    def test_server_sweep_fails_stale_running_trials(self):
+        with StorageServer(
+            InMemoryStorage(), reclaim_grace=0.2, reclaim_interval=0.05
+        ) as srv:
+            st = RemoteStorage(srv.url)
+            sid = st.create_new_study([MIN], "sweep")
+            tid = st.create_new_trial(sid)  # RUNNING
+            st.record_heartbeat(tid)
+            deadline = time.monotonic() + 10
+            while time.monotonic() < deadline:
+                if st.get_trial(tid).state == TrialState.FAIL:
+                    break
+                time.sleep(0.05)
+            assert st.get_trial(tid).state == TrialState.FAIL
+            assert srv.get_server_metrics()["reclaimed_trials"] >= 1
+
+    def test_server_sweep_requeues_behind_flag(self):
+        with StorageServer(
+            InMemoryStorage(), reclaim_grace=0.2, reclaim_requeue=True,
+            reclaim_interval=0.05,
+        ) as srv:
+            st = RemoteStorage(srv.url)
+            sid = st.create_new_study([MIN], "requeue")
+            tid = st.create_new_trial(sid)
+            st.record_heartbeat(tid)
+            deadline = time.monotonic() + 10
+            while time.monotonic() < deadline:
+                if st.get_trial(tid).state == TrialState.WAITING:
+                    break
+                time.sleep(0.05)
+            assert st.get_trial(tid).state == TrialState.WAITING
+            # the requeued trial is claimable again (its heartbeat clock was
+            # re-armed, so it is not instantly re-swept as stale)
+            assert st.set_trial_state_values(tid, TrialState.RUNNING)
+
+    def test_reclaim_ops_are_journaled_for_replicas(self):
+        with StorageServer(
+            InMemoryStorage(), journal=True, reclaim_grace=0.2, reclaim_interval=0.05
+        ) as prim:
+            rep = StorageServer(InMemoryStorage(), replicate_from=prim.url).start()
+            try:
+                st = RemoteStorage(prim.url)
+                sid = st.create_new_study([MIN], "rj")
+                tid = st.create_new_trial(sid)
+                st.record_heartbeat(tid)
+                deadline = time.monotonic() + 10
+                while time.monotonic() < deadline:
+                    mirror = rep.storage.get_all_trials(0) if rep.storage.get_all_studies() else []
+                    if mirror and mirror[0].state == TrialState.FAIL:
+                        break
+                    time.sleep(0.05)
+                assert rep.storage.get_all_trials(0)[0].state == TrialState.FAIL
+            finally:
+                rep.stop()
+
+
+class TestJournalCrashRecovery:
+    def test_torn_tail_is_ignored_then_truncated_on_append(self, tmp_path):
+        path = str(tmp_path / "study.journal")
+        st = JournalStorage(path)
+        sid = st.create_new_study([MIN], "crash")
+        tid = st.create_new_trial(sid)
+        # a worker dies mid-append: half a JSON line, no newline
+        with open(path, "a") as f:
+            f.write('{"op":"set_state","trial_id":0,"TORN')
+        # readers never see the torn line
+        st2 = JournalStorage(path)
+        assert st2.get_trial(tid).state == TrialState.RUNNING
+        # the next append repairs the tail (truncate + warn) before writing
+        with pytest.warns(RuntimeWarning, match="torn final line"):
+            st2.set_trial_state_values(tid, TrialState.COMPLETE, [1.0])
+        with open(path, "rb") as f:
+            data = f.read()
+        assert data.endswith(b"\n") and b"TORN" not in data
+        # a fresh replay sees a clean history
+        st3 = JournalStorage(path)
+        assert st3.get_trial(tid).state == TrialState.COMPLETE
+        assert st3.get_trial(tid).values == [1.0]
+
+    def test_corrupt_interior_line_warns_and_skips(self, tmp_path):
+        path = str(tmp_path / "corrupt.journal")
+        st = JournalStorage(path)
+        st.create_new_study([MIN], "c0")
+        with open(path, "a") as f:
+            f.write("NOT JSON AT ALL\n")
+        with pytest.warns(RuntimeWarning, match="corrupt line"):
+            st.create_new_study([MIN], "c1")
+        with pytest.warns(RuntimeWarning, match="corrupt line"):
+            st2 = JournalStorage(path)
+        assert {s.study_name for s in st2.get_all_studies()} == {"c0", "c1"}
+
+    def test_fsync_flag_and_url_form(self, tmp_path):
+        path = str(tmp_path / "nf.journal")
+        st = JournalStorage(f"journal://{path}?fsync=0")
+        assert st._fsync is False
+        sid = st.create_new_study([MIN], "nf")
+        assert JournalStorage(path).get_study_id_from_name("nf") == sid
+        assert JournalStorage(path)._fsync is True  # default stays durable
+
+
+class TestCachedFlushOutage:
+    def test_buffered_ops_survive_a_server_bounce(self):
+        srv = StorageServer(InMemoryStorage()).start()
+        try:
+            st = CachedStorage(
+                RemoteStorage(srv.url, timeout=1.0, retries=2, rpc_deadline=3.0)
+            )
+            sid = st.create_new_study([MIN], "bounce")
+            tid = st.create_new_trial(sid)  # RUNNING -> owned, writes buffer
+            st.set_trial_user_attr(tid, "k1", "v1")
+            st.set_trial_user_attr(tid, "k2", "v2")
+            assert st.pending_ops == 2
+            srv.kill()
+            with pytest.raises(RetryableStorageError):
+                st.flush()
+            # nothing was dropped: the buffer survives the failed flush
+            assert st.pending_ops == 2
+            srv.restart()
+            st.flush()
+            assert st.pending_ops == 0
+            attrs = srv.storage.get_trial(0).user_attrs
+            assert attrs == {"k1": "v1", "k2": "v2"}
+        finally:
+            srv.stop()
+
+    def test_close_during_outage_does_not_raise(self):
+        srv = StorageServer(InMemoryStorage()).start()
+        st = CachedStorage(
+            RemoteStorage(srv.url, timeout=1.0, retries=1, rpc_deadline=2.0)
+        )
+        sid = st.create_new_study([MIN], "dead")
+        tid = st.create_new_trial(sid)
+        st.set_trial_user_attr(tid, "k", "v")
+        srv.kill()
+        st.close()  # buffered op is unflushable; close must still succeed
+
+
+# -- the acceptance storm -----------------------------------------------------
+
+
+def _chaos_worker(storage, sid, results, idx, per_worker):
+    try:
+        for k in range(per_worker):
+            tid = storage.create_new_trial(sid)
+            storage.set_trial_param(tid, "x", 0.5, FloatDistribution(0, 1))
+            pruned = storage.report_and_prune(
+                sid, tid, 0, float(idx), NOP_SPEC, MIN
+            )
+            assert pruned is False
+            value = idx * 1000.0 + k  # deterministic, unique per (worker, k)
+            assert storage.set_trial_state_values(tid, TrialState.COMPLETE, [value])
+        results[idx] = None
+    except Exception as e:  # pragma: no cover - surfaced by asserts below
+        results[idx] = e
+
+
+def _run_storm(kill_mid_run, n_workers=100, per_worker=2, seed=7):
+    """Run the seeded storm on a 2-shard cluster (shard of study 'storm'
+    replicated); optionally kill that shard's primary mid-run and promote.
+    Returns (values multiset, states, best, events) read from the node that
+    ends up serving the study."""
+    # figure out which shard the storm study hashes to, then build the
+    # cluster with the replica on that shard
+    from repro.core.storage.cluster import HashRing
+
+    storm_shard = HashRing(2).lookup("storm")
+    cc = ChaosCluster(n_shards=2, replicated=(storm_shard,), seed=seed)
+    try:
+        st = cc.storage(
+            timeout=2.0, retries=200, rpc_deadline=60.0, backoff_seed=seed
+        )
+        sid = st.create_new_study([MIN], "storm")
+        assert sid % 2 == storm_shard
+
+        killer = None
+        if kill_mid_run:
+            trigger_seq = (n_workers * per_worker * 3) // 4  # mid-storm
+
+            def _killer():
+                while cc.journal_seq(storm_shard) < trigger_seq:
+                    time.sleep(0.005)
+                cc.kill_primary(storm_shard)
+                time.sleep(0.2)  # workers spin against a headless shard
+                cc.promote_replica(storm_shard)
+
+            killer = threading.Thread(target=_killer)
+            killer.start()
+
+        results = [RuntimeError("never ran")] * n_workers
+        threads = [
+            threading.Thread(
+                target=_chaos_worker, args=(st, sid, results, i, per_worker)
+            )
+            for i in range(n_workers)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=180)
+        if killer is not None:
+            killer.join(timeout=30)
+        errors = [e for e in results if e is not None]
+        assert not errors, errors[:3]
+
+        # read the surviving node's backend directly (bit-exact, no client)
+        node = cc.replicas[storm_shard] if kill_mid_run else cc.primaries[storm_shard]
+        local_sid = sid // 2
+        trials = node.storage.get_all_trials(local_sid)
+        values = sorted(t.values[0] for t in trials)
+        states = [t.state for t in trials]
+        best = min(values)
+        events = node.storage.get_trial_events(local_sid)
+        return values, states, best, events
+    finally:
+        cc.stop()
+
+
+class TestChaosStormAcceptance:
+    @pytest.mark.slow
+    def test_failover_storm_zero_lost_tells(self):
+        n_workers, per_worker = 100, 2
+        expected_values = sorted(
+            float(i * 1000 + k) for i in range(n_workers) for k in range(per_worker)
+        )
+
+        chaos_values, chaos_states, chaos_best, chaos_events = _run_storm(
+            kill_mid_run=True, n_workers=n_workers, per_worker=per_worker
+        )
+        calm_values, calm_states, calm_best, _ = _run_storm(
+            kill_mid_run=False, n_workers=n_workers, per_worker=per_worker
+        )
+
+        # zero lost tells: every deterministic value is present exactly once
+        assert chaos_values == expected_values
+        # no double executions: trial count is exact, all COMPLETE
+        assert len(chaos_states) == n_workers * per_worker
+        assert all(s == TrialState.COMPLETE for s in chaos_states)
+        # bit-identical to the uninterrupted run
+        assert chaos_values == calm_values
+        assert chaos_states == calm_states
+        assert chaos_best == calm_best
+        # exactly one COMPLETED lifecycle event per trial on the survivor
+        completed = [
+            n for kind, n in zip(chaos_events["kind"], chaos_events["number"])
+            if kind == telemetry.EV_COMPLETED
+        ]
+        assert sorted(completed) == list(range(n_workers * per_worker))

@@ -1,0 +1,243 @@
+"""ShardedStorage: URL parsing, consistent-hash routing, id virtualization,
+full-contract parity against a single server, and per-shard batching."""
+
+import pytest
+
+from repro.core.distributions import FloatDistribution
+from repro.core.frozen import StudyDirection, TrialState
+from repro.core.storage import (
+    InMemoryStorage,
+    RemoteStorage,
+    ShardedStorage,
+    StorageServer,
+    get_storage,
+)
+from repro.core.storage.cluster import HashRing, parse_sharded_url
+
+
+@pytest.fixture
+def pool():
+    servers = [StorageServer(InMemoryStorage()).start() for _ in range(3)]
+    yield servers
+    for s in servers:
+        s.stop()
+
+
+def _sharded(pool, **kw):
+    return ShardedStorage([s.url for s in pool], **kw)
+
+
+class TestParsing:
+    def test_split_keeps_scheme_and_token(self):
+        assert parse_sharded_url("remote://tok@a:1,b:2,c:3") == [
+            "remote://tok@a:1",
+            "remote://tok@b:2",
+            "remote://tok@c:3",
+        ]
+
+    def test_split_keeps_failover_candidates(self):
+        assert parse_sharded_url("remote://a:1+a2:2,b:3") == [
+            "remote://a:1+a2:2",
+            "remote://b:3",
+        ]
+
+    def test_tls_scheme(self):
+        assert parse_sharded_url("remote+tls://a:1,b:2") == [
+            "remote+tls://a:1",
+            "remote+tls://b:2",
+        ]
+
+    def test_not_remote_raises(self):
+        with pytest.raises(ValueError):
+            parse_sharded_url("sqlite:///x.db")
+
+    def test_get_storage_routes_comma_urls(self, pool):
+        url = "remote://" + ",".join(s.url.split("://")[1] for s in pool)
+        st = get_storage(url)
+        assert isinstance(st, ShardedStorage)
+        st.close()
+
+    def test_get_storage_single_stays_remote(self, pool):
+        st = get_storage(pool[0].url)
+        assert isinstance(st, RemoteStorage)
+        st.close()
+
+
+class TestHashRing:
+    def test_deterministic_across_instances(self):
+        a, b = HashRing(4), HashRing(4)
+        keys = [f"study-{i}" for i in range(200)]
+        assert [a.lookup(k) for k in keys] == [b.lookup(k) for k in keys]
+
+    def test_spreads_keys(self):
+        ring = HashRing(3)
+        owners = {ring.lookup(f"study-{i}") for i in range(100)}
+        assert owners == {0, 1, 2}
+
+    def test_consistency_under_growth(self):
+        # growing the pool must not reshuffle the world: most keys keep
+        # their owner (the consistent-hashing property)
+        small, big = HashRing(3), HashRing(4)
+        keys = [f"study-{i}" for i in range(1000)]
+        moved = sum(small.lookup(k) != big.lookup(k) for k in keys)
+        assert moved < 500  # naive mod-N hashing would move ~75%
+
+
+class TestIdVirtualization:
+    def test_round_trip(self, pool):
+        st = _sharded(pool)
+        for gid in [0, 1, 2, 3, 7, 100, 12345]:
+            shard, local = st._split(gid)
+            assert st._gid(local, shard) == gid
+            assert 0 <= shard < 3
+
+    def test_study_and_trial_ids_are_global(self, pool):
+        st = _sharded(pool)
+        sids = [st.create_new_study([StudyDirection.MINIMIZE], f"s{i}") for i in range(9)]
+        assert len(set(sids)) == 9
+        assert len({sid % 3 for sid in sids}) > 1  # actually spread
+        for i, sid in enumerate(sids):
+            assert st.get_study_id_from_name(f"s{i}") == sid
+            assert st.get_study_name_from_id(sid) == f"s{i}"
+        tids = [st.create_new_trial(sid) for sid in sids for _ in range(2)]
+        assert len(set(tids)) == len(tids)
+        st.close()
+
+    def test_trials_route_back_to_their_shard(self, pool):
+        st = _sharded(pool)
+        sid = st.create_new_study([StudyDirection.MINIMIZE], "routed")
+        tids = st.create_new_trials(sid, 5)
+        for i, tid in enumerate(tids):
+            st.set_trial_param(tid, "x", 0.25, FloatDistribution(0, 1))
+            assert st.set_trial_state_values(tid, TrialState.COMPLETE, [float(i)])
+        trials = st.get_all_trials(sid)
+        assert [t.trial_id for t in trials] == tids
+        assert [t.number for t in trials] == list(range(5))
+        assert st.get_trial(tids[3]).values == [3.0]
+        assert st.get_trial_id_from_study_and_number(sid, 3) == tids[3]
+        st.close()
+
+
+class TestContractParity:
+    def test_attrs_and_summaries(self, pool):
+        st = _sharded(pool)
+        sids = [st.create_new_study([StudyDirection.MAXIMIZE], f"p{i}") for i in range(4)]
+        for sid in sids:
+            st.set_study_user_attr(sid, "team", "a")
+            st.set_study_system_attr(sid, "v", 1)
+            assert st.get_study_user_attrs(sid) == {"team": "a"}
+            assert st.get_study_system_attrs(sid) == {"v": 1}
+            assert st.get_study_directions(sid) == [StudyDirection.MAXIMIZE]
+        summaries = st.get_all_studies()
+        assert sorted(s.study_id for s in summaries) == sorted(sids)
+        st.delete_study(sids[0])
+        assert len(st.get_all_studies()) == 3
+        st.close()
+
+    def test_iv_block_trial_ids_are_globalized(self, pool):
+        st = _sharded(pool)
+        sid = st.create_new_study([StudyDirection.MINIMIZE], "ivs")
+        tids = st.create_new_trials(sid, 3)
+        for step in range(2):
+            for tid in tids:
+                st.set_trial_intermediate_value(tid, step, float(step))
+        block = st.get_iv_block(sid)
+        assert sorted(int(t) for t in block["trial_ids"]) == sorted(tids)
+        # observation blocks and trial events are keyed by per-study numbers
+        for tid, v in zip(tids, (1.0, 2.0, 3.0)):
+            st.set_trial_state_values(tid, TrialState.COMPLETE, [v])
+        obs = st.get_observation_block(sid)
+        assert sorted(int(n) for n in obs["numbers"]) == [0, 1, 2]
+        ev = st.get_trial_events(sid)
+        assert len(ev["kind"]) > 0
+        st.close()
+
+    def test_heartbeats_and_reclaim(self, pool):
+        st = _sharded(pool)
+        sid = st.create_new_study([StudyDirection.MINIMIZE], "hb")
+        tid = st.create_new_trial(sid)
+        st.record_heartbeat(tid)
+        assert st.get_stale_trial_ids(sid, grace_seconds=3600) == []
+        assert st.get_stale_trial_ids(sid, grace_seconds=-1.0) == [tid]
+        assert st.reclaim_stale_trials(sid, grace_seconds=-1.0, requeue=True) == [tid]
+        assert st.get_trial(tid).state == TrialState.WAITING
+        st.close()
+
+    def test_revision_and_counts(self, pool):
+        st = _sharded(pool)
+        sid = st.create_new_study([StudyDirection.MINIMIZE], "rev")
+        r0 = st.get_trials_revision(sid)
+        tid = st.create_new_trial(sid)
+        assert st.get_trials_revision(sid) > r0
+        assert st.get_n_trials(sid) == 1
+        assert st.get_n_trials(sid, states=(TrialState.COMPLETE,)) == 0
+        st.set_trial_user_attr(tid, "k", [1, 2])
+        st.set_trial_system_attr(tid, "s", "x")
+        t = st.get_trial(tid)
+        assert t.user_attrs == {"k": [1, 2]} and t.system_attrs["s"] == "x"
+        st.close()
+
+    def test_server_metrics_fan_out(self, pool):
+        st = _sharded(pool)
+        st.create_new_study([StudyDirection.MINIMIZE], "m")
+        metrics = st.get_server_metrics()
+        assert len(metrics["shards"]) == 3
+        assert all("frames_in" in m for m in metrics["shards"])
+        st.close()
+
+    def test_supports_block_fetch(self, pool):
+        st = _sharded(pool)
+        assert st.supports_block_fetch is True
+        st.close()
+
+
+class TestCallBatch:
+    def test_batch_routes_and_reassembles_in_order(self, pool):
+        st = _sharded(pool)
+        sids = [st.create_new_study([StudyDirection.MINIMIZE], f"b{i}") for i in range(6)]
+        tids = [st.create_new_trial(sid) for sid in sids]
+        calls = []
+        for tid in tids:
+            calls.append(("get_trial", (tid,)))
+        for sid in sids:
+            calls.append(("get_n_trials", (sid, None)))
+        out = st.call_batch(calls)
+        assert [t.trial_id for t in out[: len(tids)]] == tids
+        assert out[len(tids):] == [1] * len(sids)
+        st.close()
+
+    def test_batch_writes_and_fused_prune(self, pool):
+        st = _sharded(pool)
+        sid = st.create_new_study([StudyDirection.MINIMIZE], "fused")
+        tid = st.create_new_trial(sid)
+        spec = {"name": "median", "n_startup_trials": 100}
+        out = st.call_batch(
+            [
+                ("set_trial_intermediate_value", (tid, 0, 1.5)),
+                ("report_and_prune", (sid, tid, 1, 0.5, spec, StudyDirection.MINIMIZE)),
+            ]
+        )
+        assert out[-1] in (True, False)
+        assert st.get_trial(tid).intermediate_values == {0: 1.5, 1: 0.5}
+        st.close()
+
+    def test_unroutable_method_raises(self, pool):
+        st = _sharded(pool)
+        with pytest.raises(ValueError):
+            st.call_batch([("get_all_studies", ())])
+        st.close()
+
+
+class TestEndToEnd:
+    def test_optimize_through_router_with_cache(self, pool):
+        from repro.core.samplers import TPESampler
+        from repro.core.study import create_study
+
+        url = "remote://" + ",".join(s.url.split("://")[1] for s in pool)
+        storage = get_storage(url, cache=True)
+        study = create_study(
+            storage=storage, study_name="e2e", sampler=TPESampler(seed=7)
+        )
+        study.optimize(lambda t: t.suggest_float("x", -5, 5) ** 2, n_trials=15)
+        assert len(study.trials) == 15
+        assert study.best_value is not None

@@ -24,6 +24,7 @@ from repro.core.records import IntermediateValueStore, ObservationStore
 from repro.core.storage import (
     InMemoryStorage,
     RemoteStorage,
+    ShardedStorage,
     StorageServer,
     get_storage,
 )
@@ -513,11 +514,26 @@ def _storm_worker(storage, sid, results, idx):
 
 
 class TestMiniWorkerStorm:
+    @pytest.mark.parametrize("topology", ["single", "sharded"])
     @pytest.mark.parametrize("max_protocol", [1, 2], ids=["v1", "v2"])
-    def test_200_worker_storm_smoke(self, max_protocol):
+    def test_200_worker_storm_smoke(self, max_protocol, topology):
+        import contextlib
+
         n_workers = 200
-        with StorageServer(InMemoryStorage(), max_protocol=max_protocol) as srv:
-            storage = RemoteStorage(srv.url, timeout=60.0)
+        n_servers = 1 if topology == "single" else 3
+        with contextlib.ExitStack() as stack:
+            servers = [
+                stack.enter_context(
+                    StorageServer(InMemoryStorage(), max_protocol=max_protocol)
+                )
+                for _ in range(n_servers)
+            ]
+            if topology == "single":
+                storage = RemoteStorage(servers[0].url, timeout=60.0)
+                storm_server = servers[0]
+            else:
+                storage = ShardedStorage([s.url for s in servers], timeout=60.0)
+                storm_server = servers[storage.shard_of_study("storm")]
             sid = storage.create_new_study([StudyDirection.MINIMIZE], "storm")
             results = [RuntimeError("never ran")] * n_workers
             threads = [
@@ -534,7 +550,7 @@ class TestMiniWorkerStorm:
             assert len(trials) == n_workers * 2
             assert sorted(t.number for t in trials) == list(range(n_workers * 2))
             assert all(t.state == TrialState.COMPLETE for t in trials)
-            metrics = srv.get_server_metrics()
+            metrics = storm_server.get_server_metrics()
             assert metrics["frames_in"] > 0 and metrics["bytes_out"] > 0
             # serialize-once accounting: per-method bytes_out measures the
             # actual wire payloads
