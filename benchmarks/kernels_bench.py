@@ -3,10 +3,17 @@
 On CPU these are *correctness/overhead* numbers (Pallas interpret mode), not
 TPU wall times — the TPU roofline for the kernels is derived analytically in
 EXPERIMENTS.md §Perf (VMEM-resident traffic accounting).
+
+``python -m benchmarks.kernels_bench`` writes ``BENCH_kernels.json`` (CI
+uploads it as an artifact) with one row per kernel, including the sampler
+engine's Parzen-score and Monte-Carlo hypervolume kernels and their max
+absolute deviation from the jnp oracles.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -14,9 +21,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
+from repro.kernels.hypervolume import mc_hv_counts
 from repro.kernels.ops import crossentropy_op, flash_attention_op, ssd_op
+from repro.kernels.parzen import parzen_score
 
-__all__ = ["run"]
+__all__ = ["run", "main"]
 
 
 def _time(fn, *args, n=3):
@@ -26,6 +35,10 @@ def _time(fn, *args, n=3):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.time() - t0) / n * 1e6  # us
+
+
+def _max_err(a, b) -> float:
+    return float(jnp.max(jnp.abs(jnp.asarray(a) - jnp.asarray(b))))
 
 
 def run(verbose: bool = True):
@@ -56,8 +69,56 @@ def run(verbose: bool = True):
         "ref_us": _time(lambda *a: ref.crossentropy_ref(*a), xe, w, labels),
     }
 
+    # Parzen log l - log g: the TPE device score table's shape (4096-point
+    # grid vs two ~1k-component mixtures)
+    C, K = 4096, 1024
+    cands = jnp.asarray(rng.uniform(-3, 3, C).astype(np.float32))
+    mixes = []
+    for _ in range(2):
+        mus = rng.uniform(-3, 3, K).astype(np.float32)
+        sigmas = rng.uniform(0.05, 1.0, K).astype(np.float32)
+        ln = (np.log(np.full(K, 1.0 / K)) - np.log(sigmas)).astype(np.float32)
+        mixes += [jnp.asarray(mus), jnp.asarray(sigmas), jnp.asarray(ln)]
+    pz = lambda *a: parzen_score(*a, interpret=True)
+    rows["parzen_score_4096x1024"] = {
+        "kernel_us": _time(pz, cands, *mixes),
+        "ref_us": _time(lambda *a: ref.parzen_score_ref(*a), cands, *mixes),
+        "max_err": _max_err(pz(cands, *mixes), ref.parzen_score_ref(cands, *mixes)),
+    }
+
+    # MC hypervolume counts: a 64-point 6-objective front vs 8192 samples
+    pts = jnp.asarray(rng.uniform(0, 1, (64, 6)).astype(np.float32))
+    smp = jnp.asarray(rng.uniform(0, 1.1, (8192, 6)).astype(np.float32))
+    hv = lambda *a: mc_hv_counts(*a, interpret=True)
+    excl_k, tot_k = hv(pts, smp)
+    excl_r, tot_r = ref.mc_hv_counts_ref(pts, smp)
+    rows["mc_hv_64x6x8192"] = {
+        "kernel_us": _time(lambda *a: hv(*a)[0], pts, smp),
+        "ref_us": _time(lambda *a: ref.mc_hv_counts_ref(*a)[0], pts, smp),
+        "max_err": max(_max_err(excl_k, excl_r), _max_err(tot_k, tot_r)),
+    }
+
     if verbose:
         for name, r in rows.items():
-            parts = " ".join(f"{k}={v:9.1f}" for k, v in r.items())
+            parts = " ".join(f"{k}={v:9.4g}" for k, v in r.items())
             print(f"[kernels] {name:22s} {parts}", flush=True)
     return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description="kernel microbenchmarks")
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args(argv)
+    rows = run()
+    try:
+        from ._meta import bench_metadata
+    except ImportError:  # run as a standalone script, not -m benchmarks.kernels_bench
+        from _meta import bench_metadata
+    payload = {"kernels": rows, "meta": bench_metadata()}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"[kernels] wrote {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -24,8 +24,8 @@ from repro.core.frozen import TrialState
 from .testbed import CASES
 
 __all__ = [
-    "run", "mann_whitney_u", "ask_throughput", "joint_ask_throughput",
-    "joint_quality", "main",
+    "run", "mann_whitney_u", "ask_throughput", "engine_ask_bench",
+    "joint_ask_throughput", "joint_quality", "main",
 ]
 
 
@@ -156,12 +156,18 @@ def _ask_once(study, n_params: int) -> None:
             trial.suggest_float(f"p{j}", 1e-6, 1.0, log=True)
 
 
-def _bench_sampler(sampler, n_trials: int, n_params: int, n_asks: int, seed: int) -> float:
+def _bench_sampler(
+    sampler, n_trials: int, n_params: int, n_asks: int, seed: int, warmup: int = 1
+) -> float:
     """Median ms per ask (create trial + suggest every parameter) against a
-    fixed completed history of ``n_trials``."""
+    fixed completed history of ``n_trials``.  ``warmup`` asks run outside the
+    clock (store ingest, fit caches, jit traces, and — for the device engine
+    — the score table, which builds on the second score at one history
+    version)."""
     study = hpo.create_study(sampler=sampler)
     _seed_history(study, n_trials, n_params, seed)
-    _ask_once(study, n_params)  # warm caches / store ingest outside the clock
+    for _ in range(max(warmup, 1)):
+        _ask_once(study, n_params)
     times = []
     for _ in range(n_asks):
         t0 = time.perf_counter()
@@ -201,6 +207,61 @@ def ask_throughput(
             f"[samplers] TPE ask throughput @ {n_trials} trials x {n_params} params: "
             f"vectorized {new_ms:.2f} ms/ask, legacy {legacy_ms:.2f} ms/ask "
             f"-> {out['speedup']:.1f}x",
+            flush=True,
+        )
+    return out
+
+
+# -- engine scaling: numpy vs auto device engine ---------------------------------
+
+
+def engine_ask_bench(
+    sizes: tuple = (2000, 8000, 32000),
+    n_params: int = 16,
+    n_asks: int = 20,
+    seed: int = 0,
+    verbose: bool = True,
+) -> dict:
+    """TPE ask cost as the completed history grows: ``engine="numpy"`` vs
+    the default ``engine="auto"`` device engine, same seeded histories.
+
+    The numpy path rescores ``n_ei_candidates x n_components`` per parameter
+    per ask, so its ask cost grows linearly with the history.  The auto
+    engine amortizes repeat asks at one history version through the dense
+    device score table (one large fused call, then O(n_ei) host interpolation
+    per ask), so its ask cost stays flat.  Acceptance: auto grows <= 1.5x
+    from the smallest to the largest size while numpy grows >= 5x."""
+    rows = []
+    for engine in ("numpy", "auto"):
+        for n_trials in sizes:
+            ms = _bench_sampler(
+                hpo.TPESampler(seed=1, engine=engine),
+                n_trials, n_params, n_asks, seed, warmup=3,
+            )
+            rows.append({"engine": engine, "n_trials": n_trials, "ms_per_ask": ms})
+            if verbose:
+                print(
+                    f"[samplers] engine={engine:5s} @ {n_trials:6d} trials x "
+                    f"{n_params} params: {ms:.2f} ms/ask",
+                    flush=True,
+                )
+
+    def growth(engine: str) -> float:
+        by_size = {r["n_trials"]: r["ms_per_ask"] for r in rows if r["engine"] == engine}
+        return by_size[max(sizes)] / max(by_size[min(sizes)], 1e-9)
+
+    out = {
+        "n_params": n_params,
+        "n_asks": n_asks,
+        "sizes": list(sizes),
+        "rows": rows,
+        "numpy_growth": growth("numpy"),
+        "auto_growth": growth("auto"),
+    }
+    if verbose:
+        print(
+            f"[samplers] ask-cost growth {min(sizes)} -> {max(sizes)} trials: "
+            f"numpy {out['numpy_growth']:.1f}x, auto {out['auto_growth']:.1f}x",
             flush=True,
         )
     return out
@@ -342,6 +403,7 @@ def main(argv=None) -> None:
         payload["ask_throughput"] = ask_throughput(
             n_trials=args.trials, n_params=args.params, n_asks=args.asks
         )
+        payload["engine_ask_bench"] = engine_ask_bench(n_params=args.params)
     if args.joint_bench or not bench_only:
         payload["joint_ask_throughput"] = joint_ask_throughput(
             n_trials=args.trials, n_params=args.params, batch=args.batch

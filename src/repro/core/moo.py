@@ -32,9 +32,14 @@ the non-dominated rows, drop their domination edges, repeat.
 
 from __future__ import annotations
 
+import logging
 from typing import TYPE_CHECKING, Sequence
 
 import numpy as np
+
+from ..kernels import ops as kops
+from . import telemetry
+from .log import get_logger, log_once
 
 if TYPE_CHECKING:
     from .frozen import StudyDirection
@@ -47,8 +52,11 @@ __all__ = [
     "crowding_distance",
     "hypervolume",
     "hypervolume_contributions",
+    "HypervolumeEstimator",
     "solve_hssp",
 ]
+
+_log = get_logger(__name__)
 
 #: rank assigned to rows excluded from the sort (masked out by the caller)
 EXCLUDED = -1
@@ -73,8 +81,6 @@ def loss_matrix(values: np.ndarray, directions: "Sequence[StudyDirection | int]"
 # -- dominance ------------------------------------------------------------------
 
 _jax_dominance = None
-#: XLA traces taken by the jax dominance kernel (tests pin it bounded)
-_jax_trace_count = 0
 
 
 def _get_jax_dominance():
@@ -87,8 +93,7 @@ def _get_jax_dominance():
         import jax.numpy as jnp
 
         def dom(V):
-            global _jax_trace_count
-            _jax_trace_count += 1  # body runs once per trace, not per call
+            kops.bump_trace("moo.dominance")  # body runs once per trace
             # not-any(>) rather than all(<=): identical on NaN-free rows,
             # and matches the pairwise reference's NaN semantics otherwise
             no_worse = ~jnp.any(V[:, None, :] > V[None, :, :], axis=2)
@@ -99,39 +104,66 @@ def _get_jax_dominance():
     return _jax_dominance
 
 
-def _pad_pow2_len(n: int) -> int:
-    size = 8
-    while size < n:
-        size *= 2
-    return size
+def _note_engine_fallback(reason: str) -> None:
+    telemetry.inc("sampler.engine_fallbacks")
+    log_once(
+        _log, ("moo-engine-fallback", reason), logging.WARNING,
+        "moo device engine downgraded to numpy: %s (logged once; occurrences "
+        "counted in sampler.engine_fallbacks)", reason,
+    )
 
 
-def dominance_matrix(V: np.ndarray, jit: bool = False) -> np.ndarray:
+def _resolve(engine: "str | None", jit: bool, work: int) -> str:
+    """Concrete engine for one dominance-shaped reduction of ``work``
+    (= rows x objectives) units.  ``engine=None`` keeps the legacy ``jit``
+    switch semantics (False -> numpy, True -> jax); ``"pallas"`` maps to the
+    jitted reduction (the comparison cube is XLA-shaped already, there is no
+    separate Pallas dominance kernel)."""
+    if engine is None:
+        engine = "jax" if jit else "numpy"
+    if engine == "numpy":
+        return "numpy"
+    if not kops.jax_available():
+        _note_engine_fallback("jax-unavailable")
+        return "numpy"
+    eng = kops.resolve_engine(
+        engine, work, kops.DOM_JIT_THRESHOLD, ceiling=kops.DOM_CPU_CEILING
+    )
+    return "jax" if eng == "pallas" else eng
+
+
+def dominance_matrix(
+    V: np.ndarray, jit: bool = False, engine: "str | None" = None
+) -> np.ndarray:
     """Boolean ``(n, n)`` matrix with ``out[i, j]`` True iff row ``i``
     dominates row ``j`` (loss orientation).  The diagonal is always False
     (a row never strictly improves on itself).
 
     The numpy path evaluates the two sign-matrix reductions in row chunks so
-    the broadcasted ``(chunk, n, m)`` temporaries stay cache-sized; the jax
-    path (``jit=True``) runs the whole reduction as one jitted kernel with
+    the broadcasted ``(chunk, n, m)`` temporaries stay cache-sized; the
+    device path runs the whole reduction as one jitted kernel with
     power-of-two padding (padding rows are +inf: they dominate nothing and
-    are sliced off before return).
+    are sliced off before return).  ``engine`` follows the shared policy
+    (``"auto"`` picks the device past ``DOM_JIT_THRESHOLD`` rows x
+    objectives, up to ``DOM_CPU_CEILING`` off-TPU — the reduction
+    materializes the (n, n, m) cube); the legacy ``jit`` flag is equivalent
+    to ``engine="jax"``.
     """
     V = np.asarray(V, dtype=float)
     n = len(V)
     if n == 0:
         return np.zeros((0, 0), dtype=bool)
-    if jit:
+    if _resolve(engine, jit, n * V.shape[1]) == "jax":
         try:
-            size = _pad_pow2_len(n)
+            size = kops.pad_pow2_len(n)
             if size != n:
                 P = np.full((size, V.shape[1]), np.inf)
                 P[:n] = V
             else:
                 P = V
             return np.asarray(_get_jax_dominance()(P))[:n, :n]
-        except ImportError:
-            pass
+        except Exception as e:  # device dispatch failed: downgrade loudly
+            _note_engine_fallback(f"dominance-device-error:{type(e).__name__}")
     out = np.empty((n, n), dtype=bool)
     m = V.shape[1]
     with np.errstate(invalid="ignore"):
@@ -156,7 +188,10 @@ def dominance_matrix(V: np.ndarray, jit: bool = False) -> np.ndarray:
 
 
 def nondomination_ranks(
-    V: np.ndarray, mask: "np.ndarray | None" = None, jit: bool = False
+    V: np.ndarray,
+    mask: "np.ndarray | None" = None,
+    jit: bool = False,
+    engine: "str | None" = None,
 ) -> np.ndarray:
     """Front rank per row (0 = Pareto front) via iterated masking over the
     dominance matrix: rows not dominated by any active row form the current
@@ -172,7 +207,7 @@ def nondomination_ranks(
     if not active.any():
         return ranks
     idx = np.flatnonzero(active)
-    dom = dominance_matrix(V[idx], jit=jit)
+    dom = dominance_matrix(V[idx], jit=jit, engine=engine)
     # dominated_by[j] = number of active rows dominating j; peel fronts by
     # subtracting the peeled rows' edges instead of re-reducing the matrix
     dominated_by = dom.sum(axis=0).astype(np.int64)
@@ -211,7 +246,10 @@ def _dominated_by_any(V: np.ndarray, D: np.ndarray) -> np.ndarray:
 
 
 def pareto_front_mask(
-    V: np.ndarray, mask: "np.ndarray | None" = None, jit: bool = False
+    V: np.ndarray,
+    mask: "np.ndarray | None" = None,
+    jit: bool = False,
+    engine: "str | None" = None,
 ) -> np.ndarray:
     """Boolean mask of the non-dominated rows (front 0), without peeling the
     remaining fronts.
@@ -243,10 +281,10 @@ def pareto_front_mask(
         picks = A[np.argsort(score, kind="stable")[:_PREFILTER_PICKS]]
         survivors = np.flatnonzero(~_dominated_by_any(A, picks))
         S = A[survivors]
-        dom = dominance_matrix(S, jit=jit)
+        dom = dominance_matrix(S, jit=jit, engine=engine)
         out[idx[survivors]] = ~dom.any(axis=0)
         return out
-    dom = dominance_matrix(A, jit=jit)
+    dom = dominance_matrix(A, jit=jit, engine=engine)
     out[idx] = ~dom.any(axis=0)
     return out
 
@@ -338,10 +376,18 @@ def _hv2d(points: np.ndarray, ref: np.ndarray) -> float:
     return float(total)
 
 
-def hypervolume_contributions(points: np.ndarray, reference: np.ndarray) -> np.ndarray:
+def hypervolume_contributions(
+    points: np.ndarray,
+    reference: np.ndarray,
+    estimator: "HypervolumeEstimator | None" = None,
+) -> np.ndarray:
     """Per-point exclusive hypervolume: ``hv(all) - hv(all minus point)``.
     The MOTPE below-set weights (Ozaki et al., 2020) are these contributions
-    normalized to [0, 1]."""
+    normalized to [0, 1].  With an ``estimator`` the call routes through its
+    method policy (exact leave-one-out for small m, one Monte-Carlo counting
+    pass for many objectives)."""
+    if estimator is not None:
+        return estimator.contributions(points, reference)
     points = np.asarray(points, dtype=float)
     n = len(points)
     if n == 0:
@@ -358,19 +404,182 @@ def hypervolume_contributions(points: np.ndarray, reference: np.ndarray) -> np.n
     return out
 
 
+# -- Monte-Carlo hypervolume ------------------------------------------------------
+
+_jax_mc_counts = None
+
+
+def _get_jax_mc_counts():
+    """Jitted MC domination counting — the plain-jit sibling of the Pallas
+    ``mc_hv_counts`` kernel (one broadcasted [s, n, m] cube instead of
+    streamed sample tiles)."""
+    global _jax_mc_counts
+    if _jax_mc_counts is None:
+        import jax
+        import jax.numpy as jnp
+
+        def counts(pts, smp):
+            kops.bump_trace("moo.mc_hv")  # body runs once per trace
+            dom = jnp.all(pts[None, :, :] <= smp[:, None, :], axis=2)
+            cnt = dom.sum(axis=1)
+            excl = (dom & (cnt == 1)[:, None]).sum(axis=0).astype(jnp.float32)
+            total = (cnt > 0).sum().astype(jnp.float32)
+            return excl, total
+
+        _jax_mc_counts = jax.jit(counts)
+    return _jax_mc_counts
+
+
+def _mc_counts_numpy(
+    pts: np.ndarray, samples: np.ndarray
+) -> tuple[np.ndarray, float]:
+    """Chunked host-side domination counting (the parity reference)."""
+    excl = np.zeros(len(pts))
+    total = 0.0
+    for start in range(0, len(samples), 4096):
+        smp = samples[start:start + 4096]
+        dom = np.all(pts[None, :, :] <= smp[:, None, :], axis=2)
+        cnt = dom.sum(axis=1)
+        total += float((cnt > 0).sum())
+        excl += (dom & (cnt == 1)[:, None]).sum(axis=0)
+    return excl, total
+
+
+class HypervolumeEstimator:
+    """Hypervolume / per-point contribution estimator with a method policy.
+
+    The exact WFG recursion is exponential in the objective count: past
+    m = 4 front sizes make it intractable, which historically capped MOTPE
+    at few-objective studies.  ``method="auto"`` keeps the exact recursion
+    where it is cheap (m <= 4) and switches to Monte-Carlo counting above:
+    ``n_samples`` points drawn uniformly in the bounding box
+    ``[min(points), reference]``, hypervolume estimated from the dominated
+    fraction and per-point contributions from the *exclusively* dominated
+    fraction (samples covered by exactly one point — in expectation exactly
+    ``hv(all) - hv(all minus point)``).  Standard error scales as
+    ``box_volume / sqrt(n_samples)`` independent of m.
+
+    The counting pass dispatches through the shared engine policy: numpy
+    below ``DOM_JIT_THRESHOLD`` units of work (points x samples), the jitted
+    reduction or the Pallas streaming kernel above it.  The sample draw is
+    seeded, so repeated calls on one front are deterministic."""
+
+    def __init__(
+        self,
+        method: str = "auto",
+        n_samples: int = 8192,
+        seed: int = 0,
+        engine: str = "auto",
+    ) -> None:
+        if method not in ("auto", "exact", "mc"):
+            raise ValueError(f"method must be auto|exact|mc, got {method!r}")
+        self._method = method
+        self._n_samples = int(n_samples)
+        self._seed = int(seed)
+        self._engine = kops.validate_engine(engine)
+
+    def _use_exact(self, m: int) -> bool:
+        if self._method == "exact":
+            return True
+        if self._method == "mc":
+            return False
+        return m <= 4
+
+    def hypervolume(self, points: np.ndarray, reference: np.ndarray) -> float:
+        points = np.asarray(points, dtype=float)
+        reference = np.asarray(reference, dtype=float)
+        if self._use_exact(points.shape[1] if points.ndim == 2 else len(reference)):
+            return hypervolume(points, reference)
+        keep = (points <= reference).all(axis=1)
+        pts = points[keep]
+        if len(pts) == 0:
+            return 0.0
+        hv, _ = self._mc_stats(pts, reference)
+        return hv
+
+    def contributions(self, points: np.ndarray, reference: np.ndarray) -> np.ndarray:
+        points = np.asarray(points, dtype=float)
+        reference = np.asarray(reference, dtype=float)
+        if self._use_exact(points.shape[1] if points.ndim == 2 else len(reference)):
+            return hypervolume_contributions(points, reference)
+        n = len(points)
+        out = np.zeros(n)
+        keep = (points <= reference).all(axis=1)
+        pts = points[keep]
+        if len(pts) == 0:
+            # outside-the-box points contribute nothing, same as the exact
+            # path where hv(all minus point) == hv(all)
+            return out
+        _, contrib = self._mc_stats(pts, reference)
+        out[keep] = contrib
+        return out
+
+    def _mc_stats(
+        self, pts: np.ndarray, reference: np.ndarray
+    ) -> tuple[float, np.ndarray]:
+        """``(hv_estimate, per-point contribution estimates)`` for points
+        already clipped inside the reference box."""
+        lo = pts.min(axis=0)
+        box = float(np.prod(reference - lo))
+        if not np.isfinite(box) or box <= 0.0:
+            return 0.0, np.zeros(len(pts))
+        rng = np.random.RandomState(self._seed)
+        samples = rng.uniform(lo, reference, size=(self._n_samples, pts.shape[1]))
+        excl, total = self._counts(pts, samples)
+        scale = box / self._n_samples
+        return float(total) * scale, np.asarray(excl, dtype=float) * scale
+
+    def _counts(
+        self, pts: np.ndarray, samples: np.ndarray
+    ) -> tuple[np.ndarray, float]:
+        eng = self._engine
+        if eng != "numpy":
+            if not kops.jax_available():
+                _note_engine_fallback("jax-unavailable")
+                eng = "numpy"
+            else:
+                eng = kops.resolve_engine(
+                    eng, len(pts) * len(samples), kops.DOM_JIT_THRESHOLD
+                )
+        if eng != "numpy":
+            try:
+                n = len(pts)
+                if eng == "pallas":
+                    excl, total = kops.mc_hv_counts_op(pts, samples)
+                else:
+                    # pad point rows to pow2 with +inf (dominate nothing) so
+                    # XLA retraces O(log n) times; sample count is fixed
+                    P = kops.pad_pow2_rows(np.asarray(pts, dtype=np.float32), np.inf)
+                    excl, total = _get_jax_mc_counts()(P, samples.astype(np.float32))
+                return np.asarray(excl)[:n], float(total)
+            except Exception as e:  # device dispatch failed: downgrade loudly
+                _note_engine_fallback(f"mc-hv-device-error:{type(e).__name__}")
+        return _mc_counts_numpy(pts, samples)
+
+
 def solve_hssp(
-    points: np.ndarray, k: int, reference: np.ndarray
+    points: np.ndarray,
+    k: int,
+    reference: np.ndarray,
+    estimator: "HypervolumeEstimator | None" = None,
 ) -> np.ndarray:
     """Greedy hypervolume subset selection: pick ``k`` of ``points``
     approximately maximizing the joint hypervolume (the 1-1/e greedy of
     Guerreiro et al.).  Returns the selected row indices in pick order.
-    MOTPE uses it to break ties on the boundary nondomination rank."""
+    MOTPE uses it to break ties on the boundary nondomination rank.  With an
+    ``estimator`` every subset evaluation routes through its method policy,
+    keeping the greedy tractable for many objectives."""
     points = np.asarray(points, dtype=float)
     n = len(points)
     k = min(int(k), n)
     if k <= 0:
         return np.zeros(0, dtype=np.int64)
-    contrib = np.asarray([hypervolume(points[i:i + 1], reference) for i in range(n)])
+    hv = (
+        (lambda P: estimator.hypervolume(P, reference))
+        if estimator is not None
+        else (lambda P: hypervolume(P, reference))
+    )
+    contrib = np.asarray([hv(points[i:i + 1]) for i in range(n)])
     selected: list[int] = []
     selected_rows: list[np.ndarray] = []
     hv_selected = 0.0
@@ -387,11 +596,9 @@ def solve_hssp(
             if picked[j]:
                 continue
             joined = np.maximum(points[j], points[i])
-            contrib[j] -= hypervolume(
-                np.asarray(selected_rows + [joined]), reference
-            ) - hv_selected
+            contrib[j] -= hv(np.asarray(selected_rows + [joined])) - hv_selected
         selected_rows.append(points[i])
-        hv_selected = hypervolume(np.asarray(selected_rows), reference)
+        hv_selected = hv(np.asarray(selected_rows))
     return np.asarray(selected, dtype=np.int64)
 
 

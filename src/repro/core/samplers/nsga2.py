@@ -25,6 +25,7 @@ from typing import TYPE_CHECKING, Any
 
 import numpy as np
 
+from ...kernels import ops as kops
 from .. import moo
 from ..distributions import BaseDistribution, CategoricalDistribution
 from ..frozen import FrozenTrial, TrialState
@@ -48,6 +49,7 @@ class NSGAIISampler(BaseSampler):
         eta_crossover: float = 20.0,
         eta_mutation: float = 20.0,
         seed: int | None = None,
+        engine: str = "auto",
     ):
         """Args:
             population_size: elite pool size; also the generation (wave) size.
@@ -59,6 +61,10 @@ class NSGAIISampler(BaseSampler):
                 (default ``1 / n_dims``).
             eta_crossover / eta_mutation: SBX / polynomial distribution
                 indices (larger = offspring closer to parents).
+            engine: ``"auto"`` (default) dispatches the non-dominated sort
+                to the jitted device reduction once the history crosses the
+                shared work threshold; ``"numpy"``/``"jax"``/``"pallas"``
+                force a path (see ``kernels/ops.py``).
         """
         if population_size < 2:
             raise ValueError("population_size must be >= 2")
@@ -74,6 +80,7 @@ class NSGAIISampler(BaseSampler):
         self._mutation_prob = mutation_prob
         self._eta_x = float(eta_crossover)
         self._eta_m = float(eta_mutation)
+        self._engine = kops.validate_engine(engine)
         self._rng = np.random.RandomState(seed)
         self._space_calc = IntersectionSearchSpace()
 
@@ -106,7 +113,7 @@ class NSGAIISampler(BaseSampler):
         if len(idx) < self._population_size:
             return None
         L = moo.loss_matrix(Vmat[idx], directions)
-        ranks = moo.nondomination_ranks(L)
+        ranks = moo.nondomination_ranks(L, engine=self._engine)
         crowd = np.empty(len(idx))
         for r in np.unique(ranks):
             members = ranks == r

@@ -21,22 +21,29 @@ suggest of each trial the sampler splits the loss vector once and slices
 below/above observations for *all* parameters out of the matrix (the split,
 weights, and gather are shared numpy ops — the old path redid them per
 parameter in interpreted loops).  Candidate scoring evaluates both mixture
-log-pdfs in one broadcasted matrix op (optionally jitted via jax with
-``jit_scoring=True``).  Sampling draws are RNG-stream-identical to the
-pre-refactor scalar path, so seeded studies reproduce bit-for-bit (see
-``samplers/_legacy.py`` and ``tests/test_vectorized_parity.py``).
+log-pdfs in one broadcasted matrix op; with the default ``engine="auto"``
+the scorer moves onto the device (jit / Pallas, see ``kernels/ops.py``) once
+``n_candidates x n_components`` crosses the work threshold, and large
+histories additionally amortize repeated asks through a device-built score
+table (``log l - log g`` on a dense grid, ``np.interp`` per ask).  Sampling
+draws are RNG-stream-identical to the pre-refactor scalar path, so seeded
+studies reproduce bit-for-bit (see ``samplers/_legacy.py`` and
+``tests/test_vectorized_parity.py``).
 """
 
 from __future__ import annotations
 
+import logging
 import math
 from typing import TYPE_CHECKING, Any, Callable
 
 import numpy as np
 
+from ...kernels import ops as kops
 from .. import telemetry
 from ..distributions import BaseDistribution, CategoricalDistribution
 from ..frozen import FrozenTrial, StudyDirection, TrialState
+from ..log import get_logger, log_once
 from .base import BaseSampler, sample_uniform_internal
 
 if TYPE_CHECKING:
@@ -47,6 +54,8 @@ if TYPE_CHECKING:
 __all__ = ["TPESampler", "default_gamma", "default_weights"]
 
 EPS = 1e-12
+
+_log = get_logger(__name__)
 
 try:  # vectorized C erf; the portable fallback loops math.erf per element
     from scipy.special import erf as _erf
@@ -197,24 +206,21 @@ def _score_numpy(
 
 
 _jax_score = None
-#: number of XLA traces taken so far (the traced python body increments it);
-#: tests assert it stays bounded while the observation count grows
-_jax_trace_count = 0
 
 
 def _get_jax_score():
     """Jitted scorer, built lazily.  Component arrays arrive padded to
-    power-of-two buckets (see :func:`_pad_pow2`), so the set of shapes XLA
-    ever sees — and hence the number of retraces — stays logarithmic in the
-    observation count instead of linear."""
+    power-of-two buckets (``kernels/ops.pad_pow2_vec`` with ``log_norm =
+    -inf``), so the set of shapes XLA ever sees — and hence the number of
+    retraces — stays logarithmic in the observation count instead of
+    linear (pinned via the ``tpe.score`` trace-registry key)."""
     global _jax_score
     if _jax_score is None:
         import jax
         import jax.numpy as jnp
 
         def score(cands, l_mus, l_sigmas, l_log_norm, g_mus, g_sigmas, g_log_norm):
-            global _jax_trace_count
-            _jax_trace_count += 1  # body runs once per trace, not per call
+            kops.bump_trace("tpe.score")  # body runs once per trace, not per call
 
             def lse(a):
                 m = jnp.max(a, axis=1, keepdims=True)
@@ -229,90 +235,48 @@ def _get_jax_score():
     return _jax_score
 
 
-_MIN_PAD = 8
+def _pad_est(est: "_ParzenEstimator"):
+    """One estimator's component triple, pow2-padded for the device paths."""
+    return (
+        kops.pad_pow2_vec(est.mus, 0.0),
+        kops.pad_pow2_vec(est.sigmas, 1.0),
+        kops.pad_pow2_vec(est._log_norm, -np.inf),
+    )
 
 
-def _pad_pow2(mus: np.ndarray, sigmas: np.ndarray, log_norm: np.ndarray):
-    """Pad one estimator's component arrays to the next power-of-two length.
-
-    Padding components carry ``log_norm = -inf``: they contribute
-    ``exp(-inf) = 0`` to the logsumexp row sums, so the score is exactly the
-    unpadded one (adding 0.0 to a float sum is exact) while the shape only
-    changes when the component count crosses a power of two."""
-    n = len(mus)
-    size = _MIN_PAD
-    while size < n:
-        size *= 2
-    if size == n:
-        return mus, sigmas, log_norm
-
-    def pad(arr: np.ndarray, fill: float) -> np.ndarray:
-        out = np.full(size, fill)
-        out[:n] = arr
-        return out
-
-    return pad(mus, 0.0), pad(sigmas, 1.0), pad(log_norm, -np.inf)
+_jax_gemm_score = None
 
 
-def _get_jax_joint_score():
-    """Jitted multivariate scorer (numeric groups).  Component axes arrive
-    padded to power-of-two buckets with ``log_w = -inf`` (see
-    :func:`_pad_pow2`), so the trace count stays logarithmic in the
-    observation count — same policy as the univariate scorer."""
-    global _jax_joint_score
-    if _jax_joint_score is None:
+def _get_jax_gemm_score():
+    """Jitted joint scorer over gemm features (numeric **and** categorical
+    groups).  Every mixture — Gaussian quadratics expanded, categorical
+    point-mass log-probs one-hot encoded (see ``_GroupParzen.gemm_coeffs``)
+    — reduces to ``F @ C.T + const`` followed by a logsumexp over the
+    component axis, so the whole acquisition is two MXU matmuls.  Component
+    axes arrive padded to power-of-two buckets with ``const = -inf`` and
+    candidate rows to power-of-two counts, keeping the trace count
+    logarithmic (``tpe.joint`` registry key)."""
+    global _jax_gemm_score
+    if _jax_gemm_score is None:
         import jax
         import jax.numpy as jnp
 
-        def score(cands, l_mus, l_sigmas, l_log_norm, l_log_w,
-                  g_mus, g_sigmas, g_log_norm, g_log_w):
-            global _jax_trace_count
-            _jax_trace_count += 1  # body runs once per trace, not per call
+        def score(F, l_coeffs, l_const, g_coeffs, g_const):
+            kops.bump_trace("tpe.joint")  # body runs once per trace, not per call
 
-            def side(mus, sigmas, log_norm, log_w):
-                z = (cands[:, None, :] - mus[None, :, :]) / sigmas[None, :, :]
-                e = jnp.sum(-0.5 * z * z + log_norm[None, :, :], axis=2)
-                e = e + log_w[None, :]
+            def side(coeffs, const):
+                e = F @ coeffs.T + const[None, :]
                 m = jnp.max(e, axis=1, keepdims=True)
                 return (m + jnp.log(jnp.sum(jnp.exp(e - m), axis=1, keepdims=True)))[:, 0]
 
-            return side(l_mus, l_sigmas, l_log_norm, l_log_w) - side(
-                g_mus, g_sigmas, g_log_norm, g_log_w
-            )
+            return side(l_coeffs, l_const) - side(g_coeffs, g_const)
 
-        _jax_joint_score = jax.jit(score)
-    return _jax_joint_score
+        _jax_gemm_score = jax.jit(score)
+    return _jax_gemm_score
 
-
-_jax_joint_score = None
 
 #: joint-cache sentinel distinguishing "never fitted" from "fitted: declined"
 _UNFIT = object()
-
-
-def _pad_pow2_rows(arr2d: np.ndarray, fill: float) -> np.ndarray:
-    """Pad a ``(n_comp, d)`` array to a power-of-two component count."""
-    n = len(arr2d)
-    size = _MIN_PAD
-    while size < n:
-        size *= 2
-    if size == n:
-        return arr2d
-    out = np.full((size, arr2d.shape[1]), fill)
-    out[:n] = arr2d
-    return out
-
-
-def _pad_pow2_vec(vec: np.ndarray, fill: float) -> np.ndarray:
-    n = len(vec)
-    size = _MIN_PAD
-    while size < n:
-        size *= 2
-    if size == n:
-        return vec
-    out = np.full(size, fill)
-    out[:n] = vec
-    return out
 
 
 class _GroupParzen:
@@ -331,7 +295,7 @@ class _GroupParzen:
     __slots__ = (
         "mus", "sigmas", "log_norm", "log_w", "weights", "lows", "highs",
         "cat_dims", "num_dims", "cat_index", "n_choices", "prior_weight",
-        "_inv_var", "_lin", "_const",
+        "_inv_var", "_lin", "_const", "_gemm",
     )
 
     def __init__(
@@ -418,6 +382,7 @@ class _GroupParzen:
             + log_norm[:, nd].sum(axis=1)
             + self.log_w
         )
+        self._gemm: "tuple[np.ndarray, np.ndarray] | None" = None
 
     # -- sampling ---------------------------------------------------------------
 
@@ -485,6 +450,46 @@ class _GroupParzen:
         np.exp(E, out=E)
         return m_ + np.log(E.sum(axis=1))
 
+    def gemm_coeffs(self) -> tuple[np.ndarray, np.ndarray]:
+        """``(coeffs (n_comp, f), const (n_comp,))`` such that the exponent
+        matrix of :meth:`log_pdf` is exactly ``gemm_features(X) @ coeffs.T +
+        const`` — the device-friendly form covering **mixed** groups.
+
+        Feature layout (matching :meth:`gemm_features`): the numeric block
+        ``[x_j^2 | x_j]`` carries the expanded Gaussian quadratic, then one
+        one-hot block per categorical dim whose coefficients are the
+        component's point-mass log-probs ``log((1[c=m] + pw/k)/(1+pw) +
+        EPS)`` (uniform ``log(1/k + EPS)`` for the prior component) — a
+        one-hot feature dotted against that row *selects* the same
+        ``log p`` term the numpy path adds elementwise."""
+        cached = self._gemm
+        if cached is not None:
+            return cached
+        pw = self.prior_weight
+        blocks = [-0.5 * self._inv_var, self._lin]
+        for c, j in enumerate(self.cat_dims):
+            k = self.n_choices[j]
+            m = self.cat_index[:, c][:, None]  # (n_comp, 1)
+            hit = (m == np.arange(k)[None, :]).astype(float)
+            p = np.where(m < 0, 1.0 / k, (hit + pw / k) / (1.0 + pw))
+            blocks.append(np.log(p + EPS))
+        self._gemm = cached = (np.concatenate(blocks, axis=1), self._const)
+        return cached
+
+    def gemm_features(self, X: np.ndarray) -> np.ndarray:
+        """Candidate rows expanded to the :meth:`gemm_coeffs` feature layout:
+        ``[X_num^2 | X_num | one-hot(cat_0) | one-hot(cat_1) | ...]``."""
+        X = np.asarray(X, dtype=float)
+        Xn = X[:, self.num_dims]
+        blocks = [np.square(Xn), Xn]
+        rows = np.arange(len(X))
+        for j in self.cat_dims:
+            k = self.n_choices[j]
+            onehot = np.zeros((len(X), k))
+            onehot[rows, np.round(X[:, j]).astype(np.int64)] = 1.0
+            blocks.append(onehot)
+        return np.concatenate(blocks, axis=1)
+
 
 class _TrialFit:
     """Per-trial batched observation split, shared by every suggest call of
@@ -548,19 +553,27 @@ class _TrialFit:
         return out
 
 
-def _motpe_split(L: np.ndarray, n_below: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+def _motpe_split(
+    L: np.ndarray, n_below: int, engine: str = "auto"
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """MOTPE below/above split of a loss matrix ``L`` (rows = observations,
     already minimize-oriented and finite): fill the below set by
     nondomination rank; break ties on the boundary rank by greedy
     hypervolume subset selection; weight the below rows by their normalized
     hypervolume contributions.  Returns ``(below_pos, above_pos, w_below)``
     with both index arrays sorted (chronological order, so the above set's
-    recency weights stay meaningful)."""
+    recency weights stay meaningful).
+
+    Hypervolume evaluations route through a ``HypervolumeEstimator``
+    (exact WFG for m <= 4, seeded Monte-Carlo counting above — the exact
+    recursion is exponential in m, which used to cap MOTPE at few-objective
+    studies)."""
     from .. import moo
 
     n = len(L)
     n_below = int(min(max(n_below, 0), n))
-    ranks = moo.nondomination_ranks(L)
+    est = moo.HypervolumeEstimator(engine=engine)
+    ranks = moo.nondomination_ranks(L, engine=engine)
     below = np.zeros(0, dtype=np.int64)
     for r in np.unique(ranks):
         members = np.flatnonzero(ranks == r)
@@ -570,7 +583,7 @@ def _motpe_split(L: np.ndarray, n_below: int) -> tuple[np.ndarray, np.ndarray, n
         want = n_below - len(below)
         if want > 0:
             ref = moo.default_reference_point(L[members])
-            sel = moo.solve_hssp(L[members], want, ref)
+            sel = moo.solve_hssp(L[members], want, ref, estimator=est)
             below = np.concatenate([below, members[sel]])
         break
     below = np.sort(below)
@@ -579,7 +592,7 @@ def _motpe_split(L: np.ndarray, n_below: int) -> tuple[np.ndarray, np.ndarray, n
         w_below = np.ones(len(below))
     else:
         ref = moo.default_reference_point(L[below])
-        contrib = moo.hypervolume_contributions(L[below], ref) + EPS
+        contrib = moo.hypervolume_contributions(L[below], ref, estimator=est) + EPS
         w_below = np.clip(contrib / contrib.max(), 0.0, 1.0)
     return below, above, w_below
 
@@ -645,8 +658,20 @@ class TPESampler(BaseSampler):
         jit_scoring: bool = False,
         multivariate: bool = False,
         multi_objective: bool = False,
+        engine: str = "auto",
     ):
-        """``multivariate=True`` switches batched ``Study.ask(n)`` waves to
+        """``engine`` selects the scoring backend: ``"auto"`` (default)
+        dispatches candidate scoring to the device (jax jit, or the Pallas
+        kernels when enabled — see ``kernels/ops.resolve_engine``) once
+        ``n_candidates x n_components`` crosses the work threshold, staying
+        on numpy below it; ``"numpy"`` pins the pure-numpy path; ``"jax"`` /
+        ``"pallas"`` force a device path regardless of size (falling back to
+        numpy — logged once, counted in the ``sampler.engine_fallbacks``
+        telemetry counter — when jax is unavailable or the device call
+        fails).  ``jit_scoring=True`` is the historical spelling of
+        ``engine="jax"``.
+
+        ``multivariate=True`` switches batched ``Study.ask(n)`` waves to
         the group-decomposed **joint** TPE: one d-dimensional Parzen fit per
         co-observed parameter group (``sample_joint``), modeling parameter
         correlations the per-parameter univariate path cannot.  The default
@@ -673,7 +698,9 @@ class TPESampler(BaseSampler):
         self._prior_weight = prior_weight
         self._magic_clip = consider_magic_clip
         self._consider_pruned = consider_pruned_trials
-        self._jit_scoring = jit_scoring
+        if jit_scoring and engine == "auto":
+            engine = "jax"  # historical opt-in spelling; explicit engine wins
+        self._engine = kops.validate_engine(engine)
         self._multivariate = multivariate
         self._multi_objective = multi_objective
         self._mo_fit: tuple[Any, "_MOFit"] | None = None  # (cache key, fit)
@@ -688,6 +715,31 @@ class TPESampler(BaseSampler):
     def reseed_rng(self, seed: int | None = None) -> None:
         self._rng = np.random.RandomState(seed)
 
+    # -- engine policy -----------------------------------------------------------
+
+    def _engine_for(self, work: int) -> str:
+        """Concrete engine for one scoring call of ``work`` units
+        (``n_candidates x n_components``).  A requested device engine that
+        cannot run (no jax) downgrades to numpy loudly: once per
+        (sampler, reason) in the log, every occurrence in the
+        ``sampler.engine_fallbacks`` counter — never silently."""
+        eng = self._engine
+        if eng == "numpy":
+            return "numpy"
+        if not kops.jax_available():
+            self._note_engine_fallback("jax-unavailable")
+            return "numpy"
+        return kops.resolve_engine(eng, work, kops.TPE_JIT_THRESHOLD)
+
+    def _note_engine_fallback(self, reason: str) -> None:
+        telemetry.inc("sampler.engine_fallbacks")
+        log_once(
+            _log, ("tpe-engine-fallback", id(self), reason), logging.WARNING,
+            "TPESampler engine %r downgraded to numpy scoring: %s (logged "
+            "once per sampler; occurrences counted in sampler.engine_fallbacks)",
+            self._engine, reason,
+        )
+
     # -- observation collection ------------------------------------------------
 
     def _trial_fit(self, study: "Study", trial: FrozenTrial) -> _TrialFit:
@@ -695,7 +747,10 @@ class TPESampler(BaseSampler):
         every subsequent suggest of the same trial."""
         store = study.observations()
         version, states, values, last_iv, cols = store.snapshot()
-        key = (id(study), trial.number, version)
+        # keyed on the snapshot alone (not trial.number): the split is a pure
+        # function of the finished history, so every pending trial asking
+        # against one store version shares the fit
+        key = (id(study), version)
         cached = self._fit
         if cached is not None and cached[0] == key:
             return cached[1]
@@ -774,7 +829,9 @@ class TPESampler(BaseSampler):
         if n_obs < self._n_startup:
             return None
         L = moo.loss_matrix(Vmat[idx], directions)
-        below_pos, above_pos, w_below = _motpe_split(L, self._gamma(n_obs))
+        below_pos, above_pos, w_below = _motpe_split(
+            L, self._gamma(n_obs), engine=self._engine
+        )
         Mi = M[idx]
         w_above = np.asarray(self._weights(len(above_pos)), dtype=float)
         return version, n_obs, Mi[below_pos], Mi[above_pos], w_below, w_above
@@ -784,23 +841,30 @@ class TPESampler(BaseSampler):
             return self._joint_score_inner(l_est, g_est, cands)
 
     def _joint_score_inner(self, l_est: _GroupParzen, g_est: _GroupParzen, cands: np.ndarray) -> np.ndarray:
-        if self._jit_scoring and not l_est.cat_dims:
+        work = len(cands) * (len(l_est.weights) + len(g_est.weights))
+        eng = self._engine_for(work)
+        if eng != "numpy":
+            # mixed numeric+categorical groups ride the same gemm: one-hot
+            # features select the categorical point-mass log-probs (see
+            # gemm_coeffs), so no group shape disables the device path.  The
+            # matmul-bound form is already MXU-shaped, so "pallas" and "jax"
+            # share this scorer.
             try:
+                n = len(cands)
+                F = kops.pad_pow2_rows(l_est.gemm_features(cands), 0.0)
+                l_coeffs, l_const = l_est.gemm_coeffs()
+                g_coeffs, g_const = g_est.gemm_coeffs()
                 return np.asarray(
-                    _get_jax_joint_score()(
-                        cands,
-                        _pad_pow2_rows(l_est.mus, 0.0),
-                        _pad_pow2_rows(l_est.sigmas, 1.0),
-                        _pad_pow2_rows(l_est.log_norm, 0.0),
-                        _pad_pow2_vec(l_est.log_w, -np.inf),
-                        _pad_pow2_rows(g_est.mus, 0.0),
-                        _pad_pow2_rows(g_est.sigmas, 1.0),
-                        _pad_pow2_rows(g_est.log_norm, 0.0),
-                        _pad_pow2_vec(g_est.log_w, -np.inf),
+                    _get_jax_gemm_score()(
+                        F,
+                        kops.pad_pow2_rows(l_coeffs, 0.0),
+                        kops.pad_pow2_vec(l_const, -np.inf),
+                        kops.pad_pow2_rows(g_coeffs, 0.0),
+                        kops.pad_pow2_vec(g_const, -np.inf),
                     )
-                )
-            except ImportError:
-                self._jit_scoring = False
+                )[:n]
+            except Exception as e:  # device dispatch failed: downgrade loudly
+                self._note_engine_fallback(f"joint-device-error:{type(e).__name__}")
         return l_est.log_pdf(cands) - g_est.log_pdf(cands)
 
     def sample_joint(
@@ -897,7 +961,9 @@ class TPESampler(BaseSampler):
         if len(rows) == 0:
             return None
         L = moo.loss_matrix(Vmat[rows], directions)
-        below_pos, above_pos, w_below = _motpe_split(L, self._gamma(len(rows)))
+        below_pos, above_pos, w_below = _motpe_split(
+            L, self._gamma(len(rows)), engine=self._engine
+        )
         fit = _MOFit(
             version, cols, rows[below_pos], rows[above_pos], w_below, self._weights
         )
@@ -947,17 +1013,16 @@ class TPESampler(BaseSampler):
             return self._score_inner(l_est, g_est, cands)
 
     def _score_inner(self, l_est: _ParzenEstimator, g_est: _ParzenEstimator, cands: np.ndarray) -> np.ndarray:
-        if self._jit_scoring:
+        work = len(cands) * (len(l_est.mus) + len(g_est.mus))
+        eng = self._engine_for(work)
+        if eng != "numpy":
             try:
-                return np.asarray(
-                    _get_jax_score()(
-                        cands,
-                        *_pad_pow2(l_est.mus, l_est.sigmas, l_est._log_norm),
-                        *_pad_pow2(g_est.mus, g_est.sigmas, g_est._log_norm),
-                    )
-                )
-            except ImportError:
-                self._jit_scoring = False
+                args = (cands, *_pad_est(l_est), *_pad_est(g_est))
+                if eng == "pallas":
+                    return np.asarray(kops.parzen_score_op(*args))
+                return np.asarray(_get_jax_score()(*args))
+            except Exception as e:  # device dispatch failed: downgrade loudly
+                self._note_engine_fallback(f"device-error:{type(e).__name__}")
         return _score_numpy(
             cands,
             l_est.mus, l_est.sigmas, l_est._log_norm,
@@ -989,9 +1054,50 @@ class TPESampler(BaseSampler):
             cache[key] = ests = (l_est, g_est)
         l_est, g_est = ests
         cands = l_est.sample(self._rng, self._n_ei)
-        score = self._score(l_est, g_est, cands)
+        table = cache.get((param_name, "table"))
+        if table is not None:
+            score = np.interp(cands, table[0], table[1])
+        else:
+            score = self._score(l_est, g_est, cands)
+            self._maybe_build_table(cache, param_name, l_est, g_est, low, high)
         best = cands[int(np.argmax(score))]
         return float(dist.from_internal(np.asarray([best]))[0])
+
+    def _maybe_build_table(
+        self,
+        cache: dict,
+        param_name: str,
+        l_est: _ParzenEstimator,
+        g_est: _ParzenEstimator,
+        low: float,
+        high: float,
+    ) -> None:
+        """Amortize device scoring for repeat asks at one observation version.
+
+        On the second score against the same ``(l_est, g_est)`` pair, the
+        acquisition ``log l - log g`` is evaluated once on a dense
+        ``SCORE_TABLE_SIZE``-point grid (a single large device call — the
+        Pallas kernel's target shape) and later asks interpolate it on the
+        host in O(n_ei).  Gated on ``magic_clip``: it guarantees every
+        component has ``sigma >= (high - low) / 101``, so the acquisition is
+        smooth at the grid scale and the piecewise-linear error is bounded by
+        ``(101 / SCORE_TABLE_SIZE)^2 / 8 ~ 7.6e-5`` in log space — far below
+        sampling noise.  Workloads that finish a trial per ask bump the
+        observation version each time, never reach two hits, and keep direct
+        scoring."""
+        if not self._magic_clip or not np.isfinite([low, high]).all() or high <= low:
+            return
+        work = kops.SCORE_TABLE_SIZE * (len(l_est.mus) + len(g_est.mus))
+        if self._engine_for(work) == "numpy":
+            return
+        hits_key = (param_name, "score_hits")
+        hits = cache.get(hits_key, 0) + 1
+        cache[hits_key] = hits
+        if hits < 2:
+            return
+        xs = np.linspace(low, high, kops.SCORE_TABLE_SIZE)
+        ys = np.asarray(self._score(l_est, g_est, xs))
+        cache[(param_name, "table")] = (xs, ys)
 
     def _sample_categorical(
         self,

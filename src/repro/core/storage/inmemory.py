@@ -30,6 +30,10 @@ class _StudyRecord:
         self.system_attrs: dict[str, Any] = {}
         self.trials: list[FrozenTrial] = []  # index == number
         self.revision = 0  # bumped on every trial mutation (get_trials_revision)
+        # numbers of WAITING trials: Study.ask scans for claimable enqueued
+        # trials on *every* ask, so the WAITING lookup must not degrade to a
+        # full O(n_trials) state scan as the history grows
+        self.waiting: set[int] = set()
 
 
 class InMemoryStorage(BaseStorage):
@@ -124,6 +128,8 @@ class InMemoryStorage(BaseStorage):
                 if t.datetime_start is None:
                     t.datetime_start = self._now()
             rec.trials.append(t)
+            if t.state == TrialState.WAITING:
+                rec.waiting.add(number)
             self._trial_index[tid] = (study_id, number)
             rec.revision += 1
         # outside the backend lock: the event log takes its own leaf lock
@@ -177,6 +183,12 @@ class InMemoryStorage(BaseStorage):
                 self._heartbeats.pop(trial_id, None)
             self._bump_revision(trial_id)
             sid, number = self._trial_index[trial_id]
+            rec = self._studies.get(sid)
+            if rec is not None:
+                if state == TrialState.WAITING:
+                    rec.waiting.add(number)
+                else:
+                    rec.waiting.discard(number)
         self._record_state_event(sid, state, number)
         return True
 
@@ -214,11 +226,21 @@ class InMemoryStorage(BaseStorage):
         since: int | None = None,
     ) -> list[FrozenTrial]:
         with self._lock:
-            trials = self._get_study(study_id).trials
-            if since is not None:
-                trials = trials[since:]  # numbers are dense list indices
-            if states is not None:
-                trials = [t for t in trials if t.state in states]
+            rec = self._get_study(study_id)
+            trials = rec.trials
+            if (
+                since is None
+                and states
+                and all(s == TrialState.WAITING for s in states)
+            ):
+                # WAITING index: Study.ask issues this exact query per ask, so
+                # it must stay O(n_waiting), not O(n_trials)
+                trials = [trials[i] for i in sorted(rec.waiting)]
+            else:
+                if since is not None:
+                    trials = trials[since:]  # numbers are dense list indices
+                if states is not None:
+                    trials = [t for t in trials if t.state in states]
             return [copy.deepcopy(t) for t in trials] if deepcopy else list(trials)
 
     def get_trials_revision(self, study_id: int) -> int:

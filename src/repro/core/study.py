@@ -19,6 +19,7 @@ from typing import Any, Callable, Iterable, Sequence
 
 import numpy as np
 
+from ..kernels import ops as kops
 from . import telemetry
 from .exceptions import DuplicatedStudyError, TrialPruned
 from .frozen import FrozenTrial, StudyDirection, TrialState
@@ -44,11 +45,18 @@ class Study:
         storage: "str | BaseStorage | None" = None,
         sampler: BaseSampler | None = None,
         pruner: BasePruner | None = None,
+        engine: str = "auto",
     ):
+        """``engine`` selects the compute path for the study's own columnar
+        reductions (``pareto_front``) and the default sampler:
+        ``"auto"`` dispatches to the device past the shared work thresholds,
+        ``"numpy"``/``"jax"``/``"pallas"`` force a path (``kernels/ops.py``).
+        An explicitly passed sampler keeps its own ``engine`` setting."""
         self._storage = get_storage(storage)
         self.study_name = study_name
         self._study_id = self._storage.get_study_id_from_name(study_name)
-        self.sampler = sampler or TPESampler()
+        self._engine = kops.validate_engine(engine)
+        self.sampler = sampler or TPESampler(engine=engine)
         self.pruner = pruner or NopPruner()
         self._stop_requested = False
         self._records: ObservationStore | None = None
@@ -168,7 +176,9 @@ class Study:
         # thread must not pair this mask with a re-sorted values matrix
         _, states, V, arity, numbers, _ = store.snapshot_mo()
         mask = (states == int(TrialState.COMPLETE)) & (arity == len(directions))
-        front = moo.pareto_front_mask(moo.loss_matrix(V, directions), mask=mask)
+        front = moo.pareto_front_mask(
+            moo.loss_matrix(V, directions), mask=mask, engine=self._engine
+        )
         return V[front], numbers[front]
 
     # -- attrs -------------------------------------------------------------------------
@@ -657,6 +667,7 @@ def create_study(
     direction: "str | StudyDirection" = "minimize",
     directions: "Sequence[str | StudyDirection] | None" = None,
     load_if_exists: bool = False,
+    engine: str = "auto",
 ) -> Study:
     backend = get_storage(storage)
     if directions is None:
@@ -671,7 +682,7 @@ def create_study(
     except DuplicatedStudyError:
         if not load_if_exists:
             raise
-    return Study(study_name, backend, sampler=sampler, pruner=pruner)
+    return Study(study_name, backend, sampler=sampler, pruner=pruner, engine=engine)
 
 
 def load_study(
@@ -679,8 +690,11 @@ def load_study(
     storage: "str | BaseStorage",
     sampler: BaseSampler | None = None,
     pruner: BasePruner | None = None,
+    engine: str = "auto",
 ) -> Study:
-    return Study(study_name, get_storage(storage), sampler=sampler, pruner=pruner)
+    return Study(
+        study_name, get_storage(storage), sampler=sampler, pruner=pruner, engine=engine
+    )
 
 
 def delete_study(study_name: str, storage: "str | BaseStorage") -> None:

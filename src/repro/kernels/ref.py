@@ -7,7 +7,10 @@ import math
 import jax
 import jax.numpy as jnp
 
-__all__ = ["attention_ref", "ssd_ref", "crossentropy_ref", "mlstm_ref"]
+__all__ = [
+    "attention_ref", "ssd_ref", "crossentropy_ref", "mlstm_ref",
+    "parzen_score_ref", "mc_hv_counts_ref",
+]
 
 
 def attention_ref(
@@ -95,6 +98,38 @@ def crossentropy_ref(
     lse = jax.nn.logsumexp(logits, axis=-1)
     ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
     return lse - ll  # per-token nll
+
+
+def parzen_score_ref(
+    cands: jax.Array,  # [C]
+    l_mus: jax.Array, l_sigmas: jax.Array, l_log_norm: jax.Array,  # [Kl]
+    g_mus: jax.Array, g_sigmas: jax.Array, g_log_norm: jax.Array,  # [Kg]
+) -> jax.Array:
+    """TPE acquisition ``log l - log g``: materialized exponent matrices +
+    logsumexp per side (oracle for the fused online-accumulation kernel)."""
+    cands = jnp.asarray(cands, jnp.float32)
+
+    def side(mus, sigmas, ln):
+        mus = jnp.asarray(mus, jnp.float32)
+        sigmas = jnp.asarray(sigmas, jnp.float32)
+        ln = jnp.asarray(ln, jnp.float32)
+        z = (cands[:, None] - mus[None, :]) / sigmas[None, :]
+        e = jnp.maximum(-0.5 * z * z + ln[None, :], -1e30)
+        return jax.nn.logsumexp(e, axis=1)
+
+    return side(l_mus, l_sigmas, l_log_norm) - side(g_mus, g_sigmas, g_log_norm)
+
+
+def mc_hv_counts_ref(points: jax.Array, samples: jax.Array) -> tuple:
+    """One broadcasted [s, n, m] domination cube (oracle for the tiled
+    streaming kernel): ``(excl [n] f32, total scalar f32)``."""
+    points = jnp.asarray(points, jnp.float32)
+    samples = jnp.asarray(samples, jnp.float32)
+    dom = jnp.all(points[None, :, :] <= samples[:, None, :], axis=2)  # [s, n]
+    cnt = dom.sum(axis=1)
+    excl = (dom & (cnt == 1)[:, None]).sum(axis=0).astype(jnp.float32)
+    total = (cnt > 0).sum().astype(jnp.float32)
+    return excl, total
 
 
 def mlstm_ref(q, k, v, logi, logf):

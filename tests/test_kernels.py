@@ -195,3 +195,115 @@ class TestMLSTMParallelVsRecurrent:
         h_par = mlstm_parallel(q, k, v, logi, logf, q_chunk=8)
         h_rec = ref.mlstm_ref(q, k, v, logi, logf)
         np.testing.assert_allclose(np.asarray(h_par), np.asarray(h_rec), atol=2e-3)
+
+
+class TestParzenScoreKernel:
+    def _mixture(self, rng, k):
+        mus = rng.uniform(-3, 3, k).astype(np.float32)
+        sigmas = rng.uniform(0.05, 1.0, k).astype(np.float32)
+        ln = (np.log(np.full(k, 1.0 / k)) - np.log(sigmas)).astype(np.float32)
+        return jnp.asarray(mus), jnp.asarray(sigmas), jnp.asarray(ln)
+
+    @pytest.mark.parametrize(
+        "C,Kl,Kg,bc,bk",
+        [
+            (64, 8, 8, 32, 8),      # single component block
+            (100, 16, 64, 32, 16),  # unequal sides + non-multiple candidates
+            (256, 32, 32, 64, 8),   # multi-block reduction axis
+            (512, 128, 256, 256, 64),
+        ],
+    )
+    def test_matches_ref(self, C, Kl, Kg, bc, bk):
+        from repro.kernels.parzen import parzen_score
+
+        rng = np.random.RandomState(C + Kl + Kg)
+        cands = jnp.asarray(rng.uniform(-4, 4, C).astype(np.float32))
+        l = self._mixture(rng, Kl)
+        g = self._mixture(rng, Kg)
+        out = parzen_score(cands, *l, *g, block_c=bc, block_k=bk, interpret=True)
+        expect = ref.parzen_score_ref(cands, *l, *g)
+        assert out.shape == (C,)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4, rtol=1e-4)
+
+    def test_neg_inf_padding_components_are_inert(self):
+        """pow2 padding carries log_norm = -inf: scores must equal the
+        unpadded mixture's exactly (the kernel clamps, never NaNs)."""
+        from repro.kernels.parzen import parzen_score
+
+        rng = np.random.RandomState(0)
+        cands = jnp.asarray(rng.uniform(-4, 4, 64).astype(np.float32))
+        mus, sigmas, ln = self._mixture(rng, 5)
+        pad = lambda v, fill: jnp.pad(v, (0, 3), constant_values=fill)
+        padded = (pad(mus, 0.0), pad(sigmas, 1.0), pad(ln, -np.inf))
+        out = parzen_score(cands, *padded, *padded, block_k=8, interpret=True)
+        expect = ref.parzen_score_ref(cands, mus, sigmas, ln, mus, sigmas, ln)
+        assert np.isfinite(np.asarray(out)).all()
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        C=st.integers(min_value=1, max_value=200),
+        Kl=st.integers(min_value=1, max_value=40),
+        Kg=st.integers(min_value=1, max_value=40),
+    )
+    def test_property_sweep(self, C, Kl, Kg):
+        from repro.kernels.parzen import parzen_score
+
+        rng = np.random.RandomState(C * 1000 + Kl * 40 + Kg)
+        cands = jnp.asarray(rng.uniform(-4, 4, C).astype(np.float32))
+        l = self._mixture(rng, Kl)
+        g = self._mixture(rng, Kg)
+        out = parzen_score(cands, *l, *g, block_c=32, block_k=16, interpret=True)
+        expect = ref.parzen_score_ref(cands, *l, *g)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-4, rtol=2e-4)
+
+
+class TestMCHypervolumeKernel:
+    @pytest.mark.parametrize(
+        "n,m,s,bs",
+        [
+            (8, 3, 256, 256),    # single sample block
+            (20, 4, 1000, 256),  # pow2 point padding + non-multiple samples
+            (64, 6, 2048, 512),  # many-objective (the estimator's regime)
+            (3, 2, 100, 1024),   # block_s > s (clamp path)
+        ],
+    )
+    def test_matches_ref(self, n, m, s, bs):
+        from repro.kernels.hypervolume import mc_hv_counts
+
+        rng = np.random.RandomState(n * m + s)
+        pts = jnp.asarray(rng.uniform(0, 1, (n, m)).astype(np.float32))
+        smp = jnp.asarray(rng.uniform(0, 1.1, (s, m)).astype(np.float32))
+        excl, tot = mc_hv_counts(pts, smp, block_s=bs, interpret=True)
+        excl_r, tot_r = ref.mc_hv_counts_ref(pts, smp)
+        assert excl.shape == (n,)
+        np.testing.assert_array_equal(np.asarray(excl), np.asarray(excl_r))
+        assert float(tot) == float(tot_r)
+
+    def test_counts_are_consistent(self):
+        """Exclusive counts can never exceed the total dominated count, and a
+        sample below every point is counted exactly once in total."""
+        from repro.kernels.hypervolume import mc_hv_counts
+
+        rng = np.random.RandomState(1)
+        pts = jnp.asarray(rng.uniform(0.4, 0.6, (16, 5)).astype(np.float32))
+        smp = jnp.asarray(rng.uniform(0, 1, (512, 5)).astype(np.float32))
+        excl, tot = mc_hv_counts(pts, smp, block_s=128, interpret=True)
+        assert float(jnp.sum(excl)) <= float(tot) <= smp.shape[0]
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=40),
+        m=st.integers(min_value=2, max_value=7),
+        s=st.integers(min_value=1, max_value=600),
+    )
+    def test_property_sweep(self, n, m, s):
+        from repro.kernels.hypervolume import mc_hv_counts
+
+        rng = np.random.RandomState(n * 7 + m * 601 + s)
+        pts = jnp.asarray(rng.uniform(0, 1, (n, m)).astype(np.float32))
+        smp = jnp.asarray(rng.uniform(0, 1.1, (s, m)).astype(np.float32))
+        excl, tot = mc_hv_counts(pts, smp, block_s=128, interpret=True)
+        excl_r, tot_r = ref.mc_hv_counts_ref(pts, smp)
+        np.testing.assert_array_equal(np.asarray(excl), np.asarray(excl_r))
+        assert float(tot) == float(tot_r)

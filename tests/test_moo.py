@@ -155,11 +155,13 @@ class TestDominance:
 
     def test_jax_trace_count_stays_bounded(self):
         pytest.importorskip("jax")
-        before = moo._jax_trace_count
+        from repro.kernels import ops as kops
+
+        before = kops.trace_count("moo.dominance")
         for n in range(20, 30):  # all pad to the same pow2 bucket
             V = np.random.RandomState(n).uniform(size=(n, 2))
             moo.dominance_matrix(V, jit=True)
-        assert moo._jax_trace_count - before <= 1
+        assert kops.trace_count("moo.dominance") - before <= 1
 
 
 class TestLossMatrix:

@@ -139,14 +139,16 @@ class TestSearchSpaceInference:
 
 class TestJitScoringRetraces:
     def test_trace_count_bounded_by_pow2_buckets(self):
-        """jit_scoring pads Parzen component arrays to power-of-two buckets,
-        so XLA retraces O(log n_observations) times, not once per ask."""
+        """The device scorer pads Parzen component arrays to power-of-two
+        buckets, so XLA retraces O(log n_observations) times, not once per
+        ask."""
         pytest.importorskip("jax")
         import repro.core.samplers.tpe as tpe_mod
+        from repro.kernels import ops as kops
 
         tpe_mod._jax_score = None  # fresh jit cache for a clean count
-        tpe_mod._jax_trace_count = 0
-        sampler = hpo.TPESampler(seed=3, n_startup_trials=5, jit_scoring=True)
+        kops.reset_traces("tpe.score")
+        sampler = hpo.TPESampler(seed=3, n_startup_trials=5, engine="jax")
         study = hpo.create_study(sampler=sampler)
         n_asks = 40
 
@@ -156,5 +158,6 @@ class TestJitScoringRetraces:
         study.optimize(objective, n_trials=n_asks)
         # observation counts sweep 5..39 -> component sizes cross at most a
         # few power-of-two boundaries per estimator side
-        assert 0 < tpe_mod._jax_trace_count <= 8, tpe_mod._jax_trace_count
-        assert tpe_mod._jax_trace_count < n_asks - sampler._n_startup
+        traces = kops.trace_count("tpe.score")
+        assert 0 < traces <= 8, traces
+        assert traces < n_asks - sampler._n_startup
