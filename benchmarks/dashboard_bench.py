@@ -1,0 +1,135 @@
+"""Live analytics service benchmark (the PR-10 acceptance numbers):
+
+* **full-render vs incremental-poll** — cost of a cold ``/delta`` fetch of
+  the whole study vs a poll that ships only K new rows, across study sizes.
+  The incremental poll must be O(new trials), not O(study): its latency
+  stays flat as n_trials grows while full-render latency climbs.  Idle polls
+  (revision unchanged) are timed separately — they cost one revision RPC.
+* **fANOVA latency vs n_trials** — wall time of the tree-ensemble
+  importance fit as the design matrix grows, with the Spearman baseline.
+
+Emits ``BENCH_dashboard.json`` (uploaded as a CI artifact).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import repro.core as hpo
+from repro.core.analytics import StudyAnalytics
+from repro.core.importance import fanova_importances, spearman_importances
+
+try:  # package vs direct-script execution
+    from ._meta import bench_metadata
+except ImportError:  # pragma: no cover
+    from _meta import bench_metadata
+
+__all__ = ["delta_scaling", "fanova_scaling", "main"]
+
+
+def _seed_study(storage, name: str, n: int):
+    s = hpo.create_study(study_name=name, storage=storage,
+                         sampler=hpo.RandomSampler(seed=0))
+    s.optimize(
+        lambda t: (t.suggest_float("x", -3, 3)) ** 2
+        + 0.1 * t.suggest_float("y", 0, 1)
+        + 0.01 * t.suggest_float("z", 0, 1),
+        n_trials=n,
+    )
+    return s
+
+
+def _time(fn, repeat: int = 5) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def delta_scaling(sizes=(100, 400, 1600), k_new: int = 10) -> list:
+    """Cold full fetch vs K-new-rows incremental poll vs idle poll, per
+    study size.  ``incr_ms`` should stay ~flat while ``full_ms`` grows."""
+    rows = []
+    for n in sizes:
+        with hpo.StorageServer(hpo.InMemoryStorage()) as server:
+            s = _seed_study(hpo.RemoteStorage(server.url), f"bench{n}", n)
+            sa = StudyAnalytics(s)
+            full_ms = _time(lambda: sa.delta_rows(-1)) * 1e3
+            last = n - 1
+            # K fresh tells, then poll for exactly those rows
+            s.optimize(lambda t: t.suggest_float("x", -3, 3) ** 2
+                       + 0.1 * t.suggest_float("y", 0, 1)
+                       + 0.01 * t.suggest_float("z", 0, 1), n_trials=k_new)
+            got = sa.delta_rows(last)
+            assert len(got["rows"]) == k_new
+            incr_ms = _time(lambda: sa.delta_rows(got["last_number"] - k_new)) * 1e3
+            # idle: one revision RPC, no trial data
+            storage = s._storage
+            sid = s._study_id
+            idle_ms = _time(lambda: storage.get_trials_revision(sid)) * 1e3
+            rows.append(
+                {
+                    "n_trials": n,
+                    "k_new": k_new,
+                    "full_ms": round(full_ms, 3),
+                    "incr_ms": round(incr_ms, 3),
+                    "idle_ms": round(idle_ms, 4),
+                    "full_over_incr": round(full_ms / max(incr_ms, 1e-9), 1),
+                }
+            )
+            print(f"  n={n:5d}  full={full_ms:8.2f}ms  incr(k={k_new})="
+                  f"{incr_ms:6.2f}ms  idle={idle_ms:6.3f}ms", flush=True)
+    return rows
+
+
+def fanova_scaling(sizes=(50, 200, 800)) -> list:
+    """fANOVA tree-ensemble fit wall time vs study size, with the Spearman
+    rank-correlation baseline on the same studies."""
+    rows = []
+    for n in sizes:
+        s = _seed_study(None, f"fanova{n}", n)
+        fan_ms = _time(lambda: fanova_importances(s), repeat=3) * 1e3
+        spear_ms = _time(lambda: spearman_importances(s), repeat=3) * 1e3
+        top = max(fanova_importances(s), key=fanova_importances(s).get)
+        rows.append(
+            {
+                "n_trials": n,
+                "fanova_ms": round(fan_ms, 2),
+                "spearman_ms": round(spear_ms, 2),
+                "top_param": top,
+            }
+        )
+        print(f"  n={n:5d}  fanova={fan_ms:8.2f}ms  spearman={spear_ms:6.2f}ms"
+              f"  top={top}", flush=True)
+    return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description="live analytics service benchmarks")
+    ap.add_argument("--out", default="BENCH_dashboard.json")
+    ap.add_argument("--sizes", default="100,400,1600")
+    args = ap.parse_args(argv)
+    sizes = tuple(int(x) for x in args.sizes.split(","))
+
+    print("delta endpoint: full render vs incremental poll", flush=True)
+    delta = delta_scaling(sizes)
+    print("fANOVA importance fit", flush=True)
+    fanova = fanova_scaling(tuple(max(50, n // 2) for n in sizes))
+
+    out = {
+        "meta": bench_metadata(),
+        "delta_scaling": delta,
+        "fanova_scaling": fanova,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,15 @@ wire for debugging: `RemoteStorage(url, protocol=1)` client-side or
 For encrypted transport, serve with `--tls-cert/--tls-key`, dial
 `remote+tls://host:port`, and give clients the CA via
 `RemoteStorage(tls_ca=...)` or `$REPRO_STORAGE_TLS_CA`.
+
+Live dashboard: add --dashboard to serve the browser UI next to the study
+(five live views + fANOVA importances, revision-gated polling so an idle
+study costs nothing), or run it standalone against any storage URL —
+including a sharded pool:
+
+    PYTHONPATH=src python examples/distributed_study.py --workers 4 --serve --dashboard
+    # or, against an existing fleet:
+    PYTHONPATH=src python -m repro.serve.dashboard_service --storage remote://hostA:9000,hostB:9000
 """
 
 import argparse
@@ -60,6 +69,8 @@ def main():
                     help="spawn N local worker processes (0 = run inline)")
     ap.add_argument("--serve", action="store_true",
                     help="serve --storage over remote:// and hand workers the URL")
+    ap.add_argument("--dashboard", action="store_true",
+                    help="serve the live analytics dashboard next to the study")
     args = ap.parse_args()
 
     # inline run with --serve: host the backend ourselves so workers on other
@@ -70,6 +81,13 @@ def main():
         server = hpo.StorageServer(hpo.get_storage(args.storage)).start()
         storage = server.url
         print(f"serving {args.storage} at {server.url} — point other workers here")
+
+    dash = None
+    if args.dashboard:
+        from repro.serve.dashboard_service import DashboardService
+
+        dash = DashboardService(storage).start()
+        print(f"dashboard: {dash.url}/study/{args.study}")
 
     study = hpo.create_study(
         study_name=args.study,
@@ -94,6 +112,8 @@ def main():
     study.fail_stale_trials()
     print(f"total trials in study: {len(study.trials)}; best: {study.best_value:.5f} "
           f"at {study.best_params}")
+    if dash is not None:
+        dash.stop()
     if server is not None:
         # live telemetry surface: any RemoteStorage client (a dashboard, a
         # fleet health check) can pull the same payload over the wire with

@@ -1,0 +1,91 @@
+"""Headless analytics-service smoke (CI): optimize a 50-trial study against a
+real StorageServer, serve it through the live dashboard HTTP service, and pin
+the revision-gating contract end to end — an idle delta poll returns zero
+rows (and touches no trial data), N new tells return exactly N rows.
+
+    PYTHONPATH=src python scripts/dashboard_service_smoke.py
+"""
+
+import json
+import sys
+import urllib.request
+
+sys.path.insert(0, "src")
+
+import repro.core as hpo
+from repro.core import telemetry
+from repro.serve.dashboard_service import DashboardService
+
+
+def objective(trial: hpo.Trial) -> float:
+    x = trial.suggest_float("x", -5, 5)
+    y = trial.suggest_float("y", -5, 5)
+    for step in range(1, 4):
+        trial.report((x - 1) ** 2 + y ** 2 + 1.0 / step, step)
+        if trial.should_prune():
+            raise hpo.TrialPruned()
+    return (x - 1) ** 2 + y ** 2
+
+
+def get(svc, path):
+    return json.loads(urllib.request.urlopen(svc.url + path).read())
+
+
+def main() -> None:
+    telemetry.enable()
+    with hpo.StorageServer(hpo.InMemoryStorage()) as server:
+        study = hpo.create_study(
+            study_name="svc-smoke",
+            storage=server.url,
+            sampler=hpo.TPESampler(seed=0),
+            pruner=hpo.MedianPruner(),
+        )
+        study.optimize(objective, n_trials=50)
+
+        svc = DashboardService(server.url).start()
+        try:
+            # cold poll: the full study arrives as delta rows
+            d = get(svc, "/api/study/svc-smoke/delta?since_rev=-1&since_num=-1")
+            assert len(d["rows"]) == 50, f"expected 50 rows, got {len(d['rows'])}"
+
+            # idle polls: revision unchanged -> zero rows, zero refetch
+            before = telemetry.snapshot()["counters"]
+            for _ in range(3):
+                d2 = get(svc, "/api/study/svc-smoke/delta"
+                              f"?since_rev={d['rev']}&since_num={d['last_number']}")
+                assert d2["idle"] and "rows" not in d2, d2
+            after = telemetry.snapshot()["counters"]
+            refetches = {
+                k: (after[k] - before.get(k, 0))
+                for k in after if ".refresh.fetch" in k or k.endswith(".refresh.block")
+            }
+            assert not any(refetches.values()), f"idle polls refetched: {refetches}"
+
+            # N more tells -> exactly N new rows
+            n_new = 7
+            study.optimize(objective, n_trials=n_new)
+            d3 = get(svc, "/api/study/svc-smoke/delta"
+                          f"?since_rev={d['rev']}&since_num={d['last_number']}")
+            assert len(d3["rows"]) == n_new, f"expected {n_new}, got {len(d3['rows'])}"
+            assert [r["number"] for r in d3["rows"]] == list(range(50, 50 + n_new))
+
+            # the five views + importance render from the columnar reductions
+            v = get(svc, "/api/study/svc-smoke/views")
+            assert v["n_finished"] == 57
+            assert v["history"][0]["best"] == sorted(v["history"][0]["best"], reverse=True)
+            assert v["contour"] is not None and v["slices"] and v["curves"]["objectives"]
+            assert v["importance"]["fanova"]["0"]
+
+            page = urllib.request.urlopen(svc.url + "/study/svc-smoke").read().decode()
+            assert "optimization history" in page and "pareto front" in page
+            metrics = urllib.request.urlopen(svc.url + "/metrics").read().decode()
+            assert "repro_dashboard_delta_idle_total 3" in metrics
+        finally:
+            svc.stop()
+
+    print(f"dashboard service smoke OK: 50+{n_new} trials, 3 idle polls, "
+          f"views + /metrics verified")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,7 +28,7 @@ from .distributions import (
 )
 from .exceptions import DuplicatedStudyError, StorageInternalError, TrialPruned
 from .frozen import FrozenTrial, StudyDirection, TrialState
-from .importance import param_importances, spearman_importances
+from .importance import fanova_importances, param_importances, spearman_importances
 from . import moo
 from . import telemetry
 from .records import ObservationStore
@@ -94,6 +94,6 @@ __all__ = [
     "TrialPruned", "DuplicatedStudyError", "StorageInternalError",
     "intersection_search_space", "IntersectionSearchSpace",
     "ObservationStore",
-    "param_importances", "spearman_importances",
+    "param_importances", "spearman_importances", "fanova_importances",
     "render_dashboard", "save_dashboard",
 ]

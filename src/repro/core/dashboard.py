@@ -167,16 +167,24 @@ def _importance_svg(study: "Study") -> str:
         imps = param_importances(study)
     except Exception:
         imps = {}
-    if not imps:
-        return _svg('<text x="20" y="40">importances unavailable</text>')
+    # MO studies return per-objective dicts keyed by objective index
+    groups = imps if imps and isinstance(next(iter(imps.values()), None), dict) else {None: imps}
     body = []
     y = 20
-    for name, v in list(imps.items())[:12]:
-        w = v * (W - 180)
-        body.append(f'<rect x="150" y="{y-10}" width="{max(w,1):.0f}" height="12" fill="#3b6fb6"/>')
-        body.append(f'<text x="145" y="{y}" font-size="10" text-anchor="end">{html.escape(name[:20])}</text>')
-        body.append(f'<text x="{155+w:.0f}" y="{y}" font-size="10">{v:.2f}</text>')
-        y += 20
+    for obj, grp in groups.items():
+        if not grp:
+            continue
+        if obj is not None:
+            body.append(f'<text x="20" y="{y}" font-size="10" font-weight="bold">objective {obj}</text>')
+            y += 16
+        for name, v in list(grp.items())[:12]:
+            w = v * (W - 180)
+            body.append(f'<rect x="150" y="{y-10}" width="{max(w,1):.0f}" height="12" fill="#3b6fb6"/>')
+            body.append(f'<text x="145" y="{y}" font-size="10" text-anchor="end">{html.escape(name[:20])}</text>')
+            body.append(f'<text x="{155+w:.0f}" y="{y}" font-size="10">{v:.2f}</text>')
+            y += 20
+    if not body:
+        return _svg('<text x="20" y="40">importances unavailable</text>')
     return _svg("".join(body), W, max(y + 10, 80))
 
 
@@ -390,21 +398,24 @@ def main(argv: "list[str] | None" = None) -> None:
             t.state.is_finished() for t in study.get_trials(deepcopy=False)
         )
 
+    # one revision-gated poll loop, shared with the HTTP analytics service
+    from .analytics import RevisionPoller
+
+    poller = RevisionPoller(storage, sid)
     throughput: list[float] = []
-    last_rev, last_n, last_t = -1, n_finished(), time.monotonic()
+    last_n, last_t = n_finished(), time.monotonic()
     tick = 0
     while True:
         tick += 1
-        rev = storage.get_trials_revision(sid)
+        changed = poller.poll()
         if args.live:
             now = time.monotonic()
-            n = n_finished() if rev != last_rev else last_n
+            n = n_finished() if changed else last_n
             dt = max(now - last_t, 1e-9)
             throughput.append((n - last_n) / dt if tick > 1 else 0.0)
             throughput = throughput[-120:]
             last_n, last_t = n, now
-        if rev != last_rev or tick == 1:
-            last_rev = rev
+        if changed or tick == 1:
             htm = render_dashboard(
                 study,
                 server_metrics=server_metrics() if args.live else None,

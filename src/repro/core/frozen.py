@@ -9,7 +9,18 @@ from typing import Any
 
 from .distributions import BaseDistribution
 
-__all__ = ["TrialState", "FrozenTrial", "StudyDirection"]
+__all__ = ["TrialState", "FrozenTrial", "StudyDirection", "IV_VEC_PREFIX", "iv_vec_key"]
+
+#: system-attr key prefix for per-objective intermediate-value vectors
+#: (``iv_vec:<step>`` -> ``[v0, v1, ...]``).  Riding on system attrs means
+#: every backend, both wire protocols, the op journal and replication carry
+#: vector reports with zero schema changes — and scalar studies, which never
+#: write the key, are byte-identical on the wire.
+IV_VEC_PREFIX = "iv_vec:"
+
+
+def iv_vec_key(step: int) -> str:
+    return f"{IV_VEC_PREFIX}{int(step)}"
 
 
 class TrialState(enum.IntEnum):
@@ -78,6 +89,21 @@ class FrozenTrial:
     @property
     def trial_id(self) -> int:
         return self._trial_id
+
+    @property
+    def intermediate_value_vectors(self) -> dict[int, list[float]]:
+        """Per-objective intermediate vectors: step -> ``[v0, v1, ...]``,
+        decoded from the ``iv_vec:<step>`` system attrs (empty on scalar
+        studies).  The scalar ``intermediate_values`` entry at the same step
+        holds the pruner-facing scalarization, not objective 0."""
+        out: dict[int, list[float]] = {}
+        for k, v in self.system_attrs.items():
+            if isinstance(k, str) and k.startswith(IV_VEC_PREFIX):
+                try:
+                    out[int(k[len(IV_VEC_PREFIX):])] = list(v)
+                except (TypeError, ValueError):
+                    continue
+        return out
 
     @property
     def last_step(self) -> int | None:

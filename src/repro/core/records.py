@@ -52,7 +52,7 @@ from typing import TYPE_CHECKING
 import numpy as np
 
 from . import telemetry
-from .frozen import TrialState
+from .frozen import IV_VEC_PREFIX, TrialState
 from .storage.base import get_trials_since
 
 if TYPE_CHECKING:
@@ -594,6 +594,14 @@ class IntermediateValueStore:
         self._states = np.empty(0, dtype=np.int64)
         self._trial_ids = np.empty(0, dtype=np.int64)
         self._row_len = np.empty(0, dtype=np.int64)  # reported values per row
+        # per-objective vector reports (multi-objective learning curves):
+        # a lazily-created (row_cap, n_steps, n_objectives) tensor plus a
+        # per-row arity column (0 = scalar-only trial), mirroring the
+        # observation store's values_arity.  Scalar studies never allocate
+        # the tensor, so the widened store costs them nothing.
+        self._n_obj = 1
+        self._vtensor: "np.ndarray | None" = None
+        self._iv_arity = np.empty(0, dtype=np.int64)
 
         self._watermark = 0  # every number < watermark is finished + encoded
         self._revision: int | None = None
@@ -691,6 +699,19 @@ class IntermediateValueStore:
             self._grow_rows(max(_MIN_CAPACITY, 2 * self._row_cap, top + 1))
         self._n_rows = max(self._n_rows, top + 1)
 
+        # optional per-objective vector columns (flat CSR keyed by trial
+        # number): absent entirely on scalar studies — see build_iv_block
+        vec_map: dict[int, list] = {}
+        vec_numbers = block.get("vec_numbers")
+        if vec_numbers is not None and len(vec_numbers):
+            vec_steps, vec_ptr = block["vec_steps"], block["vec_ptr"]
+            vec_vals = block["vec_vals"]
+            for j in range(len(vec_numbers)):
+                lo, hi = int(vec_ptr[j]), int(vec_ptr[j + 1])
+                vec_map.setdefault(int(vec_numbers[j]), []).append(
+                    (int(vec_steps[j]), vec_vals[lo:hi])
+                )
+
         skip_clean = self._track_dirty and not self._dirty_unknown
         sel = []
         for i in range(n):
@@ -711,6 +732,10 @@ class IntermediateValueStore:
             for s in steps[int(rowptr[i]) : int(rowptr[i + 1])]
             if int(s) not in self._step_index
         }
+        for i in sel:
+            for s, _ in vec_map.get(int(numbers[i]), ()):
+                if s not in self._step_index:
+                    new_steps.add(s)
         if new_steps:
             self._grow_cols(new_steps)
 
@@ -725,6 +750,16 @@ class IntermediateValueStore:
             if hi > lo:
                 self._matrix[row, np.searchsorted(self._steps, steps[lo:hi])] = vals[lo:hi]
             self._row_len[row] = hi - lo
+            vitems = vec_map.get(row)
+            if vitems:
+                self._ensure_objectives(max(len(v) for _, v in vitems))
+                self._vtensor[row, :, :] = np.nan
+                for s, v in vitems:
+                    self._vtensor[row, self._step_index[s], : len(v)] = v
+                self._iv_arity[row] = max(len(v) for _, v in vitems)
+            elif self._vtensor is not None and self._iv_arity[row]:
+                self._vtensor[row, :, :] = np.nan
+                self._iv_arity[row] = 0
             self.reencode_count += 1
         self._dirty.clear()
         self._dirty_unknown = False
@@ -754,6 +789,20 @@ class IntermediateValueStore:
                     continue
             return list(t.intermediate_values.items())
 
+        # per-objective vectors ride on iv_vec:<step> system attrs -> same
+        # live-dict snapshot policy as the scalar reports above
+        def vec_snapshot(t) -> list:
+            for _ in range(3):
+                try:
+                    return [
+                        (int(k[len(IV_VEC_PREFIX):]), [float(x) for x in v])
+                        for k, v in t.system_attrs.items()
+                        if isinstance(k, str) and k.startswith(IV_VEC_PREFIX)
+                    ]
+                except (RuntimeError, TypeError, ValueError):  # pragma: no cover
+                    continue
+            return []
+
         rows = []
         skip_clean = self._track_dirty and not self._dirty_unknown
         for t in trials:
@@ -765,17 +814,20 @@ class IntermediateValueStore:
                 and self._row_len[row] == len(t.intermediate_values)
             ):
                 continue  # clean RUNNING row: state and report count unchanged
-            rows.append((row, t, snapshot(t)))
+            rows.append((row, t, snapshot(t), vec_snapshot(t)))
 
         new_steps = set()
-        for _, _, items in rows:
+        for _, _, items, vec_items in rows:
             for s, _ in items:
+                if int(s) not in self._step_index:
+                    new_steps.add(int(s))
+            for s, _ in vec_items:
                 if int(s) not in self._step_index:
                     new_steps.add(int(s))
         if new_steps:
             self._grow_cols(new_steps)
 
-        for row, t, items in rows:
+        for row, t, items, vec_items in rows:
             self._states[row] = int(t.state)
             self._trial_ids[row] = t.trial_id
             self._id_to_row[t.trial_id] = row
@@ -783,6 +835,15 @@ class IntermediateValueStore:
             for s, v in items:
                 self._matrix[row, self._step_index[int(s)]] = v
             self._row_len[row] = len(items)
+            if vec_items:
+                self._ensure_objectives(max(len(v) for _, v in vec_items))
+                self._vtensor[row, :, :] = np.nan
+                for s, v in vec_items:
+                    self._vtensor[row, self._step_index[int(s)], : len(v)] = v
+                self._iv_arity[row] = max(len(v) for _, v in vec_items)
+            elif self._vtensor is not None and self._iv_arity[row]:
+                self._vtensor[row, :, :] = np.nan
+                self._iv_arity[row] = 0
             self.reencode_count += 1
         self._dirty.clear()
         self._dirty_unknown = False
@@ -801,6 +862,10 @@ class IntermediateValueStore:
         matrix = np.full((capacity, n_cols), np.nan)
         matrix[: self._n_rows] = self._matrix[: self._n_rows]
         self._matrix = matrix
+        if self._vtensor is not None:
+            vt = np.full((capacity, n_cols, self._n_obj), np.nan)
+            vt[: self._n_rows] = self._vtensor[: self._n_rows]
+            self._vtensor = vt
 
         def enlarge(arr: np.ndarray, fill) -> np.ndarray:
             out = np.full(capacity, fill, dtype=arr.dtype)
@@ -810,6 +875,7 @@ class IntermediateValueStore:
         self._states = enlarge(self._states, -1)
         self._trial_ids = enlarge(self._trial_ids, -1)
         self._row_len = enlarge(self._row_len, 0)
+        self._iv_arity = enlarge(self._iv_arity, 0)
         self._row_cap = capacity
 
     def _grow_cols(self, new_steps: set) -> None:
@@ -819,9 +885,25 @@ class IntermediateValueStore:
         matrix = np.full((self._row_cap, len(steps)), np.nan)
         if self._steps.size:
             matrix[:, np.searchsorted(steps, self._steps)] = self._matrix
+        if self._vtensor is not None:
+            vt = np.full((self._row_cap, len(steps), self._n_obj), np.nan)
+            if self._steps.size:
+                vt[:, np.searchsorted(steps, self._steps), :] = self._vtensor
+            self._vtensor = vt
         self._matrix = matrix
         self._steps = steps
         self._step_index = {int(s): j for j, s in enumerate(steps)}
+
+    def _ensure_objectives(self, arity: int) -> None:
+        """Widen (or create) the per-objective tensor to ``arity`` slots."""
+        if arity <= self._n_obj and self._vtensor is not None:
+            return
+        n_obj = max(arity, self._n_obj)
+        vt = np.full((self._row_cap, self._matrix.shape[1], n_obj), np.nan)
+        if self._vtensor is not None:
+            vt[:, :, : self._n_obj] = self._vtensor
+        self._vtensor = vt
+        self._n_obj = n_obj
 
     # -- accessors (hold ``lock()`` across multi-array reads) -------------------
 
@@ -859,6 +941,44 @@ class IntermediateValueStore:
     def matrix(self) -> np.ndarray:
         with self._lock:
             return self._ro(self._matrix[: self._n_rows])
+
+    @property
+    def n_objectives(self) -> int:
+        """Widest vector arity seen so far (1 while scalar-only)."""
+        with self._lock:
+            return self._n_obj if self._vtensor is not None else 1
+
+    @property
+    def iv_arity(self) -> np.ndarray:
+        """Per-row vector arity (0 = scalar-only reports), aligned with
+        :attr:`states` — the IV sibling of ``ObservationStore.values_arity``."""
+        with self._lock:
+            return self._ro(self._iv_arity[: self._n_rows])
+
+    def objective_matrix(self, objective: int = 0) -> np.ndarray:
+        """One objective's ``(n_trials, n_steps)`` learning-curve matrix.
+
+        Rows that reported vectors read from the per-objective tensor; rows
+        that reported plain scalars fall back to the scalar matrix for
+        ``objective == 0`` (a scalar report *is* objective 0) and stay NaN
+        for higher objectives.  Note the scalar matrix itself is not that
+        fallback for vector rows — there it holds the pruner-facing
+        scalarized loss."""
+        objective = int(objective)
+        with self._lock:
+            n = self._n_rows
+            if self._vtensor is None:
+                if objective == 0:
+                    return self._ro(self._matrix[:n])
+                return self._ro(np.full((n, self._matrix.shape[1]), np.nan))
+            if objective >= self._n_obj:
+                return self._ro(np.full((n, self._matrix.shape[1]), np.nan))
+            out = self._vtensor[:n, :, objective].copy()
+            if objective == 0:
+                scalar_rows = self._iv_arity[:n] == 0
+                out[scalar_rows] = self._matrix[:n][scalar_rows]
+            out.flags.writeable = False
+            return out
 
     def step_index(self, step: int) -> "int | None":
         """Column of exactly ``step``, or None if never reported."""

@@ -129,6 +129,24 @@ class BaseStorage:
     ) -> None:
         raise NotImplementedError
 
+    def set_trial_intermediate_vector(
+        self, trial_id: int, step: int, values: "Iterable[float]"
+    ) -> None:
+        """Persist a per-objective intermediate vector at ``step`` (multi-
+        objective learning curves).  Composed from existing primitives — the
+        vector rides an ``iv_vec:<step>`` system attr and objective 0 lands
+        in the scalar stream — so every backend, both wire protocols, the op
+        journal and replication support it with no schema change.  Callers
+        that scalarize for pruning (``Trial.report`` with a Pareto-aware
+        pruner) write the attr themselves and keep the fused op's scalar."""
+        from ..frozen import iv_vec_key
+
+        values = [float(v) for v in values]
+        if not values:
+            raise ValueError("intermediate vector must be non-empty")
+        self.set_trial_system_attr(trial_id, iv_vec_key(step), values)
+        self.set_trial_intermediate_value(trial_id, int(step), values[0])
+
     # class-level: guards lazy creation of per-instance store dicts
     _iv_stores_lock = threading.Lock()
 

@@ -562,10 +562,32 @@ def build_observation_block(trials, n_objectives: int) -> dict:
     }
 
 
+_IV_VEC_PREFIX = "iv_vec:"  # mirrors frozen.IV_VEC_PREFIX (wire constant)
+
+
+def _iv_vec_items(trial) -> list:
+    # same live-dict snapshot policy as _iv_items, over system attrs
+    for _ in range(3):
+        try:
+            return [
+                (int(k[len(_IV_VEC_PREFIX):]), [float(x) for x in v])
+                for k, v in trial.system_attrs.items()
+                if isinstance(k, str) and k.startswith(_IV_VEC_PREFIX)
+            ]
+        except (RuntimeError, TypeError, ValueError):  # pragma: no cover
+            continue
+    return []
+
+
 def build_iv_block(trials) -> dict:
     """Flatten a trial delta into the ``IntermediateValueStore`` ingest
     layout: CSR (``rowptr``/``steps``/``vals``) over *all* trials in input
-    order — RUNNING rows included, since the IV store tracks live trials."""
+    order — RUNNING rows included, since the IV store tracks live trials.
+
+    Per-objective vector reports (``iv_vec:<step>`` system attrs) travel as
+    a second flat CSR (``vec_numbers``/``vec_steps``/``vec_ptr``/``vec_vals``)
+    appended **only when at least one trial carries vectors** — scalar
+    studies stay byte-identical on the wire."""
     k = len(trials)
     numbers = np.empty(k, dtype=np.int64)
     states = np.empty(k, dtype=np.int8)
@@ -573,6 +595,10 @@ def build_iv_block(trials) -> dict:
     rowptr = np.zeros(k + 1, dtype=np.int64)
     steps: list[int] = []
     vals: list[float] = []
+    vec_numbers: list[int] = []
+    vec_steps: list[int] = []
+    vec_ptr: list[int] = [0]
+    vec_vals: list[float] = []
     for i, t in enumerate(trials):
         numbers[i] = t.number
         states[i] = int(t.state)
@@ -582,7 +608,12 @@ def build_iv_block(trials) -> dict:
         for s, v in items:
             steps.append(int(s))
             vals.append(v)
-    return {
+        for s, vec in _iv_vec_items(t):
+            vec_numbers.append(t.number)
+            vec_steps.append(s)
+            vec_vals.extend(vec)
+            vec_ptr.append(len(vec_vals))
+    block = {
         "n": k,
         "numbers": numbers,
         "states": states,
@@ -591,3 +622,9 @@ def build_iv_block(trials) -> dict:
         "steps": np.asarray(steps, dtype=np.int64),
         "vals": np.asarray(vals, dtype=np.float64),
     }
+    if vec_numbers:
+        block["vec_numbers"] = np.asarray(vec_numbers, dtype=np.int64)
+        block["vec_steps"] = np.asarray(vec_steps, dtype=np.int64)
+        block["vec_ptr"] = np.asarray(vec_ptr, dtype=np.int64)
+        block["vec_vals"] = np.asarray(vec_vals, dtype=np.float64)
+    return block

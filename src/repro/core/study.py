@@ -111,16 +111,23 @@ class Study:
         self._records.refresh()
         return self._records
 
-    def intermediate_values(self) -> IntermediateValueStore:
+    def intermediate_values(self, objective: "int | None" = None):
         """The study's columnar intermediate-value store: every trial's
         reported values as one revision-gated ``(n_trials, n_steps)``
         NaN-padded matrix with cached best-so-far prefixes — the substrate
         the vectorized pruner stack reads instead of re-walking
-        ``intermediate_values`` dicts (see ``core/records.py``)."""
+        ``intermediate_values`` dicts (see ``core/records.py``).
+
+        With ``objective=k`` returns that objective's ``(n_trials, n_steps)``
+        learning-curve matrix instead of the store — vector reports read
+        from the per-objective tensor, scalar reports count as objective 0
+        (see ``IntermediateValueStore.objective_matrix``)."""
         if self._ivs is None:
             self._ivs = IntermediateValueStore(self._storage, self._study_id)
         self._ivs.refresh()
-        return self._ivs
+        if objective is None:
+            return self._ivs
+        return self._ivs.objective_matrix(int(objective))
 
     @property
     def best_trial(self) -> FrozenTrial:

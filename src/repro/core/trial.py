@@ -25,7 +25,7 @@ from .distributions import (
     IntDistribution,
 )
 from .exceptions import TrialPruned
-from .frozen import FrozenTrial, StudyDirection, TrialState
+from .frozen import FrozenTrial, StudyDirection, TrialState, iv_vec_key
 
 if TYPE_CHECKING:
     from .study import Study
@@ -245,16 +245,31 @@ class Trial(BaseTrial):
         directions = study.directions
         direction = directions[0] if len(directions) == 1 else StudyDirection.MINIMIZE
         scalarize = getattr(study.pruner, "scalarize", None)
+        spec_probe = getattr(study.pruner, "spec", None)
+        probe = spec_probe() if callable(spec_probe) else None
+        vector: "list[float] | None" = None
         if isinstance(value, (list, tuple)) or (
             hasattr(value, "__len__") and not isinstance(value, str)
         ):
-            if not callable(scalarize):
+            vector = [float(v) for v in value]
+            if len(directions) > 1 and len(vector) != len(directions):
+                raise ValueError(
+                    f"vector report has {len(vector)} entries for "
+                    f"{len(directions)} study directions"
+                )
+            if callable(scalarize):
+                value = float(scalarize(vector, directions))
+            elif probe is not None and probe.get("name") in ("nop", "none"):
+                # no pruning decisions to corrupt: keep objective 0 as the
+                # scalar stream entry (per-objective curves land via the
+                # iv_vec attr below)
+                value = float(vector[0])
+            else:
                 raise ValueError(
                     "vector report needs a Pareto-aware pruner that can "
                     "scalarize it (e.g. ParetoPruner); got "
                     f"{type(study.pruner).__name__}"
                 )
-            value = float(scalarize([float(v) for v in value], directions))
         elif len(directions) > 1 and callable(scalarize):
             # a raw scalar would enter the scalarized-loss stream unoriented
             # and unscaled — judged as MINIMIZE next to augmented-Chebyshev
@@ -265,21 +280,40 @@ class Trial(BaseTrial):
             )
         else:
             value = float(value)
-        spec = None
-        spec_fn = getattr(study.pruner, "spec", None)
-        if callable(spec_fn):
-            spec = spec_fn()
-        scalarizing = callable(getattr(study.pruner, "scalarize", None))
-        # no span of its own: storage.report_and_prune / the client RPC span
-        # directly below covers the whole storage round trip already
-        if spec is not None and (len(directions) == 1 or scalarizing):
-            decision = study._storage.report_and_prune(
-                study._study_id, self._trial_id, step, value, spec, direction
-            )
-            self._prune_decision = (step, bool(decision))
+        spec = probe
+        scalarizing = callable(scalarize)
+        storage = study._storage
+        fused = spec is not None and (len(directions) == 1 or scalarizing)
+        # per-objective vectors persist as the iv_vec:<step> system attr,
+        # ordered BEFORE the scalar write so the hosted IV store's re-encode
+        # (triggered by the scalar) already sees it.  Keeping the 1-frame
+        # report contract: a raw remote/sharded client folds both ops into
+        # one call_batch frame; CachedStorage has no call_batch but buffers
+        # the attr op and flushes it on the SAME frame as the fused report.
+        attr_op = None
+        if vector is not None and len(vector) > 1:
+            attr_op = (self._trial_id, iv_vec_key(step), vector)
+        batch = getattr(storage, "call_batch", None) if attr_op else None
+        if fused and attr_op and callable(batch):
+            results = batch([
+                ("set_trial_system_attr", attr_op),
+                ("report_and_prune",
+                 (study._study_id, self._trial_id, step, value, spec, direction)),
+            ])
+            self._prune_decision = (step, bool(results[1]))
         else:
-            study._storage.set_trial_intermediate_value(self._trial_id, step, value)
-            self._prune_decision = None
+            if attr_op is not None:
+                storage.set_trial_system_attr(*attr_op)
+            # no span of its own: storage.report_and_prune / the client RPC
+            # span directly below covers the whole storage round trip already
+            if fused:
+                decision = storage.report_and_prune(
+                    study._study_id, self._trial_id, step, value, spec, direction
+                )
+                self._prune_decision = (step, bool(decision))
+            else:
+                storage.set_trial_intermediate_value(self._trial_id, step, value)
+                self._prune_decision = None
         if self._last_report is None or step >= self._last_report[0]:
             self._last_report = (step, value)
         self._cached = None

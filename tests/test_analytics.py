@@ -1,0 +1,260 @@
+"""Parity tests for the columnar plot reductions (core/analytics.py): every
+reduction vs a brute-force per-trial reference loop on randomized inputs with
+NaN/pruned rows, both directions; plus remote-vs-inmemory equivalence of the
+delta endpoint payloads."""
+
+import math
+
+import numpy as np
+import pytest
+
+import repro.core as hpo
+from repro.core import moo
+from repro.core.analytics import (
+    RevisionPoller,
+    StudyAnalytics,
+    contour_reduction,
+    jsonable,
+    running_best,
+    slice_reduction,
+)
+from repro.core.frozen import TrialState
+
+_COMPLETE = int(TrialState.COMPLETE)
+_PRUNED = int(TrialState.PRUNED)
+
+
+def _random_columns(rng, n):
+    """Randomized (numbers, values, states, x, y) with NaN and pruned rows."""
+    numbers = np.arange(n)
+    values = rng.normal(size=n)
+    values[rng.random(n) < 0.15] = np.nan
+    states = np.where(rng.random(n) < 0.25, _PRUNED, _COMPLETE)
+    x = rng.uniform(-2, 5, size=n)
+    y = rng.uniform(0, 1, size=n)
+    x[rng.random(n) < 0.1] = np.nan
+    y[rng.random(n) < 0.1] = np.nan
+    return numbers, values, states, x, y
+
+
+class TestRunningBest:
+    @pytest.mark.parametrize("minimize", [True, False])
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_parity_vs_loop(self, minimize, seed):
+        rng = np.random.default_rng(seed)
+        numbers, values, states, _, _ = _random_columns(rng, 120)
+        nums, vals, best = running_best(numbers, values, states, minimize)
+
+        # brute-force reference: walk trials in number order
+        ref_nums, ref_vals, ref_best = [], [], []
+        cur = None
+        for i in range(len(numbers)):
+            v = values[i]
+            if states[i] != _COMPLETE or not math.isfinite(v):
+                continue
+            cur = v if cur is None else (min(cur, v) if minimize else max(cur, v))
+            ref_nums.append(numbers[i])
+            ref_vals.append(v)
+            ref_best.append(cur)
+        assert nums.tolist() == ref_nums
+        np.testing.assert_array_equal(vals, ref_vals)
+        np.testing.assert_array_equal(best, ref_best)
+
+    def test_empty(self):
+        nums, vals, best = running_best(
+            np.empty(0, dtype=int), np.empty(0), np.empty(0, dtype=int), True
+        )
+        assert nums.size == 0 and vals.size == 0 and best.size == 0
+
+
+class TestContourReduction:
+    @pytest.mark.parametrize("minimize", [True, False])
+    @pytest.mark.parametrize("seed", [0, 7])
+    def test_parity_vs_loop(self, minimize, seed):
+        rng = np.random.default_rng(seed)
+        _, values, states, x, y = _random_columns(rng, 200)
+        mask = states == _COMPLETE
+        nx = ny = 6
+        xe, ye, grid, counts = contour_reduction(x, y, values, mask, nx, ny, minimize)
+
+        # reference: per-point loop into the same cells
+        ref = np.full((ny, nx), np.nan)
+        ref_counts = np.zeros((ny, nx), dtype=int)
+        xlo, xhi = xe[0], xe[-1]
+        ylo, yhi = ye[0], ye[-1]
+        for i in range(len(values)):
+            if not mask[i]:
+                continue
+            if not (math.isfinite(x[i]) and math.isfinite(y[i]) and math.isfinite(values[i])):
+                continue
+            cx = min(int((x[i] - xlo) / (xhi - xlo) * nx), nx - 1)
+            cy = min(int((y[i] - ylo) / (yhi - ylo) * ny), ny - 1)
+            ref_counts[cy, cx] += 1
+            z = ref[cy, cx]
+            if math.isnan(z):
+                ref[cy, cx] = values[i]
+            else:
+                ref[cy, cx] = min(z, values[i]) if minimize else max(z, values[i])
+        np.testing.assert_array_equal(counts, ref_counts)
+        np.testing.assert_array_equal(grid, ref)
+
+    def test_empty_and_degenerate(self):
+        xe, ye, grid, counts = contour_reduction(
+            np.empty(0), np.empty(0), np.empty(0), np.empty(0, dtype=bool), 4, 4
+        )
+        assert np.isnan(grid).all() and counts.sum() == 0
+        # all points identical -> single cell, no div-by-zero
+        n = 10
+        xe, ye, grid, counts = contour_reduction(
+            np.full(n, 2.0), np.full(n, 3.0), np.arange(n, dtype=float),
+            np.ones(n, dtype=bool), 4, 4,
+        )
+        assert counts.sum() == n
+        assert np.nanmin(grid) == 0.0
+
+
+class TestSliceReduction:
+    @pytest.mark.parametrize("seed", [0, 5])
+    def test_band_quantiles_vs_loop(self, seed):
+        rng = np.random.default_rng(seed)
+        _, values, states, x, _ = _random_columns(rng, 150)
+        mask = states == _COMPLETE
+        out = slice_reduction(x, values, mask, n_bins=5)
+        xs, zs = out["x"], out["z"]
+        assert np.isfinite(xs).all() and np.isfinite(zs).all()
+
+        bins = out["bins"]
+        blo, bhi = xs.min(), xs.max()
+        for c, med, lo, hi, cnt in zip(
+            bins["centers"], bins["med"], bins["lo"], bins["hi"], bins["counts"]
+        ):
+            b = min(int((c - blo) / (bhi - blo) * 5), 4)
+            sel = [z for xx, z in zip(xs, zs)
+                   if min(int((xx - blo) / (bhi - blo) * 5), 4) == b]
+            assert cnt == len(sel)
+            assert med == pytest.approx(np.median(sel))
+            assert lo == pytest.approx(np.percentile(sel, 25))
+            assert hi == pytest.approx(np.percentile(sel, 75))
+
+    def test_empty(self):
+        out = slice_reduction(np.empty(0), np.empty(0), np.empty(0, dtype=bool))
+        assert out["x"].size == 0 and out["bins"]["centers"].size == 0
+
+
+class TestParetoViewParity:
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_front_mask_vs_pairwise_loop(self, seed):
+        rng = np.random.default_rng(seed)
+        n = 60
+        V = rng.normal(size=(n, 2))
+        mask = rng.random(n) < 0.8
+        directions = [0, 1]  # minimize, maximize
+        L = moo.loss_matrix(V, directions)
+        front = moo.pareto_front_mask(L, mask=mask)
+
+        def dominates(a, b):
+            return bool(np.all(L[a] <= L[b]) and np.any(L[a] < L[b]))
+
+        for i in range(n):
+            if not mask[i]:
+                assert not front[i]
+                continue
+            dominated = any(
+                dominates(j, i) for j in range(n) if j != i and mask[j]
+            )
+            assert front[i] == (not dominated)
+
+
+class TestJsonable:
+    def test_nan_and_numpy(self):
+        out = jsonable(
+            {
+                "a": np.float64(1.5),
+                "b": float("nan"),
+                "c": np.array([1.0, np.nan, np.inf]),
+                "d": np.int64(3),
+                "e": [np.float32(2.0), {"f": -np.inf}],
+            }
+        )
+        assert out == {"a": 1.5, "b": None, "c": [1.0, None, None],
+                       "d": 3, "e": [2.0, {"f": None}]}
+        import json
+        json.dumps(out, allow_nan=False)  # strict-JSON safe
+
+
+class TestStudyAnalytics:
+    def _study(self, storage=None, n=40, name="an"):
+        s = hpo.create_study(
+            study_name=name, storage=storage, sampler=hpo.RandomSampler(seed=4)
+        )
+        s.optimize(
+            lambda t: (t.suggest_float("x", -3, 3)) ** 2 + t.suggest_float("y", 0, 1),
+            n_trials=n,
+        )
+        return s
+
+    def test_views_cached_until_new_trial(self):
+        s = self._study()
+        sa = StudyAnalytics(s)
+        v1 = sa.views()
+        assert sa.views() is v1  # same object: version-cache hit
+        s.optimize(lambda t: t.suggest_float("x", -3, 3) ** 2
+                   + t.suggest_float("y", 0, 1), n_trials=1)
+        v2 = sa.views()
+        assert v2 is not v1
+        assert v2["n_finished"] == v1["n_finished"] + 1
+
+    def test_delta_rows_incremental(self):
+        s = self._study(n=10)
+        sa = StudyAnalytics(s)
+        d = sa.delta_rows(-1)
+        assert len(d["rows"]) == 10 and d["last_number"] == 9
+        assert [r["number"] for r in d["rows"]] == list(range(10))
+        s.optimize(lambda t: t.suggest_float("x", -3, 3) ** 2
+                   + t.suggest_float("y", 0, 1), n_trials=3)
+        d2 = sa.delta_rows(d["last_number"])
+        assert [r["number"] for r in d2["rows"]] == [10, 11, 12]
+        for r in d2["rows"]:
+            assert set(r["params"]) == {"x", "y"}
+            assert r["state"] == "COMPLETE"
+            assert len(r["values"]) == 1
+
+    def test_remote_vs_inmemory_delta_equivalence(self):
+        """Seeded study through a real server == same study inmemory, row for
+        row (the wire adds nothing and loses nothing)."""
+        local = self._study(hpo.InMemoryStorage(), n=25, name="eq")
+        with hpo.StorageServer(hpo.InMemoryStorage()) as server:
+            remote = self._study(hpo.RemoteStorage(server.url), n=25, name="eq")
+            d_local = StudyAnalytics(local).delta_rows(-1)
+            d_remote = StudyAnalytics(remote).delta_rows(-1)
+        assert d_local == d_remote
+
+    def test_poller_revision_gating(self):
+        storage = hpo.InMemoryStorage()
+        s = self._study(storage, n=3)
+        p = RevisionPoller(storage, s._study_id)
+        assert p.poll() is True  # first poll always reports change
+        assert p.poll() is False
+        assert p.poll() is False
+        s.optimize(lambda t: t.suggest_float("x", -3, 3) ** 2
+                   + t.suggest_float("y", 0, 1), n_trials=1)
+        assert p.poll() is True
+        assert p.poll() is False
+        assert p.ticks == 5 and p.changes == 2
+
+    def test_mo_views(self):
+        s = hpo.create_study(
+            directions=["minimize", "maximize"], sampler=hpo.RandomSampler(seed=2)
+        )
+        s.optimize(
+            lambda t: (t.suggest_float("x", 0, 1), t.suggest_float("y", 0, 1)),
+            n_trials=20,
+        )
+        v = StudyAnalytics(s).views()
+        assert len(v["history"]) == 2
+        # history[1] is maximize: best is nondecreasing
+        best = v["history"][1]["best"]
+        assert all(b2 >= b1 for b1, b2 in zip(best, best[1:]))
+        assert v["pareto"] is not None
+        assert set(v["pareto"]["front_numbers"]) <= set(v["pareto"]["numbers"])
+        assert sorted(v["importance"]["fanova"]) == ["0", "1"]

@@ -85,10 +85,15 @@ class TestImportanceSvg:
         vals = [float(v) for v in re.findall(r'font-size="10">([0-9.]+)</text>', svg)]
         assert len(vals) == 2 and abs(sum(vals) - 1.0) < 0.02
 
-    def test_unavailable(self):
-        # MO studies have no scalar importances -> the placeholder text
+    def test_multi_objective_grouped(self):
+        # MO studies render one labelled bar group per objective
         svg = _importance_svg(_seeded_moo_study(10))
-        assert "importances unavailable" in svg
+        assert "objective 0" in svg and "objective 1" in svg
+        assert svg.count("<rect") >= 2
+
+    def test_unavailable(self):
+        s = hpo.create_study()
+        assert "importances unavailable" in _importance_svg(s)
 
 
 class TestLivePanel:
@@ -146,10 +151,22 @@ class TestLivePanel:
 class TestImportanceEdgeCases:
     """Pins the ISSUE-6 fix: degrade to {} instead of raising / misranking."""
 
-    def test_multi_objective_returns_empty(self):
+    def test_multi_objective_per_objective_dicts(self):
+        # since the analytics-service PR: one importance dict per objective,
+        # keyed by objective index
         s = _seeded_moo_study(20)
-        assert hpo.param_importances(s) == {}
-        assert hpo.spearman_importances(s) == {}
+        for res in (hpo.param_importances(s), hpo.spearman_importances(s)):
+            assert sorted(res) == [0, 1]
+            for d in res.values():
+                assert sorted(d) == ["x"]
+                assert abs(sum(d.values()) - 1.0) < 1e-9
+
+    def test_single_objective_unchanged(self):
+        # objective=0 on a single-objective study is the flat dict, identical
+        # to calling with no objective argument
+        s = _seeded_study(25)
+        assert hpo.param_importances(s, objective=0) == hpo.param_importances(s)
+        assert hpo.spearman_importances(s, objective=0) == hpo.spearman_importances(s)
 
     def test_fewer_than_two_complete_trials(self):
         s = hpo.create_study(sampler=hpo.RandomSampler(seed=0))

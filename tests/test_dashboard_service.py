@@ -1,0 +1,216 @@
+"""HTTP analytics service tests: revision-gated delta endpoint (idle study =
+zero storage refetches, pinned via telemetry counters), fANOVA vs Spearman
+ranking agreement, scoped-token auth, and the Prometheus exposition."""
+
+import json
+import urllib.error
+import urllib.request
+
+import pytest
+
+import repro.core as hpo
+from repro.core import telemetry
+from repro.serve.dashboard_service import DashboardService
+
+
+@pytest.fixture
+def metrics():
+    telemetry.reset()
+    telemetry.enable()
+    yield telemetry
+    telemetry.disable()
+    telemetry.reset()
+
+
+def _get(svc, path, token=None, raw=False):
+    req = urllib.request.Request(svc.url + path)
+    if token:
+        req.add_header("Authorization", f"Bearer {token}")
+    body = urllib.request.urlopen(req).read()
+    return body if raw else json.loads(body)
+
+
+def _status(svc, path, token=None):
+    try:
+        req = urllib.request.Request(svc.url + path)
+        if token:
+            req.add_header("Authorization", f"Bearer {token}")
+        return urllib.request.urlopen(req).status
+    except urllib.error.HTTPError as e:
+        return e.code
+
+
+def _seed_study(storage, name="svc", n=20, seed=0):
+    s = hpo.create_study(
+        study_name=name, storage=storage, sampler=hpo.RandomSampler(seed=seed)
+    )
+    s.optimize(
+        lambda t: t.suggest_float("x", -2, 2) ** 2 + 0.05 * t.suggest_float("y", 0, 1),
+        n_trials=n,
+    )
+    return s
+
+
+class TestDeltaEndpoint:
+    def test_idle_poll_zero_storage_refetch(self, metrics):
+        """The acceptance pin: an unchanged study answers the delta poll with
+        one revision RPC and ZERO trial-data refetches — every refresh
+        counter (columnar stores + cached proxy) stays frozen."""
+        backend = hpo.InMemoryStorage()
+        with hpo.StorageServer(backend) as server:
+            _seed_study(hpo.RemoteStorage(server.url), n=15)
+            svc = DashboardService(f"remote://{server.url.split('//')[1]}").start()
+            try:
+                d = _get(svc, "/api/study/svc/delta?since_rev=-1&since_num=-1")
+                assert not d["idle"] and len(d["rows"]) == 15
+
+                before = telemetry.snapshot()["counters"]
+                for _ in range(5):
+                    d2 = _get(
+                        svc,
+                        f"/api/study/svc/delta?since_rev={d['rev']}&since_num={d['last_number']}",
+                    )
+                    assert d2 == {"rev": d["rev"], "idle": True}
+                after = telemetry.snapshot()["counters"]
+
+                assert after.get("dashboard.delta.idle", 0) == before.get("dashboard.delta.idle", 0) + 5
+                for key in after:
+                    if ".refresh." in key:  # records.* and cached.* fetch paths
+                        assert after[key] == before.get(key, 0), key
+            finally:
+                svc.stop()
+
+    def test_active_poll_ships_only_new_rows(self, metrics):
+        backend = hpo.InMemoryStorage()
+        with hpo.StorageServer(backend) as server:
+            url = f"remote://{server.url.split('//')[1]}"
+            s = _seed_study(hpo.RemoteStorage(server.url), n=10)
+            svc = DashboardService(url).start()
+            try:
+                d = _get(svc, "/api/study/svc/delta?since_rev=-1&since_num=-1")
+                assert [r["number"] for r in d["rows"]] == list(range(10))
+                s.optimize(lambda t: t.suggest_float("x", -2, 2) ** 2
+                           + 0.05 * t.suggest_float("y", 0, 1), n_trials=4)
+                d2 = _get(
+                    svc,
+                    f"/api/study/svc/delta?since_rev={d['rev']}&since_num={d['last_number']}",
+                )
+                assert not d2["idle"]
+                assert [r["number"] for r in d2["rows"]] == [10, 11, 12, 13]
+                assert d2["rev"] != d["rev"]
+            finally:
+                svc.stop()
+
+
+class TestViewsAndPages:
+    def test_views_and_pages_render(self, metrics):
+        storage = hpo.InMemoryStorage()
+        _seed_study(storage, n=20)
+        svc = DashboardService(storage).start()
+        try:
+            v = _get(svc, "/api/study/svc/views")
+            assert v["n_finished"] == 20
+            assert len(v["history"]) == 1 and len(v["history"][0]["best"]) == 20
+            assert v["contour"] is not None and v["contour"]["x_param"] in ("x", "y")
+            assert {s["param"] for s in v["slices"]} == {"x", "y"}
+            page = _get(svc, "/study/svc", raw=True).decode()
+            assert 'data-study="svc"' in page and "optimization history" in page
+            index = _get(svc, "/", raw=True).decode()
+            assert "/study/svc" in index
+            cluster = _get(svc, "/cluster", raw=True).decode()
+            assert "shards" in cluster
+            assert _status(svc, "/nope") == 404
+        finally:
+            svc.stop()
+
+    def test_prometheus_exposition(self, metrics):
+        storage = hpo.InMemoryStorage()
+        _seed_study(storage, n=5)
+        svc = DashboardService(storage).start()
+        try:
+            _get(svc, "/api/study/svc/delta?since_rev=-1&since_num=-1")
+            text = _get(svc, "/metrics", raw=True).decode()
+            assert "# TYPE repro_dashboard_http_requests_total counter" in text
+            assert "repro_dashboard_delta_active_total 1" in text
+            for line in text.strip().splitlines():
+                assert line.startswith("#") or " " in line
+        finally:
+            svc.stop()
+
+
+class TestAuth:
+    def _svc(self, tokens):
+        storage = hpo.InMemoryStorage()
+        _seed_study(storage, name="mine", n=5)
+        _seed_study(storage, name="other", n=5, seed=1)
+        return DashboardService(storage, tokens=tokens).start()
+
+    def test_open_when_no_tokens(self, metrics):
+        svc = self._svc(None)
+        try:
+            assert _status(svc, "/") == 200
+            assert _status(svc, "/metrics") == 200
+        finally:
+            svc.stop()
+
+    def test_missing_or_bad_token_401(self, metrics):
+        svc = self._svc(["sekrit"])
+        try:
+            assert _status(svc, "/") == 401
+            assert _status(svc, "/api/study/mine/views") == 401
+            assert _status(svc, "/", token="wrong") == 401
+            assert _status(svc, "/", token="sekrit") == 200
+            # query-string token also accepted (browser links)
+            assert _status(svc, "/?token=sekrit") == 200
+        finally:
+            svc.stop()
+
+    def test_readonly_token_accepted_everywhere(self, metrics):
+        # all service endpoints are reads, so a readonly storage token grants
+        # the same access as a full one
+        svc = self._svc([{"token": "ro", "readonly": True}])
+        try:
+            for path in ("/", "/metrics", "/cluster", "/api/studies",
+                         "/api/study/mine/views", "/api/cluster/metrics"):
+                assert _status(svc, path, token="ro") == 200, path
+        finally:
+            svc.stop()
+
+    def test_study_scoped_token_confined(self, metrics):
+        svc = self._svc([{"token": "st", "studies": ["mine"]}])
+        try:
+            assert _status(svc, "/api/study/mine/views", token="st") == 200
+            assert _status(svc, "/study/mine", token="st") == 200
+            assert _status(svc, "/api/study/other/views", token="st") == 403
+            # global endpoints denied for study-scoped tokens
+            for path in ("/", "/metrics", "/cluster", "/api/studies",
+                         "/api/cluster/metrics"):
+                assert _status(svc, path, token="st") == 403, path
+        finally:
+            svc.stop()
+
+
+class TestImportanceRankingAgreement:
+    def test_fanova_agrees_with_spearman_on_monotone_study(self, metrics):
+        """Acceptance pin: on a synthetic study where the objective is
+        monotone in x and nearly flat in y, fANOVA and Spearman must agree
+        that x dominates."""
+        s = hpo.create_study(sampler=hpo.RandomSampler(seed=7))
+        s.optimize(
+            lambda t: 3.0 * t.suggest_float("x", 0, 1)
+            + 0.01 * t.suggest_float("y", 0, 1),
+            n_trials=60,
+        )
+        fan = hpo.fanova_importances(s)
+        spear = hpo.spearman_importances(s)
+        assert max(fan, key=fan.get) == max(spear, key=spear.get) == "x"
+        assert fan["x"] > 0.8 and spear["x"] > 0.8
+        assert sum(fan.values()) == pytest.approx(1.0)
+        # ranking order identical, not just the top-1
+        assert sorted(fan, key=fan.get) == sorted(spear, key=spear.get)
+
+    def test_fanova_fallback_small_study(self, metrics):
+        s = hpo.create_study(sampler=hpo.RandomSampler(seed=3))
+        s.optimize(lambda t: t.suggest_float("x", 0, 1), n_trials=4)
+        # below the tree-fit floor: falls back to Spearman exactly
+        assert hpo.fanova_importances(s) == hpo.spearman_importances(s)

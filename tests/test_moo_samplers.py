@@ -224,8 +224,14 @@ class TestParetoPruner:
         assert rebuilt.scalarize(vals, dirs) == pruner.scalarize(vals, dirs)
 
     def test_vector_report_without_scalarizer_raises(self):
+        # a scalar pruner can't order vectors: must be rejected.  (NopPruner
+        # studies accept vectors since the analytics-service PR — there is no
+        # pruning stream to corrupt, and the IV store records per-objective
+        # curves from them.)
         study = hpo.create_study(
-            directions=["minimize", "minimize"], sampler=hpo.RandomSampler(seed=0)
+            directions=["minimize", "minimize"],
+            sampler=hpo.RandomSampler(seed=0),
+            pruner=hpo.MedianPruner(),
         )
         t = study.ask()
         with pytest.raises(ValueError):

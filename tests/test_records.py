@@ -534,3 +534,105 @@ class TestIVStoreDirtySet:
         after = store.matrix
         assert np.array_equal(before[:, 0], after[:, 0], equal_nan=True)
         assert after[trials[2].number, 1] == 42.0
+
+
+class TestVectorIntermediateValues:
+    """The (n_trials, n_steps, n_objectives) widening: vector reports ride
+    the ``iv_vec:<step>`` system attr, scalar studies stay byte-identical on
+    the wire, and ``objective_matrix`` exposes per-objective slices."""
+
+    def _store(self, study):
+        from repro.core.records import IntermediateValueStore
+
+        return IntermediateValueStore(study._storage, study._study_id)
+
+    def test_scalar_study_unchanged(self):
+        study = hpo.create_study()
+        storage, sid = study._storage, study._study_id
+        tid = storage.create_new_trial(sid)
+        storage.set_trial_intermediate_value(tid, 0, 1.0)
+        storage.set_trial_intermediate_value(tid, 1, 2.0)
+        store = self._store(study)
+        store.refresh()
+        assert store.n_objectives == 1
+        assert store.iv_arity.tolist() == [0]
+        np.testing.assert_array_equal(store.objective_matrix(0), store.matrix)
+        assert np.isnan(store.objective_matrix(1)).all()
+
+    def test_scalar_study_block_has_no_vec_columns(self):
+        from repro.core.storage.serde import build_iv_block
+
+        study = hpo.create_study()
+        storage, sid = study._storage, study._study_id
+        tid = storage.create_new_trial(sid)
+        storage.set_trial_intermediate_value(tid, 0, 1.0)
+        block = build_iv_block(storage.get_all_trials(sid, deepcopy=False))
+        assert not any(k.startswith("vec_") for k in block)
+
+    def test_vector_reports_fill_tensor(self):
+        study = hpo.create_study()
+        storage, sid = study._storage, study._study_id
+        t0 = storage.create_new_trial(sid)
+        t1 = storage.create_new_trial(sid)
+        storage.set_trial_intermediate_vector(t0, 0, [1.0, 10.0])
+        storage.set_trial_intermediate_vector(t0, 1, [2.0, 20.0])
+        storage.set_trial_intermediate_value(t1, 0, 5.0)  # scalar row mixes in
+        store = self._store(study)
+        store.refresh()
+        assert store.n_objectives == 2
+        assert store.iv_arity.tolist() == [2, 0]
+        # scalar (pruner-facing) matrix carries objective 0
+        assert store.matrix[0].tolist() == [1.0, 2.0]
+        assert store.objective_matrix(0)[0].tolist() == [1.0, 2.0]
+        assert store.objective_matrix(1)[0].tolist() == [10.0, 20.0]
+        # the scalar-only row has objective 0 from the matrix, NaN above
+        assert store.objective_matrix(0)[1, 0] == 5.0
+        assert np.isnan(store.objective_matrix(1)[1]).all()
+
+    def test_trial_report_vector_with_nop_pruner(self):
+        study = hpo.create_study(
+            directions=["minimize", "maximize"], pruner=hpo.NopPruner()
+        )
+        t = study.ask()
+        t.suggest_float("x", 0, 1)
+        for step in range(3):
+            t.report([float(step), 100.0 - step], step)
+        study.tell(t, [0.0, 100.0])
+        m0 = study.intermediate_values(objective=0)
+        m1 = study.intermediate_values(objective=1)
+        assert m0[0].tolist() == [0.0, 1.0, 2.0]
+        assert m1[0].tolist() == [100.0, 99.0, 98.0]
+        frozen = study.get_trials(deepcopy=False)[0]
+        assert frozen.intermediate_value_vectors == {
+            0: [0.0, 100.0], 1: [1.0, 99.0], 2: [2.0, 98.0]
+        }
+
+    def test_vector_round_trip_over_the_wire(self):
+        with hpo.StorageServer(hpo.InMemoryStorage()) as server:
+
+            def run(storage):
+                study = hpo.create_study(
+                    study_name="vec",
+                    storage=storage,
+                    directions=["minimize", "minimize"],
+                    pruner=hpo.NopPruner(),
+                    sampler=hpo.RandomSampler(seed=0),
+                )
+                for _ in range(4):
+                    t = study.ask()
+                    x = t.suggest_float("x", 0, 1)
+                    for step in range(3):
+                        t.report([x + step, x - step], step)
+                    study.tell(t, [x, -x])
+                store = self._store(study)
+                store.refresh()
+                return store
+
+            remote = run(hpo.RemoteStorage(server.url))
+            local = run(hpo.InMemoryStorage())
+            assert remote.n_objectives == local.n_objectives == 2
+            np.testing.assert_array_equal(remote.iv_arity, local.iv_arity)
+            for k in range(2):
+                np.testing.assert_array_equal(
+                    remote.objective_matrix(k), local.objective_matrix(k)
+                )
